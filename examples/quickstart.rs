@@ -1,0 +1,50 @@
+//! Quickstart: run Nekbone at the paper's configuration (polynomial degree
+//! 9, 100 CG iterations) on a small mesh and print the report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Requires `make artifacts` for the XLA backend; falls back to the CPU
+//! backend with a note otherwise.
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Backend, Nekbone};
+
+fn main() -> nekbone::Result<()> {
+    let cfg = RunConfig {
+        nelt: 64,
+        n: 10,    // polynomial degree 9, the paper's setting
+        niter: 100,
+        ..RunConfig::default()
+    };
+
+    // Prefer the paper's optimized kernel through the AOT/PJRT path.
+    let backend = if std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        Backend::Xla("layered".into())
+    } else {
+        eprintln!("note: artifacts not built (run `make artifacts`); using the CPU backend");
+        Backend::CpuLayered
+    };
+
+    println!("== nekbone-rs quickstart ==");
+    println!(
+        "mesh: {} elements, degree {}, {} local dofs",
+        cfg.nelt,
+        cfg.n - 1,
+        cfg.ndof()
+    );
+
+    let mut app = Nekbone::new(cfg, backend)?;
+    let report = app.run()?;
+
+    println!("{}", report.summary());
+    let cm = report.cost_model();
+    println!("cost model (paper Eq. 1-2):");
+    println!("  flops/iter        : {}", cm.flops_per_iter());
+    println!("  bytes/iter        : {}", cm.bytes_per_iter());
+    println!("  intensity         : {:.4} flop/byte", cm.intensity());
+    println!("achieved             : {:.3} GFlop/s", report.gflops());
+    println!("kernel-level (Ax)    : {:.3} GFlop/s", report.ax_gflops());
+    Ok(())
+}

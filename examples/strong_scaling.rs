@@ -1,0 +1,75 @@
+//! Strong scaling over simulated MPI ranks (experiment E8) and the paper's
+//! problem-size observation: below ~500k dofs per device, adding devices
+//! beats nothing — small inputs are overhead-dominated (paper section VII).
+//!
+//! ```bash
+//! cargo run --release --example strong_scaling
+//! ```
+
+use nekbone::bench::Table;
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::rank::run_ranked;
+
+fn main() -> nekbone::Result<()> {
+    println!("== strong scaling: fixed problem, more simulated ranks ==");
+    // ez = 8 layers for nelt=512 (8x8x8) -> up to 8 slab ranks.
+    let base = RunConfig { nelt: 512, n: 6, niter: 50, ..RunConfig::default() };
+    println!(
+        "problem: {} elements, degree {}, {} local dofs, {} CG iterations\n",
+        base.nelt,
+        base.n - 1,
+        base.ndof(),
+        base.niter
+    );
+
+    let mut table = Table::new(&["ranks", "time(s)", "speedup", "efficiency", "residual"]);
+    let mut t1 = None;
+    for ranks in [1usize, 2, 4, 8] {
+        let cfg = RunConfig { ranks, ..base.clone() };
+        let rep = run_ranked(&cfg)?;
+        let t = rep.seconds;
+        let t_base = *t1.get_or_insert(t);
+        table.row(&[
+            ranks.to_string(),
+            format!("{t:.3}"),
+            format!("{:.2}x", t_base / t),
+            format!("{:.0}%", 100.0 * t_base / t / ranks as f64),
+            format!("{:.3e}", rep.final_residual),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n(threads share {} hardware cores, so wall-clock speedup saturates at the\n\
+         core count; the point of the experiment is the communication structure:\n\
+         identical residuals prove the halo exchange + allreduce path)",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    );
+
+    // Paper section VII: performance vs dofs-per-device. Sweep problem
+    // size on one device and report GFlop/s — the knee is where the device
+    // stops being overhead-bound (the "<500k dofs is not beneficial" claim).
+    println!("\n== problem-size dependence (single device, xla-layered) ==");
+    let have_artifacts = std::path::Path::new("artifacts").join("manifest.json").exists();
+    let backend = if have_artifacts {
+        Backend::Xla("layered".into())
+    } else {
+        eprintln!("(artifacts not built; using cpu-layered)");
+        Backend::CpuLayered
+    };
+    let mut table = Table::new(&["nelt", "dof", "GFlop/s", "GF/s per 100k dof"]);
+    for nelt in [8usize, 32, 64, 128, 256, 512, 1024] {
+        let cfg = RunConfig { nelt, n: 10, niter: 20, ..RunConfig::default() };
+        let dof = cfg.ndof();
+        let mut app = Nekbone::new(cfg, backend.clone())?;
+        let rep = app.run()?;
+        table.row(&[
+            nelt.to_string(),
+            dof.to_string(),
+            format!("{:.3}", rep.gflops()),
+            format!("{:.3}", rep.gflops() / (dof as f64 / 1e5)),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time Python package for nekbone-rs: JAX/Pallas kernels, the L2
+compute graph, and the AOT lowering pipeline. Never imported at runtime."""

@@ -1,0 +1,206 @@
+"""AOT pipeline: lower every Layer-2 callable to HLO **text** + a JSON
+manifest the Rust runtime consumes.
+
+Why text, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the xla_extension 0.5.1 behind the ``xla`` crate
+rejects (``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so
+text round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python never runs on the request path; after this, the Rust binary is
+self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the paper computes in f64
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import shared_bytes, SHARED_BUDGET_BYTES  # noqa: E402
+from .model import AxSpec  # noqa: E402
+
+
+def shared_fits(n: int, itemsize: int = 8) -> bool:
+    """Whether the shared-memory schedule fits the capacity wall at n."""
+    return shared_bytes(n, itemsize) <= SHARED_BUDGET_BYTES
+
+__all__ = ["to_hlo_text", "default_entries", "build", "main"]
+
+#: Default chunk size (elements per launch). All paper sweeps (64..4096 and
+#: 448..3584) are multiples of 64; see DESIGN.md section 6.
+DEFAULT_CHUNK = 64
+
+#: Default GLL points per dimension: the paper runs polynomial degree 9.
+DEFAULT_N = 10
+
+#: Ax variants lowered by default (all five of the paper's GPU versions).
+DEFAULT_VARIANTS = ("jnp", "original", "shared", "layered", "layered_unroll2")
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """jax Lowered -> XLA HLO text (the interchange format).
+
+    ``return_tuple=False`` gives single-output computations an array root,
+    letting the Rust side ``copy_raw_to_host_sync`` straight out of the
+    output buffer with no intermediate Literal (perf pass, EXPERIMENTS.md
+    §Perf L3). Multi-output computations keep the tuple root.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, arg_specs, return_tuple: bool = True) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs), return_tuple)
+
+
+def default_entries(
+    n: int = DEFAULT_N,
+    chunk: int = DEFAULT_CHUNK,
+    variants=DEFAULT_VARIANTS,
+    extra_ns=(8, 12),
+    perf_chunks=(256, 1024),
+    dtype: str = "float64",
+):
+    """The artifact set: (name, kind, metadata, builder, arg_specs) tuples.
+
+    * every Ax variant at the paper's configuration (n=10, chunk=64);
+    * the layered variant additionally at other polynomial degrees (the
+      paper's "changing a few constants" portability claim, experiment E7)
+      and at larger chunks (perf pass, dispatch-overhead amortization);
+    * chunk-sized CG vector ops (the "OpenACC" ablation, E6);
+    * the fused Ax+pap hot-path executable (perf pass).
+    """
+    entries = []
+
+    def add_ax(variant, nn, ee):
+        spec = AxSpec(variant, nn, ee, dtype)
+        entries.append(
+            dict(
+                name=spec.name,
+                kind="ax",
+                variant=variant,
+                n=nn,
+                chunk=ee,
+                dtype=dtype,
+                fn=model.make_ax(spec),
+                args=model.ax_arg_specs(spec),
+            )
+        )
+
+    for v in variants:
+        add_ax(v, n, chunk)
+    for nn in extra_ns:
+        if nn != n:
+            add_ax("layered", nn, chunk)
+            # The shared variant exists wherever it fits under the paper's
+            # capacity wall (E7 compares the two below the wall).
+            if "shared" in variants and shared_fits(nn):
+                add_ax("shared", nn, chunk)
+    for ee in perf_chunks:
+        add_ax("layered", n, ee)
+
+    size = chunk * n * n * n
+    for op in ("glsc3", "add2s1", "add2s2"):
+        entries.append(
+            dict(
+                name=f"{op}_s{size}",
+                kind="vector",
+                variant=op,
+                n=n,
+                chunk=chunk,
+                dtype=dtype,
+                fn=model.make_vector_op(op, size, dtype),
+                args=model.vector_arg_specs(op, size, dtype),
+            )
+        )
+
+    for ee in (chunk,) + tuple(perf_chunks):
+        entries.append(
+            dict(
+                name=f"cg_iter_layered_n{n}_e{ee}",
+                kind="cg_iter",
+                variant="layered",
+                n=n,
+                chunk=ee,
+                dtype=dtype,
+                fn=model.make_cg_iter("layered", n, ee, dtype),
+                args=model.cg_iter_arg_specs(n, ee, dtype),
+            )
+        )
+    return entries
+
+
+def build(out_dir: str, entries=None, verbose: bool = True) -> dict:
+    """Lower all entries into ``out_dir`` and write ``manifest.json``."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = entries if entries is not None else default_entries()
+    manifest = {"format": 1, "generated_unix": int(time.time()), "artifacts": []}
+    for e in entries:
+        t0 = time.time()
+        # Single-output kinds get an array root (fast raw download);
+        # cg_iter returns (w, pap) and keeps the tuple root.
+        tupled = e["kind"] == "cg_iter"
+        text = _lower(e["fn"], e["args"], return_tuple=tupled)
+        fname = e["name"] + ".hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": e["name"],
+                "kind": e["kind"],
+                "variant": e["variant"],
+                "n": e["n"],
+                "chunk": e["chunk"],
+                "dtype": e["dtype"],
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "num_args": len(e["args"]),
+                "arg_shapes": [list(a.shape) for a in e["args"]],
+                "tupled": tupled,
+            }
+        )
+        if verbose:
+            print(f"  {e['name']:36s} {len(text):>9d} chars  {time.time()-t0:5.1f}s")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + {mpath}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--n", type=int, default=DEFAULT_N, help="GLL points per dim")
+    p.add_argument("--chunk", type=int, default=DEFAULT_CHUNK, help="elements per launch")
+    p.add_argument(
+        "--quick", action="store_true", help="only the paper configuration (CI-fast)"
+    )
+    args = p.parse_args()
+    if args.quick:
+        entries = default_entries(args.n, args.chunk, extra_ns=(), perf_chunks=())
+    else:
+        entries = default_entries(args.n, args.chunk)
+    build(args.out, entries)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Spectral-element basis utilities: Gauss-Lobatto-Legendre (GLL) points,
+quadrature weights and the pseudo-spectral differentiation matrix.
+
+This is the python twin of ``rust/src/basis`` (Nekbone's ``semhat``). The two
+implementations are cross-checked in the test suites: both must agree to
+machine precision, since the Rust coordinator generates the operator inputs
+that the AOT-compiled kernels consume.
+
+All routines are plain numpy (build-time only; nothing here runs on the
+request path).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "legendre",
+    "legendre_deriv",
+    "gll_points",
+    "gll_weights",
+    "derivative_matrix",
+    "semhat",
+]
+
+
+def legendre(order: int, x: np.ndarray) -> np.ndarray:
+    """Evaluate the Legendre polynomial P_order at ``x``.
+
+    Uses the three-term Bonnet recurrence
+    ``(m+1) P_{m+1}(x) = (2m+1) x P_m(x) - m P_{m-1}(x)``,
+    which is numerically stable on [-1, 1].
+    """
+    x = np.asarray(x, dtype=np.float64)
+    if order == 0:
+        return np.ones_like(x)
+    if order == 1:
+        return x.copy()
+    p_prev = np.ones_like(x)
+    p = x.copy()
+    for m in range(1, order):
+        p_next = ((2 * m + 1) * x * p - m * p_prev) / (m + 1)
+        p_prev, p = p, p_next
+    return p
+
+
+def legendre_deriv(order: int, x: np.ndarray) -> np.ndarray:
+    """Evaluate d/dx P_order(x) via the standard derivative relation
+    ``(x^2 - 1)/order * P'_order = x P_order - P_{order-1}`` away from the
+    endpoints, with the closed-form endpoint limit
+    ``P'_order(±1) = (±1)^{order-1} order (order+1) / 2``.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    if order == 0:
+        return np.zeros_like(x)
+    pn = legendre(order, x)
+    pnm1 = legendre(order - 1, x)
+    out = np.empty_like(x)
+    interior = np.abs(np.abs(x) - 1.0) > 1e-13
+    xi = x[interior]
+    out[interior] = order * (xi * pn[interior] - pnm1[interior]) / (xi * xi - 1.0)
+    edge = ~interior
+    sign = np.where(x[edge] > 0, 1.0, np.where(order % 2 == 0, -1.0, 1.0))
+    out[edge] = sign * order * (order + 1) / 2.0
+    return out
+
+
+def gll_points(n: int) -> np.ndarray:
+    """The ``n`` Gauss-Lobatto-Legendre points on [-1, 1].
+
+    ``n = polynomial degree + 1``. The points are the endpoints ±1 plus the
+    roots of P'_{n-1}; interior roots are found with Newton iteration from
+    the Chebyshev-Gauss-Lobatto initial guess (standard approach, converges
+    quadratically, < 10 iterations to 1e-15 for n <= 64).
+    """
+    if n < 2:
+        raise ValueError(f"GLL needs at least 2 points, got n={n}")
+    order = n - 1
+    # Chebyshev-Gauss-Lobatto initial guess.
+    x = -np.cos(np.pi * np.arange(n) / order)
+    # Newton on q(x) = P'_order(x) for the interior nodes. We use the
+    # recurrence-free formulation from the classic Matlab `lglnodes`:
+    # iterate on x -= (x P_order - P_{order-1}) / (n P_order), which has the
+    # GLL points (including the endpoints) as fixed points.
+    x_old = np.full_like(x, 2.0)
+    it = 0
+    while np.max(np.abs(x - x_old)) > 1e-15 and it < 100:
+        x_old = x.copy()
+        pn = legendre(order, x)
+        pnm1 = legendre(order - 1, x)
+        x = x_old - (x_old * pn - pnm1) / (n * pn)
+        it += 1
+    x[0], x[-1] = -1.0, 1.0
+    return x
+
+
+def gll_weights(n: int) -> np.ndarray:
+    """GLL quadrature weights ``w_j = 2 / (order (order+1) P_order(x_j)^2)``
+    with ``order = n - 1``. Exact for polynomials of degree <= 2n - 3.
+    """
+    order = n - 1
+    x = gll_points(n)
+    pn = legendre(order, x)
+    return 2.0 / (order * (order + 1) * pn * pn)
+
+
+def derivative_matrix(n: int) -> np.ndarray:
+    """The GLL pseudo-spectral differentiation matrix D (Nekbone's ``dxm1``).
+
+    ``(D u)_i = sum_j D[i, j] u_j`` is the derivative of the degree-(n-1)
+    interpolant of ``u`` evaluated at GLL node i. Closed form
+    (e.g. Canuto et al., Spectral Methods):
+
+        D[i, j] = P(x_i) / (P(x_j) (x_i - x_j))       i != j
+        D[0, 0] = -order (order + 1) / 4
+        D[order, order] = +order (order + 1) / 4
+        D[i, i] = 0                                    otherwise
+
+    with ``P = P_order``, ``order = n - 1``.
+    """
+    order = n - 1
+    x = gll_points(n)
+    pn = legendre(order, x)
+    d = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                d[i, j] = pn[i] / (pn[j] * (x[i] - x[j]))
+    d[0, 0] = -order * (order + 1) / 4.0
+    d[order, order] = order * (order + 1) / 4.0
+    return d
+
+
+def semhat(n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Nekbone's ``semhat``: (points, weights, derivative matrix) for n GLL
+    nodes. Returned in that order."""
+    return gll_points(n), gll_weights(n), derivative_matrix(n)

@@ -1,0 +1,40 @@
+"""Layer-1 Pallas kernels for the Nekbone local Poisson operator.
+
+Variant registry (the paper's five GPU versions, section IV):
+
+    "jnp"              pure-jnp einsum, compiler-scheduled (OpenACC analog)
+    "original"         two launches, intermediates round-trip HBM (Gong et al.)
+    "shared"           whole element staged to VMEM, capacity-bound (Jocksch et al.)
+    "layered"          the paper's 2D-thread-structure schedule (CUDA C)
+    "layered_unroll2"  layered with k loop manually unrolled x2 (CUDA Fortran)
+"""
+
+from .ref import ax_ref, grad_ref, gather_grad
+from .ax_original import ax_original
+from .ax_shared import ax_shared, shared_bytes, SharedCapacityError, SHARED_BUDGET_BYTES
+from .ax_layered import ax_layered, ax_layered_unroll2
+from . import vector_ops
+
+#: variant name -> callable(u, d, g) -> w
+AX_VARIANTS = {
+    "jnp": ax_ref,
+    "original": ax_original,
+    "shared": ax_shared,
+    "layered": ax_layered,
+    "layered_unroll2": ax_layered_unroll2,
+}
+
+__all__ = [
+    "AX_VARIANTS",
+    "ax_ref",
+    "grad_ref",
+    "gather_grad",
+    "ax_original",
+    "ax_shared",
+    "ax_layered",
+    "ax_layered_unroll2",
+    "shared_bytes",
+    "SharedCapacityError",
+    "SHARED_BUDGET_BYTES",
+    "vector_ops",
+]

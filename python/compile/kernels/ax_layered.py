@@ -1,0 +1,149 @@
+"""The paper's contribution: the *2D thread structure* / layered kernel,
+re-thought for TPU as a Pallas kernel (paper section IV-C, Fig. 1).
+
+CUDA original: one thread block per element holds an ``n x n`` layer of
+threads that sweeps the ``k`` layers in lock-step. Per layer it
+
+  1. stages the layer ``u(:,:,k)`` into shared memory (sync #1),
+  2. computes the r/s derivatives from the shared layer and the t derivative
+     from a per-thread register column ``u(i,j,:)``,
+  3. applies the geometric factors,
+  4. stages ``ur/us`` back to shared memory (sync #2) and computes the r/s
+     part of the divergence for layer k, while scattering the t part
+     ``D[k,m] * ut_k`` into a per-thread register accumulator ``rw[m]``.
+
+TPU mapping (see DESIGN.md section "Hardware-Adaptation"):
+
+  * concurrent thread blocks -> the batched element axis of the block
+    (one launch processes the whole chunk; each element's schedule is
+    independent, exactly like co-resident CUDA blocks),
+  * shared memory       -> VMEM-staged block values (D, and the (E,n,n)
+    layer tiles produced inside the k sweep),
+  * register column / accumulator -> the per-layer ``rw`` values carried
+    through the unrolled sweep,
+  * warp-synchronous r/s contractions -> two batched (n,n) matmuls per
+    layer (``u_k @ D^T`` and ``D @ u_k``) - MXU-shaped,
+  * ``#pragma unroll``  -> the k sweep is unrolled at trace time (the
+    paper's CUDA-C compiler unrolling); ``ax_layered_unroll2`` instead
+    keeps a run-time ``fori_loop`` manually unrolled by two (the paper's
+    CUDA-Fortran variant, which unrolls by hand once),
+  * __syncthreads x2    -> the dataflow ordering between the stage-1 layer
+    products and the stage-2 accumulation.
+
+Fast-memory pressure per element is ``O(n^3) + O(n^2)`` (the u block plus
+layer tiles) instead of the shared variant's ``5 n^3``; nothing but block
+constants changes with the polynomial degree - the paper's "ported to
+other polynomial degrees by changing a few constants".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ax_layered", "ax_layered_unroll2"]
+
+
+def _layer_terms(u_k, wt, g_k, d, dt):
+    """Stage-1 products and geometric factors for one k layer.
+
+    ``u_k``: (E, n, n) layer tile; ``wt``: (E, n, n) t-derivative of this
+    layer; ``g_k``: (E, 6, n, n). Returns ``(w_rs, ut)``: the r/s part of
+    the divergence landing in this layer, and the ut tile to scatter.
+    """
+    # wr[e,j,i] = sum_l d[i,l] u_k[e,j,l]  ->  u_k @ d^T (batched matmul)
+    wr = u_k @ dt
+    # ws[e,j,i] = sum_l d[j,l] u_k[e,l,i]  ->  d @ u_k (batched matmul)
+    ws = jnp.einsum("jl,eli->eji", d, u_k)
+    ur = g_k[:, 0] * wr + g_k[:, 1] * ws + g_k[:, 2] * wt
+    us = g_k[:, 1] * wr + g_k[:, 3] * ws + g_k[:, 4] * wt
+    ut = g_k[:, 2] * wr + g_k[:, 4] * ws + g_k[:, 5] * wt
+    # Stage-2 r/s parts: w_rs[e,j,i] = sum_l d[l,i] ur[e,j,l]
+    #                               + sum_l d[l,j] us[e,l,i]
+    w_rs = ur @ d + jnp.einsum("lj,eli->eji", d, us)
+    return w_rs, ut
+
+
+def _unrolled_kernel(d_ref, u_ref, g_ref, w_ref):
+    """k sweep unrolled at trace time (#pragma unroll analog)."""
+    n = d_ref.shape[0]
+    d = d_ref[...]  # D resident in VMEM for the whole launch
+    dt = d.T        # D^T formed once (dxtm1)
+    u = u_ref[...]  # (E, n, n, n)
+    g = g_ref[...]  # (E, 6, n, n, n)
+    # The t-derivative comes from the CUDA kernel's *register column*: each
+    # thread holds u(i,j,:) in registers, so u is read exactly once for the
+    # whole t contraction. The batched analog is one contraction over the
+    # layer axis (reading u once), then per-layer slices of the result.
+    wt_all = jnp.einsum("kl,elji->ekji", d, u)
+    layers = []
+    for k in range(n):
+        u_k = u[:, k]  # staged layer tile (sync #1)
+        w_rs, ut = _layer_terms(u_k, wt_all[:, k], g[:, :, k], d, dt)
+        layers.append((w_rs, ut))
+    # Scatter: w[e,m,j,i] = w_rs[m] + sum_k d[k,m] ut_k  (register rw[m]).
+    ut_stack = jnp.stack([ut for (_, ut) in layers], axis=1)  # (E, n, n, n)
+    w_rs_stack = jnp.stack([w_rs for (w_rs, _) in layers], axis=1)
+    w_ref[...] = w_rs_stack + jnp.einsum("km,ekji->emji", d, ut_stack)
+
+
+def _looped_kernel(d_ref, u_ref, g_ref, w_ref, *, unroll: int):
+    """Run-time k loop, manually unrolled by `unroll` (CUDA-Fortran
+    analog: 'the loop was manually unrolled once instead')."""
+    n = d_ref.shape[0]
+    d = d_ref[...]
+    dt = d.T
+    u = u_ref[...]
+    g = g_ref[...]
+    nelt = u.shape[0]
+
+    # Register-column t-derivative, u read once (see _unrolled_kernel).
+    wt_all = jnp.einsum("kl,elji->ekji", d, u)
+
+    def step(k, rw):
+        u_k = jax.lax.dynamic_index_in_dim(u, k, axis=1, keepdims=False)
+        d_k = jax.lax.dynamic_index_in_dim(d, k, axis=0, keepdims=False)
+        wt = jax.lax.dynamic_index_in_dim(wt_all, k, axis=1, keepdims=False)
+        g_k = jax.lax.dynamic_index_in_dim(g, k, axis=2, keepdims=False)
+        w_rs, ut = _layer_terms(u_k, wt, g_k, d, dt)
+        rw = rw + d_k[None, :, None, None] * ut[:, None]
+        prev = jax.lax.dynamic_index_in_dim(rw, k, axis=1, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(rw, prev + w_rs, k, axis=1)
+
+    def body(t, rw):
+        k0 = t * unroll
+        for off in range(unroll):
+            rw = step(k0 + off, rw)
+        return rw
+
+    rw0 = jnp.zeros((nelt, n, n, n), u.dtype)
+    trips, rem = divmod(n, unroll)
+    rw = jax.lax.fori_loop(0, trips, body, rw0)
+    for k in range(n - rem, n):  # peeled remainder layers
+        rw = step(k, rw)
+    w_ref[...] = rw
+
+
+def _call(kernel, u, d, g):
+    nelt, n = u.shape[0], u.shape[1]
+    (w,) = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((nelt, n, n, n), u.dtype)],
+        interpret=True,
+    )(d, u, g)
+    return w
+
+
+def ax_layered(u: jnp.ndarray, d: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Local Poisson operator with the paper's layered schedule, k sweep
+    unrolled at trace time (the optimized CUDA-C kernel)."""
+    return _call(_unrolled_kernel, u, d, g)
+
+
+def ax_layered_unroll2(u: jnp.ndarray, d: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Layered schedule with a run-time k loop manually unrolled by two
+    (the optimized CUDA-Fortran kernel)."""
+    return _call(functools.partial(_looped_kernel, unroll=2), u, d, g)

@@ -1,0 +1,69 @@
+"""Pallas analog of the *original* GPU Nekbone kernel (Gong et al. [11]).
+
+Paper section IV-A: the original CUDA-Fortran/OpenACC implementation keeps
+everything in global memory and has poor temporal locality - the stage-1
+gradients ``ur/us/ut`` are materialized to global memory and read back by a
+second kernel.
+
+We mirror that structure exactly: **two** ``pallas_call`` launches with the
+three intermediate fields round-tripping through HBM (the "global memory" of
+the TPU mapping). Within each launch the computation is expressed as
+whole-volume contractions with no layering or staging discipline - the
+analog of "as many threads as possible, not organized for locality". The
+chunk's element axis is batched inside the launch (concurrent thread
+blocks).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ax_original"]
+
+
+def _stage1_kernel(d_ref, u_ref, g_ref, ur_ref, us_ref, ut_ref):
+    """Gradient + geometric factors; writes ur/us/ut back to HBM."""
+    d = d_ref[...]
+    u = u_ref[...]  # (E, n, n, n) axes (e, k, j, i)
+    wr = jnp.einsum("il,ekjl->ekji", d, u)
+    ws = jnp.einsum("jl,ekli->ekji", d, u)
+    wt = jnp.einsum("kl,elji->ekji", d, u)
+    g = g_ref[...]  # (E, 6, n, n, n)
+    ur_ref[...] = g[:, 0] * wr + g[:, 1] * ws + g[:, 2] * wt
+    us_ref[...] = g[:, 1] * wr + g[:, 3] * ws + g[:, 4] * wt
+    ut_ref[...] = g[:, 2] * wr + g[:, 4] * ws + g[:, 5] * wt
+
+
+def _stage2_kernel(d_ref, ur_ref, us_ref, ut_ref, w_ref):
+    """Divergence stage; reads ur/us/ut back from HBM."""
+    d = d_ref[...]
+    ur, us, ut = ur_ref[...], us_ref[...], ut_ref[...]
+    w_ref[...] = (
+        jnp.einsum("li,ekjl->ekji", d, ur)
+        + jnp.einsum("lj,ekli->ekji", d, us)
+        + jnp.einsum("lk,elji->ekji", d, ut)
+    )
+
+
+def ax_original(u: jnp.ndarray, d: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Local Poisson operator, original-GPU-kernel structure.
+
+    Shapes: ``u [E,n,n,n]``, ``d [n,n]``, ``g [E,6,n,n,n]`` -> ``w [E,n,n,n]``.
+    """
+    nelt, n = u.shape[0], u.shape[1]
+    elem = jax.ShapeDtypeStruct((nelt, n, n, n), u.dtype)
+
+    ur, us, ut = pl.pallas_call(
+        _stage1_kernel,
+        out_shape=[elem, elem, elem],
+        interpret=True,
+    )(d, u, g)
+
+    (w,) = pl.pallas_call(
+        _stage2_kernel,
+        out_shape=[elem],
+        interpret=True,
+    )(d, ur, us, ut)
+    return w

@@ -1,0 +1,88 @@
+"""Pallas analog of the *shared-memory* GPU Nekbone kernel (Jocksch et al.).
+
+Paper section IV-B: the whole element (nodal values + the differentiation
+matrix + the three gradient intermediates) is staged into GPU shared memory
+and the computation runs as in the original approach, but against fast
+memory. The approach is **capacity-bound**: "for a P100 GPU this approach
+does not work for elements with more than 10 GLL points".
+
+TPU mapping: the element block and all three intermediates are staged into
+VMEM inside a *single* grid step (no HBM round-trip, unlike
+:mod:`ax_original`), still with no layering. We enforce the paper's capacity
+wall explicitly with a shared-memory budget modeled on the P100's 64 KiB/SM
+(48 KiB usable per block): the variant refuses to build when
+
+    bytes(u) + bytes(ur) + bytes(us) + bytes(ut) + bytes(w) + 2 bytes(D)
+      = (5 n^3 + 2 n^2) * 8  >  budget
+
+which for f64 fails exactly above n = 10 - the same wall as the paper
+(n=10: 41.6 KiB fits; n=11: 55.1 KiB does not).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ax_shared", "shared_bytes", "SHARED_BUDGET_BYTES", "SharedCapacityError"]
+
+#: Usable shared memory per thread block on the P100 (the paper's capacity
+#: wall). 48 KiB: 64 KiB/SM minus the L1-carveout granularity.
+SHARED_BUDGET_BYTES = 48 * 1024
+
+
+class SharedCapacityError(ValueError):
+    """Raised when an element does not fit the shared-memory budget."""
+
+
+def shared_bytes(n: int, itemsize: int = 8) -> int:
+    """Bytes of fast memory the shared-memory schedule needs per element:
+    u + ur + us + ut + the w accumulator (5 n^3 values) plus D and D^T
+    (2 n^2 values)."""
+    return (5 * n**3 + 2 * n**2) * itemsize
+
+
+def _kernel(d_ref, u_ref, g_ref, w_ref):
+    # Everything below operates on VMEM-staged values: u, D, and the three
+    # full-size gradient intermediates live in fast memory for the whole
+    # launch (one call, no HBM round-trip - unlike ax_original). The element
+    # axis is batched (concurrent thread blocks); the capacity wall is
+    # per element, matching per-block shared memory.
+    d = d_ref[...]
+    u = u_ref[...]  # (E, n, n, n)
+    g = g_ref[...]  # (E, 6, n, n, n)
+    wr = jnp.einsum("il,ekjl->ekji", d, u)
+    ws = jnp.einsum("jl,ekli->ekji", d, u)
+    wt = jnp.einsum("kl,elji->ekji", d, u)
+    ur = g[:, 0] * wr + g[:, 1] * ws + g[:, 2] * wt
+    us = g[:, 1] * wr + g[:, 3] * ws + g[:, 4] * wt
+    ut = g[:, 2] * wr + g[:, 4] * ws + g[:, 5] * wt
+    w_ref[...] = (
+        jnp.einsum("li,ekjl->ekji", d, ur)
+        + jnp.einsum("lj,ekli->ekji", d, us)
+        + jnp.einsum("lk,elji->ekji", d, ut)
+    )
+
+
+def ax_shared(u: jnp.ndarray, d: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Local Poisson operator, shared-memory-kernel structure.
+
+    Raises :class:`SharedCapacityError` when the element exceeds the
+    shared-memory budget (n > 10 for f64), mirroring the paper's limitation.
+    """
+    nelt, n = u.shape[0], u.shape[1]
+    itemsize = jnp.dtype(u.dtype).itemsize
+    need = shared_bytes(n, itemsize)
+    if need > SHARED_BUDGET_BYTES:
+        raise SharedCapacityError(
+            f"shared-memory schedule needs {need} B for n={n} "
+            f"(> budget {SHARED_BUDGET_BYTES} B); the paper's P100 wall is "
+            f"n > 10 - use the layered variant instead"
+        )
+    (w,) = pl.pallas_call(
+        _kernel,
+        out_shape=[jax.ShapeDtypeStruct((nelt, n, n, n), u.dtype)],
+        interpret=True,
+    )(d, u, g)
+    return w

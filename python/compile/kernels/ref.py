@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the Nekbone local Poisson operator (paper Listing 1).
+
+This module is the single source of truth for *what* the operator computes;
+every Pallas variant in this package is tested against it. It also doubles as
+the "OpenACC" analog of the paper (section IV): a compiler-scheduled
+formulation with no hand-written data staging, lowered to its own HLO
+artifact (variant name ``jnp``).
+
+Array convention (shared with the Rust side):
+
+    u  f64[E, n, n, n]     axes (element, k, j, i) - i fastest, matching the
+                           memory order of Fortran ``u(i,j,k,e)``
+    d  f64[n, n]           dxm1: (D u)_i = sum_l d[i, l] u_l
+    g  f64[E, 6, n, n, n]  geometric factors G1..G6 (the symmetric 3x3 per
+                           gridpoint, upper-triangular storage:
+                           [G11, G12, G13, G22, G23, G33])
+    w  f64[E, n, n, n]     output
+
+The operator (paper Listing 1, two tensor-contraction stages):
+
+    wr(i,j,k) = sum_l d[i,l] u(l,j,k)
+    ws(i,j,k) = sum_l d[j,l] u(i,l,k)
+    wt(i,j,k) = sum_l d[k,l] u(i,j,l)
+    ur = G11 wr + G12 ws + G13 wt
+    us = G12 wr + G22 ws + G23 wt
+    ut = G13 wr + G23 ws + G33 wt
+    w(i,j,k)  = sum_l d[l,i] ur(l,j,k) + d[l,j] us(i,l,k) + d[l,k] ut(i,j,l)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["grad_ref", "gather_grad", "ax_ref"]
+
+
+def grad_ref(u: jnp.ndarray, d: jnp.ndarray):
+    """Stage 1: local r/s/t derivatives of ``u`` on every element.
+
+    Returns ``(wr, ws, wt)``, each shaped like ``u``.
+    """
+    # wr[e,k,j,i] = sum_l d[i,l] u[e,k,j,l]
+    wr = jnp.einsum("il,ekjl->ekji", d, u)
+    # ws[e,k,j,i] = sum_l d[j,l] u[e,k,l,i]
+    ws = jnp.einsum("jl,ekli->ekji", d, u)
+    # wt[e,k,j,i] = sum_l d[k,l] u[e,l,j,i]
+    wt = jnp.einsum("kl,elji->ekji", d, u)
+    return wr, ws, wt
+
+
+def gather_grad(wr, ws, wt, g):
+    """Apply the symmetric geometric-factor tensor to the local gradient."""
+    g11, g12, g13 = g[:, 0], g[:, 1], g[:, 2]
+    g22, g23, g33 = g[:, 3], g[:, 4], g[:, 5]
+    ur = g11 * wr + g12 * ws + g13 * wt
+    us = g12 * wr + g22 * ws + g23 * wt
+    ut = g13 * wr + g23 * ws + g33 * wt
+    return ur, us, ut
+
+
+def ax_ref(u: jnp.ndarray, d: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """The full local Poisson operator ``w = A_local u`` (paper Listing 1)."""
+    wr, ws, wt = grad_ref(u, d)
+    ur, us, ut = gather_grad(wr, ws, wt, g)
+    # Stage 2 uses the transpose contractions (dxtm1 in Nekbone):
+    # w[e,k,j,i] = sum_l d[l,i] ur[e,k,j,l]
+    #            + sum_l d[l,j] us[e,k,l,i]
+    #            + sum_l d[l,k] ut[e,l,j,i]
+    w = (
+        jnp.einsum("li,ekjl->ekji", d, ur)
+        + jnp.einsum("lj,ekli->ekji", d, us)
+        + jnp.einsum("lk,elji->ekji", d, ut)
+    )
+    return w

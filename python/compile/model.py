@@ -1,0 +1,139 @@
+"""Layer 2: the JAX compute graph around the Layer-1 kernels.
+
+The "model" of this systems paper is the Nekbone Ax operator plus the CG
+vector algebra. This module builds the concrete jittable callables that
+``aot.py`` lowers to HLO text, each specialized to a fixed
+``(variant, n, chunk, dtype)`` - the GPU analog of compiling one kernel
+per launch configuration.
+
+Nothing in this package runs at serve time: the Rust coordinator loads the
+lowered artifacts through PJRT and feeds them buffers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import AX_VARIANTS, SharedCapacityError, shared_bytes, SHARED_BUDGET_BYTES
+from .kernels import vector_ops
+
+__all__ = [
+    "AxSpec",
+    "make_ax",
+    "ax_arg_specs",
+    "make_vector_op",
+    "vector_arg_specs",
+    "make_cg_iter",
+    "cg_iter_arg_specs",
+]
+
+
+@dataclass(frozen=True)
+class AxSpec:
+    """Static configuration of one Ax executable."""
+
+    variant: str
+    n: int
+    chunk: int
+    dtype: str = "float64"
+
+    @property
+    def name(self) -> str:
+        return f"ax_{self.variant}_n{self.n}_e{self.chunk}"
+
+    def validate(self) -> None:
+        if self.variant not in AX_VARIANTS:
+            raise KeyError(f"unknown Ax variant {self.variant!r}")
+        if self.n < 2:
+            raise ValueError(f"n must be >= 2, got {self.n}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        itemsize = jnp.dtype(self.dtype).itemsize
+        if self.variant == "shared" and shared_bytes(self.n, itemsize) > SHARED_BUDGET_BYTES:
+            raise SharedCapacityError(
+                f"variant 'shared' cannot build n={self.n} (paper's capacity wall)"
+            )
+
+
+def ax_arg_specs(spec: AxSpec):
+    """ShapeDtypeStructs for (u, d, g) of one Ax executable."""
+    n, e, dt = spec.n, spec.chunk, spec.dtype
+    return (
+        jax.ShapeDtypeStruct((e, n, n, n), dt),
+        jax.ShapeDtypeStruct((n, n), dt),
+        jax.ShapeDtypeStruct((e, 6, n, n, n), dt),
+    )
+
+
+def make_ax(spec: AxSpec):
+    """Return the jittable ``(u, d, g) -> (w,)`` for one configuration.
+
+    The 1-tuple return matches ``return_tuple=True`` lowering, which the
+    Rust loader unwraps with ``to_tuple1``.
+    """
+    spec.validate()
+    fn = AX_VARIANTS[spec.variant]
+
+    def ax(u, d, g):
+        return (fn(u, d, g),)
+
+    return ax
+
+
+# ------------------------------------------------------------- vector ops
+_VECTOR_OPS = {
+    # name -> (builder, n_vector_args, n_scalar_args)
+    "glsc3": (vector_ops.glsc3, 3, 0),
+    "add2s1": (vector_ops.add2s1, 2, 1),
+    "add2s2": (vector_ops.add2s2, 2, 1),
+}
+
+
+def vector_arg_specs(op: str, size: int, dtype: str = "float64"):
+    builder, nvec, nscal = _VECTOR_OPS[op]
+    vecs = tuple(jax.ShapeDtypeStruct((size,), dtype) for _ in range(nvec))
+    scals = tuple(jax.ShapeDtypeStruct((1,), dtype) for _ in range(nscal))
+    return vecs + scals
+
+
+def make_vector_op(op: str, size: int, dtype: str = "float64"):
+    """Jittable chunk-sized vector op ``(vectors..., scalars...) -> (out,)``."""
+    if op not in _VECTOR_OPS:
+        raise KeyError(f"unknown vector op {op!r}")
+    builder, _, _ = _VECTOR_OPS[op]
+
+    def f(*args):
+        return (builder(*args),)
+
+    return f
+
+
+# -------------------------------------------------- fused CG inner update
+def cg_iter_arg_specs(n: int, chunk: int, dtype: str = "float64"):
+    """(p, d, g, c) for the fused per-chunk CG compute: Ax + local pap."""
+    e = chunk
+    return (
+        jax.ShapeDtypeStruct((e, n, n, n), dtype),
+        jax.ShapeDtypeStruct((n, n), dtype),
+        jax.ShapeDtypeStruct((e, 6, n, n, n), dtype),
+        jax.ShapeDtypeStruct((e, n, n, n), dtype),
+    )
+
+
+def make_cg_iter(variant: str, n: int, chunk: int, dtype: str = "float64"):
+    """Fused hot-path executable: ``w = Ax(p)`` plus the chunk's partial
+    ``pap = sum w * c * p`` in one launch (perf-pass artifact - saves one
+    HBM round-trip of ``w`` per CG iteration)."""
+    spec = AxSpec(variant, n, chunk, dtype)
+    spec.validate()
+    fn = AX_VARIANTS[variant]
+
+    def f(p, d, g, c):
+        w = fn(p, d, g)
+        pap = jnp.sum(w * c * p).reshape((1,))
+        return (w, pap)
+
+    return f

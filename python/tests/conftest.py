@@ -1,0 +1,12 @@
+"""Shared test config: the paper computes in double precision, so x64 must
+be enabled before any jax array is created."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import settings
+
+# Interpret-mode Pallas is slow; keep the sweeps meaningful but bounded.
+settings.register_profile("repro", max_examples=25, deadline=None)
+settings.load_profile("repro")

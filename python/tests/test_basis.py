@@ -1,0 +1,135 @@
+"""Tests for the GLL basis (python twin of rust/src/basis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import basis
+
+
+# ------------------------------------------------------------- closed forms
+def test_gll_points_n2():
+    np.testing.assert_allclose(basis.gll_points(2), [-1.0, 1.0])
+
+
+def test_gll_points_n3():
+    np.testing.assert_allclose(basis.gll_points(3), [-1.0, 0.0, 1.0], atol=1e-15)
+
+
+def test_gll_points_n4():
+    r = 1.0 / np.sqrt(5.0)
+    np.testing.assert_allclose(basis.gll_points(4), [-1.0, -r, r, 1.0], atol=1e-14)
+
+
+def test_gll_points_n5():
+    r = np.sqrt(3.0 / 7.0)
+    np.testing.assert_allclose(basis.gll_points(5), [-1.0, -r, 0.0, r, 1.0], atol=1e-14)
+
+
+def test_gll_weights_n2():
+    np.testing.assert_allclose(basis.gll_weights(2), [1.0, 1.0])
+
+
+def test_gll_weights_n3():
+    np.testing.assert_allclose(basis.gll_weights(3), [1 / 3, 4 / 3, 1 / 3], atol=1e-14)
+
+
+def test_gll_weights_n5():
+    # Known: [1/10, 49/90, 32/45, 49/90, 1/10]
+    np.testing.assert_allclose(
+        basis.gll_weights(5),
+        [0.1, 49 / 90, 32 / 45, 49 / 90, 0.1],
+        atol=1e-14,
+    )
+
+
+# --------------------------------------------------------------- invariants
+@given(st.integers(min_value=2, max_value=24))
+def test_points_sorted_symmetric_in_range(n):
+    x = basis.gll_points(n)
+    assert x[0] == -1.0 and x[-1] == 1.0
+    assert np.all(np.diff(x) > 0)
+    np.testing.assert_allclose(x, -x[::-1], atol=1e-14)
+
+
+@given(st.integers(min_value=2, max_value=24))
+def test_weights_positive_sum_two(n):
+    w = basis.gll_weights(n)
+    assert np.all(w > 0)
+    np.testing.assert_allclose(w.sum(), 2.0, rtol=1e-13)
+
+
+@given(st.integers(min_value=2, max_value=16), st.integers(min_value=0, max_value=40))
+def test_quadrature_exactness(n, seed):
+    """GLL quadrature is exact for polynomials of degree <= 2n - 3."""
+    deg = min(2 * n - 3, 12)
+    if deg < 0:
+        return
+    rng = np.random.default_rng(seed)
+    coeffs = rng.standard_normal(deg + 1)
+    x, w = basis.gll_points(n), basis.gll_weights(n)
+    quad = np.sum(w * np.polyval(coeffs, x))
+    exact = sum(
+        c / (deg - i + 1) * (1 ** (deg - i + 1) - (-1) ** (deg - i + 1))
+        for i, c in enumerate(coeffs)
+    )
+    np.testing.assert_allclose(quad, exact, rtol=1e-10, atol=1e-10)
+
+
+@given(st.integers(min_value=2, max_value=16))
+def test_derivative_matrix_exact_on_monomials(n):
+    """D must differentiate every monomial of degree <= n-1 exactly."""
+    x = basis.gll_points(n)
+    d = basis.derivative_matrix(n)
+    for p in range(n):
+        u = x**p
+        du = p * x ** (p - 1) if p > 0 else np.zeros_like(x)
+        np.testing.assert_allclose(d @ u, du, atol=5e-10)
+
+
+@given(st.integers(min_value=2, max_value=20))
+def test_derivative_matrix_rows_sum_zero(n):
+    """D applied to a constant is zero."""
+    d = basis.derivative_matrix(n)
+    np.testing.assert_allclose(d.sum(axis=1), 0.0, atol=1e-11)
+
+
+@given(st.integers(min_value=2, max_value=20))
+def test_derivative_matrix_negation_symmetry(n):
+    """D[i,j] = -D[n-1-i, n-1-j] (parity of the GLL grid)."""
+    d = basis.derivative_matrix(n)
+    np.testing.assert_allclose(d, -d[::-1, ::-1], atol=1e-11)
+
+
+def test_semhat_consistency():
+    x, w, d = basis.semhat(10)
+    np.testing.assert_allclose(x, basis.gll_points(10))
+    np.testing.assert_allclose(w, basis.gll_weights(10))
+    np.testing.assert_allclose(d, basis.derivative_matrix(10))
+
+
+def test_n_too_small_raises():
+    with pytest.raises(ValueError):
+        basis.gll_points(1)
+
+
+def test_legendre_known_values():
+    x = np.array([-1.0, 0.0, 0.5, 1.0])
+    np.testing.assert_allclose(basis.legendre(2, x), 0.5 * (3 * x**2 - 1))
+    np.testing.assert_allclose(basis.legendre(3, x), 0.5 * (5 * x**3 - 3 * x))
+
+
+@given(st.integers(min_value=1, max_value=12))
+def test_legendre_deriv_matches_fd(order):
+    x = np.linspace(-0.95, 0.95, 7)
+    h = 1e-6
+    fd = (basis.legendre(order, x + h) - basis.legendre(order, x - h)) / (2 * h)
+    np.testing.assert_allclose(basis.legendre_deriv(order, x), fd, rtol=1e-6, atol=1e-6)
+
+
+def test_legendre_deriv_endpoints():
+    for order in range(1, 9):
+        got = basis.legendre_deriv(order, np.array([-1.0, 1.0]))
+        end = order * (order + 1) / 2
+        np.testing.assert_allclose(got[1], end)
+        np.testing.assert_allclose(got[0], end * (-1.0) ** (order - 1))

@@ -1,0 +1,167 @@
+"""Kernel-vs-oracle tests: every Pallas Ax variant must agree with the
+pure-jnp reference over a hypothesis sweep of shapes, dtypes, and random
+affine geometry (DESIGN.md section 9)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import basis
+from compile.kernels import (
+    AX_VARIANTS,
+    SHARED_BUDGET_BYTES,
+    SharedCapacityError,
+    ax_layered,
+    ax_ref,
+    ax_shared,
+    grad_ref,
+    shared_bytes,
+)
+
+PALLAS_VARIANTS = [k for k in AX_VARIANTS if k != "jnp"]
+
+
+def rand_inputs(rng, nelt, n, dtype=np.float64, spd_geometry=False):
+    u = rng.standard_normal((nelt, n, n, n)).astype(dtype)
+    d = basis.derivative_matrix(n).astype(dtype)
+    if spd_geometry:
+        # Geometric factors from a random SPD 3x3 per gridpoint - what a
+        # real (non-degenerate) mesh produces.
+        a = rng.standard_normal((nelt, n, n, n, 3, 3)).astype(dtype)
+        m = np.einsum("...ij,...kj->...ik", a, a) + 0.5 * np.eye(3, dtype=dtype)
+        g = np.stack(
+            [m[..., 0, 0], m[..., 0, 1], m[..., 0, 2],
+             m[..., 1, 1], m[..., 1, 2], m[..., 2, 2]],
+            axis=1,
+        )
+    else:
+        g = rng.standard_normal((nelt, 6, n, n, n)).astype(dtype)
+    return u, d, g
+
+
+def tol_for(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == np.float32 else dict(rtol=1e-11, atol=1e-11)
+
+
+# ------------------------------------------------------ hypothesis sweeps
+@pytest.mark.parametrize("variant", PALLAS_VARIANTS)
+@given(
+    n=st.integers(min_value=2, max_value=8),
+    nelt=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+    dtype=st.sampled_from([np.float64, np.float32]),
+)
+@settings(max_examples=12, deadline=None)
+def test_variant_matches_ref(variant, n, nelt, seed, dtype):
+    rng = np.random.default_rng(seed)
+    u, d, g = rand_inputs(rng, nelt, n, dtype)
+    want = np.asarray(ax_ref(jnp.asarray(u), jnp.asarray(d), jnp.asarray(g)))
+    got = np.asarray(AX_VARIANTS[variant](jnp.asarray(u), jnp.asarray(d), jnp.asarray(g)))
+    np.testing.assert_allclose(got, want, **tol_for(dtype))
+
+
+@pytest.mark.parametrize("variant", PALLAS_VARIANTS)
+def test_variant_paper_configuration(variant):
+    """The paper's configuration: polynomial degree 9 (n = 10), f64."""
+    rng = np.random.default_rng(42)
+    u, d, g = rand_inputs(rng, 2, 10, spd_geometry=True)
+    want = np.asarray(ax_ref(u, d, g))
+    got = np.asarray(AX_VARIANTS[variant](u, d, g))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+# --------------------------------------------------------- operator algebra
+@given(seed=st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=10, deadline=None)
+def test_ax_is_symmetric_for_symmetric_geometry(seed):
+    """<A u, v> = <u, A v> - the local operator is symmetric because G is a
+    symmetric tensor; this is what makes CG applicable at all."""
+    rng = np.random.default_rng(seed)
+    n, nelt = 5, 2
+    u, d, g = rand_inputs(rng, nelt, n, spd_geometry=True)
+    v = rng.standard_normal(u.shape)
+    au = np.asarray(ax_ref(u, d, g))
+    av = np.asarray(ax_ref(v, d, g))
+    np.testing.assert_allclose(np.sum(au * v), np.sum(u * av), rtol=1e-9)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=10, deadline=None)
+def test_ax_positive_semidefinite(seed):
+    """<A u, u> >= 0 for SPD geometric factors (A = D^T G D)."""
+    rng = np.random.default_rng(seed)
+    u, d, g = rand_inputs(rng, 2, 5, spd_geometry=True)
+    au = np.asarray(ax_ref(u, d, g))
+    assert np.sum(au * u) >= -1e-9
+
+
+def test_ax_kills_constants():
+    """A constant field has zero gradient: A 1 = 0 (pure Neumann locally)."""
+    n = 6
+    d = basis.derivative_matrix(n)
+    rng = np.random.default_rng(3)
+    u = np.ones((2, n, n, n))
+    g = rng.standard_normal((2, 6, n, n, n))
+    np.testing.assert_allclose(np.asarray(ax_ref(u, d, g)), 0.0, atol=1e-10)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=10, deadline=None)
+def test_ax_linear(seed):
+    rng = np.random.default_rng(seed)
+    u, d, g = rand_inputs(rng, 2, 4)
+    v = rng.standard_normal(u.shape)
+    a, b = 1.7, -0.3
+    lhs = np.asarray(ax_ref(a * u + b * v, d, g))
+    rhs = a * np.asarray(ax_ref(u, d, g)) + b * np.asarray(ax_ref(v, d, g))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-10, atol=1e-10)
+
+
+def test_grad_ref_on_linear_field():
+    """The r-derivative of u = r (the GLL coordinate) is exactly 1."""
+    n = 7
+    x = basis.gll_points(n)
+    d = basis.derivative_matrix(n)
+    u = np.broadcast_to(x, (1, n, n, n)).copy()  # varies along i (r)
+    wr, ws, wt = (np.asarray(a) for a in grad_ref(jnp.asarray(u), jnp.asarray(d)))
+    np.testing.assert_allclose(wr, 1.0, atol=1e-10)
+    np.testing.assert_allclose(ws, 0.0, atol=1e-10)
+    np.testing.assert_allclose(wt, 0.0, atol=1e-10)
+
+
+# ------------------------------------------------- the capacity wall (E7)
+def test_shared_capacity_wall_matches_paper():
+    """f64: n = 10 fits, n = 11 does not - exactly the paper's P100 wall
+    ('does not work for elements with more than 10 GLL points')."""
+    assert shared_bytes(10) <= SHARED_BUDGET_BYTES
+    assert shared_bytes(11) > SHARED_BUDGET_BYTES
+
+
+def test_shared_raises_above_wall():
+    rng = np.random.default_rng(0)
+    u, d, g = rand_inputs(rng, 1, 11)
+    with pytest.raises(SharedCapacityError):
+        ax_shared(u, d, g)
+
+
+def test_layered_works_above_wall():
+    """The paper's variant is not shared-memory-bound: n = 12 builds and is
+    correct ('can, by only changing a few constants, be ported to other
+    polynomial degrees')."""
+    rng = np.random.default_rng(1)
+    u, d, g = rand_inputs(rng, 1, 12)
+    want = np.asarray(ax_ref(u, d, g))
+    got = np.asarray(ax_layered(u, d, g))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_shared_f32_fits_above_f64_wall():
+    """The wall is a byte budget, not a point count: f32 halves the
+    footprint so n = 11 fits again."""
+    assert shared_bytes(11, itemsize=4) <= SHARED_BUDGET_BYTES
+    rng = np.random.default_rng(2)
+    u, d, g = rand_inputs(rng, 1, 11, dtype=np.float32)
+    want = np.asarray(ax_ref(u, d, g))
+    got = np.asarray(ax_shared(u, d, g))
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)

@@ -1,0 +1,101 @@
+"""Layer-2 model builder tests: spec validation, shapes, the fused CG
+iteration executable."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import SharedCapacityError, ax_ref
+from compile.model import AxSpec
+
+
+def test_axspec_name():
+    assert AxSpec("layered", 10, 64).name == "ax_layered_n10_e64"
+
+
+def test_axspec_rejects_unknown_variant():
+    with pytest.raises(KeyError):
+        AxSpec("warp_speed", 10, 64).validate()
+
+
+def test_axspec_rejects_bad_sizes():
+    with pytest.raises(ValueError):
+        AxSpec("layered", 1, 64).validate()
+    with pytest.raises(ValueError):
+        AxSpec("layered", 10, 0).validate()
+
+
+def test_axspec_shared_capacity():
+    AxSpec("shared", 10, 64).validate()  # fits
+    with pytest.raises(SharedCapacityError):
+        AxSpec("shared", 11, 64).validate()  # the paper's wall
+
+
+def test_ax_arg_specs_shapes():
+    u, d, g = model.ax_arg_specs(AxSpec("layered", 6, 8))
+    assert u.shape == (8, 6, 6, 6)
+    assert d.shape == (6, 6)
+    assert g.shape == (8, 6, 6, 6, 6)
+
+
+def test_make_ax_returns_one_tuple():
+    spec = AxSpec("layered", 4, 2)
+    fn = model.make_ax(spec)
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal((2, 4, 4, 4))
+    d = rng.standard_normal((4, 4))
+    g = rng.standard_normal((2, 6, 4, 4, 4))
+    out = fn(u, d, g)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ax_ref(u, d, g)), rtol=1e-11)
+
+
+def test_make_ax_is_jittable():
+    spec = AxSpec("layered", 4, 2)
+    fn = jax.jit(model.make_ax(spec))
+    rng = np.random.default_rng(1)
+    u = rng.standard_normal((2, 4, 4, 4))
+    d = rng.standard_normal((4, 4))
+    g = rng.standard_normal((2, 6, 4, 4, 4))
+    np.testing.assert_allclose(
+        np.asarray(fn(u, d, g)[0]), np.asarray(ax_ref(u, d, g)), rtol=1e-11, atol=1e-11
+    )
+
+
+def test_vector_arg_specs():
+    specs = model.vector_arg_specs("glsc3", 100)
+    assert len(specs) == 3 and all(s.shape == (100,) for s in specs)
+    specs = model.vector_arg_specs("add2s1", 100)
+    assert len(specs) == 3 and specs[2].shape == (1,)
+
+
+def test_make_vector_op_unknown():
+    with pytest.raises(KeyError):
+        model.make_vector_op("daxpy", 10)
+
+
+def test_cg_iter_fused_matches_unfused():
+    """The perf-pass fused executable must compute exactly Ax + partial pap."""
+    n, e = 4, 2
+    fn = model.make_cg_iter("layered", n, e)
+    rng = np.random.default_rng(7)
+    p = rng.standard_normal((e, n, n, n))
+    d = rng.standard_normal((n, n))
+    g = rng.standard_normal((e, 6, n, n, n))
+    c = rng.standard_normal((e, n, n, n))
+    w, pap = fn(p, d, g, c)
+    w_want = np.asarray(ax_ref(p, d, g))
+    np.testing.assert_allclose(np.asarray(w), w_want, rtol=1e-11, atol=1e-11)
+    np.testing.assert_allclose(np.asarray(pap)[0], np.sum(w_want * c * p), rtol=1e-11)
+
+
+def test_cg_iter_arg_specs():
+    specs = model.cg_iter_arg_specs(10, 64)
+    assert [tuple(s.shape) for s in specs] == [
+        (64, 10, 10, 10),
+        (10, 10),
+        (64, 6, 10, 10, 10),
+        (64, 10, 10, 10),
+    ]

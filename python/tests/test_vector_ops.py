@@ -1,0 +1,66 @@
+"""CG vector-op kernels vs their jnp references."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import vector_ops as vo
+
+
+def rand_vec(rng, size, dtype):
+    return rng.standard_normal(size).astype(dtype)
+
+
+@given(
+    size=st.integers(min_value=1, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2**31),
+    dtype=st.sampled_from([np.float64, np.float32]),
+)
+@settings(max_examples=15, deadline=None)
+def test_glsc3(size, seed, dtype):
+    rng = np.random.default_rng(seed)
+    a, b, m = (rand_vec(rng, size, dtype) for _ in range(3))
+    got = np.asarray(vo.glsc3(jnp.asarray(a), jnp.asarray(b), jnp.asarray(m)))
+    want = np.sum(a.astype(np.float64) * b * m)
+    tol = 1e-3 if dtype == np.float32 else 1e-10
+    np.testing.assert_allclose(got[0], want, rtol=tol, atol=tol)
+
+
+@given(
+    size=st.integers(min_value=1, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2**31),
+    c=st.floats(min_value=-10, max_value=10, allow_nan=False),
+)
+@settings(max_examples=15, deadline=None)
+def test_add2s1(size, seed, c):
+    rng = np.random.default_rng(seed)
+    a, b = rand_vec(rng, size, np.float64), rand_vec(rng, size, np.float64)
+    got = np.asarray(vo.add2s1(jnp.asarray(a), jnp.asarray(b), jnp.asarray([c])))
+    np.testing.assert_allclose(got, c * a + b, rtol=1e-12, atol=1e-12)
+
+
+@given(
+    size=st.integers(min_value=1, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2**31),
+    c=st.floats(min_value=-10, max_value=10, allow_nan=False),
+)
+@settings(max_examples=15, deadline=None)
+def test_add2s2(size, seed, c):
+    rng = np.random.default_rng(seed)
+    a, b = rand_vec(rng, size, np.float64), rand_vec(rng, size, np.float64)
+    got = np.asarray(vo.add2s2(jnp.asarray(a), jnp.asarray(b), jnp.asarray([c])))
+    np.testing.assert_allclose(got, a + c * b, rtol=1e-12, atol=1e-12)
+
+
+def test_glsc3_zero_mult_masks_everything():
+    a = np.ones(64)
+    got = np.asarray(vo.glsc3(a, a, np.zeros(64)))
+    assert got[0] == 0.0
+
+
+def test_refs_consistent():
+    rng = np.random.default_rng(0)
+    a, b, m = (rng.standard_normal(100) for _ in range(3))
+    np.testing.assert_allclose(np.asarray(vo.glsc3_ref(a, b, m)), np.sum(a * b * m))
+    np.testing.assert_allclose(np.asarray(vo.add2s1_ref(a, b, 2.0)), 2 * a + b)
+    np.testing.assert_allclose(np.asarray(vo.add2s2_ref(a, b, 2.0)), a + 2 * b)

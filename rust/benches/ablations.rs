@@ -1,0 +1,144 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * `unroll`         — E5: trace-time unroll (CUDA C `#pragma unroll`) vs
+//!                      run-time loop manually unrolled x2 (CUDA Fortran);
+//!                      the paper measures <1% between its two optimized
+//!                      kernels.
+//! * `vector-backend` — E6: CG vector algebra in Rust (the paper's OpenACC
+//!                      role) vs as XLA executables; the paper: "a few
+//!                      percentage points".
+//! * `degree-sweep`   — E7: the layered kernel at degrees 7/9/11 (the
+//!                      shared-memory version cannot build 11 at all).
+//! * `chunk-size`     — launch-batch sweep 64/256/1024 + the fused Ax+pap
+//!                      executable (dispatch-overhead amortization).
+//!
+//! Run all: `cargo bench --bench ablations`
+//! One:     `cargo bench --bench ablations -- unroll`
+
+mod common;
+
+use common::{bench_iters, have_artifacts, time_solve};
+use nekbone::bench::Table;
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
+
+fn ablate_unroll(niter: usize) {
+    println!("\n== E5: unroll strategy (paper: CUDA C vs CUDA Fortran < 1%) ==");
+    let mut table = Table::new(&["nelt", "layered(GF/s)", "unroll2(GF/s)", "delta"]);
+    for nelt in [256usize, 1024] {
+        let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+        let (_s, a, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+        let (_s, b, _r) = time_solve(&Backend::Xla("layered_unroll2".into()), &cfg);
+        table.row(&[
+            nelt.to_string(),
+            format!("{a:.3}"),
+            format!("{b:.3}"),
+            format!("{:+.1}%", 100.0 * (b / a - 1.0)),
+        ]);
+    }
+    table.print();
+}
+
+fn ablate_vector_backend(niter: usize) {
+    println!("\n== E6: vector-op backend (paper: OpenACC simple ops cost a few %) ==");
+    let mut table = Table::new(&["nelt", "rust-vec(GF/s)", "xla-vec(GF/s)", "delta"]);
+    for nelt in [64usize, 256] {
+        let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+        let (_s, rust_gf, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+        // XLA vector path (time one full run; the engine setup is amortized
+        // by constructing once).
+        let mut app = Nekbone::new(cfg.clone(), Backend::Xla("layered".into())).expect("setup");
+        let runner = nekbone::bench::Runner::default();
+        let samples = runner.run(|| {
+            app.run_vector_backend(VectorBackend::Xla).expect("solve");
+        });
+        let cm = nekbone::metrics::CostModel::new(10, nelt);
+        let xla_gf = (cm.flops_per_iter() * niter as u64) as f64 / samples.median() / 1e9;
+        table.row(&[
+            nelt.to_string(),
+            format!("{rust_gf:.3}"),
+            format!("{xla_gf:.3}"),
+            format!("{:+.1}%", 100.0 * (xla_gf / rust_gf - 1.0)),
+        ]);
+    }
+    table.print();
+}
+
+fn ablate_degree(niter: usize) {
+    println!("\n== E7: polynomial-degree portability (shared cannot build degree 11) ==");
+    let mut table = Table::new(&["n", "degree", "dof", "layered(GF/s)", "shared"]);
+    for n in [8usize, 10, 12] {
+        let nelt = 256;
+        let cfg = RunConfig { nelt, n, niter, ..RunConfig::default() };
+        let (_s, gf, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+        let shared_cell = if n <= 10 {
+            let (_s, sg, _r) = time_solve(&Backend::Xla("shared".into()), &cfg);
+            format!("{sg:.3}")
+        } else {
+            // The capacity wall: no artifact exists (aot.py refuses to
+            // build it), matching "does not work for more than 10 GLL
+            // points".
+            let err = Nekbone::new(cfg.clone(), Backend::Xla("shared".into())).err();
+            assert!(err.is_some(), "shared unexpectedly built at n={n}");
+            "CAPACITY-WALL".to_string()
+        };
+        table.row(&[
+            n.to_string(),
+            (n - 1).to_string(),
+            (nelt * n * n * n).to_string(),
+            format!("{gf:.3}"),
+            shared_cell,
+        ]);
+    }
+    table.print();
+}
+
+fn ablate_chunk(niter: usize) {
+    println!("\n== chunk-size / fusion sweep (launch-overhead amortization) ==");
+    let mut table = Table::new(&["nelt", "chunk", "backend", "GF/s"]);
+    for nelt in [1024usize] {
+        for chunk in [64usize, 256, 1024] {
+            let cfg = RunConfig { nelt, n: 10, niter, chunk, ..RunConfig::default() };
+            let (_s, gf, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+            table.row(&[
+                nelt.to_string(),
+                chunk.to_string(),
+                "xla-layered".into(),
+                format!("{gf:.3}"),
+            ]);
+        }
+        for chunk in [64usize, 256, 1024] {
+            let cfg = RunConfig { nelt, n: 10, niter, chunk, ..RunConfig::default() };
+            let (_s, gf, _r) = time_solve(&Backend::XlaFused("layered".into()), &cfg);
+            table.row(&[
+                nelt.to_string(),
+                chunk.to_string(),
+                "xla-fused".into(),
+                format!("{gf:.3}"),
+            ]);
+        }
+    }
+    table.print();
+}
+
+fn main() {
+    if !have_artifacts() {
+        return;
+    }
+    let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let all = which.is_empty();
+    let niter = bench_iters();
+    println!("# ablations, degree 9, {niter} CG iterations per run");
+    if all || which.iter().any(|w| w == "unroll") {
+        ablate_unroll(niter);
+    }
+    if all || which.iter().any(|w| w == "vector-backend") {
+        ablate_vector_backend(niter);
+    }
+    if all || which.iter().any(|w| w == "degree-sweep") {
+        ablate_degree(niter);
+    }
+    if all || which.iter().any(|w| w == "chunk-size") {
+        ablate_chunk(niter);
+    }
+}

@@ -1,0 +1,55 @@
+//! Shared scaffolding for the paper-figure benches.
+
+use nekbone::bench::{Runner, Samples};
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Backend, Nekbone};
+
+/// CG iterations per timed sample (env-overridable:
+/// `NEKBONE_BENCH_ITERS`). The paper runs 100; the default here keeps a
+/// full figure regeneration under a few minutes.
+pub fn bench_iters() -> usize {
+    std::env::var("NEKBONE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(30)
+}
+
+/// Element counts, overridable via `NEKBONE_BENCH_ELEMS=64,128,...`.
+pub fn elems_or(default: &[usize]) -> Vec<usize> {
+    match std::env::var("NEKBONE_BENCH_ELEMS") {
+        Ok(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+pub fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts").join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing; run `make artifacts` first");
+    }
+    ok
+}
+
+/// Median-time one full Nekbone solve for a backend/size; returns
+/// (samples, GFlop/s at the median, residual).
+pub fn time_solve(backend: &Backend, cfg: &RunConfig) -> (Samples, f64, f64) {
+    let mut app = Nekbone::new(cfg.clone(), backend.clone()).expect("setup");
+    let mut residual = 0.0;
+    let runner = Runner::default();
+    let samples = runner.run(|| {
+        let rep = app.run().expect("solve");
+        residual = rep.final_residual;
+    });
+    let cm = nekbone::metrics::CostModel::new(cfg.n, cfg.nelt);
+    let flops = cm.flops_per_iter() * cfg.niter as u64;
+    let gflops = flops as f64 / samples.median() / 1e9;
+    (samples, gflops, residual)
+}
+
+/// The paper's five GPU versions in presentation order.
+pub fn paper_versions() -> Vec<(&'static str, Backend)> {
+    vec![
+        ("openacc(jnp)", Backend::Xla("jnp".into())),
+        ("original", Backend::Xla("original".into())),
+        ("shared", Backend::Xla("shared".into())),
+        ("opt-cuda-c(layered)", Backend::Xla("layered".into())),
+        ("opt-cuda-f(unroll2)", Backend::Xla("layered_unroll2".into())),
+    ]
+}

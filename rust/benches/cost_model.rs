@@ -1,0 +1,63 @@
+//! Paper Eqs. (1)–(2): verify the cost model against instrumented counts
+//! and print the intensity table the analysis rests on (experiment E4).
+//!
+//! Run: `cargo bench --bench cost_model`
+
+use nekbone::bench::Table;
+use nekbone::metrics::{CostModel, FlopCounter};
+
+fn main() {
+    println!("# Paper Eq. (1): C(D,n) = D(12n+34); Eq. (2): I(n) = (12n+34)/240\n");
+    let nelt = 64;
+    let mut table = Table::new(&[
+        "n",
+        "degree",
+        "D(dof)",
+        "formula flops/iter",
+        "counted flops/iter",
+        "ratio",
+        "I(n) flop/byte",
+    ]);
+    for n in 4..=13 {
+        let cm = CostModel::new(n, nelt);
+        let mut fc = FlopCounter::default();
+        fc.count_cg_iter(n, nelt);
+        table.row(&[
+            n.to_string(),
+            (n - 1).to_string(),
+            cm.dof.to_string(),
+            cm.flops_per_iter().to_string(),
+            fc.flops.to_string(),
+            format!("{:.3}", fc.flops as f64 / cm.flops_per_iter() as f64),
+            format!("{:.4}", cm.intensity()),
+        ]);
+    }
+    table.print();
+
+    println!("\n# bandwidth model: 24D reads + 6D writes per iteration (f64)");
+    let mut table = Table::new(&["n", "reads/iter", "writes/iter", "bytes/iter"]);
+    for n in [8usize, 10, 12] {
+        let cm = CostModel::new(n, nelt);
+        table.row(&[
+            n.to_string(),
+            cm.reads_per_iter().to_string(),
+            cm.writes_per_iter().to_string(),
+            cm.bytes_per_iter().to_string(),
+        ]);
+    }
+    table.print();
+
+    // The section VI-B theoretical peaks.
+    let cm = CostModel::new(10, 1024);
+    println!("\n# theoretical peaks at degree 9 (paper section VI-B):");
+    println!(
+        "#   P100 720 GB/s -> {:.1} GF/s (paper: 462)   V100 900 GB/s -> {:.1} GF/s (paper: 577)",
+        cm.roofline_gflops(720.0),
+        cm.roofline_gflops(900.0)
+    );
+    let p100 = cm.roofline_gflops(720.0);
+    let v100 = cm.roofline_gflops(900.0);
+    assert!((p100 - 462.0).abs() < 1.0, "P100 peak drifted: {p100}");
+    assert!((v100 - 577.5).abs() < 1.0, "V100 peak drifted: {v100}");
+    println!("# cost model matches the paper's arithmetic.");
+}

@@ -1,0 +1,65 @@
+//! Paper Fig. 2: performance of every Nekbone version over the P100 sweep
+//! (64–4096 elements, polynomial degree 9).
+//!
+//! Reproduces the figure's *shape* on the CPU-PJRT substrate: GFlop/s per
+//! version as the element count grows, the rising curve as launch overhead
+//! amortizes, and the relative ordering of the versions. The paper's
+//! absolute numbers come from a P100; see EXPERIMENTS.md E1 for the
+//! comparison.
+//!
+//! Run: `cargo bench --bench fig2_p100_versions`
+//! Knobs: NEKBONE_BENCH_ITERS (default 30), NEKBONE_BENCH_ELEMS,
+//!        NEKBONE_BENCH_SAMPLES.
+
+mod common;
+
+use common::{bench_iters, elems_or, have_artifacts, paper_versions, time_solve};
+use nekbone::bench::Table;
+use nekbone::config::RunConfig;
+
+fn main() {
+    if !have_artifacts() {
+        return;
+    }
+    let elems = elems_or(&[64, 128, 256, 512, 1024, 2048, 4096]);
+    let niter = bench_iters();
+    println!("# Fig. 2 analog: Nekbone versions, degree 9, {niter} CG iterations");
+    println!("# (paper: P100, 64-4096 elements; columns are GFlop/s)\n");
+
+    let versions = paper_versions();
+    let mut header: Vec<&str> = vec!["nelt", "dof"];
+    for (name, _) in &versions {
+        header.push(name);
+    }
+    let mut table = Table::new(&header);
+
+    let mut last_row: Vec<f64> = Vec::new();
+    for &nelt in &elems {
+        let mut cells = vec![nelt.to_string(), (nelt * 1000).to_string()];
+        last_row.clear();
+        for (_, backend) in &versions {
+            let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+            let (samples, gflops, _res) = time_solve(backend, &cfg);
+            cells.push(format!("{gflops:.3}"));
+            last_row.push(gflops);
+            eprintln!(
+                "  nelt={nelt:<5} {:<22} median {:.3}s (spread {:.1}%)",
+                backend.label(),
+                samples.median(),
+                100.0 * samples.rel_spread()
+            );
+        }
+        table.row(&cells);
+    }
+    table.print();
+
+    // The paper's headline comparisons at the largest size.
+    if last_row.len() == 5 {
+        let (jnp, orig, shared, layered, _unroll2) =
+            (last_row[0], last_row[1], last_row[2], last_row[3], last_row[4]);
+        println!("\n# at nelt={} (paper, P100: layered +36% vs original, +10% vs shared):", elems.last().unwrap());
+        println!("#   layered vs original : {:+.1}%", 100.0 * (layered / orig - 1.0));
+        println!("#   layered vs shared   : {:+.1}%", 100.0 * (layered / shared - 1.0));
+        println!("#   layered vs openacc  : {:+.1}%", 100.0 * (layered / jnp - 1.0));
+    }
+}

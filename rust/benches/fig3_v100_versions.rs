@@ -1,0 +1,69 @@
+//! Paper Fig. 3: the Kebnekaise sweep (448–3584 elements) with the CPU
+//! baseline line added (the paper's 28-core node run with MPI).
+//!
+//! Adds to Fig. 2's version set: the multi-threaded CPU operator (our
+//! analog of the CPU/MPI baseline) and the simulated-rank runtime, which is
+//! the same code path the real code's MPI layer takes.
+//!
+//! Run: `cargo bench --bench fig3_v100_versions`
+
+mod common;
+
+use common::{bench_iters, elems_or, have_artifacts, paper_versions, time_solve};
+use nekbone::bench::{Runner, Table};
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Backend;
+use nekbone::rank::run_ranked;
+
+fn main() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper matches the CPU strong-scaling interval: 16-128 elements
+    // per core on 28 cores -> 448..3584.
+    let elems = elems_or(&[448, 896, 1792, 3584]);
+    let niter = bench_iters();
+    println!("# Fig. 3 analog: versions + CPU baseline, degree 9, {niter} CG iterations");
+    println!("# (paper: V100 + 28-core CPU node; columns are GFlop/s)\n");
+
+    let versions = paper_versions();
+    let mut header: Vec<&str> = vec!["nelt", "dof"];
+    for (name, _) in &versions {
+        header.push(name);
+    }
+    header.push("cpu(threads)");
+    header.push("cpu(ranked)");
+    let mut table = Table::new(&header);
+
+    for &nelt in &elems {
+        let mut cells = vec![nelt.to_string(), (nelt * 1000).to_string()];
+        for (_, backend) in &versions {
+            let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+            let (_s, gflops, _r) = time_solve(backend, &cfg);
+            cells.push(format!("{gflops:.3}"));
+        }
+        // CPU baseline 1: threaded operator in a serial CG.
+        let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+        let (_s, gflops, _r) = time_solve(&Backend::CpuThreaded, &cfg);
+        cells.push(format!("{gflops:.3}"));
+        // CPU baseline 2: the full simulated-MPI path (rank count = what
+        // the element grid supports, capped at 4).
+        let mesh = nekbone::mesh::Mesh::for_nelt(nelt, 10).expect("mesh");
+        let ranks = mesh.ez.min(4);
+        let cfg = RunConfig { nelt, n: 10, niter, ranks, ..RunConfig::default() };
+        let runner = Runner::default();
+        let samples = runner.run(|| {
+            run_ranked(&cfg).expect("ranked");
+        });
+        let cm = nekbone::metrics::CostModel::new(10, nelt);
+        let gf = (cm.flops_per_iter() * niter as u64) as f64 / samples.median() / 1e9;
+        cells.push(format!("{gf:.3}"));
+        table.row(&cells);
+        eprintln!("  nelt={nelt} done");
+    }
+    table.print();
+    println!(
+        "\n# paper (V100): layered +10% vs original, +6% vs shared; the CPU line is\n\
+         # flat with problem size while the accelerator lines rise."
+    );
+}

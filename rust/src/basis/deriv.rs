@@ -1,0 +1,91 @@
+//! The GLL pseudo-spectral differentiation matrix (Nekbone's `dxm1`).
+
+use super::gll::gll_points;
+use super::legendre::legendre;
+
+/// Row-major `n x n` differentiation matrix `D`:
+/// `(D u)_i = sum_j D[i*n + j] u_j` is the derivative of the degree-(n-1)
+/// interpolant of `u` at GLL node `i`.
+///
+/// Closed form (Canuto et al.):
+/// `D[i,j] = P(x_i) / (P(x_j) (x_i - x_j))` off-diagonal,
+/// `D[0,0] = -order (order+1)/4`, `D[N,N] = +order (order+1)/4`,
+/// zero elsewhere on the diagonal, with `P = P_order`, `order = n-1`.
+pub fn derivative_matrix(n: usize) -> Vec<f64> {
+    assert!(n >= 2, "derivative matrix needs n >= 2, got {n}");
+    let order = n - 1;
+    let x = gll_points(n);
+    let pn: Vec<f64> = x.iter().map(|&xi| legendre(order, xi)).collect();
+    let mut d = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                d[i * n + j] = pn[i] / (pn[j] * (x[i] - x[j]));
+            }
+        }
+    }
+    let corner = order as f64 * (order as f64 + 1.0) / 4.0;
+    d[0] = -corner;
+    d[n * n - 1] = corner;
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_monomials() {
+        for n in 2..=14 {
+            let x = gll_points(n);
+            let d = derivative_matrix(n);
+            for p in 0..n {
+                // u = x^p, du = p x^(p-1)
+                let u: Vec<f64> = x.iter().map(|&xi| xi.powi(p as i32)).collect();
+                for i in 0..n {
+                    let got: f64 = (0..n).map(|j| d[i * n + j] * u[j]).sum();
+                    let want = if p == 0 { 0.0 } else { p as f64 * x[i].powi(p as i32 - 1) };
+                    assert!(
+                        (got - want).abs() < 5e-10 * (1.0 + want.abs()),
+                        "n={n} p={p} i={i}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_zero() {
+        for n in 2..=16 {
+            let d = derivative_matrix(n);
+            for i in 0..n {
+                let s: f64 = (0..n).map(|j| d[i * n + j]).sum();
+                assert!(s.abs() < 1e-11, "n={n} row {i} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn negation_symmetry() {
+        // D[i,j] = -D[n-1-i, n-1-j]
+        for n in 2..=16 {
+            let d = derivative_matrix(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let a = d[i * n + j];
+                    let b = d[(n - 1 - i) * n + (n - 1 - j)];
+                    assert!((a + b).abs() < 1e-11, "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corner_values() {
+        let n = 10;
+        let d = derivative_matrix(n);
+        let corner = 9.0 * 10.0 / 4.0;
+        assert!((d[0] + corner).abs() < 1e-14);
+        assert!((d[n * n - 1] - corner).abs() < 1e-14);
+    }
+}

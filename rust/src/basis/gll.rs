@@ -1,0 +1,129 @@
+//! Gauss–Lobatto–Legendre nodes and quadrature weights.
+
+use super::legendre::legendre;
+
+/// The `n` GLL points on `[-1, 1]`, ascending (`n = degree + 1`).
+///
+/// Endpoints are exactly `±1`; interior nodes are the roots of
+/// `P'_{n-1}`, found by the classic `lglnodes` fixed-point/Newton iteration
+/// from the Chebyshev–Gauss–Lobatto initial guess.
+///
+/// # Panics
+/// Panics for `n < 2`.
+pub fn gll_points(n: usize) -> Vec<f64> {
+    assert!(n >= 2, "GLL needs at least 2 points, got n={n}");
+    let order = n - 1;
+    let mut x: Vec<f64> = (0..n)
+        .map(|i| -(std::f64::consts::PI * i as f64 / order as f64).cos())
+        .collect();
+    let mut x_old = vec![2.0; n];
+    for _ in 0..100 {
+        let delta = x
+            .iter()
+            .zip(&x_old)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0_f64, f64::max);
+        if delta <= 1e-15 {
+            break;
+        }
+        x_old.copy_from_slice(&x);
+        for i in 0..n {
+            let pn = legendre(order, x_old[i]);
+            let pnm1 = legendre(order - 1, x_old[i]);
+            x[i] = x_old[i] - (x_old[i] * pn - pnm1) / (n as f64 * pn);
+        }
+    }
+    x[0] = -1.0;
+    x[n - 1] = 1.0;
+    x
+}
+
+/// GLL quadrature weights `w_j = 2 / (order (order+1) P_order(x_j)^2)`.
+/// Exact for polynomials of degree `<= 2n - 3`; positive; sum to 2.
+pub fn gll_weights(n: usize) -> Vec<f64> {
+    let order = n - 1;
+    gll_points(n)
+        .iter()
+        .map(|&xj| {
+            let p = legendre(order, xj);
+            2.0 / (order as f64 * (order as f64 + 1.0) * p * p)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn n2_endpoints_only() {
+        assert_eq!(gll_points(2), vec![-1.0, 1.0]);
+        let w = gll_weights(2);
+        assert!(close(w[0], 1.0, 1e-15) && close(w[1], 1.0, 1e-15));
+    }
+
+    #[test]
+    fn n3_midpoint() {
+        let x = gll_points(3);
+        assert!(close(x[1], 0.0, 1e-15));
+        let w = gll_weights(3);
+        assert!(close(w[0], 1.0 / 3.0, 1e-14));
+        assert!(close(w[1], 4.0 / 3.0, 1e-14));
+    }
+
+    #[test]
+    fn n4_known_roots() {
+        let x = gll_points(4);
+        let r = 1.0 / 5.0_f64.sqrt();
+        assert!(close(x[1], -r, 1e-14) && close(x[2], r, 1e-14));
+    }
+
+    #[test]
+    fn n5_known_roots_and_weights() {
+        let x = gll_points(5);
+        let r = (3.0_f64 / 7.0).sqrt();
+        assert!(close(x[1], -r, 1e-14) && close(x[3], r, 1e-14) && close(x[2], 0.0, 1e-15));
+        let w = gll_weights(5);
+        assert!(close(w[0], 0.1, 1e-14));
+        assert!(close(w[1], 49.0 / 90.0, 1e-14));
+        assert!(close(w[2], 32.0 / 45.0, 1e-14));
+    }
+
+    #[test]
+    fn sorted_symmetric_weights_sum_two() {
+        for n in 2..=24 {
+            let x = gll_points(n);
+            for i in 1..n {
+                assert!(x[i] > x[i - 1], "n={n} not ascending");
+            }
+            for i in 0..n {
+                assert!(close(x[i], -x[n - 1 - i], 1e-13), "n={n} not symmetric");
+            }
+            let w = gll_weights(n);
+            assert!(w.iter().all(|&v| v > 0.0));
+            assert!(close(w.iter().sum::<f64>(), 2.0, 1e-12), "n={n} weight sum");
+        }
+    }
+
+    #[test]
+    fn quadrature_exact_on_polynomials() {
+        // integral of x^p over [-1,1] = 2/(p+1) for even p, 0 for odd.
+        for n in 2..=12 {
+            let max_deg = 2 * n - 3;
+            let x = gll_points(n);
+            let w = gll_weights(n);
+            for p in 0..=max_deg.min(14) {
+                let quad: f64 = x.iter().zip(&w).map(|(&xi, &wi)| wi * xi.powi(p as i32)).sum();
+                let exact = if p % 2 == 0 { 2.0 / (p as f64 + 1.0) } else { 0.0 };
+                assert!(
+                    close(quad, exact, 1e-11),
+                    "n={n} p={p}: quad {quad} exact {exact}"
+                );
+            }
+        }
+    }
+}

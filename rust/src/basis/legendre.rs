@@ -1,0 +1,96 @@
+//! Legendre polynomials via the Bonnet three-term recurrence.
+
+/// Evaluate the Legendre polynomial `P_order(x)`.
+///
+/// Stable on `[-1, 1]`: `(m+1) P_{m+1} = (2m+1) x P_m - m P_{m-1}`.
+pub fn legendre(order: usize, x: f64) -> f64 {
+    match order {
+        0 => 1.0,
+        1 => x,
+        _ => {
+            let mut p_prev = 1.0;
+            let mut p = x;
+            for m in 1..order {
+                let m_f = m as f64;
+                let p_next = ((2.0 * m_f + 1.0) * x * p - m_f * p_prev) / (m_f + 1.0);
+                p_prev = p;
+                p = p_next;
+            }
+            p
+        }
+    }
+}
+
+/// Evaluate `d/dx P_order(x)`.
+///
+/// Interior: `P'_n = n (x P_n - P_{n-1}) / (x^2 - 1)`; at the endpoints the
+/// closed-form limit `P'_n(±1) = (±1)^{n-1} n (n+1) / 2`.
+pub fn legendre_deriv(order: usize, x: f64) -> f64 {
+    if order == 0 {
+        return 0.0;
+    }
+    let n = order as f64;
+    if (x.abs() - 1.0).abs() <= 1e-13 {
+        let end = n * (n + 1.0) / 2.0;
+        if x > 0.0 {
+            end
+        } else if order % 2 == 0 {
+            -end
+        } else {
+            end
+        }
+    } else {
+        n * (x * legendre(order, x) - legendre(order - 1, x)) / (x * x - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        for &x in &[-1.0, -0.5, 0.0, 0.3, 1.0] {
+            assert!((legendre(0, x) - 1.0).abs() < 1e-15);
+            assert!((legendre(1, x) - x).abs() < 1e-15);
+            assert!((legendre(2, x) - 0.5 * (3.0 * x * x - 1.0)).abs() < 1e-14);
+            assert!((legendre(3, x) - 0.5 * (5.0 * x * x * x - 3.0 * x)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn endpoint_values() {
+        // P_n(1) = 1, P_n(-1) = (-1)^n
+        for order in 0..20 {
+            assert!((legendre(order, 1.0) - 1.0).abs() < 1e-12);
+            let want = if order % 2 == 0 { 1.0 } else { -1.0 };
+            assert!((legendre(order, -1.0) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        let h = 1e-6;
+        for order in 1..12 {
+            for &x in &[-0.9, -0.4, 0.0, 0.55, 0.9] {
+                let fd = (legendre(order, x + h) - legendre(order, x - h)) / (2.0 * h);
+                let an = legendre_deriv(order, x);
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                    "order {order} x {x}: fd {fd} analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_endpoints() {
+        for order in 1..10 {
+            let n = order as f64;
+            let end = n * (n + 1.0) / 2.0;
+            assert!((legendre_deriv(order, 1.0) - end).abs() < 1e-12);
+            let sign = if order % 2 == 0 { -1.0 } else { 1.0 };
+            assert!((legendre_deriv(order, -1.0) - sign * end).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Spectral-element basis: Gauss–Lobatto–Legendre points, weights and the
+//! pseudo-spectral differentiation matrix (Nekbone's `semhat`).
+//!
+//! This is the Rust twin of `python/compile/basis.py`; the two are
+//! cross-checked to machine precision by `rust/tests/basis_parity.rs`
+//! (via values burned into both test suites) because the Rust side generates
+//! the operator inputs the AOT kernels consume.
+
+mod legendre;
+mod gll;
+mod deriv;
+
+pub use deriv::derivative_matrix;
+pub use gll::{gll_points, gll_weights};
+pub use legendre::{legendre, legendre_deriv};
+
+/// Bundle of everything downstream code needs for one polynomial degree.
+#[derive(Clone, Debug)]
+pub struct Basis {
+    /// GLL points per dimension (`n = degree + 1`).
+    pub n: usize,
+    /// GLL nodes on `[-1, 1]`, ascending.
+    pub points: Vec<f64>,
+    /// GLL quadrature weights (positive, sum to 2).
+    pub weights: Vec<f64>,
+    /// Differentiation matrix `d`, row-major `n x n`:
+    /// `(D u)_i = sum_j d[i*n + j] u_j`.
+    pub d: Vec<f64>,
+    /// Transpose of `d` (Nekbone's `dxtm1`), row-major.
+    pub dt: Vec<f64>,
+}
+
+impl Basis {
+    /// Construct the basis for `n` GLL points (polynomial degree `n - 1`).
+    ///
+    /// # Panics
+    /// Panics for `n < 2` (a degree-0 element has no derivative).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "GLL basis needs n >= 2, got {n}");
+        let points = gll_points(n);
+        let weights = gll_weights(n);
+        let d = derivative_matrix(n);
+        let mut dt = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                dt[j * n + i] = d[i * n + j];
+            }
+        }
+        Basis { n, points, weights, d, dt }
+    }
+
+    /// Polynomial degree represented exactly by this basis.
+    pub fn degree(&self) -> usize {
+        self.n - 1
+    }
+
+    /// `d[i][j]` accessor (row-major).
+    #[inline]
+    pub fn d_at(&self, i: usize, j: usize) -> f64 {
+        self.d[i * self.n + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basis_bundle_consistent() {
+        let b = Basis::new(10);
+        assert_eq!(b.n, 10);
+        assert_eq!(b.degree(), 9);
+        assert_eq!(b.points.len(), 10);
+        assert_eq!(b.weights.len(), 10);
+        assert_eq!(b.d.len(), 100);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(b.d_at(i, j), b.dt[j * 10 + i]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn n_one_panics() {
+        Basis::new(1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Benchmark harness (criterion is unavailable offline, so the repo carries
+//! its own measurement core: warmup, repeated timed runs, median/MAD
+//! statistics, and aligned table printing shared by all paper-figure
+//! benches).
+
+use std::time::Instant;
+
+/// Statistics of repeated measurements (seconds).
+#[derive(Clone, Debug)]
+pub struct Samples {
+    /// Raw samples, sorted ascending.
+    pub sorted: Vec<f64>,
+}
+
+impl Samples {
+    pub fn from_raw(mut raw: Vec<f64>) -> Self {
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Samples { sorted: raw }
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> f64 {
+        let n = self.sorted.len();
+        assert!(n > 0, "no samples");
+        if n % 2 == 1 {
+            self.sorted[n / 2]
+        } else {
+            0.5 * (self.sorted[n / 2 - 1] + self.sorted[n / 2])
+        }
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut devs: Vec<f64> = self.sorted.iter().map(|s| (s - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Samples { sorted: devs }.median()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Relative spread (MAD/median) — the paper reports <5% run-to-run.
+    pub fn rel_spread(&self) -> f64 {
+        self.mad() / self.median()
+    }
+}
+
+/// Benchmark runner configuration, overridable from the environment so
+/// `cargo bench` can be made quick (CI) or thorough:
+/// `NEKBONE_BENCH_WARMUP`, `NEKBONE_BENCH_SAMPLES`.
+#[derive(Clone, Copy, Debug)]
+pub struct Runner {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        let env_usize = |k: &str, dflt: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(dflt)
+        };
+        Runner {
+            warmup: env_usize("NEKBONE_BENCH_WARMUP", 1),
+            samples: env_usize("NEKBONE_BENCH_SAMPLES", 3),
+        }
+    }
+}
+
+impl Runner {
+    /// Time `f` (seconds per call) with warmup + repeats.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Samples {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut raw = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples.max(1) {
+            let t0 = Instant::now();
+            f();
+            raw.push(t0.elapsed().as_secs_f64());
+        }
+        Samples::from_raw(raw)
+    }
+}
+
+/// Fixed-width table printer for bench output (the "rows the paper
+/// reports").
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                widths[c] = widths[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for c in 0..ncol {
+                if c > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:>width$}", cells[c], width = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(Samples::from_raw(vec![3.0, 1.0, 2.0]).median(), 2.0);
+        assert_eq!(Samples::from_raw(vec![4.0, 1.0, 2.0, 3.0]).median(), 2.5);
+    }
+
+    #[test]
+    fn mad_constant_is_zero() {
+        let s = Samples::from_raw(vec![2.0; 5]);
+        assert_eq!(s.mad(), 0.0);
+        assert_eq!(s.rel_spread(), 0.0);
+    }
+
+    #[test]
+    fn runner_times_something() {
+        let r = Runner { warmup: 1, samples: 3 };
+        let mut count = 0;
+        let s = r.run(|| {
+            count += 1;
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 samples
+        assert!(s.median() >= 0.0);
+        assert!(s.min() <= s.max());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "gflops"]);
+        t.row(&["layered".into(), "1.25".into()]);
+        t.row(&["x".into(), "100.00".into()]);
+        let out = t.render();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

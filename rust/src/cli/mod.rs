@@ -1,0 +1,184 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `nekbone <subcommand> [--key value | --flag]...`.
+
+use std::collections::BTreeMap;
+
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand + options.
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Self> {
+        if raw.is_empty() {
+            return Err(Error::Config("missing subcommand; try `nekbone help`".into()));
+        }
+        let subcommand = raw[0].clone();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < raw.len() {
+            let tok = &raw[i];
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --option, got {tok:?}")))?;
+            if let Some((k, v)) = key.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), raw[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { subcommand, opts, flags })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, dflt: usize) -> Result<usize> {
+        match self.opts.get(name) {
+            None => Ok(dflt),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, dflt: u64) -> Result<u64> {
+        match self.opts.get(name) {
+            None => Ok(dflt),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    /// Assemble a [`RunConfig`] from the common options.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        let dflt = RunConfig::default();
+        let cfg = RunConfig {
+            nelt: self.get_usize("nelt", dflt.nelt)?,
+            n: self.get_usize("n", dflt.n)?,
+            niter: self.get_usize("niter", dflt.niter)?,
+            chunk: self.get_usize("chunk", dflt.chunk)?,
+            no_comm: self.flag("no-comm"),
+            no_mask: self.flag("no-mask"),
+            seed: self.get_u64("seed", dflt.seed)?,
+            artifacts_dir: self.get("artifacts").unwrap_or(&dflt.artifacts_dir).to_string(),
+            cpu_threads: self.get_usize("cpu-threads", dflt.cpu_threads)?,
+            ranks: self.get_usize("ranks", dflt.ranks)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+nekbone-rs - Nekbone tensor-product optimization reproduction (Karp et al. 2020)
+
+USAGE: nekbone <subcommand> [options]
+
+SUBCOMMANDS:
+  run        run one Nekbone solve and print the report
+  sweep      run a backend over a sweep of element counts (paper Figs. 2-3)
+  roofline   measured-roofline comparison (paper Fig. 4)
+  info       print manifest + platform information
+  help       this text
+
+COMMON OPTIONS (run/sweep/roofline):
+  --nelt N           elements                      [64]
+  --n N              GLL points per dim            [10]
+  --niter N          CG iterations                 [100]
+  --chunk N          elements per XLA launch       [64]
+  --backend NAME     cpu-naive | cpu-layered | cpu-threaded | xla-jnp |
+                     xla-original | xla-shared | xla-layered |
+                     xla-layered-unroll2 | xla-fused   [xla-layered]
+  --vector-backend B rust | xla                    [rust]
+  --ranks R          simulated MPI ranks (cpu path) [1]
+  --artifacts DIR    artifact directory            [artifacts]
+  --seed S           RHS seed                      [0x5EED]
+  --no-comm          skip gather-scatter (roofline methodology)
+  --no-mask          skip the Dirichlet mask
+  --cpu-threads T    threads for cpu-threaded (0 = all cores)
+  --elems LIST       sweep: comma-separated element counts
+";
+
+/// Parse `--elems 64,128,256`-style lists.
+pub fn parse_elems(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|_| Error::Config(format!("bad element count {t:?} in --elems")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args(&["run", "--nelt", "128", "--no-comm", "--n=8"]);
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get("nelt"), Some("128"));
+        assert_eq!(a.get("n"), Some("8"));
+        assert!(a.flag("no-comm"));
+        assert!(!a.flag("no-mask"));
+    }
+
+    #[test]
+    fn run_config_from_args() {
+        let a = args(&["run", "--nelt", "256", "--niter", "10", "--no-mask"]);
+        let cfg = a.run_config().unwrap();
+        assert_eq!(cfg.nelt, 256);
+        assert_eq!(cfg.niter, 10);
+        assert!(cfg.no_mask);
+        assert_eq!(cfg.n, 10); // default
+    }
+
+    #[test]
+    fn bad_integer_rejected() {
+        let a = args(&["run", "--nelt", "many"]);
+        assert!(a.run_config().is_err());
+    }
+
+    #[test]
+    fn missing_subcommand_rejected() {
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn non_option_token_rejected() {
+        assert!(Args::parse(&["run".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn elems_list() {
+        assert_eq!(parse_elems("64, 128,256").unwrap(), vec![64, 128, 256]);
+        assert!(parse_elems("64,x").is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Run configuration (the launcher's knobs, validated in one place).
+
+use crate::error::{Error, Result};
+
+/// Configuration of one Nekbone run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Number of spectral elements (the paper sweeps 64–4096).
+    pub nelt: usize,
+    /// GLL points per dimension; `n = polynomial degree + 1` (paper: 10).
+    pub n: usize,
+    /// CG iterations (paper: 100).
+    pub niter: usize,
+    /// Elements per XLA launch; artifacts exist for the chunks listed in
+    /// the manifest (64 by default, 256/1024 for the perf pass).
+    pub chunk: usize,
+    /// Skip gather–scatter — the paper's roofline methodology
+    /// ("without the communication activated").
+    pub no_comm: bool,
+    /// Skip the Dirichlet mask (for operator-only microbenchmarks).
+    pub no_mask: bool,
+    /// RNG seed for the right-hand side.
+    pub seed: u64,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Threads for the CPU-threaded backend (0 = all cores).
+    pub cpu_threads: usize,
+    /// Simulated MPI ranks (1 = single address space).
+    pub ranks: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            nelt: 64,
+            n: 10,
+            niter: 100,
+            chunk: 64,
+            no_comm: false,
+            no_mask: false,
+            seed: 0x5EED,
+            artifacts_dir: "artifacts".into(),
+            cpu_threads: 0,
+            ranks: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Local degrees of freedom `D = nelt * n^3`.
+    pub fn ndof(&self) -> usize {
+        self.nelt * self.n * self.n * self.n
+    }
+
+    /// Validate the knobs against each other.
+    pub fn validate(&self) -> Result<()> {
+        if self.nelt == 0 {
+            return Err(Error::Config("nelt must be positive".into()));
+        }
+        if self.n < 2 {
+            return Err(Error::Config(format!("n must be >= 2, got {}", self.n)));
+        }
+        if self.niter == 0 {
+            return Err(Error::Config("niter must be positive".into()));
+        }
+        if self.chunk == 0 {
+            return Err(Error::Config("chunk must be positive".into()));
+        }
+        if self.ranks == 0 {
+            return Err(Error::Config("ranks must be positive".into()));
+        }
+        if self.ranks > self.nelt {
+            return Err(Error::Config(format!(
+                "ranks ({}) cannot exceed nelt ({})",
+                self.ranks, self.nelt
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn ndof() {
+        let c = RunConfig { nelt: 64, n: 10, ..Default::default() };
+        assert_eq!(c.ndof(), 64_000);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for cfg in [
+            RunConfig { nelt: 0, ..Default::default() },
+            RunConfig { n: 1, ..Default::default() },
+            RunConfig { niter: 0, ..Default::default() },
+            RunConfig { chunk: 0, ..Default::default() },
+            RunConfig { ranks: 0, ..Default::default() },
+            RunConfig { ranks: 65, nelt: 64, ..Default::default() },
+        ] {
+            assert!(cfg.validate().is_err(), "{cfg:?}");
+        }
+    }
+}

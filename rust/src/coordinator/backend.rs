@@ -1,0 +1,125 @@
+//! Backend selection: which implementation computes the local Ax, and
+//! which computes the CG vector algebra.
+
+use crate::error::{Error, Result};
+
+/// Where the tensor-product operator runs.
+///
+/// The five `Xla` variants are the paper's five GPU versions (section IV);
+/// the CPU variants provide the Fig. 3 CPU baseline and the parity oracle.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Listing-1 structure with full-size intermediates, single thread.
+    CpuNaive,
+    /// The paper's layered schedule on one CPU thread.
+    CpuLayered,
+    /// Layered schedule across all cores (the paper's CPU/MPI baseline).
+    CpuThreaded,
+    /// An AOT-compiled kernel variant run via PJRT:
+    /// "jnp" (OpenACC analog), "original", "shared", "layered" (the paper's
+    /// contribution), "layered_unroll2" (CUDA-Fortran analog).
+    Xla(String),
+    /// The fused Ax+pap executable (perf-pass hot path; layered schedule).
+    XlaFused(String),
+}
+
+impl Backend {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cpu-naive" => Ok(Backend::CpuNaive),
+            "cpu-layered" => Ok(Backend::CpuLayered),
+            "cpu-threaded" => Ok(Backend::CpuThreaded),
+            "xla-jnp" | "xla-openacc" => Ok(Backend::Xla("jnp".into())),
+            "xla-original" => Ok(Backend::Xla("original".into())),
+            "xla-shared" => Ok(Backend::Xla("shared".into())),
+            "xla-layered" => Ok(Backend::Xla("layered".into())),
+            "xla-layered-unroll2" => Ok(Backend::Xla("layered_unroll2".into())),
+            "xla-fused" => Ok(Backend::XlaFused("layered".into())),
+            other => Err(Error::Config(format!(
+                "unknown backend {other:?}; expected one of cpu-naive, cpu-layered, \
+                 cpu-threaded, xla-jnp, xla-original, xla-shared, xla-layered, \
+                 xla-layered-unroll2, xla-fused"
+            ))),
+        }
+    }
+
+    /// Does this backend need the PJRT runtime + artifacts?
+    pub fn needs_artifacts(&self) -> bool {
+        matches!(self, Backend::Xla(_) | Backend::XlaFused(_))
+    }
+
+    /// Stable display name (used in bench tables).
+    pub fn label(&self) -> String {
+        match self {
+            Backend::CpuNaive => "cpu-naive".into(),
+            Backend::CpuLayered => "cpu-layered".into(),
+            Backend::CpuThreaded => "cpu-threaded".into(),
+            Backend::Xla(v) => format!("xla-{}", v.replace('_', "-")),
+            Backend::XlaFused(v) => format!("xla-fused-{}", v.replace('_', "-")),
+        }
+    }
+}
+
+/// Where the CG vector algebra runs (experiment E6: the paper's
+/// "OpenACC for simple operations costs a few percent" ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum VectorBackend {
+    /// Native Rust loops (default; the role OpenACC plays in the paper).
+    #[default]
+    Rust,
+    /// Chunked XLA vector-op executables.
+    Xla,
+}
+
+impl VectorBackend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "rust" => Ok(VectorBackend::Rust),
+            "xla" => Ok(VectorBackend::Xla),
+            other => Err(Error::Config(format!(
+                "unknown vector backend {other:?}; expected rust or xla"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in [
+            "cpu-naive",
+            "cpu-layered",
+            "cpu-threaded",
+            "xla-jnp",
+            "xla-original",
+            "xla-shared",
+            "xla-layered",
+            "xla-layered-unroll2",
+            "xla-fused",
+        ] {
+            let b = Backend::parse(name).unwrap();
+            if name != "xla-fused" {
+                assert_eq!(b.label(), name.replace("openacc", "jnp"));
+            }
+        }
+        assert!(Backend::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn artifact_need() {
+        assert!(!Backend::CpuLayered.needs_artifacts());
+        assert!(Backend::Xla("layered".into()).needs_artifacts());
+        assert!(Backend::XlaFused("layered".into()).needs_artifacts());
+    }
+
+    #[test]
+    fn vector_backend_parse() {
+        assert_eq!(VectorBackend::parse("rust").unwrap(), VectorBackend::Rust);
+        assert_eq!(VectorBackend::parse("xla").unwrap(), VectorBackend::Xla);
+        assert!(VectorBackend::parse("acc").is_err());
+    }
+}

@@ -1,0 +1,498 @@
+//! The Nekbone application object: setup once, run CG many times.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::basis::Basis;
+use crate::config::RunConfig;
+use crate::coordinator::{Backend, RunReport, VectorBackend};
+use crate::error::{Error, Result};
+use crate::geometry::GeomFactors;
+use crate::gs::GatherScatter;
+use crate::mesh::Mesh;
+use crate::metrics::CostModel;
+use crate::operators::CpuVariant;
+use crate::runtime::{AxEngine, CgIterEngine, XlaRuntime};
+use crate::solver::{cg_solve, glsc3, mask_apply, CgOptions, CgWorkspace};
+
+/// Everything needed to run Nekbone with one backend on one mesh.
+pub struct Nekbone {
+    pub cfg: RunConfig,
+    backend: Backend,
+    mesh: Mesh,
+    basis: Basis,
+    geom: GeomFactors,
+    gs: GatherScatter,
+    mask: Vec<f64>,
+    /// Inverse multiplicity (Nekbone's `c`).
+    c: Vec<f64>,
+    /// Right-hand side (dssum-consistent, masked).
+    f: Vec<f64>,
+    /// XLA state when the backend needs it.
+    xla: Option<XlaState>,
+    ws: CgWorkspace,
+}
+
+struct XlaState {
+    rt: XlaRuntime,
+    ax: Option<AxEngine>,
+    fused: Option<CgIterEngine>,
+}
+
+impl Nekbone {
+    /// Build the application: mesh, basis, geometry, gather–scatter, RHS,
+    /// and (for XLA backends) the PJRT engines with resident buffers.
+    pub fn new(cfg: RunConfig, backend: Backend) -> Result<Self> {
+        cfg.validate()?;
+        let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
+        let basis = Basis::new(cfg.n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let mut gs = GatherScatter::new(&mesh);
+        let mask = mesh.boundary_mask();
+        let c = mesh.inv_multiplicity();
+
+        // RHS: deterministic pseudo-random field, made dssum-consistent and
+        // masked (Nekbone's set-up of `f`).
+        let mut rng = crate::rng::Rng::new(cfg.seed);
+        let mut f = rng.normal_vec(mesh.ndof_local());
+        gs.dssum(&mut f);
+        mask_apply(&mut f, &mask);
+
+        let xla = if backend.needs_artifacts() {
+            let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
+            let (ax, fused) = match &backend {
+                Backend::Xla(variant) => (
+                    Some(AxEngine::new(
+                        &rt,
+                        variant,
+                        cfg.n,
+                        cfg.chunk,
+                        mesh.nelt(),
+                        &basis.d,
+                        &geom.g,
+                    )?),
+                    None,
+                ),
+                Backend::XlaFused(variant) => (
+                    None,
+                    Some(CgIterEngine::new(
+                        &rt,
+                        variant,
+                        cfg.n,
+                        cfg.chunk,
+                        mesh.nelt(),
+                        &basis.d,
+                        &geom.g,
+                        &c,
+                    )?),
+                ),
+                _ => unreachable!(),
+            };
+            Some(XlaState { rt, ax, fused })
+        } else {
+            None
+        };
+
+        let ndof = mesh.ndof_local();
+        Ok(Nekbone {
+            cfg,
+            backend,
+            mesh,
+            basis,
+            geom,
+            gs,
+            mask,
+            c,
+            f,
+            xla,
+            ws: CgWorkspace::new(ndof),
+        })
+    }
+
+    /// The mesh in use.
+    pub fn mesh(&self) -> &Mesh {
+        &self.mesh
+    }
+
+    /// The basis in use.
+    pub fn basis(&self) -> &Basis {
+        &self.basis
+    }
+
+    /// Replace the right-hand side (e.g. a manufactured solution's load).
+    /// The field is made dssum-consistent and masked.
+    pub fn set_rhs(&mut self, f: &[f64]) -> Result<()> {
+        if f.len() != self.mesh.ndof_local() {
+            return Err(Error::Config("set_rhs: length mismatch".into()));
+        }
+        self.f.copy_from_slice(f);
+        self.gs.dssum(&mut self.f);
+        mask_apply(&mut self.f, &self.mask);
+        Ok(())
+    }
+
+    /// Run the configured number of CG iterations; returns the report.
+    /// `x_out`, when given, receives the solution field.
+    pub fn run_into(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
+        if matches!(self.backend, Backend::XlaFused(_)) {
+            return self.run_fused(x_out);
+        }
+        let n = self.cfg.n;
+        let nelt = self.cfg.nelt;
+        let ndof = self.mesh.ndof_local();
+        let mut x = vec![0.0; ndof];
+
+        let ax_time = Rc::new(RefCell::new(0.0f64));
+        let opts = CgOptions {
+            niter: self.cfg.niter,
+            rtol: None,
+            record_residuals: false,
+        };
+
+        // Assemble the AxApply closure for the selected backend.
+        let d = self.basis.d.clone();
+        let g = &self.geom.g;
+        let cpu_threads = self.cfg.cpu_threads;
+        let backend = self.backend.clone();
+        let xla = &mut self.xla;
+        let ax_time_c = Rc::clone(&ax_time);
+        let mut ax_fn = move |p: &[f64], w: &mut [f64]| -> Result<()> {
+            let t0 = Instant::now();
+            match &backend {
+                Backend::CpuNaive => CpuVariant::Naive.apply(n, nelt, p, &d, g, w),
+                Backend::CpuLayered => CpuVariant::Layered.apply(n, nelt, p, &d, g, w),
+                Backend::CpuThreaded => {
+                    crate::operators::ax_threaded(n, nelt, p, &d, g, w, cpu_threads)
+                }
+                Backend::Xla(_) => {
+                    let st = xla.as_mut().expect("xla state");
+                    let engine = st.ax.as_mut().expect("ax engine");
+                    engine.apply(&st.rt, p, w)?;
+                }
+                Backend::XlaFused(_) => unreachable!(),
+            }
+            *ax_time_c.borrow_mut() += t0.elapsed().as_secs_f64();
+            Ok(())
+        };
+
+        let gs_opt = if self.cfg.no_comm { None } else { Some(&mut self.gs) };
+        let mask_opt = if self.cfg.no_mask { None } else { Some(self.mask.as_slice()) };
+
+        let sw = Instant::now();
+        let rep = cg_solve(
+            &mut ax_fn,
+            gs_opt,
+            mask_opt,
+            &self.c,
+            &self.f,
+            &mut x,
+            &opts,
+            &mut self.ws,
+        )?;
+        let seconds = sw.elapsed().as_secs_f64();
+
+        if let Some(out) = x_out {
+            out.copy_from_slice(&x);
+        }
+        let cm = CostModel::new(n, nelt);
+        let ax_seconds = *ax_time.borrow();
+        Ok(RunReport {
+            backend: self.backend.label(),
+            nelt,
+            n,
+            iterations: rep.iterations,
+            final_residual: rep.final_rnorm,
+            seconds,
+            ax_seconds,
+            flops: cm.flops_per_iter() * rep.iterations as u64,
+            rnorms: rep.rnorms,
+        })
+    }
+
+    /// Convenience: run and discard the solution.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.run_into(None)
+    }
+
+    /// The fused hot path: Ax and the pap reduction in one XLA launch per
+    /// chunk (perf pass). The CG logic is inlined here because the fused
+    /// executable returns pap itself.
+    fn run_fused(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
+        let st = self.xla.as_mut().expect("xla state");
+        let engine = st.fused.as_ref().expect("fused engine");
+        let ndof = self.mesh.ndof_local();
+        let (n, nelt) = (self.cfg.n, self.cfg.nelt);
+        let mut x = vec![0.0; ndof];
+        let mut r = self.f.clone();
+        if !self.cfg.no_mask {
+            mask_apply(&mut r, &self.mask);
+        }
+        let mut p = vec![0.0; ndof];
+        let mut w = vec![0.0; ndof];
+        let mut rtz1 = 1.0f64;
+        let mut ax_seconds = 0.0;
+        let sw = Instant::now();
+        let mut iterations = 0;
+        for iter in 0..self.cfg.niter {
+            let rtz2 = rtz1;
+            rtz1 = glsc3(&r, &self.c, &r);
+            let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
+            crate::solver::add2s1(&mut p, &r, beta);
+
+            let t0 = Instant::now();
+            // Fused pap is only exact when no dssum/mask intervenes between
+            // Ax and the reduction; with comm on we recompute pap after.
+            let mut pap = engine.apply(&st.rt, &p, &mut w)?;
+            ax_seconds += t0.elapsed().as_secs_f64();
+
+            if !self.cfg.no_comm {
+                self.gs.dssum(&mut w);
+            }
+            if !self.cfg.no_mask {
+                mask_apply(&mut w, &self.mask);
+            }
+            if !self.cfg.no_comm || !self.cfg.no_mask {
+                pap = glsc3(&w, &self.c, &p);
+            }
+            if pap <= 0.0 || !pap.is_finite() {
+                return Err(Error::Numerical(format!(
+                    "fused CG breakdown at iter {iter}: pap = {pap}"
+                )));
+            }
+            let alpha = rtz1 / pap;
+            crate::solver::add2s2(&mut x, &p, alpha);
+            crate::solver::add2s2(&mut r, &w, -alpha);
+            iterations = iter + 1;
+        }
+        let seconds = sw.elapsed().as_secs_f64();
+        let final_residual = glsc3(&r, &self.c, &r).max(0.0).sqrt();
+        if let Some(out) = x_out {
+            out.copy_from_slice(&x);
+        }
+        let cm = CostModel::new(n, nelt);
+        Ok(RunReport {
+            backend: self.backend.label(),
+            nelt,
+            n,
+            iterations,
+            final_residual,
+            seconds,
+            ax_seconds,
+            flops: cm.flops_per_iter() * iterations as u64,
+            rnorms: vec![],
+        })
+    }
+
+    /// Apply the local operator once with the configured backend (used by
+    /// parity tests and kernel-level benches; no dssum, no mask).
+    pub fn apply_ax_once(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
+        let (n, nelt) = (self.cfg.n, self.cfg.nelt);
+        match &self.backend {
+            Backend::CpuNaive => CpuVariant::Naive.apply(n, nelt, p, &self.basis.d, &self.geom.g, w),
+            Backend::CpuLayered => {
+                CpuVariant::Layered.apply(n, nelt, p, &self.basis.d, &self.geom.g, w)
+            }
+            Backend::CpuThreaded => crate::operators::ax_threaded(
+                n,
+                nelt,
+                p,
+                &self.basis.d,
+                &self.geom.g,
+                w,
+                self.cfg.cpu_threads,
+            ),
+            Backend::Xla(_) => {
+                let st = self.xla.as_mut().expect("xla state");
+                st.ax.as_mut().expect("ax engine").apply(&st.rt, p, w)?;
+            }
+            Backend::XlaFused(_) => {
+                let st = self.xla.as_mut().expect("xla state");
+                st.fused.as_ref().expect("fused engine").apply(&st.rt, p, w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run CG with the vector algebra offloaded to XLA executables
+    /// (experiment E6). Only the Rust path is otherwise exercised, so this
+    /// lives beside `run` rather than inside it.
+    pub fn run_vector_backend(&mut self, vb: VectorBackend) -> Result<RunReport> {
+        if vb == VectorBackend::Rust {
+            return self.run();
+        }
+        // XLA vector path: chunked executables for glsc3 / add2s1 / add2s2.
+        let st = self
+            .xla
+            .as_mut()
+            .ok_or_else(|| Error::Config("vector-backend xla requires an XLA Ax backend".into()))?;
+        let size = self.cfg.chunk * self.cfg.n.pow(3);
+        let glsc3_e = crate::runtime::VectorEngine::new(&st.rt, "glsc3", size)?;
+        let add2s1_e = crate::runtime::VectorEngine::new(&st.rt, "add2s1", size)?;
+        let add2s2_e = crate::runtime::VectorEngine::new(&st.rt, "add2s2", size)?;
+
+        let ndof = self.mesh.ndof_local();
+        let (n, nelt) = (self.cfg.n, self.cfg.nelt);
+        let chunked_glsc3 = |rt: &XlaRuntime, a: &[f64], b: &[f64], c: &[f64]| -> Result<f64> {
+            let mut acc = 0.0;
+            let mut i = 0;
+            while i + size <= a.len() {
+                acc += glsc3_e.glsc3(rt, &a[i..i + size], &b[i..i + size], &c[i..i + size])?;
+                i += size;
+            }
+            if i < a.len() {
+                acc += glsc3(&a[i..], &b[i..], &c[i..]); // rust tail
+            }
+            Ok(acc)
+        };
+        let chunked_axpy = |rt: &XlaRuntime,
+                            e: &crate::runtime::VectorEngine,
+                            a: &mut [f64],
+                            b: &[f64],
+                            s: f64,
+                            s1: bool|
+         -> Result<()> {
+            let mut i = 0;
+            while i + size <= a.len() {
+                e.axpy(rt, &mut a[i..i + size], &b[i..i + size], s)?;
+                i += size;
+            }
+            if i < a.len() {
+                if s1 {
+                    crate::solver::add2s1(&mut a[i..], &b[i..], s);
+                } else {
+                    crate::solver::add2s2(&mut a[i..], &b[i..], s);
+                }
+            }
+            Ok(())
+        };
+
+        let engine = st.ax.as_mut().ok_or_else(|| {
+            Error::Config("vector-backend xla requires a (non-fused) XLA Ax backend".into())
+        })?;
+        let mut x = vec![0.0; ndof];
+        let mut r = self.f.clone();
+        mask_apply(&mut r, &self.mask);
+        let mut p = vec![0.0; ndof];
+        let mut w = vec![0.0; ndof];
+        let mut rtz1 = 1.0f64;
+        let mut ax_seconds = 0.0;
+        let sw = Instant::now();
+        let mut iterations = 0;
+        for iter in 0..self.cfg.niter {
+            let rtz2 = rtz1;
+            rtz1 = chunked_glsc3(&st.rt, &r, &self.c, &r)?;
+            let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
+            chunked_axpy(&st.rt, &add2s1_e, &mut p, &r, beta, true)?;
+            let t0 = Instant::now();
+            engine.apply(&st.rt, &p, &mut w)?;
+            ax_seconds += t0.elapsed().as_secs_f64();
+            if !self.cfg.no_comm {
+                self.gs.dssum(&mut w);
+            }
+            mask_apply(&mut w, &self.mask);
+            let pap = chunked_glsc3(&st.rt, &w, &self.c, &p)?;
+            if pap <= 0.0 || !pap.is_finite() {
+                return Err(Error::Numerical(format!("CG breakdown at iter {iter}: pap {pap}")));
+            }
+            let alpha = rtz1 / pap;
+            chunked_axpy(&st.rt, &add2s2_e, &mut x, &p, alpha, false)?;
+            chunked_axpy(&st.rt, &add2s2_e, &mut r, &w, -alpha, false)?;
+            iterations = iter + 1;
+        }
+        let seconds = sw.elapsed().as_secs_f64();
+        let final_residual = glsc3(&r, &self.c, &r).max(0.0).sqrt();
+        let cm = CostModel::new(n, nelt);
+        Ok(RunReport {
+            backend: format!("{}+vec-xla", self.backend.label()),
+            nelt,
+            n,
+            iterations,
+            final_residual,
+            seconds,
+            ax_seconds,
+            flops: cm.flops_per_iter() * iterations as u64,
+            rnorms: vec![],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> RunConfig {
+        RunConfig { nelt: 8, n: 4, niter: 30, chunk: 64, ..Default::default() }
+    }
+
+    #[test]
+    fn cpu_backends_agree() {
+        let mut reports = Vec::new();
+        let mut xs = Vec::new();
+        for b in [Backend::CpuNaive, Backend::CpuLayered, Backend::CpuThreaded] {
+            let mut app = Nekbone::new(small_cfg(), b).unwrap();
+            let mut x = vec![0.0; app.mesh().ndof_local()];
+            let rep = app.run_into(Some(&mut x)).unwrap();
+            reports.push(rep);
+            xs.push(x);
+        }
+        for r in &reports[1..] {
+            assert!(
+                (r.final_residual - reports[0].final_residual).abs()
+                    <= 1e-9 * reports[0].final_residual.abs().max(1e-30),
+                "residuals diverge: {} vs {}",
+                r.final_residual,
+                reports[0].final_residual
+            );
+        }
+        for x in &xs[1..] {
+            crate::proputil::assert_allclose(x, &xs[0], 1e-9, 1e-12);
+        }
+    }
+
+    #[test]
+    fn residual_decreases() {
+        let cfg = RunConfig { niter: 50, ..small_cfg() };
+        let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+        let rep = app.run().unwrap();
+        // The first residual equals |masked f|_c; after 50 iterations on a
+        // 512-dof system CG should be well converged.
+        let f_norm = glsc3(&app.f, &app.c, &app.f).sqrt();
+        assert!(
+            rep.final_residual < 1e-6 * f_norm,
+            "residual {} vs f {}",
+            rep.final_residual,
+            f_norm
+        );
+    }
+
+    #[test]
+    fn no_comm_differs_from_comm() {
+        // Without dssum the operator is block-diagonal — different system,
+        // different residual trajectory (sanity that the switch acts).
+        let mut with = Nekbone::new(small_cfg(), Backend::CpuLayered).unwrap();
+        let cfg_nc = RunConfig { no_comm: true, ..small_cfg() };
+        let mut without = Nekbone::new(cfg_nc, Backend::CpuLayered).unwrap();
+        let a = with.run().unwrap();
+        let b = without.run().unwrap();
+        assert!((a.final_residual - b.final_residual).abs() > 1e-12);
+    }
+
+    #[test]
+    fn report_flops_use_cost_model() {
+        let mut app = Nekbone::new(small_cfg(), Backend::CpuLayered).unwrap();
+        let rep = app.run().unwrap();
+        let per_iter = CostModel::new(4, 8).flops_per_iter();
+        assert_eq!(rep.flops, per_iter * rep.iterations as u64);
+    }
+
+    #[test]
+    fn set_rhs_changes_solution() {
+        let mut app = Nekbone::new(small_cfg(), Backend::CpuLayered).unwrap();
+        let r1 = app.run().unwrap();
+        let ndof = app.mesh().ndof_local();
+        app.set_rhs(&vec![1.0; ndof]).unwrap();
+        let r2 = app.run().unwrap();
+        assert!((r1.final_residual - r2.final_residual).abs() > 0.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Run reports: what a Nekbone run measured.
+
+use crate::metrics::CostModel;
+
+/// Outcome and measurements of one Nekbone run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Backend label.
+    pub backend: String,
+    /// Elements, GLL points per dim, iterations executed.
+    pub nelt: usize,
+    pub n: usize,
+    pub iterations: usize,
+    /// c-weighted residual norm at exit.
+    pub final_residual: f64,
+    /// End-to-end solve wall time (seconds), excluding setup.
+    pub seconds: f64,
+    /// Wall time inside the local Ax (accumulated around the backend call).
+    pub ax_seconds: f64,
+    /// Flops by the paper's cost model: `iterations * D (12n + 34)`.
+    pub flops: u64,
+    /// Residual history if recorded.
+    pub rnorms: Vec<f64>,
+}
+
+impl RunReport {
+    /// Paper-model GFlop/s of the whole CG solve.
+    pub fn gflops(&self) -> f64 {
+        self.flops as f64 / self.seconds / 1e9
+    }
+
+    /// GFlop/s attributing only the tensor-product flops to the Ax time
+    /// (kernel-level number, comparable to Świrydowicz et al.).
+    pub fn ax_gflops(&self) -> f64 {
+        let ax_flops = crate::operators::ax_flops(self.n, self.nelt) * self.iterations as u64;
+        ax_flops as f64 / self.ax_seconds / 1e9
+    }
+
+    /// The cost model used for the accounting.
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.n, self.nelt)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<22} nelt={:<5} n={:<3} iters={:<4} time={:>8.3}s  {:>8.2} GFlop/s  |r|={:.3e}",
+            self.backend,
+            self.nelt,
+            self.n,
+            self.iterations,
+            self.seconds,
+            self.gflops(),
+            self.final_residual
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            backend: "cpu-layered".into(),
+            nelt: 64,
+            n: 10,
+            iterations: 100,
+            final_residual: 1e-6,
+            seconds: 2.0,
+            ax_seconds: 1.5,
+            flops: 64 * 1000 * 154 * 100,
+            rnorms: vec![],
+        }
+    }
+
+    #[test]
+    fn gflops_math() {
+        let r = report();
+        let want = (64_000.0 * 154.0 * 100.0) / 2.0 / 1e9;
+        assert!((r.gflops() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let s = report().summary();
+        assert!(s.contains("cpu-layered"));
+        assert!(s.contains("nelt=64"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All errors the library surfaces to callers.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid run configuration (sizes, degrees, backend combinations).
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    /// An artifact referenced by the manifest is missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// JSON parse failure (manifest).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Failure in the XLA/PJRT runtime layer.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Numerical failure (CG breakdown, non-finite values).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// Multi-rank runtime failure (a worker panicked or a channel closed).
+    #[error("rank runtime error: {0}")]
+    Rank(String),
+
+    /// I/O error with context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper: I/O error with path context.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}

@@ -1,0 +1,281 @@
+//! Geometric factors for the spectral-element Poisson operator (Nekbone's
+//! `setup_g`).
+//!
+//! For the mapping `x(r)` from the reference cube `[-1,1]^3` to a physical
+//! element, the weak Poisson operator needs, at every GLL point,
+//!
+//! ```text
+//! G_pq = w_i w_j w_k |J| * sum_m (dr_p/dx_m)(dr_q/dx_m),   p,q in {r,s,t}
+//! ```
+//!
+//! stored in upper-triangular order `[G11, G12, G13, G22, G23, G33]` — the
+//! `gxyz(i,j,k,1..6,e)` of the paper's Listing 1. The tensor is symmetric
+//! positive definite for any non-degenerate mapping, which is what makes the
+//! assembled operator SPD and CG applicable.
+//!
+//! Two construction paths:
+//! * [`GeomFactors::affine`] — closed form for the box mesh (diagonal
+//!   Jacobian; G12 = G13 = G23 = 0), what Nekbone's cube setup produces;
+//! * [`GeomFactors::from_coordinates`] — the general curvilinear path: the
+//!   coordinate fields are differentiated with the spectral `D`, the 3x3
+//!   Jacobian is inverted per point. Used for deformed-mesh tests and as a
+//!   cross-check of the closed form.
+
+use crate::basis::Basis;
+use crate::error::{Error, Result};
+use crate::mesh::Mesh;
+
+/// Geometric factors for every element, layout `[e][m][k][j][i]`, `m < 6`.
+#[derive(Clone, Debug)]
+pub struct GeomFactors {
+    pub n: usize,
+    pub nelt: usize,
+    /// `nelt * 6 * n^3` values.
+    pub g: Vec<f64>,
+}
+
+impl GeomFactors {
+    /// Closed-form factors for the affine box mesh.
+    pub fn affine(mesh: &Mesh, basis: &Basis) -> Self {
+        let n = mesh.n;
+        let nelt = mesh.nelt();
+        let w = &basis.weights;
+        let mut g = vec![0.0; nelt * 6 * n * n * n];
+        for e in 0..nelt {
+            let (lo, hi) = mesh.element_bounds(e);
+            let hx = hi[0] - lo[0];
+            let hy = hi[1] - lo[1];
+            let hz = hi[2] - lo[2];
+            let det_j = hx * hy * hz / 8.0;
+            let rx = 2.0 / hx; // dr/dx
+            let sy = 2.0 / hy;
+            let tz = 2.0 / hz;
+            let (g11, g22, g33) = (det_j * rx * rx, det_j * sy * sy, det_j * tz * tz);
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        let wq = w[i] * w[j] * w[k];
+                        let base = Self::index(n, e, 0, k, j, i);
+                        let stride = n * n * n;
+                        g[base] = wq * g11;
+                        // G12, G13 stay zero
+                        g[base + 3 * stride] = wq * g22;
+                        // G23 stays zero
+                        g[base + 5 * stride] = wq * g33;
+                    }
+                }
+            }
+        }
+        GeomFactors { n, nelt, g }
+    }
+
+    /// General curvilinear factors from per-dof physical coordinates
+    /// (local fields in the `(e,k,j,i)` layout, e.g. from
+    /// [`Mesh::coordinates`], possibly deformed).
+    pub fn from_coordinates(
+        n: usize,
+        nelt: usize,
+        basis: &Basis,
+        xs: &[f64],
+        ys: &[f64],
+        zs: &[f64],
+    ) -> Result<Self> {
+        let npts = n * n * n;
+        if xs.len() != nelt * npts || ys.len() != nelt * npts || zs.len() != nelt * npts {
+            return Err(Error::Config("coordinate field size mismatch".into()));
+        }
+        let d = &basis.d;
+        let w = &basis.weights;
+        let mut g = vec![0.0; nelt * 6 * npts];
+        // Per-element scratch for the nine Jacobian entries.
+        let mut jac = vec![[0.0f64; 9]; npts];
+        for e in 0..nelt {
+            let off = e * npts;
+            // d(x,y,z)/d(r,s,t) by differentiating the coordinate fields.
+            for (p, field) in [xs, ys, zs].iter().enumerate() {
+                let f = &field[off..off + npts];
+                for k in 0..n {
+                    for j in 0..n {
+                        for i in 0..n {
+                            let (mut fr, mut fs, mut ft) = (0.0, 0.0, 0.0);
+                            for l in 0..n {
+                                fr += d[i * n + l] * f[(k * n + j) * n + l];
+                                fs += d[j * n + l] * f[(k * n + l) * n + i];
+                                ft += d[k * n + l] * f[(l * n + j) * n + i];
+                            }
+                            let idx = (k * n + j) * n + i;
+                            jac[idx][p * 3] = fr;
+                            jac[idx][p * 3 + 1] = fs;
+                            jac[idx][p * 3 + 2] = ft;
+                        }
+                    }
+                }
+            }
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        let idx = (k * n + j) * n + i;
+                        let m = &jac[idx];
+                        // m = [xr xs xt; yr ys yt; zr zs zt]
+                        let det = m[0] * (m[4] * m[8] - m[5] * m[7])
+                            - m[1] * (m[3] * m[8] - m[5] * m[6])
+                            + m[2] * (m[3] * m[7] - m[4] * m[6]);
+                        if det.abs() < 1e-14 {
+                            return Err(Error::Numerical(format!(
+                                "degenerate element {e} at point ({i},{j},{k}): |J| = {det}"
+                            )));
+                        }
+                        // Inverse (dr/dx as rows: [rx ry rz; sx sy sz; tx ty tz]).
+                        let inv_det = 1.0 / det;
+                        let inv = [
+                            (m[4] * m[8] - m[5] * m[7]) * inv_det,
+                            (m[2] * m[7] - m[1] * m[8]) * inv_det,
+                            (m[1] * m[5] - m[2] * m[4]) * inv_det,
+                            (m[5] * m[6] - m[3] * m[8]) * inv_det,
+                            (m[0] * m[8] - m[2] * m[6]) * inv_det,
+                            (m[2] * m[3] - m[0] * m[5]) * inv_det,
+                            (m[3] * m[7] - m[4] * m[6]) * inv_det,
+                            (m[1] * m[6] - m[0] * m[7]) * inv_det,
+                            (m[0] * m[4] - m[1] * m[3]) * inv_det,
+                        ];
+                        let wq = w[i] * w[j] * w[k] * det.abs();
+                        let dot = |p: usize, q: usize| {
+                            inv[p * 3] * inv[q * 3]
+                                + inv[p * 3 + 1] * inv[q * 3 + 1]
+                                + inv[p * 3 + 2] * inv[q * 3 + 2]
+                        };
+                        let stride = npts;
+                        let base = Self::index(n, e, 0, k, j, i);
+                        g[base] = wq * dot(0, 0);
+                        g[base + stride] = wq * dot(0, 1);
+                        g[base + 2 * stride] = wq * dot(0, 2);
+                        g[base + 3 * stride] = wq * dot(1, 1);
+                        g[base + 4 * stride] = wq * dot(1, 2);
+                        g[base + 5 * stride] = wq * dot(2, 2);
+                    }
+                }
+            }
+        }
+        Ok(GeomFactors { n, nelt, g })
+    }
+
+    /// Flat index of `g[e][m][k][j][i]`.
+    #[inline]
+    pub fn index(n: usize, e: usize, m: usize, k: usize, j: usize, i: usize) -> usize {
+        (((e * 6 + m) * n + k) * n + j) * n + i
+    }
+
+    /// Slice of all six factors for one element.
+    pub fn element(&self, e: usize) -> &[f64] {
+        let len = 6 * self.n * self.n * self.n;
+        &self.g[e * len..(e + 1) * len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(ex: usize, ey: usize, ez: usize, n: usize) -> (Mesh, Basis) {
+        (Mesh::new(ex, ey, ez, n).unwrap(), Basis::new(n))
+    }
+
+    #[test]
+    fn affine_matches_general_on_box() {
+        let (mesh, basis) = setup(2, 3, 1, 5);
+        let affine = GeomFactors::affine(&mesh, &basis);
+        let (xs, ys, zs) = mesh.coordinates(&basis.points);
+        let general =
+            GeomFactors::from_coordinates(mesh.n, mesh.nelt(), &basis, &xs, &ys, &zs).unwrap();
+        for (a, b) in affine.g.iter().zip(&general.g) {
+            assert!((a - b).abs() < 1e-10, "affine {a} vs general {b}");
+        }
+    }
+
+    #[test]
+    fn affine_offdiagonals_zero() {
+        let (mesh, basis) = setup(2, 2, 2, 4);
+        let gf = GeomFactors::affine(&mesh, &basis);
+        let n = mesh.n;
+        for e in 0..mesh.nelt() {
+            for m in [1usize, 2, 4] {
+                for k in 0..n {
+                    for j in 0..n {
+                        for i in 0..n {
+                            assert_eq!(gf.g[GeomFactors::index(n, e, m, k, j, i)], 0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn factors_integrate_volume() {
+        // sum over dofs of w_ijk |J| = volume of the domain. G11 has an
+        // extra (dr/dx)^2; check via G11 * (hx/2)^2 summed = volume.
+        let (mesh, basis) = setup(2, 2, 2, 6);
+        let gf = GeomFactors::affine(&mesh, &basis);
+        let n = mesh.n;
+        let mut vol = 0.0;
+        for e in 0..mesh.nelt() {
+            let (lo, hi) = mesh.element_bounds(e);
+            let hx = hi[0] - lo[0];
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        vol += gf.g[GeomFactors::index(n, e, 0, k, j, i)] * (hx / 2.0) * (hx / 2.0);
+                    }
+                }
+            }
+        }
+        assert!((vol - 1.0).abs() < 1e-12, "volume {vol}");
+    }
+
+    #[test]
+    fn general_path_spd_on_deformed_mesh() {
+        // Smoothly deform the unit cube; the per-point 3x3 G must stay SPD.
+        let (mesh, basis) = setup(2, 2, 2, 5);
+        let (mut xs, mut ys, mut zs) = mesh.coordinates(&basis.points);
+        for idx in 0..xs.len() {
+            let (x, y, z) = (xs[idx], ys[idx], zs[idx]);
+            xs[idx] = x + 0.05 * (std::f64::consts::PI * y).sin();
+            ys[idx] = y + 0.05 * (std::f64::consts::PI * z).sin();
+            zs[idx] = z + 0.05 * (std::f64::consts::PI * x).sin();
+        }
+        let gf =
+            GeomFactors::from_coordinates(mesh.n, mesh.nelt(), &basis, &xs, &ys, &zs).unwrap();
+        let n = mesh.n;
+        let npts = n * n * n;
+        for e in 0..mesh.nelt() {
+            for p in 0..npts {
+                let at = |m: usize| gf.g[(e * 6 + m) * npts + p];
+                let (g11, g12, g13, g22, g23, g33) = (at(0), at(1), at(2), at(3), at(4), at(5));
+                // Sylvester's criterion for the symmetric 3x3.
+                assert!(g11 > 0.0);
+                assert!(g11 * g22 - g12 * g12 > 0.0);
+                let det = g11 * (g22 * g33 - g23 * g23) - g12 * (g12 * g33 - g23 * g13)
+                    + g13 * (g12 * g23 - g22 * g13);
+                assert!(det > 0.0, "e={e} p={p} det={det}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_mapping_rejected() {
+        let (mesh, basis) = setup(1, 1, 1, 3);
+        let (xs, ys, _) = mesh.coordinates(&basis.points);
+        let zs = vec![0.0; xs.len()]; // collapsed in z
+        assert!(
+            GeomFactors::from_coordinates(mesh.n, 1, &basis, &xs, &ys, &zs).is_err()
+        );
+    }
+
+    #[test]
+    fn element_slice() {
+        let (mesh, basis) = setup(2, 1, 1, 3);
+        let gf = GeomFactors::affine(&mesh, &basis);
+        assert_eq!(gf.element(0).len(), 6 * 27);
+        assert_eq!(gf.element(1)[0], gf.g[6 * 27]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Gather–scatter: direct-stiffness summation across element boundaries
+//! (Nekbone's `dssum`, the role gslib plays in the real code).
+//!
+//! The local Poisson operator (`Ax` on each element) produces independent
+//! per-element results; `dssum` adds together the values all local copies of
+//! a shared global point hold and writes the sum back to every copy:
+//!
+//! ```text
+//! v_local = Q Q^T v_local      (Q = local-to-global boolean scatter)
+//! ```
+//!
+//! This is the "communicate the local results to the neighboring elements"
+//! step of the paper (section III), which the paper's roofline methodology
+//! excludes (`--no-comm`).
+//!
+//! The serial implementation here gathers into a dense global buffer — the
+//! right choice for a single address space. The distributed analog (halo
+//! exchange between rank threads) lives in [`crate::rank`] and is
+//! property-tested against this one.
+
+use crate::mesh::Mesh;
+
+/// Precomputed gather–scatter operator for one mesh.
+#[derive(Clone, Debug)]
+pub struct GatherScatter {
+    /// local dof -> global dof.
+    ids: Vec<usize>,
+    /// Number of distinct global dofs.
+    nglobal: usize,
+    /// Hot-path structure: only dofs with multiplicity > 1 participate in
+    /// the summation (a single-copy dof's "sum" is itself). `shared_offsets`
+    /// delimits groups inside `shared_locals`; each group lists the local
+    /// copies of one shared global dof. Built once; `dssum` then touches
+    /// only shared copies (~half the dofs at n = 10) instead of
+    /// gather+scatter over a dense global scratch (perf pass, see
+    /// EXPERIMENTS.md §Perf L3).
+    shared_offsets: Vec<u32>,
+    shared_locals: Vec<u32>,
+}
+
+impl GatherScatter {
+    /// Build from a mesh's local→global map.
+    pub fn new(mesh: &Mesh) -> Self {
+        Self::from_ids(mesh.global_ids(), mesh.ndof_global())
+    }
+
+    /// Build from an explicit map (used by tests and the rank runtime).
+    pub fn from_ids(ids: Vec<usize>, nglobal: usize) -> Self {
+        debug_assert!(ids.iter().all(|&g| g < nglobal));
+        // Count copies per global dof, then group the local indices of
+        // every dof that has more than one copy.
+        let mut count = vec![0u32; nglobal];
+        for &g in &ids {
+            count[g] += 1;
+        }
+        // Dense index for shared globals only.
+        let mut shared_index = vec![u32::MAX; nglobal];
+        let mut nshared = 0u32;
+        for (g, &c) in count.iter().enumerate() {
+            if c > 1 {
+                shared_index[g] = nshared;
+                nshared += 1;
+            }
+        }
+        let mut shared_offsets = vec![0u32; nshared as usize + 1];
+        for (g, &c) in count.iter().enumerate() {
+            if c > 1 {
+                shared_offsets[shared_index[g] as usize + 1] = c;
+            }
+        }
+        for i in 1..shared_offsets.len() {
+            shared_offsets[i] += shared_offsets[i - 1];
+        }
+        let mut cursor = shared_offsets.clone();
+        let mut shared_locals = vec![0u32; *shared_offsets.last().unwrap() as usize];
+        for (l, &g) in ids.iter().enumerate() {
+            let si = shared_index[g];
+            if si != u32::MAX {
+                shared_locals[cursor[si as usize] as usize] = l as u32;
+                cursor[si as usize] += 1;
+            }
+        }
+        GatherScatter { ids, nglobal, shared_offsets, shared_locals }
+    }
+
+    /// Number of local dofs this operator acts on.
+    pub fn ndof_local(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Number of distinct global dofs.
+    pub fn ndof_global(&self) -> usize {
+        self.nglobal
+    }
+
+    /// The local→global map.
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    /// Direct-stiffness summation in place: every local copy of a global
+    /// point receives the sum over all copies. Only shared dofs are
+    /// touched; single-copy dofs already equal their own sum.
+    pub fn dssum(&mut self, v: &mut [f64]) {
+        assert_eq!(v.len(), self.ids.len(), "dssum length mismatch");
+        for w in self.shared_offsets.windows(2) {
+            let group = &self.shared_locals[w[0] as usize..w[1] as usize];
+            let mut sum = 0.0;
+            for &l in group {
+                sum += v[l as usize];
+            }
+            for &l in group {
+                v[l as usize] = sum;
+            }
+        }
+    }
+
+    /// Gather only: returns the global vector `Q^T v` (sum over copies).
+    pub fn gather(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.ids.len());
+        let mut out = vec![0.0; self.nglobal];
+        for (l, &g) in self.ids.iter().enumerate() {
+            out[g] += v[l];
+        }
+        out
+    }
+
+    /// Scatter only: `v_local[l] = u_global[ids[l]]`.
+    pub fn scatter(&self, u: &[f64], v: &mut [f64]) {
+        assert_eq!(u.len(), self.nglobal);
+        assert_eq!(v.len(), self.ids.len());
+        for (l, &g) in self.ids.iter().enumerate() {
+            v[l] = u[g];
+        }
+    }
+
+    /// Multiplicity of every local dof (copies per global point) — the
+    /// denominator of Nekbone's `c` weight vector.
+    pub fn multiplicity(&self) -> Vec<f64> {
+        let ones = vec![1.0; self.ids.len()];
+        let counts = self.gather(&ones);
+        self.ids.iter().map(|&g| counts[g]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::Cases;
+
+    fn mesh() -> Mesh {
+        Mesh::new(2, 2, 2, 3).unwrap()
+    }
+
+    #[test]
+    fn dssum_on_distinct_ids_is_identity() {
+        let mut gs = GatherScatter::from_ids(vec![0, 1, 2, 3], 4);
+        let mut v = vec![1.0, -2.0, 3.0, 0.5];
+        let orig = v.clone();
+        gs.dssum(&mut v);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn dssum_sums_copies() {
+        let mut gs = GatherScatter::from_ids(vec![0, 1, 0, 1], 2);
+        let mut v = vec![1.0, 10.0, 2.0, 20.0];
+        gs.dssum(&mut v);
+        assert_eq!(v, vec![3.0, 30.0, 3.0, 30.0]);
+    }
+
+    #[test]
+    fn dssum_preserves_global_sum_weighted() {
+        // sum_l v_l / mult_l is invariant under dssum... actually
+        // sum_global(gather(v)) is invariant; check that.
+        let m = mesh();
+        let mut gs = GatherScatter::new(&m);
+        let mut v: Vec<f64> = (0..m.ndof_local()).map(|i| (i as f64 * 0.7).sin()).collect();
+        let before: f64 = gs.gather(&v).iter().sum();
+        gs.dssum(&mut v);
+        // After dssum, gather multiplies each global value by its multiplicity.
+        let ones = vec![1.0; m.ndof_local()];
+        let counts = gs.gather(&ones);
+        let after: f64 = gs
+            .gather(&v)
+            .iter()
+            .zip(&counts)
+            .map(|(&s, &c)| s / c)
+            .sum();
+        assert!((before - after).abs() < 1e-9 * before.abs().max(1.0));
+    }
+
+    #[test]
+    fn dssum_idempotent_up_to_multiplicity() {
+        // dssum(dssum(v)) == dssum(mult * ... ) — specifically for v already
+        // summed, a second dssum multiplies each global value by mult.
+        let m = mesh();
+        let mut gs = GatherScatter::new(&m);
+        let mut v: Vec<f64> = (0..m.ndof_local()).map(|i| i as f64).collect();
+        gs.dssum(&mut v);
+        let summed = v.clone();
+        gs.dssum(&mut v);
+        let mult = gs.multiplicity();
+        for ((a, b), m) in v.iter().zip(&summed).zip(&mult) {
+            assert!((a - b * m).abs() < 1e-9, "{a} vs {b} * {m}");
+        }
+    }
+
+    #[test]
+    fn dssum_symmetric() {
+        // <dssum(u), v> == <u, dssum(v)> : Q Q^T is symmetric.
+        let m = mesh();
+        let mut gs = GatherScatter::new(&m);
+        let mut cases = Cases::new(0xD55);
+        for _ in 0..10 {
+            let u0 = cases.vec_normal(m.ndof_local());
+            let v0 = cases.vec_normal(m.ndof_local());
+            let mut u = u0.clone();
+            let mut v = v0.clone();
+            gs.dssum(&mut u);
+            gs.dssum(&mut v);
+            let lhs: f64 = u.iter().zip(&v0).map(|(a, b)| a * b).sum();
+            let rhs: f64 = u0.iter().zip(&v).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-8 * lhs.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn multiplicity_matches_mesh() {
+        let m = mesh();
+        let gs = GatherScatter::new(&m);
+        assert_eq!(gs.multiplicity(), m.multiplicity());
+    }
+
+    #[test]
+    fn constant_field_fixed_point() {
+        // A globally consistent field times multiplicity: dssum(1) = mult.
+        let m = mesh();
+        let mut gs = GatherScatter::new(&m);
+        let mut v = vec![1.0; m.ndof_local()];
+        gs.dssum(&mut v);
+        assert_eq!(v, gs.multiplicity());
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let m = mesh();
+        let mut gs = GatherScatter::new(&m);
+        let mut v = vec![0.0; 3];
+        gs.dssum(&mut v);
+    }
+}

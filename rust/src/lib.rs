@@ -1,0 +1,52 @@
+//! # nekbone-rs
+//!
+//! Reproduction of *"Optimization of Tensor-product Operations in Nekbone on
+//! GPUs"* (Karp, Jansson, Podobas, Schlatter, Markidis — KTH, 2020) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! * **Layer 1** (build-time Python): the paper's tensor-product kernel
+//!   variants as Pallas kernels (`python/compile/kernels/`), AOT-lowered to
+//!   HLO text.
+//! * **Layer 2** (build-time Python): the JAX compute graph around them
+//!   (`python/compile/model.py`).
+//! * **Layer 3** (this crate): the Nekbone application — spectral-element
+//!   mesh, GLL basis, geometric factors, gather–scatter, conjugate-gradient
+//!   solver, the PJRT runtime that loads the AOT artifacts, a simulated
+//!   multi-rank runtime, and the measurement harness that regenerates every
+//!   figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use nekbone::config::RunConfig;
+//! use nekbone::coordinator::{Backend, Nekbone};
+//!
+//! let cfg = RunConfig { nelt: 64, n: 10, niter: 100, ..RunConfig::default() };
+//! let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+//! let report = app.run().unwrap();
+//! println!("{:.2} GFlop/s, residual {:e}", report.gflops(), report.final_residual);
+//! ```
+
+pub mod error;
+pub mod rng;
+pub mod json;
+pub mod basis;
+pub mod mesh;
+pub mod geometry;
+pub mod gs;
+pub mod operators;
+pub mod solver;
+pub mod metrics;
+pub mod roofline;
+pub mod runtime;
+pub mod coordinator;
+pub mod rank;
+pub mod bench;
+pub mod proputil;
+pub mod config;
+pub mod cli;
+
+pub use error::{Error, Result};

@@ -1,0 +1,151 @@
+//! `nekbone` — the launcher binary.
+//!
+//! See `nekbone help` (or [`nekbone::cli::USAGE`]) for the interface.
+
+use nekbone::bench::Table;
+use nekbone::cli::{parse_elems, Args, USAGE};
+use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
+use nekbone::error::Result;
+use nekbone::rank::run_ranked;
+use nekbone::roofline;
+use nekbone::runtime::Manifest;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&raw) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    if raw.is_empty() || raw[0] == "help" || raw[0] == "--help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(raw)?;
+    match args.subcommand.as_str() {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "roofline" => cmd_roofline(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprint!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn backend_of(args: &Args) -> Result<Backend> {
+    Backend::parse(args.get("backend").unwrap_or("xla-layered"))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = args.run_config()?;
+    let backend = backend_of(args)?;
+    let vb = VectorBackend::parse(args.get("vector-backend").unwrap_or("rust"))?;
+
+    if cfg.ranks > 1 {
+        let report = run_ranked(&cfg)?;
+        println!("{}", report.summary());
+        return Ok(());
+    }
+    let mut app = Nekbone::new(cfg, backend)?;
+    let report = match vb {
+        VectorBackend::Rust => app.run()?,
+        VectorBackend::Xla => app.run_vector_backend(vb)?,
+    };
+    println!("{}", report.summary());
+    let cm = report.cost_model();
+    println!(
+        "  cost model: {} flops/iter, intensity {:.4} flop/byte, ax time {:.3}s ({:.2} GF/s kernel-level)",
+        cm.flops_per_iter(),
+        cm.intensity(),
+        report.ax_seconds,
+        report.ax_gflops(),
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = args.run_config()?;
+    let backend = backend_of(args)?;
+    let elems = parse_elems(args.get("elems").unwrap_or("64,128,256,512,1024"))?;
+    let mut table = Table::new(&["backend", "nelt", "dof", "time(s)", "GFlop/s", "residual"]);
+    for nelt in elems {
+        let cfg = nekbone::config::RunConfig { nelt, ..base.clone() };
+        let report = if cfg.ranks > 1 {
+            run_ranked(&cfg)?
+        } else {
+            Nekbone::new(cfg, backend.clone())?.run()?
+        };
+        table.row(&[
+            report.backend.clone(),
+            report.nelt.to_string(),
+            (report.nelt * report.n.pow(3)).to_string(),
+            format!("{:.3}", report.seconds),
+            format!("{:.3}", report.gflops()),
+            format!("{:.3e}", report.final_residual),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args) -> Result<()> {
+    let base = args.run_config()?;
+    let backend = backend_of(args)?;
+    let elems = parse_elems(args.get("elems").unwrap_or("256,512,1024,2048,4096"))?;
+    let mut table = Table::new(&[
+        "nelt",
+        "dof",
+        "bw(GB/s)",
+        "roofline(GF/s)",
+        "achieved(GF/s)",
+        "fraction",
+    ]);
+    for nelt in elems {
+        // The paper's methodology: communication off for both sides.
+        let cfg = nekbone::config::RunConfig { nelt, no_comm: true, ..base.clone() };
+        let n = cfg.n;
+        let (bw, roof) = roofline::roofline_for(n, nelt, 5);
+        let mut app = Nekbone::new(cfg, backend.clone())?;
+        let report = app.run()?;
+        let achieved = report.gflops();
+        table.row(&[
+            nelt.to_string(),
+            (nelt * n.pow(3)).to_string(),
+            format!("{:.2}", bw.bandwidth_gbs),
+            format!("{roof:.3}"),
+            format!("{achieved:.3}"),
+            format!("{:.1}%", 100.0 * achieved / roof),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    println!("nekbone-rs (reproduction of Karp et al. 2020)");
+    match Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts dir: {dir} ({} entries)", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {:<36} kind={:<8?} variant={:<16} n={:<3} chunk={}",
+                    a.name, a.kind, a.variant, a.n, a.chunk
+                );
+            }
+        }
+        Err(e) => println!("artifacts dir {dir}: not loadable ({e}); run `make artifacts`"),
+    }
+    match nekbone::runtime::XlaRuntime::new(dir) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform_name()),
+        Err(e) => println!("PJRT runtime unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Element-count factorization: pick a near-cubic `ex x ey x ez` grid for a
+//! requested element count (what Nekbone's setup does from `nelt`).
+
+use crate::error::{Error, Result};
+
+/// Factor `nelt` into `(ex, ey, ez)` with `ex*ey*ez == nelt`, minimizing the
+/// surface-to-volume ratio (ties broken toward `ex >= ey >= ez`).
+///
+/// The mesh surface area in element faces is
+/// `2 (ex ey + ey ez + ez ex)`; minimizing it gives the most compact box and
+/// hence the fewest shared dofs — the same objective as MPI rank placement
+/// in the real code.
+pub fn box_dims(nelt: usize) -> Result<(usize, usize, usize)> {
+    if nelt == 0 {
+        return Err(Error::Config("nelt must be positive".into()));
+    }
+    let mut best: Option<(usize, usize, usize)> = None;
+    let mut best_surface = usize::MAX;
+    // ez <= ey <= ex, so ez <= cbrt(nelt).
+    let mut ez = 1;
+    while ez * ez * ez <= nelt {
+        if nelt % ez == 0 {
+            let rest = nelt / ez;
+            let mut ey = ez;
+            while ey * ey <= rest {
+                if rest % ey == 0 {
+                    let ex = rest / ey;
+                    let surface = ex * ey + ey * ez + ez * ex;
+                    if surface < best_surface {
+                        best_surface = surface;
+                        best = Some((ex, ey, ez));
+                    }
+                }
+                ey += 1;
+            }
+        }
+        ez += 1;
+    }
+    best.ok_or_else(|| Error::Config(format!("cannot factor nelt={nelt}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_products() {
+        for nelt in 1..=512 {
+            let (ex, ey, ez) = box_dims(nelt).unwrap();
+            assert_eq!(ex * ey * ez, nelt, "nelt={nelt}");
+            assert!(ex >= ey && ey >= ez);
+        }
+    }
+
+    #[test]
+    fn cubes_become_cubes() {
+        assert_eq!(box_dims(64).unwrap(), (4, 4, 4));
+        assert_eq!(box_dims(512).unwrap(), (8, 8, 8));
+        assert_eq!(box_dims(4096).unwrap(), (16, 16, 16));
+    }
+
+    #[test]
+    fn paper_sweep_sizes() {
+        // The paper's element counts must all decompose reasonably.
+        for nelt in [64, 128, 256, 448, 512, 896, 1024, 1792, 2048, 3584, 4096] {
+            let (ex, ey, ez) = box_dims(nelt).unwrap();
+            assert_eq!(ex * ey * ez, nelt);
+            // Not absurdly elongated: aspect ratio below 8 for these counts.
+            assert!(ex / ez <= 8, "nelt={nelt} -> {ex}x{ey}x{ez}");
+        }
+    }
+
+    #[test]
+    fn primes_degenerate_gracefully() {
+        assert_eq!(box_dims(7).unwrap(), (7, 1, 1));
+        assert_eq!(box_dims(1).unwrap(), (1, 1, 1));
+    }
+
+    #[test]
+    fn zero_rejected() {
+        assert!(box_dims(0).is_err());
+    }
+}

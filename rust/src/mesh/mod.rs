@@ -1,0 +1,315 @@
+//! Structured spectral-element mesh of the cubic domain (Nekbone's proxy
+//! setup: `genbox` + global numbering + boundary masks).
+//!
+//! The domain `[0,1]^3` is split into `ex x ey x ez` hexahedral elements,
+//! each carrying `n^3` GLL points. Neighboring elements share the points on
+//! their common face/edge/corner; the *global* point grid therefore has
+//! `(ex(n-1)+1) x (ey(n-1)+1) x (ez(n-1)+1)` distinct points, and the
+//! local→global map drives the gather–scatter (`crate::gs`).
+//!
+//! Local storage convention matches the kernels: a local field is
+//! `f64[nelt][n][n][n]` flattened row-major with axes `(e, k, j, i)` where
+//! `i` runs along x, `j` along y, `k` along z.
+
+mod decompose;
+
+pub use decompose::box_dims;
+
+use crate::error::{Error, Result};
+
+/// A structured box mesh.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    /// GLL points per dimension per element.
+    pub n: usize,
+    /// Elements along x, y, z.
+    pub ex: usize,
+    pub ey: usize,
+    pub ez: usize,
+    /// Global point-grid dimensions.
+    pub gx: usize,
+    pub gy: usize,
+    pub gz: usize,
+}
+
+impl Mesh {
+    /// Mesh with an explicit element grid.
+    pub fn new(ex: usize, ey: usize, ez: usize, n: usize) -> Result<Self> {
+        if ex == 0 || ey == 0 || ez == 0 {
+            return Err(Error::Config(format!(
+                "element grid must be non-empty, got {ex}x{ey}x{ez}"
+            )));
+        }
+        if n < 2 {
+            return Err(Error::Config(format!("mesh needs n >= 2 GLL points, got {n}")));
+        }
+        Ok(Mesh {
+            n,
+            ex,
+            ey,
+            ez,
+            gx: ex * (n - 1) + 1,
+            gy: ey * (n - 1) + 1,
+            gz: ez * (n - 1) + 1,
+        })
+    }
+
+    /// Near-cubic mesh with exactly `nelt` elements (Nekbone picks the
+    /// element grid automatically from the requested element count).
+    pub fn for_nelt(nelt: usize, n: usize) -> Result<Self> {
+        let (ex, ey, ez) = box_dims(nelt)?;
+        Mesh::new(ex, ey, ez, n)
+    }
+
+    /// Total number of elements.
+    pub fn nelt(&self) -> usize {
+        self.ex * self.ey * self.ez
+    }
+
+    /// Local degrees of freedom (with duplicates): `nelt * n^3`.
+    pub fn ndof_local(&self) -> usize {
+        self.nelt() * self.n * self.n * self.n
+    }
+
+    /// Distinct global points.
+    pub fn ndof_global(&self) -> usize {
+        self.gx * self.gy * self.gz
+    }
+
+    /// Element index from its (x, y, z) position in the element grid.
+    #[inline]
+    pub fn elem_id(&self, ei: usize, ej: usize, ek: usize) -> usize {
+        (ek * self.ey + ej) * self.ex + ei
+    }
+
+    /// Inverse of [`elem_id`].
+    #[inline]
+    pub fn elem_pos(&self, e: usize) -> (usize, usize, usize) {
+        let ei = e % self.ex;
+        let ej = (e / self.ex) % self.ey;
+        let ek = e / (self.ex * self.ey);
+        (ei, ej, ek)
+    }
+
+    /// Flat local index of point `(i, j, k)` in element `e`.
+    #[inline]
+    pub fn local_id(&self, e: usize, k: usize, j: usize, i: usize) -> usize {
+        ((e * self.n + k) * self.n + j) * self.n + i
+    }
+
+    /// Global point id of local point `(i, j, k)` in element `e`.
+    #[inline]
+    pub fn global_id(&self, e: usize, k: usize, j: usize, i: usize) -> usize {
+        let (ei, ej, ek) = self.elem_pos(e);
+        let px = ei * (self.n - 1) + i;
+        let py = ej * (self.n - 1) + j;
+        let pz = ek * (self.n - 1) + k;
+        (pz * self.gy + py) * self.gx + px
+    }
+
+    /// The full local→global map, one entry per local dof.
+    pub fn global_ids(&self) -> Vec<usize> {
+        let n = self.n;
+        let mut ids = Vec::with_capacity(self.ndof_local());
+        for e in 0..self.nelt() {
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        ids.push(self.global_id(e, k, j, i));
+                    }
+                }
+            }
+        }
+        ids
+    }
+
+    /// Multiplicity of every *local* dof: how many local copies its global
+    /// point has (1 interior, 2 on faces, 4 on edges, 8 on corners of the
+    /// element grid).
+    pub fn multiplicity(&self) -> Vec<f64> {
+        let mut count = vec![0u32; self.ndof_global()];
+        let ids = self.global_ids();
+        for &g in &ids {
+            count[g] += 1;
+        }
+        ids.iter().map(|&g| count[g] as f64).collect()
+    }
+
+    /// Nekbone's `c` vector: inverse multiplicity, used to weight the CG
+    /// inner products so each global dof counts once.
+    pub fn inv_multiplicity(&self) -> Vec<f64> {
+        self.multiplicity().iter().map(|&m| 1.0 / m).collect()
+    }
+
+    /// Homogeneous-Dirichlet mask: 0.0 at every local dof on the domain
+    /// boundary, 1.0 elsewhere.
+    pub fn boundary_mask(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut mask = Vec::with_capacity(self.ndof_local());
+        for e in 0..self.nelt() {
+            let (ei, ej, ek) = self.elem_pos(e);
+            for k in 0..n {
+                let bz = (ek == 0 && k == 0) || (ek == self.ez - 1 && k == n - 1);
+                for j in 0..n {
+                    let by = (ej == 0 && j == 0) || (ej == self.ey - 1 && j == n - 1);
+                    for i in 0..n {
+                        let bx = (ei == 0 && i == 0) || (ei == self.ex - 1 && i == n - 1);
+                        mask.push(if bx || by || bz { 0.0 } else { 1.0 });
+                    }
+                }
+            }
+        }
+        mask
+    }
+
+    /// Physical extent of element `e` in the unit cube:
+    /// `([x0, y0, z0], [x1, y1, z1])`.
+    pub fn element_bounds(&self, e: usize) -> ([f64; 3], [f64; 3]) {
+        let (ei, ej, ek) = self.elem_pos(e);
+        let hx = 1.0 / self.ex as f64;
+        let hy = 1.0 / self.ey as f64;
+        let hz = 1.0 / self.ez as f64;
+        (
+            [ei as f64 * hx, ej as f64 * hy, ek as f64 * hz],
+            [(ei + 1) as f64 * hx, (ej + 1) as f64 * hy, (ek + 1) as f64 * hz],
+        )
+    }
+
+    /// Physical coordinates of every local dof, as three local fields
+    /// `(x, y, z)` (used by manufactured-solution examples and the general
+    /// geometry path).
+    pub fn coordinates(&self, gll: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        assert_eq!(gll.len(), self.n, "GLL point count mismatch");
+        let n = self.n;
+        let ndof = self.ndof_local();
+        let (mut xs, mut ys, mut zs) =
+            (Vec::with_capacity(ndof), Vec::with_capacity(ndof), Vec::with_capacity(ndof));
+        for e in 0..self.nelt() {
+            let (lo, hi) = self.element_bounds(e);
+            for k in 0..n {
+                let z = lo[2] + (gll[k] + 1.0) * 0.5 * (hi[2] - lo[2]);
+                for j in 0..n {
+                    let y = lo[1] + (gll[j] + 1.0) * 0.5 * (hi[1] - lo[1]);
+                    for i in 0..n {
+                        let x = lo[0] + (gll[i] + 1.0) * 0.5 * (hi[0] - lo[0]);
+                        xs.push(x);
+                        ys.push(y);
+                        zs.push(z);
+                    }
+                }
+            }
+        }
+        (xs, ys, zs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let m = Mesh::new(2, 3, 4, 5).unwrap();
+        assert_eq!(m.nelt(), 24);
+        assert_eq!(m.ndof_local(), 24 * 125);
+        assert_eq!(m.ndof_global(), 9 * 13 * 17);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(Mesh::new(0, 1, 1, 5).is_err());
+        assert!(Mesh::new(1, 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn elem_id_roundtrip() {
+        let m = Mesh::new(3, 4, 5, 3).unwrap();
+        for e in 0..m.nelt() {
+            let (i, j, k) = m.elem_pos(e);
+            assert_eq!(m.elem_id(i, j, k), e);
+        }
+    }
+
+    #[test]
+    fn shared_face_points_have_same_global_id() {
+        let m = Mesh::new(2, 1, 1, 4).unwrap();
+        let n = m.n;
+        // right face of element 0 == left face of element 1
+        for k in 0..n {
+            for j in 0..n {
+                assert_eq!(m.global_id(0, k, j, n - 1), m.global_id(1, k, j, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn global_ids_cover_grid() {
+        let m = Mesh::new(2, 2, 2, 3).unwrap();
+        let mut seen = vec![false; m.ndof_global()];
+        for &g in &m.global_ids() {
+            seen[g] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every global point appears locally");
+    }
+
+    #[test]
+    fn multiplicity_values() {
+        let m = Mesh::new(2, 2, 2, 3).unwrap();
+        let mult = m.multiplicity();
+        // Center of the box is shared by all 8 elements.
+        let center = m.local_id(0, 2, 2, 2); // top corner of element 0
+        assert_eq!(mult[center], 8.0);
+        // Element-interior point belongs to exactly one element.
+        let interior = m.local_id(0, 1, 1, 1);
+        assert_eq!(mult[interior], 1.0);
+    }
+
+    #[test]
+    fn inv_multiplicity_sums_to_global_count() {
+        // sum of 1/mult over local dofs == number of distinct global dofs
+        let m = Mesh::new(3, 2, 2, 4).unwrap();
+        let s: f64 = m.inv_multiplicity().iter().sum();
+        assert!((s - m.ndof_global() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boundary_mask_counts() {
+        let m = Mesh::new(2, 2, 2, 3).unwrap();
+        let mask = m.boundary_mask();
+        let ids = m.global_ids();
+        // A global boundary point must be masked in every local copy.
+        let (gx, gy, gz) = (m.gx, m.gy, m.gz);
+        for (l, &g) in ids.iter().enumerate() {
+            let px = g % gx;
+            let py = (g / gx) % gy;
+            let pz = g / (gx * gy);
+            let boundary = px == 0 || px == gx - 1 || py == 0 || py == gy - 1 || pz == 0 || pz == gz - 1;
+            assert_eq!(mask[l] == 0.0, boundary, "local {l} global {g}");
+        }
+    }
+
+    #[test]
+    fn coordinates_match_bounds() {
+        let m = Mesh::new(2, 1, 1, 3).unwrap();
+        let gll = crate::basis::gll_points(3);
+        let (xs, ys, zs) = m.coordinates(&gll);
+        assert_eq!(xs.len(), m.ndof_local());
+        // First element spans x in [0, 0.5]; first point is its corner.
+        assert!((xs[0] - 0.0).abs() < 1e-15);
+        assert!((ys[0] - 0.0).abs() < 1e-15);
+        assert!((zs[0] - 0.0).abs() < 1e-15);
+        // Last point of element 1 is the far corner (1, 1, 1).
+        let last = m.local_id(1, 2, 2, 2);
+        assert!((xs[last] - 1.0).abs() < 1e-15);
+        assert!((ys[last] - 1.0).abs() < 1e-15);
+        assert!((zs[last] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn for_nelt_produces_exact_count() {
+        for nelt in [1, 8, 64, 448, 1024, 3584] {
+            let m = Mesh::for_nelt(nelt, 4).unwrap();
+            assert_eq!(m.nelt(), nelt, "nelt {nelt}");
+        }
+    }
+}

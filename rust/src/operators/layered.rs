@@ -1,0 +1,128 @@
+//! Layered CPU Ax: the paper's 2D-thread-structure schedule, on CPU.
+//!
+//! One element at a time, sweeping the k layers: per layer the r/s
+//! contractions read an (n,n) tile that stays in L1, the t contraction reads
+//! the element's "register column", and the stage-2 t part scatters into a
+//! per-element accumulator — the same dataflow as the CUDA kernel and the
+//! Pallas kernel (`ax_layered.py`), with no full-size intermediates.
+
+/// Local Poisson operator with the layered schedule. Signature and layout
+/// as [`super::ax_naive`]. Scratch is stack/small-heap per element tile; the
+/// only `n^3` temporary is the per-element output accumulator written once.
+pub fn ax_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(w.len(), nelt * np);
+
+    let nn = n * n;
+    // Per-layer tiles (the CUDA kernel's shared-memory arrays).
+    let mut wr = vec![0.0; nn];
+    let mut ws = vec![0.0; nn];
+    let mut wt = vec![0.0; nn];
+    let mut ur = vec![0.0; nn];
+    let mut us = vec![0.0; nn];
+    let mut ut = vec![0.0; nn];
+
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        let ge = &g[e * 6 * np..(e + 1) * 6 * np];
+        let we = &mut w[e * np..(e + 1) * np];
+        we.fill(0.0);
+
+        for k in 0..n {
+            let uk = &ue[k * nn..(k + 1) * nn]; // the staged layer
+            // stage 1: r and s derivatives from the layer tile
+            // (two (n,n)x(n,n) matmuls — the MXU-shaped pair).
+            for j in 0..n {
+                for i in 0..n {
+                    let mut accr = 0.0;
+                    let mut accs = 0.0;
+                    for l in 0..n {
+                        accr += d[i * n + l] * uk[j * n + l];
+                        accs += d[j * n + l] * uk[l * n + i];
+                    }
+                    wr[j * n + i] = accr;
+                    ws[j * n + i] = accs;
+                }
+            }
+            // t derivative from the register column u(i,j,:).
+            let dk = &d[k * n..(k + 1) * n];
+            for p in 0..nn {
+                let mut acc = 0.0;
+                for l in 0..n {
+                    acc += dk[l] * ue[l * nn + p];
+                }
+                wt[p] = acc;
+            }
+            // geometric factors, preloaded per layer
+            let gk = |m: usize| &ge[m * np + k * nn..m * np + (k + 1) * nn];
+            let (g11, g12, g13, g22, g23, g33) = (gk(0), gk(1), gk(2), gk(3), gk(4), gk(5));
+            for p in 0..nn {
+                ur[p] = g11[p] * wr[p] + g12[p] * ws[p] + g13[p] * wt[p];
+                us[p] = g12[p] * wr[p] + g22[p] * ws[p] + g23[p] * wt[p];
+                ut[p] = g13[p] * wr[p] + g23[p] * ws[p] + g33[p] * wt[p];
+            }
+            // stage 2, r/s parts land in layer k
+            for j in 0..n {
+                for i in 0..n {
+                    let mut acc = 0.0;
+                    for l in 0..n {
+                        acc += d[l * n + i] * ur[j * n + l];
+                        acc += d[l * n + j] * us[l * n + i];
+                    }
+                    we[k * nn + j * n + i] += acc;
+                }
+            }
+            // stage 2, t part scatters into all layers m with weight d[k,m]
+            // (the CUDA per-thread register accumulator rw[m]).
+            for m in 0..n {
+                let dkm = d[k * n + m];
+                if dkm != 0.0 {
+                    let wm = &mut we[m * nn..(m + 1) * nn];
+                    for p in 0..nn {
+                        wm[p] += dkm * ut[p];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::ax_naive;
+    use crate::proputil::{assert_allclose, Cases};
+
+    #[test]
+    fn matches_naive_on_paper_size() {
+        let mut c = Cases::new(42);
+        let (n, nelt) = (10, 3);
+        let np = n * n * n;
+        let u = c.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * np);
+        let mut want = vec![0.0; nelt * np];
+        ax_naive(n, nelt, &u, &d, &g, &mut want);
+        let mut got = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut got);
+        assert_allclose(&got, &want, 1e-11, 1e-11);
+    }
+
+    #[test]
+    fn overwrites_stale_output() {
+        let mut c = Cases::new(43);
+        let (n, nelt) = (4, 2);
+        let np = n * n * n;
+        let u = c.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * np);
+        let mut a = vec![123.0; nelt * np]; // poisoned
+        let mut b = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut a);
+        ax_layered(n, nelt, &u, &d, &g, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,175 @@
+//! CPU implementations of the local Poisson operator (paper Listing 1).
+//!
+//! These serve three roles:
+//! * the **CPU baseline** of the paper's Fig. 3 (Kebnekaise's 28-core node),
+//!   here `ax_threaded`;
+//! * the **oracle** the XLA artifacts are integration-tested against;
+//! * the **naive baseline** whose structure mirrors the original
+//!   global-memory GPU kernel (`ax_naive`).
+//!
+//! Layouts match the kernels: `u[e][k][j][i]`, `g[e][m][k][j][i]`,
+//! `d[i][j]` row-major (see `python/compile/kernels/ref.py`).
+
+mod naive;
+mod layered;
+mod threaded;
+
+pub use layered::ax_layered;
+pub use naive::ax_naive;
+pub use threaded::ax_threaded;
+
+/// Floating-point operations of one local-Ax application, counted exactly
+/// as the paper's Eq. (1) does for the tensor part: `12 n + 15` flops per
+/// grid point (6n mul-add in each contraction stage + 15 for the geometric
+/// factors), times `nelt * n^3` points.
+pub fn ax_flops(n: usize, nelt: usize) -> u64 {
+    let per_point = 12 * n as u64 + 15;
+    per_point * (nelt as u64) * (n as u64).pow(3)
+}
+
+/// Dispatchable CPU variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuVariant {
+    /// Listing-1 structure with full-size intermediates ("global memory").
+    Naive,
+    /// Layer-by-layer sweep, the paper's schedule on CPU.
+    Layered,
+    /// Layered, parallelized over elements with std threads.
+    Threaded,
+}
+
+impl CpuVariant {
+    /// Apply the variant. `w` must be `nelt * n^3` and is overwritten.
+    pub fn apply(
+        &self,
+        n: usize,
+        nelt: usize,
+        u: &[f64],
+        d: &[f64],
+        g: &[f64],
+        w: &mut [f64],
+    ) {
+        match self {
+            CpuVariant::Naive => ax_naive(n, nelt, u, d, g, w),
+            CpuVariant::Layered => ax_layered(n, nelt, u, d, g, w),
+            CpuVariant::Threaded => ax_threaded(n, nelt, u, d, g, w, 0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{assert_allclose, Cases};
+
+    /// Scalar, index-literal transcription of paper Listing 1 — slow and
+    /// obviously correct; the oracle for the optimized versions.
+    pub fn ax_listing1(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64]) -> Vec<f64> {
+        let np = n * n * n;
+        let uat = |e: usize, k: usize, j: usize, i: usize| u[((e * n + k) * n + j) * n + i];
+        let gat = |e: usize, m: usize, k: usize, j: usize, i: usize| {
+            g[(((e * 6 + m) * n + k) * n + j) * n + i]
+        };
+        let dat = |i: usize, l: usize| d[i * n + l];
+        let mut ur = vec![0.0; nelt * np];
+        let mut us = vec![0.0; nelt * np];
+        let mut ut = vec![0.0; nelt * np];
+        for e in 0..nelt {
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        let (mut wr, mut ws, mut wt) = (0.0, 0.0, 0.0);
+                        for l in 0..n {
+                            wr += dat(i, l) * uat(e, k, j, l);
+                            ws += dat(j, l) * uat(e, k, l, i);
+                            wt += dat(k, l) * uat(e, l, j, i);
+                        }
+                        let idx = ((e * n + k) * n + j) * n + i;
+                        ur[idx] = gat(e, 0, k, j, i) * wr + gat(e, 1, k, j, i) * ws
+                            + gat(e, 2, k, j, i) * wt;
+                        us[idx] = gat(e, 1, k, j, i) * wr + gat(e, 3, k, j, i) * ws
+                            + gat(e, 4, k, j, i) * wt;
+                        ut[idx] = gat(e, 2, k, j, i) * wr + gat(e, 4, k, j, i) * ws
+                            + gat(e, 5, k, j, i) * wt;
+                    }
+                }
+            }
+        }
+        let urat = |e: usize, k: usize, j: usize, i: usize| ur[((e * n + k) * n + j) * n + i];
+        let usat = |e: usize, k: usize, j: usize, i: usize| us[((e * n + k) * n + j) * n + i];
+        let utat = |e: usize, k: usize, j: usize, i: usize| ut[((e * n + k) * n + j) * n + i];
+        let mut w = vec![0.0; nelt * np];
+        for e in 0..nelt {
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        let mut acc = 0.0;
+                        for l in 0..n {
+                            // dxtm1(i,l) = d(l,i)
+                            acc += dat(l, i) * urat(e, k, j, l);
+                            acc += dat(l, j) * usat(e, k, l, i);
+                            acc += dat(l, k) * utat(e, l, j, i);
+                        }
+                        w[((e * n + k) * n + j) * n + i] = acc;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    fn random_inputs(c: &mut Cases, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let u = c.vec_normal(nelt * n * n * n);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * n * n * n);
+        (u, d, g)
+    }
+
+    #[test]
+    fn all_variants_match_listing1() {
+        crate::proputil::forall(0xAE, 12, |c| {
+            let n = c.size(2, 8);
+            let nelt = c.size(1, 4);
+            let (u, d, g) = random_inputs(c, n, nelt);
+            let want = ax_listing1(n, nelt, &u, &d, &g);
+            for variant in [CpuVariant::Naive, CpuVariant::Layered, CpuVariant::Threaded] {
+                let mut w = vec![0.0; nelt * n * n * n];
+                variant.apply(n, nelt, &u, &d, &g, &mut w);
+                assert_allclose(&w, &want, 1e-11, 1e-11);
+            }
+        });
+    }
+
+    #[test]
+    fn paper_configuration_n10() {
+        let mut c = Cases::new(0xBEEF);
+        let (n, nelt) = (10, 4);
+        let (u, d, g) = random_inputs(&mut c, n, nelt);
+        let want = ax_listing1(n, nelt, &u, &d, &g);
+        for variant in [CpuVariant::Naive, CpuVariant::Layered, CpuVariant::Threaded] {
+            let mut w = vec![0.0; nelt * n * n * n];
+            variant.apply(n, nelt, &u, &d, &g, &mut w);
+            assert_allclose(&w, &want, 1e-11, 1e-11);
+        }
+    }
+
+    #[test]
+    fn constant_field_maps_to_zero() {
+        let (n, nelt) = (6, 2);
+        let mut c = Cases::new(1);
+        let u = vec![1.0; nelt * n * n * n];
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * n * n * n);
+        for variant in [CpuVariant::Naive, CpuVariant::Layered, CpuVariant::Threaded] {
+            let mut w = vec![1.0; nelt * n * n * n];
+            variant.apply(n, nelt, &u, &d, &g, &mut w);
+            assert!(w.iter().all(|&x| x.abs() < 1e-9));
+        }
+    }
+
+    #[test]
+    fn flop_count_formula() {
+        assert_eq!(ax_flops(10, 1), (120 + 15) * 1000);
+        assert_eq!(ax_flops(2, 3), (24 + 15) * 3 * 8);
+    }
+}

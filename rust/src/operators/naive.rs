@@ -1,0 +1,102 @@
+//! Naive CPU Ax: a faithful transcription of paper Listing 1 with the three
+//! gradient intermediates materialized at full size — the structure of the
+//! *original* GPU implementation (global memory, poor temporal locality).
+//! Allocates per call, exactly like the original round-trips through DRAM.
+
+/// Local Poisson operator, Listing-1 structure.
+///
+/// `u`: `nelt*n^3`, `d`: `n^2` row-major, `g`: `nelt*6*n^3`;
+/// `w` (output): `nelt*n^3`, fully overwritten.
+pub fn ax_naive(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(w.len(), nelt * np);
+
+    // Full-size intermediates: the "global memory" round-trip.
+    let mut ur = vec![0.0; nelt * np];
+    let mut us = vec![0.0; nelt * np];
+    let mut ut = vec![0.0; nelt * np];
+
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        let ge = &g[e * 6 * np..(e + 1) * 6 * np];
+        for k in 0..n {
+            for j in 0..n {
+                for i in 0..n {
+                    let (mut wr, mut ws, mut wt) = (0.0, 0.0, 0.0);
+                    for l in 0..n {
+                        wr += d[i * n + l] * ue[(k * n + j) * n + l];
+                        ws += d[j * n + l] * ue[(k * n + l) * n + i];
+                        wt += d[k * n + l] * ue[(l * n + j) * n + i];
+                    }
+                    let p = (k * n + j) * n + i;
+                    let idx = e * np + p;
+                    ur[idx] = ge[p] * wr + ge[np + p] * ws + ge[2 * np + p] * wt;
+                    us[idx] = ge[np + p] * wr + ge[3 * np + p] * ws + ge[4 * np + p] * wt;
+                    ut[idx] = ge[2 * np + p] * wr + ge[4 * np + p] * ws + ge[5 * np + p] * wt;
+                }
+            }
+        }
+    }
+
+    for e in 0..nelt {
+        let ure = &ur[e * np..(e + 1) * np];
+        let use_ = &us[e * np..(e + 1) * np];
+        let ute = &ut[e * np..(e + 1) * np];
+        for k in 0..n {
+            for j in 0..n {
+                for i in 0..n {
+                    let mut acc = 0.0;
+                    for l in 0..n {
+                        // dxtm1(a, l) = d(l, a)
+                        acc += d[l * n + i] * ure[(k * n + j) * n + l];
+                        acc += d[l * n + j] * use_[(k * n + l) * n + i];
+                        acc += d[l * n + k] * ute[(l * n + j) * n + i];
+                    }
+                    w[e * np + (k * n + j) * n + i] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_element_smallest_n() {
+        // n = 2, nelt = 1: compare against hand-expanded contraction at one point.
+        let n = 2;
+        let d = crate::basis::derivative_matrix(n); // [[-0.5, 0.5], [-0.5, 0.5]]
+        let u: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let g = vec![1.0; 6 * 8]; // all factors 1
+        let mut w = vec![0.0; 8];
+        ax_naive(n, 1, &u, &d, &g, &mut w);
+        // wr(i,j,k) = sum_l d[i,l] u(l,j,k); u = i + 2j + 4k is linear with
+        // slope (per reference coordinate on [-1,1]) 1/2 along i, 1 along j,
+        // 2 along k: wr = 0.5, ws = 1, wt = 2. With all g = 1:
+        // ur = us = ut = 3.5.
+        // Stage 2: w = sum_l (d[l,i] + d[l,j] + d[l,k]) * 3.5; column sums
+        // of d for n=2 are [-1, 1].
+        let colsum = [-1.0, 1.0];
+        for k in 0..2 {
+            for j in 0..2 {
+                for i in 0..2 {
+                    let want = 3.5 * (colsum[i] + colsum[j] + colsum[k]);
+                    let got = w[(k * 2 + j) * 2 + i];
+                    assert!((got - want).abs() < 1e-12, "({i},{j},{k}): {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        let mut w = vec![0.0; 8];
+        ax_naive(2, 1, &[0.0; 7], &[0.0; 4], &[0.0; 48], &mut w);
+    }
+}

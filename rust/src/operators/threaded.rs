@@ -1,0 +1,90 @@
+//! Multi-threaded CPU Ax: the layered schedule parallelized over elements
+//! with scoped std threads — the analog of the paper's 28-core CPU baseline
+//! (Fig. 3, "one node with 28 cores and MPI for parallelization").
+
+use super::layered::ax_layered;
+
+/// Layered Ax over `nthreads` workers (`0` = one per available core).
+/// Elements are split into contiguous ranges; each worker owns a disjoint
+/// slice of `w`, so no synchronization is needed beyond the join.
+pub fn ax_threaded(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f64],
+    w: &mut [f64],
+    nthreads: usize,
+) {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(w.len(), nelt * np);
+    let nthreads = if nthreads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        nthreads
+    }
+    .min(nelt.max(1));
+
+    if nthreads <= 1 || nelt == 0 {
+        ax_layered(n, nelt, u, d, g, w);
+        return;
+    }
+
+    // Contiguous element ranges, remainder spread over the first workers.
+    let base = nelt / nthreads;
+    let rem = nelt % nthreads;
+    std::thread::scope(|scope| {
+        let mut w_rest = &mut w[..];
+        let mut start = 0usize;
+        for t in 0..nthreads {
+            let count = base + usize::from(t < rem);
+            let (w_mine, tail) = w_rest.split_at_mut(count * np);
+            w_rest = tail;
+            let u_mine = &u[start * np..(start + count) * np];
+            let g_mine = &g[start * 6 * np..(start + count) * 6 * np];
+            scope.spawn(move || {
+                ax_layered(n, count, u_mine, d, g_mine, w_mine);
+            });
+            start += count;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{assert_allclose, Cases};
+
+    #[test]
+    fn matches_layered_any_thread_count() {
+        let mut c = Cases::new(7);
+        let (n, nelt) = (5, 7); // odd counts exercise the remainder split
+        let np = n * n * n;
+        let u = c.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * np);
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        for nthreads in [1, 2, 3, 7, 16] {
+            let mut got = vec![0.0; nelt * np];
+            ax_threaded(n, nelt, &u, &d, &g, &mut got, nthreads);
+            assert_allclose(&got, &want, 0.0, 0.0); // bit-identical
+        }
+    }
+
+    #[test]
+    fn more_threads_than_elements() {
+        let mut c = Cases::new(8);
+        let (n, nelt) = (3, 2);
+        let np = n * n * n;
+        let u = c.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * np);
+        let mut a = vec![0.0; nelt * np];
+        let mut b = vec![0.0; nelt * np];
+        ax_threaded(n, nelt, &u, &d, &g, &mut a, 64);
+        ax_layered(n, nelt, &u, &d, &g, &mut b);
+        assert_eq!(a, b);
+    }
+}

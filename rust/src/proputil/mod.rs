@@ -1,0 +1,172 @@
+//! Property-testing helpers.
+//!
+//! The offline crate set has no `proptest`, so this module carries a small
+//! seeded-case generator with the same spirit: deterministic random inputs,
+//! many cases per invariant, and a failure report that includes the case
+//! seed so a failure reproduces exactly. No shrinking — our generators take
+//! explicit size parameters, so failing cases are already small.
+
+use crate::rng::Rng;
+
+/// Deterministic case generator for property tests.
+pub struct Cases {
+    rng: Rng,
+    case: usize,
+}
+
+impl Cases {
+    /// New generator from a test-level seed.
+    pub fn new(seed: u64) -> Self {
+        Cases { rng: Rng::new(seed), case: 0 }
+    }
+
+    /// Index of the current case (increment with [`Cases::next_case`]).
+    pub fn case(&self) -> usize {
+        self.case
+    }
+
+    /// Advance to the next case; returns its index for failure messages.
+    pub fn next_case(&mut self) -> usize {
+        self.case += 1;
+        self.case
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Standard-normal vector of length `len`.
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        self.rng.normal_vec(len)
+    }
+
+    /// Vector uniform in `[lo, hi)`.
+    pub fn vec_uniform(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    /// A random permutation of `0..len`.
+    pub fn permutation(&mut self, len: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..len).collect();
+        for i in (1..len).rev() {
+            let j = self.rng.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// A random surjective map `0..len -> 0..n_classes` (every class hit),
+    /// useful for gather–scatter id maps. Requires `len >= n_classes`.
+    pub fn surjection(&mut self, len: usize, n_classes: usize) -> Vec<usize> {
+        assert!(len >= n_classes);
+        let mut ids: Vec<usize> = (0..len)
+            .map(|i| if i < n_classes { i } else { self.rng.below(n_classes) })
+            .collect();
+        // Shuffle so the guaranteed-coverage prefix is not special.
+        for i in (1..len).rev() {
+            let j = self.rng.below(i + 1);
+            ids.swap(i, j);
+        }
+        ids
+    }
+}
+
+/// Run `cases` independent property cases; panics with the case index and
+/// seed on the first failure.
+pub fn forall<F: FnMut(&mut Cases)>(seed: u64, cases: usize, mut prop: F) {
+    let mut gen = Cases::new(seed);
+    for c in 0..cases {
+        gen.next_case();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut gen)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {}/{cases} (seed {seed:#x}): {msg}", c + 1);
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(got: &[f64], want: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {idx}: got {g}, want {w} (|diff| = {:.3e} > tol {:.3e})",
+            (g - w).abs(),
+            tol
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(1, 50, |c| {
+            let len = c.size(1, 16);
+            let v = c.vec_normal(len);
+            assert_eq!(v.len(), len);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_case() {
+        forall(2, 10, |c| {
+            assert!(c.case() < 5, "boom at case {}", c.case());
+        });
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut c = Cases::new(3);
+        for len in [1usize, 2, 7, 64] {
+            let p = c.permutation(len);
+            let mut seen = vec![false; len];
+            for &i in &p {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn surjection_covers() {
+        let mut c = Cases::new(4);
+        for _ in 0..20 {
+            let n = c.size(1, 10);
+            let len = n + c.size(0, 30);
+            let ids = c.surjection(len, n);
+            let mut seen = vec![false; n];
+            for &g in &ids {
+                assert!(g < n);
+                seen[g] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0, 2.0], &[1.0, 2.5], 1e-9, 1e-9)
+        });
+        assert!(r.is_err());
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, 1e-9);
+    }
+}

@@ -1,0 +1,173 @@
+//! Message passing between simulated ranks (the MPI substrate): std mpsc
+//! channels in a full mesh, with allreduce and pairwise exchange built on
+//! top. Every collective is tagged to keep lock-step iterations honest.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::error::{Error, Result};
+
+/// One message on the wire.
+#[derive(Debug)]
+pub struct Packet {
+    pub from: usize,
+    pub tag: u64,
+    pub data: Vec<f64>,
+}
+
+/// Per-rank communicator (full mesh of channels).
+pub struct Comm {
+    pub rank: usize,
+    pub size: usize,
+    txs: Vec<Sender<Packet>>,
+    rx: Receiver<Packet>,
+    /// Out-of-order packets parked until their (from, tag) is requested.
+    parked: Vec<Packet>,
+}
+
+impl Comm {
+    /// Build communicators for `size` ranks.
+    pub fn mesh(size: usize) -> Vec<Comm> {
+        let mut txs_all = Vec::with_capacity(size);
+        let mut rxs = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = channel();
+            txs_all.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Comm { rank, size, txs: txs_all.clone(), rx, parked: Vec::new() })
+            .collect()
+    }
+
+    /// Send `data` to `to` with a tag.
+    pub fn send(&self, to: usize, tag: u64, data: Vec<f64>) -> Result<()> {
+        self.txs[to]
+            .send(Packet { from: self.rank, tag, data })
+            .map_err(|_| Error::Rank(format!("rank {} -> {to}: channel closed", self.rank)))
+    }
+
+    /// Receive the packet with exact `(from, tag)`, parking others.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<f64>> {
+        if let Some(pos) = self.parked.iter().position(|p| p.from == from && p.tag == tag) {
+            return Ok(self.parked.swap_remove(pos).data);
+        }
+        loop {
+            let pkt = self
+                .rx
+                .recv()
+                .map_err(|_| Error::Rank(format!("rank {}: all senders closed", self.rank)))?;
+            if pkt.from == from && pkt.tag == tag {
+                return Ok(pkt.data);
+            }
+            self.parked.push(pkt);
+        }
+    }
+
+    /// Sum a scalar across all ranks (reduce to rank 0, broadcast back).
+    pub fn allreduce_sum(&mut self, value: f64, tag: u64) -> Result<f64> {
+        if self.size == 1 {
+            return Ok(value);
+        }
+        if self.rank == 0 {
+            let mut acc = value;
+            for from in 1..self.size {
+                acc += self.recv(from, tag)?[0];
+            }
+            for to in 1..self.size {
+                self.send(to, tag | TAG_BCAST, vec![acc])?;
+            }
+            Ok(acc)
+        } else {
+            self.send(0, tag, vec![value])?;
+            Ok(self.recv(0, tag | TAG_BCAST)?[0])
+        }
+    }
+
+    /// Pairwise exchange with `peer`: send `mine`, receive theirs.
+    pub fn sendrecv(&mut self, peer: usize, tag: u64, mine: Vec<f64>) -> Result<Vec<f64>> {
+        self.send(peer, tag, mine)?;
+        self.recv(peer, tag)
+    }
+}
+
+/// High bit marks broadcast legs of an allreduce.
+const TAG_BCAST: u64 = 1 << 63;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_sums() {
+        let comms = Comm::mesh(4);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let v = (c.rank + 1) as f64;
+                    c.allreduce_sum(v, 1).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 10.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_single_rank() {
+        let mut c = Comm::mesh(1).pop().unwrap();
+        assert_eq!(c.allreduce_sum(3.5, 9).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn sendrecv_pairs() {
+        let comms = Comm::mesh(2);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let peer = 1 - c.rank;
+                    let got = c.sendrecv(peer, 7, vec![c.rank as f64]).unwrap();
+                    (c.rank, got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            assert_eq!(got, vec![(1 - rank) as f64]);
+        }
+    }
+
+    #[test]
+    fn out_of_order_tags_are_parked() {
+        let mut comms = Comm::mesh(2);
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        // Rank 1 sends tag 2 then tag 1; rank 0 asks for tag 1 first.
+        c1.send(0, 2, vec![2.0]).unwrap();
+        c1.send(0, 1, vec![1.0]).unwrap();
+        assert_eq!(c0.recv(1, 1).unwrap(), vec![1.0]);
+        assert_eq!(c0.recv(1, 2).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn ordered_sequence_of_collectives() {
+        // Two back-to-back allreduces must not interfere.
+        let comms = Comm::mesh(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let a = c.allreduce_sum(1.0, 10).unwrap();
+                    let b = c.allreduce_sum(c.rank as f64, 11).unwrap();
+                    (a, b)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), (3.0, 3.0));
+        }
+    }
+}

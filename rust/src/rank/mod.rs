@@ -1,0 +1,341 @@
+//! Simulated multi-rank runtime: the MPI layer of Nekbone as threads +
+//! channels (experiment E8, strong scaling).
+//!
+//! The element grid is partitioned into contiguous **z slabs** (ranks own
+//! `ez/R` element layers each, remainder to the low ranks). Adjacent slabs
+//! share one plane of global points, so the distributed `dssum` is a local
+//! gather–scatter followed by one pairwise halo exchange per neighbor —
+//! exactly the communication structure of the real code, with
+//! `std::sync::mpsc` standing in for MPI.
+//!
+//! The per-rank compute uses the layered CPU operator (the paper's
+//! multi-GPU runs are out of scope; its CPU baseline is MPI-parallel, which
+//! this reproduces on one node).
+
+mod comm;
+
+pub use comm::{Comm, Packet};
+
+use std::time::Instant;
+
+use crate::basis::Basis;
+use crate::config::RunConfig;
+use crate::coordinator::RunReport;
+use crate::error::{Error, Result};
+use crate::geometry::GeomFactors;
+use crate::gs::GatherScatter;
+use crate::mesh::Mesh;
+use crate::metrics::CostModel;
+use crate::operators::ax_layered;
+use crate::solver::{add2s1, add2s2, glsc3, mask_apply};
+
+/// How one rank sees the mesh.
+struct RankSlab {
+    rank: usize,
+    /// Global element range [e0, e1).
+    e0: usize,
+    e1: usize,
+    /// Rank-local gather–scatter over the slab's own elements.
+    gs: GatherScatter,
+    /// Sorted global ids of the plane shared with the previous / next rank,
+    /// and for each, the rank-local dof indices holding copies.
+    lo_plane: Vec<(usize, Vec<usize>)>,
+    hi_plane: Vec<(usize, Vec<usize>)>,
+    /// Rank-local fields.
+    mask: Vec<f64>,
+    c: Vec<f64>,
+    f: Vec<f64>,
+    g: Vec<f64>,
+}
+
+/// Partition `ez` layers over `ranks`: contiguous, remainder to low ranks.
+fn slab_ranges(ez: usize, ranks: usize) -> Vec<(usize, usize)> {
+    let base = ez / ranks;
+    let rem = ez % ranks;
+    let mut out = Vec::with_capacity(ranks);
+    let mut z = 0;
+    for r in 0..ranks {
+        let h = base + usize::from(r < rem);
+        out.push((z, z + h));
+        z += h;
+    }
+    out
+}
+
+/// Build the per-rank slabs (global ids, shared planes, local fields).
+fn build_slabs(mesh: &Mesh, basis: &Basis, cfg: &RunConfig) -> Result<Vec<RankSlab>> {
+    let ranks = cfg.ranks;
+    if mesh.ez < ranks {
+        return Err(Error::Config(format!(
+            "ranks ({ranks}) exceed element layers ez ({}); pick nelt with more z layers",
+            mesh.ez
+        )));
+    }
+    let n = mesh.n;
+    let np = n * n * n;
+    let geom = GeomFactors::affine(mesh, basis);
+    let mask_full = mesh.boundary_mask();
+    let c_full = mesh.inv_multiplicity();
+    let mut rng = crate::rng::Rng::new(cfg.seed);
+    let mut f_full = rng.normal_vec(mesh.ndof_local());
+    // Make f dssum-consistent + masked globally (same as single-rank setup).
+    let mut gs_full = GatherScatter::new(mesh);
+    gs_full.dssum(&mut f_full);
+    mask_apply(&mut f_full, &mask_full);
+
+    let ezs = slab_ranges(mesh.ez, ranks);
+    let epl = mesh.ex * mesh.ey; // elements per z layer
+    let mut slabs = Vec::with_capacity(ranks);
+    for (rank, &(z0, z1)) in ezs.iter().enumerate() {
+        let e0 = z0 * epl;
+        let e1 = z1 * epl;
+        let nelt_local = e1 - e0;
+        // Localize global ids: dense renumbering over this slab.
+        let mut gids = Vec::with_capacity(nelt_local * np);
+        for e in e0..e1 {
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        gids.push(mesh.global_id(e, k, j, i));
+                    }
+                }
+            }
+        }
+        let mut sorted: Vec<usize> = gids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let local_of = |gid: usize| sorted.binary_search(&gid).unwrap();
+        let local_ids: Vec<usize> = gids.iter().map(|&g| local_of(g)).collect();
+        let gs = GatherScatter::from_ids(local_ids, sorted.len());
+
+        // Shared planes: global grid z = z0*(n-1) (with previous rank) and
+        // z = z1*(n-1) (with next rank).
+        let plane = |pz: usize| -> Vec<(usize, Vec<usize>)> {
+            let mut out: Vec<(usize, Vec<usize>)> = Vec::new();
+            for (l, &gid) in gids.iter().enumerate() {
+                let z = gid / (mesh.gx * mesh.gy);
+                if z == pz {
+                    match out.binary_search_by_key(&gid, |(g, _)| *g) {
+                        Ok(pos) => out[pos].1.push(l),
+                        Err(pos) => out.insert(pos, (gid, vec![l])),
+                    }
+                }
+            }
+            out
+        };
+        let lo_plane = if rank > 0 { plane(z0 * (n - 1)) } else { Vec::new() };
+        let hi_plane = if rank + 1 < ranks { plane(z1 * (n - 1)) } else { Vec::new() };
+
+        slabs.push(RankSlab {
+            rank,
+            e0,
+            e1,
+            gs,
+            lo_plane,
+            hi_plane,
+            mask: mask_full[e0 * np..e1 * np].to_vec(),
+            c: c_full[e0 * np..e1 * np].to_vec(),
+            f: f_full[e0 * np..e1 * np].to_vec(),
+            g: geom.g[e0 * 6 * np..e1 * 6 * np].to_vec(),
+        });
+    }
+    Ok(slabs)
+}
+
+/// Distributed dssum: rank-local gather–scatter + halo exchange with the
+/// slab neighbors.
+fn dssum_ranked(
+    slab: &mut RankSlab,
+    comm: &mut Comm,
+    v: &mut [f64],
+    tag: u64,
+) -> Result<()> {
+    slab.gs.dssum(v);
+    // Exchange partial sums on the shared planes. Both sides enumerate the
+    // plane in ascending-gid order, so the vectors align; the pair tag is
+    // derived from the plane's first global id, identical on both sides.
+    if !slab.lo_plane.is_empty() {
+        let pair_tag = tag | ((slab.lo_plane[0].0 as u64 + 1) << 16);
+        let mine: Vec<f64> = slab.lo_plane.iter().map(|(_, ls)| v[ls[0]]).collect();
+        let theirs = comm.sendrecv(slab.rank - 1, pair_tag, mine)?;
+        for ((_, ls), t) in slab.lo_plane.iter().zip(&theirs) {
+            let total = v[ls[0]] + t;
+            for &l in ls {
+                v[l] = total;
+            }
+        }
+    }
+    if !slab.hi_plane.is_empty() {
+        let pair_tag = tag | ((slab.hi_plane[0].0 as u64 + 1) << 16);
+        let mine: Vec<f64> = slab.hi_plane.iter().map(|(_, ls)| v[ls[0]]).collect();
+        let theirs = comm.sendrecv(slab.rank + 1, pair_tag, mine)?;
+        for ((_, ls), t) in slab.hi_plane.iter().zip(&theirs) {
+            let total = v[ls[0]] + t;
+            for &l in ls {
+                v[l] = total;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// SPMD CG over the slabs. Mirrors `solver::cg_solve` with allreduce in
+/// place of plain sums and `dssum_ranked` in place of serial dssum.
+fn rank_main(
+    mut slab: RankSlab,
+    mut comm: Comm,
+    n: usize,
+    niter: usize,
+    no_comm: bool,
+) -> Result<(f64, f64)> {
+    let np = n * n * n;
+    let nelt_local = slab.e1 - slab.e0;
+    let ndof = nelt_local * np;
+    let d = crate::basis::derivative_matrix(n);
+
+    let mut x = vec![0.0; ndof];
+    let mut r = slab.f.clone();
+    mask_apply(&mut r, &slab.mask);
+    let mut p = vec![0.0; ndof];
+    let mut w = vec![0.0; ndof];
+    let mut rtz1 = 1.0f64;
+    let mut ax_seconds = 0.0;
+
+    for iter in 0..niter {
+        // Tag layout: bits 3.. = iteration, bits 0..3 = collective id,
+        // bits 16.. reserved for the halo pair id (see dssum_ranked).
+        let tag_base = (iter as u64 + 1) << 3;
+        debug_assert!(tag_base < 1 << 16, "iteration count overflows tag space");
+        let rtz2 = rtz1;
+        rtz1 = comm.allreduce_sum(glsc3(&r, &slab.c, &r), tag_base)?;
+        let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
+        add2s1(&mut p, &r, beta);
+
+        let t0 = Instant::now();
+        ax_layered(n, nelt_local, &p, &d, &slab.g, &mut w);
+        ax_seconds += t0.elapsed().as_secs_f64();
+        if !no_comm {
+            dssum_ranked(&mut slab, &mut comm, &mut w, tag_base | 1)?;
+        }
+        mask_apply(&mut w, &slab.mask);
+
+        let pap = comm.allreduce_sum(glsc3(&w, &slab.c, &p), tag_base | 2)?;
+        if pap <= 0.0 || !pap.is_finite() {
+            return Err(Error::Numerical(format!(
+                "ranked CG breakdown at iter {iter} on rank {}: pap = {pap}",
+                slab.rank
+            )));
+        }
+        let alpha = rtz1 / pap;
+        add2s2(&mut x, &p, alpha);
+        add2s2(&mut r, &w, -alpha);
+    }
+    let rr = comm.allreduce_sum(glsc3(&r, &slab.c, &r), u64::MAX >> 1)?;
+    Ok((rr.max(0.0).sqrt(), ax_seconds))
+}
+
+/// Run Nekbone across `cfg.ranks` simulated ranks; returns the report (the
+/// global residual, wall time of the slowest rank path).
+pub fn run_ranked(cfg: &RunConfig) -> Result<RunReport> {
+    cfg.validate()?;
+    let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
+    let basis = Basis::new(cfg.n);
+    let slabs = build_slabs(&mesh, &basis, cfg)?;
+    let comms = Comm::mesh(cfg.ranks);
+    let n = cfg.n;
+    let niter = cfg.niter;
+    let no_comm = cfg.no_comm;
+
+    let sw = Instant::now();
+    let mut results = Vec::with_capacity(cfg.ranks);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = slabs
+            .into_iter()
+            .zip(comms)
+            .map(|(slab, comm)| scope.spawn(move || rank_main(slab, comm, n, niter, no_comm)))
+            .collect();
+        for h in handles {
+            results.push(h.join().map_err(|_| Error::Rank("rank thread panicked".into())));
+        }
+    });
+    let seconds = sw.elapsed().as_secs_f64();
+
+    let mut final_residual = 0.0;
+    let mut ax_seconds: f64 = 0.0;
+    for res in results {
+        let (rnorm, ax_s) = res??;
+        final_residual = rnorm; // identical on all ranks (allreduced)
+        ax_seconds = ax_seconds.max(ax_s);
+    }
+    let cm = CostModel::new(cfg.n, cfg.nelt);
+    Ok(RunReport {
+        backend: format!("ranked-cpu-layered-r{}", cfg.ranks),
+        nelt: cfg.nelt,
+        n: cfg.n,
+        iterations: niter,
+        final_residual,
+        seconds,
+        ax_seconds,
+        flops: cm.flops_per_iter() * niter as u64,
+        rnorms: vec![],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Nekbone};
+
+    #[test]
+    fn slab_ranges_cover() {
+        for (ez, ranks) in [(8, 3), (4, 4), (7, 2), (16, 5)] {
+            let rs = slab_ranges(ez, ranks);
+            assert_eq!(rs.len(), ranks);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs.last().unwrap().1, ez);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].1 > w[0].0);
+            }
+        }
+    }
+
+    #[test]
+    fn ranked_matches_serial_residual() {
+        // The distributed CG must track the serial one to round-off.
+        let base = RunConfig { nelt: 8, n: 4, niter: 25, ..Default::default() };
+        let mut serial = Nekbone::new(base.clone(), Backend::CpuLayered).unwrap();
+        let want = serial.run().unwrap();
+        for ranks in [1, 2] {
+            let cfg = RunConfig { ranks, ..base.clone() };
+            let got = run_ranked(&cfg).unwrap();
+            let denom = want.final_residual.abs().max(1e-30);
+            assert!(
+                (got.final_residual - want.final_residual).abs() / denom < 1e-6,
+                "ranks={ranks}: {} vs {}",
+                got.final_residual,
+                want.final_residual
+            );
+        }
+    }
+
+    #[test]
+    fn ranked_more_ranks_same_answer() {
+        let base = RunConfig { nelt: 64, n: 3, niter: 15, ..Default::default() };
+        let r1 = run_ranked(&RunConfig { ranks: 1, ..base.clone() }).unwrap();
+        let r4 = run_ranked(&RunConfig { ranks: 4, ..base.clone() }).unwrap();
+        let denom = r1.final_residual.abs().max(1e-30);
+        assert!(
+            (r1.final_residual - r4.final_residual).abs() / denom < 1e-6,
+            "{} vs {}",
+            r1.final_residual,
+            r4.final_residual
+        );
+    }
+
+    #[test]
+    fn too_many_ranks_rejected() {
+        let cfg = RunConfig { nelt: 8, n: 3, ranks: 5, ..Default::default() };
+        assert!(run_ranked(&cfg).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Measured roofline (paper section V / Fig. 4).
+//!
+//! The paper measures achievable bandwidth by replacing every load and
+//! store of a CG iteration with a `cudaMemcpy` of the same bytes — "exactly
+//! double the amount of data movement necessary" — and derives the roofline
+//! `P = I(n) * BW(size)`. We do the same with `memcpy` over buffers sized to
+//! the problem: 24 D reads + 6 D writes per iteration, copied (each copy is
+//! a read + a write, hence the paper's doubling).
+
+use crate::metrics::{CostModel, Measurement};
+use crate::metrics::Stopwatch;
+
+/// One point of the measured-bandwidth curve.
+#[derive(Clone, Copy, Debug)]
+pub struct BandwidthPoint {
+    /// Local degrees of freedom of the problem this emulates.
+    pub dof: usize,
+    /// Sustained copy bandwidth in GB/s, counting bytes-read + bytes-written.
+    pub bandwidth_gbs: f64,
+}
+
+/// Measure sustained copy bandwidth for the data volume of one CG iteration
+/// over `dof` degrees of freedom (24 reads + 6 writes per dof), repeated
+/// `iters` times — the `cudaMemcpy` methodology of the paper on the CPU
+/// substrate.
+pub fn measure_bandwidth(dof: usize, iters: usize) -> BandwidthPoint {
+    // One iteration moves 30 dof values; a memcpy of L values moves 2 L
+    // (read + write), so copy 15 dof values per emulated iteration.
+    let copy_len = (15 * dof).max(1);
+    let src = vec![1.0f64; copy_len];
+    let mut dst = vec![0.0f64; copy_len];
+
+    // Warmup: fault pages in and warm whatever cache level fits.
+    dst.copy_from_slice(&src);
+
+    let sw = Stopwatch::start();
+    for _ in 0..iters.max(1) {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&mut dst);
+    }
+    let secs = sw.elapsed_s();
+    let bytes = (2 * copy_len * 8 * iters.max(1)) as u64;
+    BandwidthPoint { dof, bandwidth_gbs: bytes as f64 / secs / 1e9 }
+}
+
+/// The measured roofline for a problem size: achievable GFlop/s given the
+/// measured bandwidth and the paper's intensity (Eq. 2).
+pub fn roofline_for(n: usize, nelt: usize, iters: usize) -> (BandwidthPoint, f64) {
+    let cm = CostModel::new(n, nelt);
+    let bw = measure_bandwidth(cm.dof, iters);
+    (bw, cm.roofline_gflops(bw.bandwidth_gbs))
+}
+
+/// Measured *compute* ceiling: the Ax kernel on a cache-resident problem
+/// (nothing leaves L2), in GFlop/s of the paper's per-iteration flop model.
+///
+/// On the paper's GPUs the memory roof binds (f64 peak ≫ I·BW); on a
+/// single CPU core the balance inverts — the scalar/SIMD f64 pipeline is
+/// the binding roof — so Fig. 4's fraction must be taken against
+/// `min(memory roof, compute ceiling)`. See EXPERIMENTS.md E3.
+pub fn measure_compute_ceiling(n: usize, reps: usize) -> f64 {
+    let nelt = 2; // ~110 KB working set at n = 10: L2-resident
+    let np = n * n * n;
+    let d = crate::basis::derivative_matrix(n);
+    let mut rng = crate::rng::Rng::new(0xA0);
+    let u = rng.normal_vec(nelt * np);
+    let g = rng.normal_vec(nelt * 6 * np);
+    let mut w = vec![0.0; nelt * np];
+    // Warm.
+    crate::operators::ax_layered(n, nelt, &u, &d, &g, &mut w);
+    let sw = Stopwatch::start();
+    for _ in 0..reps.max(1) {
+        crate::operators::ax_layered(n, nelt, &u, &d, &g, &mut w);
+        std::hint::black_box(&mut w);
+    }
+    let secs = sw.elapsed_s();
+    let flops = crate::operators::ax_flops(n, nelt) * reps.max(1) as u64;
+    flops as f64 / secs / 1e9
+}
+
+/// Fraction of the measured roofline a measurement achieved.
+pub fn roofline_fraction(measured: &Measurement, roofline_gflops: f64) -> f64 {
+    measured.gflops() / roofline_gflops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_positive_and_sane() {
+        let bp = measure_bandwidth(64 * 1000, 3);
+        assert!(bp.bandwidth_gbs > 0.1, "bw {}", bp.bandwidth_gbs);
+        assert!(bp.bandwidth_gbs < 10_000.0, "bw {}", bp.bandwidth_gbs);
+    }
+
+    #[test]
+    fn roofline_scales_with_intensity() {
+        // Same bandwidth, higher degree => higher roofline.
+        let cm8 = CostModel::new(8, 64);
+        let cm12 = CostModel::new(12, 64);
+        assert!(cm12.roofline_gflops(100.0) > cm8.roofline_gflops(100.0));
+    }
+
+    #[test]
+    fn fraction_math() {
+        let m = Measurement { seconds: 1.0, flops: 50_000_000_000, bytes: 0 };
+        assert!((roofline_fraction(&m, 100.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_dof_does_not_panic() {
+        let bp = measure_bandwidth(0, 1);
+        assert!(bp.bandwidth_gbs >= 0.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! The artifact manifest: what `python -m compile.aot` produced and how to
+//! call it.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json;
+
+/// Kind of computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Local Poisson operator `(u, d, g) -> (w,)`.
+    Ax,
+    /// Chunk-sized vector op.
+    Vector,
+    /// Fused Ax + partial pap.
+    CgIter,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ax" => Ok(ArtifactKind::Ax),
+            "vector" => Ok(ArtifactKind::Vector),
+            "cg_iter" => Ok(ArtifactKind::CgIter),
+            other => Err(Error::Artifact(format!("unknown artifact kind {other:?}"))),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Kernel variant ("layered", "shared", ...) or vector-op name.
+    pub variant: String,
+    /// GLL points per dimension.
+    pub n: usize,
+    /// Elements per launch.
+    pub chunk: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Expected argument shapes (outermost first), for call validation.
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Whether the HLO root is a tuple (multi-output) or a bare array
+    /// (single-output — downloadable with a raw copy, no Literal).
+    pub tupled: bool,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &json::Value) -> Result<Self> {
+        let field = |k: &str| {
+            v.get(k).ok_or_else(|| Error::Artifact(format!("manifest entry missing {k:?}")))
+        };
+        let name = field("name")?
+            .as_str()
+            .ok_or_else(|| Error::Artifact("name not a string".into()))?
+            .to_string();
+        let kind = ArtifactKind::parse(
+            field("kind")?.as_str().ok_or_else(|| Error::Artifact("kind not a string".into()))?,
+        )?;
+        let variant = field("variant")?
+            .as_str()
+            .ok_or_else(|| Error::Artifact("variant not a string".into()))?
+            .to_string();
+        let n = field("n")?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact("n not an integer".into()))?;
+        let chunk = field("chunk")?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact("chunk not an integer".into()))?;
+        let file = field("file")?
+            .as_str()
+            .ok_or_else(|| Error::Artifact("file not a string".into()))?
+            .to_string();
+        let arg_shapes = field("arg_shapes")?
+            .as_array()
+            .ok_or_else(|| Error::Artifact("arg_shapes not an array".into()))?
+            .iter()
+            .map(|shape| {
+                shape
+                    .as_array()
+                    .ok_or_else(|| Error::Artifact("arg shape not an array".into()))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize().ok_or_else(|| Error::Artifact("dim not an integer".into()))
+                    })
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Older manifests (before the raw-download optimization) lowered
+        // everything with a tuple root.
+        let tupled = match v.get("tupled") {
+            Some(json::Value::Bool(b)) => *b,
+            _ => true,
+        };
+        Ok(ArtifactMeta { name, kind, variant, n, chunk, file, arg_shapes, tupled })
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let artifacts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .ok_or_else(|| Error::Artifact("manifest has no artifacts array".into()))?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Entry by exact name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named {name:?} in manifest")))
+    }
+
+    /// The Ax artifact for `(variant, n, chunk)` if present.
+    pub fn find_ax(&self, variant: &str, n: usize, chunk: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == ArtifactKind::Ax && a.variant == variant && a.n == n && a.chunk == chunk
+            })
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no ax artifact for variant={variant} n={n} chunk={chunk}; \
+                     run `make artifacts` (available: {})",
+                    self.summary()
+                ))
+            })
+    }
+
+    /// Chunk sizes available for an Ax variant at degree `n`, ascending.
+    pub fn ax_chunks(&self, variant: &str, n: usize) -> Vec<usize> {
+        let mut chunks: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Ax && a.variant == variant && a.n == n)
+            .map(|a| a.chunk)
+            .collect();
+        chunks.sort_unstable();
+        chunks
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    fn summary(&self) -> String {
+        self.artifacts
+            .iter()
+            .map(|a| a.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {"name": "ax_layered_n10_e64", "kind": "ax", "variant": "layered",
+         "n": 10, "chunk": 64, "dtype": "float64",
+         "file": "ax_layered_n10_e64.hlo.txt", "num_args": 3,
+         "arg_shapes": [[64,10,10,10],[10,10],[64,6,10,10,10]]},
+        {"name": "ax_layered_n10_e256", "kind": "ax", "variant": "layered",
+         "n": 10, "chunk": 256, "dtype": "float64",
+         "file": "ax_layered_n10_e256.hlo.txt", "num_args": 3,
+         "arg_shapes": [[256,10,10,10],[10,10],[256,6,10,10,10]]},
+        {"name": "glsc3_s64000", "kind": "vector", "variant": "glsc3",
+         "n": 10, "chunk": 64, "dtype": "float64",
+         "file": "glsc3_s64000.hlo.txt", "num_args": 3,
+         "arg_shapes": [[64000],[64000],[64000]]}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(DOC, PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = manifest();
+        assert_eq!(m.artifacts.len(), 3);
+        let ax = m.find("ax_layered_n10_e64").unwrap();
+        assert_eq!(ax.kind, ArtifactKind::Ax);
+        assert_eq!(ax.arg_shapes[2], vec![64, 6, 10, 10, 10]);
+    }
+
+    #[test]
+    fn find_ax_by_config() {
+        let m = manifest();
+        assert!(m.find_ax("layered", 10, 64).is_ok());
+        assert!(m.find_ax("layered", 10, 128).is_err());
+        assert!(m.find_ax("shared", 10, 64).is_err());
+    }
+
+    #[test]
+    fn chunks_sorted() {
+        let m = manifest();
+        assert_eq!(m.ax_chunks("layered", 10), vec![64, 256]);
+        assert!(m.ax_chunks("layered", 12).is_empty());
+    }
+
+    #[test]
+    fn path_joins_dir() {
+        let m = manifest();
+        let ax = m.find("ax_layered_n10_e64").unwrap();
+        assert_eq!(
+            m.path_of(ax),
+            PathBuf::from("/tmp/artifacts/ax_layered_n10_e64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let bad = r#"{"artifacts": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must load.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.find_ax("layered", 10, 64).is_ok());
+            assert!(m.find_ax("shared", 10, 64).is_ok());
+            assert!(m.find_ax("original", 10, 64).is_ok());
+            assert!(m.find_ax("jnp", 10, 64).is_ok());
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! them from the Layer-3 hot path.
+//!
+//! Pattern (see `/opt/xla-example/load_hlo`): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute_b` over persistent device buffers.
+//!
+//! Buffer discipline on the hot path:
+//! * the differentiation matrix `d` and the geometric factors `g` never
+//!   change during a solve — they are uploaded **once** per engine and the
+//!   per-iteration call uploads only `u` (this is the GPU residency the
+//!   paper gets from keeping data on-device between OpenACC and CUDA);
+//! * the output tuple is copied back into a caller-provided slice; no
+//!   allocation happens per call except inside PJRT itself.
+
+mod manifest;
+
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+
+use crate::error::{Error, Result};
+
+/// A live PJRT CPU client plus the parsed manifest.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Connect to the CPU PJRT client and load `<dir>/manifest.json`.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact into a loaded executable.
+    pub fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.path_of(meta);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Upload an f64 host slice as a device buffer.
+    pub fn upload(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Copy a single-array output back to `dst`.
+///
+/// `tupled` selects the slow path (materialize the Literal, decompose the
+/// 1-tuple — an extra allocation + copy) for legacy tuple-rooted
+/// artifacts; array-rooted artifacts copy straight out of the output
+/// Literal. (The TFRT CPU client does not implement `CopyRawToHost`, so a
+/// Literal materialization is unavoidable; see EXPERIMENTS.md §Perf L3.)
+fn output_to_slice(buf: &xla::PjRtBuffer, dst: &mut [f64], tupled: bool) -> Result<()> {
+    if tupled {
+        let lit = buf.to_literal_sync()?.to_tuple1()?;
+        lit.copy_raw_to(dst)?;
+    } else {
+        let lit = buf.to_literal_sync()?;
+        lit.copy_raw_to(dst)?;
+    }
+    Ok(())
+}
+
+/// An Ax executable bound to a fixed `(variant, n, chunk)` with `d` and `g`
+/// resident on the device.
+pub struct AxEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// GLL points per dimension.
+    pub n: usize,
+    /// Elements per launch.
+    pub chunk: usize,
+    /// Artifact name (diagnostics).
+    pub name: String,
+    d_buf: xla::PjRtBuffer,
+    /// One resident g buffer per chunk of the mesh (last one zero-padded).
+    g_bufs: Vec<xla::PjRtBuffer>,
+    /// Real (unpadded) element count.
+    nelt: usize,
+    /// Scratch for padding the final partial chunk of `u`.
+    u_pad: Vec<f64>,
+    /// Tuple-rooted output? (legacy manifests; new Ax artifacts are bare).
+    tupled: bool,
+}
+
+impl AxEngine {
+    /// Build an engine: compile the artifact and upload `d` and the full
+    /// mesh `g` (length `nelt * 6 * n^3`), zero-padding the last chunk.
+    /// Zero geometric factors make padded elements inert (w = 0), which the
+    /// chunker property tests rely on.
+    pub fn new(
+        rt: &XlaRuntime,
+        variant: &str,
+        n: usize,
+        chunk: usize,
+        nelt: usize,
+        d: &[f64],
+        g: &[f64],
+    ) -> Result<Self> {
+        let meta = rt.manifest().find_ax(variant, n, chunk)?.clone();
+        let np = n * n * n;
+        if d.len() != n * n {
+            return Err(Error::Config("AxEngine: d must be n*n".into()));
+        }
+        if g.len() != nelt * 6 * np {
+            return Err(Error::Config("AxEngine: g must be nelt*6*n^3".into()));
+        }
+        let exe = rt.compile(&meta)?;
+        let d_buf = rt.upload(d, &[n, n])?;
+        let nchunks = nelt.div_ceil(chunk);
+        let mut g_bufs = Vec::with_capacity(nchunks);
+        let g_chunk_len = chunk * 6 * np;
+        let mut g_scratch = vec![0.0f64; g_chunk_len];
+        for ci in 0..nchunks {
+            let e0 = ci * chunk;
+            let real = (nelt - e0).min(chunk);
+            g_scratch.fill(0.0);
+            g_scratch[..real * 6 * np].copy_from_slice(&g[e0 * 6 * np..(e0 + real) * 6 * np]);
+            g_bufs.push(rt.upload(&g_scratch, &[chunk, 6, n, n, n])?);
+        }
+        Ok(AxEngine {
+            exe,
+            n,
+            chunk,
+            name: meta.name,
+            d_buf,
+            g_bufs,
+            nelt,
+            u_pad: vec![0.0; chunk * np],
+            tupled: meta.tupled,
+        })
+    }
+
+    /// Number of launches per operator application.
+    pub fn nchunks(&self) -> usize {
+        self.g_bufs.len()
+    }
+
+    /// Apply the local operator to the full mesh field `u` (`nelt * n^3`),
+    /// writing `w` (same length). Loops over resident-g chunks.
+    pub fn apply(&mut self, rt: &XlaRuntime, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let np = self.n * self.n * self.n;
+        if u.len() != self.nelt * np || w.len() != self.nelt * np {
+            return Err(Error::Config("AxEngine::apply: field length mismatch".into()));
+        }
+        for ci in 0..self.g_bufs.len() {
+            let e0 = ci * self.chunk;
+            let real = (self.nelt - e0).min(self.chunk);
+            let u_slice = &u[e0 * np..(e0 + real) * np];
+            let u_buf = if real == self.chunk {
+                rt.upload(u_slice, &[self.chunk, self.n, self.n, self.n])?
+            } else {
+                self.u_pad.fill(0.0);
+                self.u_pad[..real * np].copy_from_slice(u_slice);
+                rt.upload(&self.u_pad, &[self.chunk, self.n, self.n, self.n])?
+            };
+            let outputs = self.exe.execute_b(&[&u_buf, &self.d_buf, &self.g_bufs[ci]])?;
+            let out = &outputs[0][0];
+            if real == self.chunk {
+                output_to_slice(out, &mut w[e0 * np..(e0 + real) * np], self.tupled)?;
+            } else {
+                let mut full = vec![0.0; self.chunk * np];
+                output_to_slice(out, &mut full, self.tupled)?;
+                w[e0 * np..(e0 + real) * np].copy_from_slice(&full[..real * np]);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A chunk-sized vector-op executable (the "OpenACC path" ablation, E6).
+pub struct VectorEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// Flat vector length per launch.
+    pub size: usize,
+    /// Op name ("glsc3", "add2s1", "add2s2").
+    pub op: String,
+    /// Tuple-rooted output? (legacy manifests).
+    tupled: bool,
+}
+
+impl VectorEngine {
+    pub fn new(rt: &XlaRuntime, op: &str, size: usize) -> Result<Self> {
+        let name = format!("{op}_s{size}");
+        let meta = rt.manifest().find(&name)?.clone();
+        Ok(VectorEngine { exe: rt.compile(&meta)?, size, op: op.to_string(), tupled: meta.tupled })
+    }
+
+    /// Weighted inner product over one chunk (returns the partial sum).
+    pub fn glsc3(&self, rt: &XlaRuntime, a: &[f64], b: &[f64], c: &[f64]) -> Result<f64> {
+        let ab = rt.upload(a, &[self.size])?;
+        let bb = rt.upload(b, &[self.size])?;
+        let cb = rt.upload(c, &[self.size])?;
+        let outputs = self.exe.execute_b(&[&ab, &bb, &cb])?;
+        let mut out = [0.0f64; 1];
+        output_to_slice(&outputs[0][0], &mut out, self.tupled)?;
+        Ok(out[0])
+    }
+
+    /// `a <- c1 * a + b` (add2s1 engine) or `a <- a + c2 * b` (add2s2
+    /// engine) over one chunk, writing back into `a`.
+    pub fn axpy(&self, rt: &XlaRuntime, a: &mut [f64], b: &[f64], scalar: f64) -> Result<()> {
+        let ab = rt.upload(a, &[self.size])?;
+        let bb = rt.upload(b, &[self.size])?;
+        let sb = rt.upload(&[scalar], &[1])?;
+        let outputs = self.exe.execute_b(&[&ab, &bb, &sb])?;
+        output_to_slice(&outputs[0][0], a, self.tupled)?;
+        Ok(())
+    }
+}
+
+/// The fused Ax + partial-pap executable (perf pass).
+pub struct CgIterEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub chunk: usize,
+    d_buf: xla::PjRtBuffer,
+    g_bufs: Vec<xla::PjRtBuffer>,
+    c_bufs: Vec<xla::PjRtBuffer>,
+    nelt: usize,
+}
+
+impl CgIterEngine {
+    /// Compile and bind `d`, `g`, and the weight field `c` (all resident).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rt: &XlaRuntime,
+        variant: &str,
+        n: usize,
+        chunk: usize,
+        nelt: usize,
+        d: &[f64],
+        g: &[f64],
+        c: &[f64],
+    ) -> Result<Self> {
+        let name = format!("cg_iter_{variant}_n{n}_e{chunk}");
+        let meta = rt.manifest().find(&name)?.clone();
+        let np = n * n * n;
+        let exe = rt.compile(&meta)?;
+        let d_buf = rt.upload(d, &[n, n])?;
+        let nchunks = nelt.div_ceil(chunk);
+        let mut g_bufs = Vec::with_capacity(nchunks);
+        let mut c_bufs = Vec::with_capacity(nchunks);
+        let mut g_scratch = vec![0.0f64; chunk * 6 * np];
+        let mut c_scratch = vec![0.0f64; chunk * np];
+        for ci in 0..nchunks {
+            let e0 = ci * chunk;
+            let real = (nelt - e0).min(chunk);
+            g_scratch.fill(0.0);
+            g_scratch[..real * 6 * np].copy_from_slice(&g[e0 * 6 * np..(e0 + real) * 6 * np]);
+            g_bufs.push(rt.upload(&g_scratch, &[chunk, 6, n, n, n])?);
+            c_scratch.fill(0.0);
+            c_scratch[..real * np].copy_from_slice(&c[e0 * np..(e0 + real) * np]);
+            c_bufs.push(rt.upload(&c_scratch, &[chunk, n, n, n])?);
+        }
+        Ok(CgIterEngine { exe, n, chunk, d_buf, g_bufs, c_bufs, nelt })
+    }
+
+    /// `w = Ax(p)` plus the global partial `pap = sum w c p` in one pass.
+    pub fn apply(&self, rt: &XlaRuntime, p: &[f64], w: &mut [f64]) -> Result<f64> {
+        let np = self.n * self.n * self.n;
+        if p.len() != self.nelt * np || w.len() != self.nelt * np {
+            return Err(Error::Config("CgIterEngine::apply: length mismatch".into()));
+        }
+        let mut pap = 0.0;
+        let mut pad = vec![0.0f64; self.chunk * np];
+        for ci in 0..self.g_bufs.len() {
+            let e0 = ci * self.chunk;
+            let real = (self.nelt - e0).min(self.chunk);
+            let p_slice = &p[e0 * np..(e0 + real) * np];
+            let p_buf = if real == self.chunk {
+                rt.upload(p_slice, &[self.chunk, self.n, self.n, self.n])?
+            } else {
+                pad.fill(0.0);
+                pad[..real * np].copy_from_slice(p_slice);
+                rt.upload(&pad, &[self.chunk, self.n, self.n, self.n])?
+            };
+            let outputs =
+                self.exe.execute_b(&[&p_buf, &self.d_buf, &self.g_bufs[ci], &self.c_bufs[ci]])?;
+            let lit = outputs[0][0].to_literal_sync()?;
+            let (w_lit, pap_lit) = lit.to_tuple2()?;
+            if real == self.chunk {
+                w_lit.copy_raw_to(&mut w[e0 * np..(e0 + real) * np])?;
+            } else {
+                let mut full = vec![0.0; self.chunk * np];
+                w_lit.copy_raw_to(&mut full)?;
+                w[e0 * np..(e0 + real) * np].copy_from_slice(&full[..real * np]);
+            }
+            let mut part = [0.0f64; 1];
+            pap_lit.copy_raw_to(&mut part)?;
+            pap += part[0];
+        }
+        Ok(pap)
+    }
+}

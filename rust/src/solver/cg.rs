@@ -1,0 +1,347 @@
+//! Unpreconditioned conjugate gradient, structured exactly like Nekbone's
+//! `cg.f` (the paper runs 100 iterations, no preconditioner).
+//!
+//! Per iteration (DESIGN.md section 7):
+//!
+//! ```text
+//! z = r                                   (solveM with M = I)
+//! rtz2 = rtz1;  rtz1 = glsc3(r, c, z)
+//! beta = rtz1 / rtz2   (0 on the first iteration)
+//! p = z + beta p                          (add2s1)
+//! w = mask(dssum(A_local p))              (the Ax of the paper)
+//! pap = glsc3(w, c, p)
+//! alpha = rtz1 / pap
+//! x = x + alpha p                         (add2s2)
+//! r = r - alpha w                         (add2s2)
+//! ```
+//!
+//! The weighted inner products use `c` = inverse multiplicity so every
+//! global dof counts once despite local duplication.
+
+use crate::error::{Error, Result};
+use crate::gs::GatherScatter;
+use crate::solver::vector::{add2s1, add2s2, copy, glsc3, mask_apply, rzero};
+
+/// The local Ax hook: `w <- A_local(p)` (no dssum, no mask — the solver
+/// applies those). Implementations: CPU operators, the PJRT runtime, or the
+/// rank-distributed pipeline.
+pub trait AxApply {
+    fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()>;
+}
+
+impl<F> AxApply for F
+where
+    F: FnMut(&[f64], &mut [f64]) -> Result<()>,
+{
+    fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
+        self(p, w)
+    }
+}
+
+/// Solver options.
+#[derive(Clone, Debug)]
+pub struct CgOptions {
+    /// Fixed iteration count (the paper runs exactly 100; Nekbone does not
+    /// early-exit either).
+    pub niter: usize,
+    /// Optional residual tolerance for early exit (‖r‖_c); `None` mirrors
+    /// Nekbone.
+    pub rtol: Option<f64>,
+    /// Record ‖r‖ every iteration (costs one glsc3 per iteration when a
+    /// tolerance is not already paying for it).
+    pub record_residuals: bool,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { niter: 100, rtol: None, record_residuals: false }
+    }
+}
+
+/// Outcome of a CG run.
+#[derive(Clone, Debug)]
+pub struct CgReport {
+    /// Iterations actually executed.
+    pub iterations: usize,
+    /// `sqrt(glsc3(r, c, r))` at exit.
+    pub final_rnorm: f64,
+    /// Residual history (empty unless requested / tolerance set).
+    pub rnorms: Vec<f64>,
+    /// Final `rtz1` (the CG scalar, useful for regression tests).
+    pub rtz1: f64,
+}
+
+/// Workspace so repeated solves don't allocate (benchmarks call this in a
+/// loop).
+pub struct CgWorkspace {
+    r: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    w: Vec<f64>,
+}
+
+impl CgWorkspace {
+    pub fn new(ndof: usize) -> Self {
+        CgWorkspace {
+            r: vec![0.0; ndof],
+            z: vec![0.0; ndof],
+            p: vec![0.0; ndof],
+            w: vec![0.0; ndof],
+        }
+    }
+}
+
+/// Solve `A x = f` with CG.
+///
+/// * `ax` — the local operator;
+/// * `gs` — gather–scatter applied to `w` after the local operator
+///   (`None` = the paper's `--no-comm` roofline mode);
+/// * `mask` — Dirichlet mask applied to `f` and to `w`;
+/// * `c` — inner-product weights (inverse multiplicity);
+/// * `x` — output, overwritten with the solution.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_solve(
+    ax: &mut dyn AxApply,
+    mut gs: Option<&mut GatherScatter>,
+    mask: Option<&[f64]>,
+    c: &[f64],
+    f: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    ws: &mut CgWorkspace,
+) -> Result<CgReport> {
+    cg_solve_pc(ax, gs.take(), mask, c, f, x, opts, ws, None)
+}
+
+/// [`cg_solve`] with an optional Jacobi preconditioner (the paper's
+/// future-work extension, section VII): `z = M^{-1} r` replaces the
+/// identity in the preconditioner slot.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_solve_pc(
+    ax: &mut dyn AxApply,
+    mut gs: Option<&mut GatherScatter>,
+    mask: Option<&[f64]>,
+    c: &[f64],
+    f: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    ws: &mut CgWorkspace,
+    precond: Option<&crate::solver::Jacobi>,
+) -> Result<CgReport> {
+    let ndof = f.len();
+    if x.len() != ndof || c.len() != ndof {
+        return Err(Error::Config("cg_solve: length mismatch".into()));
+    }
+    if opts.niter == 0 {
+        return Err(Error::Config("cg_solve: niter must be > 0".into()));
+    }
+    let (r, z, p, w) = (&mut ws.r, &mut ws.z, &mut ws.p, &mut ws.w);
+
+    rzero(x);
+    copy(r, f);
+    if let Some(m) = mask {
+        mask_apply(r, m);
+    }
+    rzero(p);
+
+    let mut rtz1 = 1.0f64;
+    let mut rtz_first: Option<f64> = None;
+    let mut rnorms = Vec::new();
+    let mut iterations = 0;
+
+    for iter in 0..opts.niter {
+        // Preconditioner slot (identity by default — the paper runs
+        // unpreconditioned; Jacobi when requested).
+        match precond {
+            None => copy(z, r),
+            Some(m) => m.apply(r, z),
+        }
+        let rtz2 = rtz1;
+        rtz1 = glsc3(r, c, z);
+        if !rtz1.is_finite() {
+            return Err(Error::Numerical(format!("CG breakdown at iter {iter}: rtz1 = {rtz1}")));
+        }
+        let first = *rtz_first.get_or_insert(rtz1.max(f64::MIN_POSITIVE));
+        if rtz1 <= 1e-30 * first {
+            // Exact convergence (possible on tiny systems well inside the
+            // fixed iteration budget): stop instead of dividing by ~0.
+            iterations = iter;
+            let final_rnorm = rtz1.max(0.0).sqrt();
+            return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1 });
+        }
+        if opts.record_residuals || opts.rtol.is_some() {
+            rnorms.push(rtz1.max(0.0).sqrt());
+        }
+        if let Some(tol) = opts.rtol {
+            if rtz1.max(0.0).sqrt() <= tol {
+                iterations = iter;
+                let final_rnorm = rtz1.max(0.0).sqrt();
+                return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1 });
+            }
+        }
+        let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
+        add2s1(p, z, beta);
+
+        ax.apply(p, w)?;
+        if let Some(gs) = gs.as_deref_mut() {
+            gs.dssum(w);
+        }
+        if let Some(m) = mask {
+            mask_apply(w, m);
+        }
+
+        let pap = glsc3(w, c, p);
+        if pap <= 0.0 || !pap.is_finite() {
+            return Err(Error::Numerical(format!(
+                "CG breakdown at iter {iter}: pap = {pap} (operator not SPD?)"
+            )));
+        }
+        let alpha = rtz1 / pap;
+        add2s2(x, p, alpha);
+        add2s2(r, w, -alpha);
+        iterations = iter + 1;
+    }
+
+    let final_rnorm = glsc3(r, c, r).max(0.0).sqrt();
+    Ok(CgReport { iterations, final_rnorm, rnorms, rtz1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::Cases;
+
+    /// Dense SPD matrix as an AxApply.
+    struct Dense {
+        n: usize,
+        a: Vec<f64>,
+    }
+
+    impl AxApply for Dense {
+        fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
+            for i in 0..self.n {
+                w[i] = (0..self.n).map(|j| self.a[i * self.n + j] * p[j]).sum();
+            }
+            Ok(())
+        }
+    }
+
+    fn random_spd(c: &mut Cases, n: usize) -> Dense {
+        // A = B B^T + n I
+        let b = c.vec_normal(n * n);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        Dense { n, a }
+    }
+
+    #[test]
+    fn solves_dense_spd() {
+        crate::proputil::forall(0xC6, 10, |cases| {
+            let n = cases.size(2, 20);
+            let mut dense = random_spd(cases, n);
+            let x_true = cases.vec_normal(n);
+            let mut f = vec![0.0; n];
+            dense.apply(&x_true, &mut f).unwrap();
+            let c = vec![1.0; n];
+            let mut x = vec![0.0; n];
+            let mut ws = CgWorkspace::new(n);
+            let opts = CgOptions { niter: 200, rtol: Some(1e-12), record_residuals: true };
+            let rep =
+                cg_solve(&mut dense, None, None, &c, &f, &mut x, &opts, &mut ws).unwrap();
+            crate::proputil::assert_allclose(&x, &x_true, 1e-6, 1e-6);
+            assert!(rep.final_rnorm <= 1e-10 * (1.0 + rep.rnorms[0]));
+        });
+    }
+
+    #[test]
+    fn residual_monotone_in_enorm_proxy() {
+        // For SPD systems the c-weighted residual norm should trend down;
+        // we check the recorded history ends far below where it starts.
+        let mut cases = Cases::new(0xC7);
+        let n = 16;
+        let mut dense = random_spd(&mut cases, n);
+        let f = cases.vec_normal(n);
+        let c = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let mut ws = CgWorkspace::new(n);
+        let opts = CgOptions { niter: 60, rtol: None, record_residuals: true };
+        let rep = cg_solve(&mut dense, None, None, &c, &f, &mut x, &opts, &mut ws).unwrap();
+        assert!(rep.rnorms.last().unwrap() < &(rep.rnorms[0] * 1e-6));
+    }
+
+    #[test]
+    fn identity_solves_in_one_iteration() {
+        let n = 8;
+        let mut ident = Dense {
+            n,
+            a: (0..n * n).map(|i| if i % (n + 1) == 0 { 1.0 } else { 0.0 }).collect(),
+        };
+        let f: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let c = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let mut ws = CgWorkspace::new(n);
+        let opts = CgOptions { niter: 5, rtol: Some(1e-14), record_residuals: false };
+        cg_solve(&mut ident, None, None, &c, &f, &mut x, &opts, &mut ws).unwrap();
+        crate::proputil::assert_allclose(&x, &f, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn mask_keeps_boundary_zero() {
+        let mut cases = Cases::new(0xC8);
+        let n = 10;
+        let mut dense = random_spd(&mut cases, n);
+        let f = cases.vec_normal(n);
+        let mut mask = vec![1.0; n];
+        mask[0] = 0.0;
+        mask[7] = 0.0;
+        let c = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let mut ws = CgWorkspace::new(n);
+        let opts = CgOptions::default();
+        cg_solve(&mut dense, None, Some(&mask), &c, &f, &mut x, &opts, &mut ws).unwrap();
+        assert_eq!(x[0], 0.0);
+        assert_eq!(x[7], 0.0);
+    }
+
+    #[test]
+    fn non_spd_reports_breakdown() {
+        let n = 4;
+        // Negative-definite: pap < 0 on the first iteration.
+        let mut neg = Dense {
+            n,
+            a: (0..n * n).map(|i| if i % (n + 1) == 0 { -1.0 } else { 0.0 }).collect(),
+        };
+        let f = vec![1.0; n];
+        let c = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let mut ws = CgWorkspace::new(n);
+        let err = cg_solve(&mut neg, None, None, &c, &f, &mut x, &CgOptions::default(), &mut ws);
+        assert!(matches!(err, Err(Error::Numerical(_))));
+    }
+
+    #[test]
+    fn zero_iterations_rejected() {
+        let mut ident = Dense { n: 1, a: vec![1.0] };
+        let mut ws = CgWorkspace::new(1);
+        let opts = CgOptions { niter: 0, ..Default::default() };
+        let err = cg_solve(
+            &mut ident,
+            None,
+            None,
+            &[1.0],
+            &[1.0],
+            &mut [0.0],
+            &opts,
+            &mut ws,
+        );
+        assert!(matches!(err, Err(Error::Config(_))));
+    }
+}

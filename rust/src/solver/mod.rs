@@ -1,0 +1,9 @@
+//! Conjugate-gradient solver (Nekbone's `cg.f`) and its vector algebra.
+
+mod vector;
+mod cg;
+mod precond;
+
+pub use cg::{cg_solve, cg_solve_pc, AxApply, CgOptions, CgReport, CgWorkspace};
+pub use precond::Jacobi;
+pub use vector::{add2s1, add2s2, copy, glsc3, mask_apply, rzero};

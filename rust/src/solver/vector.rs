@@ -1,0 +1,111 @@
+//! Nekbone's CG vector operations (the "simple vector operations" the paper
+//! runs under OpenACC, section IV). Alloc-free, hot-path code; names follow
+//! the Fortran originals so the cost model (paper Eq. 1) maps one-to-one.
+
+/// `sum_i a_i b_i c_i` — Nekbone's weighted inner product `glsc3`
+/// (3 flops per dof in the paper's accounting).
+#[inline]
+pub fn glsc3(a: &[f64], b: &[f64], c: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i] * c[i];
+    }
+    acc
+}
+
+/// `a <- c1 * a + b` — Nekbone's `add2s1` (2 flops per dof).
+#[inline]
+pub fn add2s1(a: &mut [f64], b: &[f64], c1: f64) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] = c1 * a[i] + b[i];
+    }
+}
+
+/// `a <- a + c2 * b` — Nekbone's `add2s2` (2 flops per dof).
+#[inline]
+pub fn add2s2(a: &mut [f64], b: &[f64], c2: f64) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += c2 * b[i];
+    }
+}
+
+/// `a <- a * mask` elementwise — Nekbone's boundary-condition `mask`.
+#[inline]
+pub fn mask_apply(a: &mut [f64], mask: &[f64]) {
+    debug_assert_eq!(a.len(), mask.len());
+    for i in 0..a.len() {
+        a[i] *= mask[i];
+    }
+}
+
+/// `a <- b` (Nekbone's `copy`).
+#[inline]
+pub fn copy(a: &mut [f64], b: &[f64]) {
+    a.copy_from_slice(b);
+}
+
+/// `a <- 0` (Nekbone's `rzero`).
+#[inline]
+pub fn rzero(a: &mut [f64]) {
+    a.fill(0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{forall, Cases};
+
+    #[test]
+    fn glsc3_small() {
+        assert_eq!(glsc3(&[1.0, 2.0], &[3.0, 4.0], &[1.0, 0.5]), 3.0 + 4.0);
+    }
+
+    #[test]
+    fn glsc3_zero_weight_masks() {
+        forall(0x91, 20, |c: &mut Cases| {
+            let len = c.size(1, 200);
+            let a = c.vec_normal(len);
+            let b = c.vec_normal(len);
+            assert_eq!(glsc3(&a, &b, &vec![0.0; len]), 0.0);
+        });
+    }
+
+    #[test]
+    fn add2s1_identity_scale() {
+        let mut a = vec![1.0, 2.0];
+        add2s1(&mut a, &[10.0, 20.0], 1.0);
+        assert_eq!(a, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn add2s2_matches_axpy() {
+        forall(0x92, 20, |c: &mut Cases| {
+            let len = c.size(1, 100);
+            let mut a = c.vec_normal(len);
+            let b = c.vec_normal(len);
+            let want: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + 2.5 * y).collect();
+            add2s2(&mut a, &b, 2.5);
+            crate::proputil::assert_allclose(&a, &want, 1e-15, 1e-15);
+        });
+    }
+
+    #[test]
+    fn mask_zeroes_selected() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        mask_apply(&mut a, &[1.0, 0.0, 1.0]);
+        assert_eq!(a, vec![1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn copy_rzero() {
+        let mut a = vec![1.0; 4];
+        rzero(&mut a);
+        assert_eq!(a, vec![0.0; 4]);
+        copy(&mut a, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

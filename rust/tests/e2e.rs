@@ -1,0 +1,139 @@
+//! End-to-end integration: full Nekbone solves across backends, ranked vs
+//! serial, and the paper's no-comm roofline mode.
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
+use nekbone::rank::run_ranked;
+
+fn have_artifacts() -> bool {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let ok = std::path::Path::new(dir).join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn cfg(nelt: usize, n: usize, niter: usize) -> RunConfig {
+    RunConfig { nelt, n, niter, ..Default::default() }
+}
+
+#[test]
+fn xla_backends_match_cpu_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    // Full CG: identical residual trajectory on CPU and through PJRT.
+    let mut cpu = Nekbone::new(cfg(64, 10, 15), Backend::CpuLayered).unwrap();
+    let want = cpu.run().unwrap();
+    for variant in ["jnp", "original", "shared", "layered", "layered_unroll2"] {
+        let mut app = Nekbone::new(cfg(64, 10, 15), Backend::Xla(variant.into())).unwrap();
+        let got = app.run().unwrap();
+        let denom = want.final_residual.abs().max(1e-30);
+        assert!(
+            (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+            "{variant}: {} vs {}",
+            got.final_residual,
+            want.final_residual
+        );
+    }
+}
+
+#[test]
+fn xla_padded_mesh_matches_cpu() {
+    if !have_artifacts() {
+        return;
+    }
+    // nelt = 100 is not a multiple of the chunk: exercises zero-padding
+    // through a complete solve (dssum + mask + CG).
+    let mut cpu = Nekbone::new(cfg(100, 10, 10), Backend::CpuLayered).unwrap();
+    let want = cpu.run().unwrap();
+    let mut app = Nekbone::new(cfg(100, 10, 10), Backend::Xla("layered".into())).unwrap();
+    let got = app.run().unwrap();
+    let denom = want.final_residual.abs().max(1e-30);
+    assert!((got.final_residual - want.final_residual).abs() / denom < 1e-9);
+}
+
+#[test]
+fn fused_backend_matches_unfused() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut plain = Nekbone::new(cfg(64, 10, 12), Backend::Xla("layered".into())).unwrap();
+    let want = plain.run().unwrap();
+    let mut fused = Nekbone::new(cfg(64, 10, 12), Backend::XlaFused("layered".into())).unwrap();
+    let got = fused.run().unwrap();
+    let denom = want.final_residual.abs().max(1e-30);
+    assert!(
+        (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+        "fused {} vs {}",
+        got.final_residual,
+        want.final_residual
+    );
+}
+
+#[test]
+fn fused_no_comm_uses_fused_pap() {
+    if !have_artifacts() {
+        return;
+    }
+    // In no-comm, no-mask mode the fused pap is used directly; it must
+    // still agree with the plain path.
+    let mk = || RunConfig { no_comm: true, no_mask: true, ..cfg(64, 10, 8) };
+    let mut plain = Nekbone::new(mk(), Backend::Xla("layered".into())).unwrap();
+    let want = plain.run().unwrap();
+    let mut fused = Nekbone::new(mk(), Backend::XlaFused("layered".into())).unwrap();
+    let got = fused.run().unwrap();
+    let denom = want.final_residual.abs().max(1e-30);
+    assert!((got.final_residual - want.final_residual).abs() / denom < 1e-9);
+}
+
+#[test]
+fn vector_backend_xla_matches_rust() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rust_vec = Nekbone::new(cfg(64, 10, 10), Backend::Xla("layered".into())).unwrap();
+    let want = rust_vec.run().unwrap();
+    let mut xla_vec = Nekbone::new(cfg(64, 10, 10), Backend::Xla("layered".into())).unwrap();
+    let got = xla_vec.run_vector_backend(VectorBackend::Xla).unwrap();
+    let denom = want.final_residual.abs().max(1e-30);
+    assert!(
+        (got.final_residual - want.final_residual).abs() / denom < 1e-8,
+        "{} vs {}",
+        got.final_residual,
+        want.final_residual
+    );
+}
+
+#[test]
+fn ranked_matches_serial_on_larger_mesh() {
+    let base = RunConfig { nelt: 27, n: 5, niter: 20, ..Default::default() };
+    let mut serial = Nekbone::new(base.clone(), Backend::CpuLayered).unwrap();
+    let want = serial.run().unwrap();
+    for ranks in [1, 3] {
+        let got = run_ranked(&RunConfig { ranks, ..base.clone() }).unwrap();
+        let denom = want.final_residual.abs().max(1e-30);
+        assert!(
+            (got.final_residual - want.final_residual).abs() / denom < 1e-6,
+            "ranks={ranks}: {} vs {}",
+            got.final_residual,
+            want.final_residual
+        );
+    }
+}
+
+#[test]
+fn chunk_256_matches_chunk_64() {
+    if !have_artifacts() {
+        return;
+    }
+    let c64 = cfg(256, 10, 8);
+    let c256 = RunConfig { chunk: 256, ..cfg(256, 10, 8) };
+    let mut a = Nekbone::new(c64, Backend::Xla("layered".into())).unwrap();
+    let mut b = Nekbone::new(c256, Backend::Xla("layered".into())).unwrap();
+    let ra = a.run().unwrap();
+    let rb = b.run().unwrap();
+    let denom = ra.final_residual.abs().max(1e-30);
+    assert!((ra.final_residual - rb.final_residual).abs() / denom < 1e-9);
+}

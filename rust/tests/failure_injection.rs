@@ -1,0 +1,105 @@
+//! Failure injection: the runtime must fail loudly and descriptively, not
+//! crash or compute garbage, when artifacts are missing/corrupt or configs
+//! are inconsistent.
+
+use std::io::Write;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::error::Error;
+use nekbone::runtime::{Manifest, XlaRuntime};
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nekbone-test-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_io_error() {
+    let dir = tmp_dir("missing");
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(matches!(err, Error::Io { .. }), "{err}");
+}
+
+#[test]
+fn corrupt_manifest_is_json_error() {
+    let dir = tmp_dir("corrupt-json");
+    std::fs::write(dir.join("manifest.json"), b"{not json").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(matches!(err, Error::Json { .. }), "{err}");
+}
+
+#[test]
+fn manifest_without_artifacts_key_rejected() {
+    let dir = tmp_dir("no-key");
+    std::fs::write(dir.join("manifest.json"), b"{\"format\": 1}").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile() {
+    let dir = tmp_dir("corrupt-hlo");
+    let manifest = r#"{"artifacts": [
+      {"name": "ax_layered_n10_e64", "kind": "ax", "variant": "layered",
+       "n": 10, "chunk": 64, "dtype": "float64",
+       "file": "bad.hlo.txt", "num_args": 3, "tupled": false,
+       "arg_shapes": [[64,10,10,10],[10,10],[64,6,10,10,10]]}
+    ]}"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let mut f = std::fs::File::create(dir.join("bad.hlo.txt")).unwrap();
+    f.write_all(b"HloModule garbage\nENTRY oops { this is not hlo }\n").unwrap();
+    drop(f);
+
+    let rt = XlaRuntime::new(&dir).expect("client still constructs");
+    let meta = rt.manifest().find("ax_layered_n10_e64").unwrap().clone();
+    assert!(rt.compile(&meta).is_err(), "corrupt HLO must not compile");
+}
+
+#[test]
+fn xla_backend_without_artifact_reports_artifact_error() {
+    let dir = tmp_dir("empty-manifest");
+    std::fs::write(dir.join("manifest.json"), b"{\"artifacts\": []}").unwrap();
+    let cfg = RunConfig {
+        nelt: 8,
+        n: 10,
+        niter: 5,
+        artifacts_dir: dir.to_str().unwrap().into(),
+        ..Default::default()
+    };
+    let err = Nekbone::new(cfg, Backend::Xla("layered".into())).err().unwrap();
+    match err {
+        Error::Artifact(msg) => assert!(msg.contains("layered"), "{msg}"),
+        other => panic!("expected Artifact error, got {other}"),
+    }
+}
+
+#[test]
+fn cpu_backend_ignores_artifacts_entirely() {
+    // No artifacts dir at all: CPU backends must still run.
+    let cfg = RunConfig {
+        nelt: 8,
+        n: 4,
+        niter: 5,
+        artifacts_dir: "/nonexistent/nowhere".into(),
+        ..Default::default()
+    };
+    let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+    app.run().unwrap();
+}
+
+#[test]
+fn config_cross_validation() {
+    // ranks > nelt is caught before any setup work.
+    let cfg = RunConfig { nelt: 4, ranks: 8, ..Default::default() };
+    assert!(matches!(cfg.validate(), Err(Error::Config(_))));
+}
+
+#[test]
+fn set_rhs_length_mismatch() {
+    let cfg = RunConfig { nelt: 8, n: 4, niter: 5, ..Default::default() };
+    let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+    assert!(app.set_rhs(&[1.0, 2.0]).is_err());
+}

@@ -1,0 +1,238 @@
+//! Cross-module property tests (DESIGN.md section 9): invariants of the
+//! assembled operator, the gather–scatter, the chunker/padding contract,
+//! and spectral convergence of the discretization.
+
+use nekbone::basis::Basis;
+use nekbone::geometry::GeomFactors;
+use nekbone::gs::GatherScatter;
+use nekbone::mesh::Mesh;
+use nekbone::operators::CpuVariant;
+use nekbone::proputil::{assert_allclose, forall, Cases};
+use nekbone::solver::{glsc3, mask_apply};
+
+/// Apply the *assembled* operator: A = mask . Q Q^T . A_local.
+fn assembled_ax(
+    mesh: &Mesh,
+    basis: &Basis,
+    geom: &GeomFactors,
+    gs: &mut GatherScatter,
+    mask: &[f64],
+    u: &[f64],
+) -> Vec<f64> {
+    let mut w = vec![0.0; u.len()];
+    CpuVariant::Layered.apply(mesh.n, mesh.nelt(), u, &basis.d, &geom.g, &mut w);
+    gs.dssum(&mut w);
+    let mut w2 = w;
+    mask_apply(&mut w2, mask);
+    w2
+}
+
+/// A dssum-consistent, masked random field (a valid CG iterate).
+fn consistent_field(mesh: &Mesh, gs: &mut GatherScatter, mask: &[f64], c: &mut Cases) -> Vec<f64> {
+    let mut v = c.vec_normal(mesh.ndof_local());
+    gs.dssum(&mut v);
+    mask_apply(&mut v, mask);
+    v
+}
+
+#[test]
+fn assembled_operator_symmetric() {
+    // <A u, v>_c = <u, A v>_c over consistent fields — the property CG
+    // needs. Weighted by inverse multiplicity (= the global inner product).
+    forall(0x57, 8, |cases| {
+        let n = cases.size(3, 5);
+        let (ex, ey, ez) = (cases.size(1, 2), cases.size(1, 2), cases.size(1, 2));
+        let mesh = Mesh::new(ex, ey, ez, n).unwrap();
+        let basis = Basis::new(n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let mut gs = GatherScatter::new(&mesh);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let u = consistent_field(&mesh, &mut gs, &mask, cases);
+        let v = consistent_field(&mesh, &mut gs, &mask, cases);
+        let au = assembled_ax(&mesh, &basis, &geom, &mut gs, &mask, &u);
+        let av = assembled_ax(&mesh, &basis, &geom, &mut gs, &mask, &v);
+        let lhs = glsc3(&au, &cw, &v);
+        let rhs = glsc3(&u, &cw, &av);
+        let scale = lhs.abs().max(rhs.abs()).max(1e-12);
+        assert!((lhs - rhs).abs() / scale < 1e-9, "lhs {lhs} rhs {rhs}");
+    });
+}
+
+#[test]
+fn assembled_operator_positive_semidefinite() {
+    forall(0x58, 8, |cases| {
+        let n = cases.size(3, 5);
+        let mesh = Mesh::new(2, 2, 1, n).unwrap();
+        let basis = Basis::new(n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let mut gs = GatherScatter::new(&mesh);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let u = consistent_field(&mesh, &mut gs, &mask, cases);
+        let au = assembled_ax(&mesh, &basis, &geom, &mut gs, &mask, &u);
+        let quad = glsc3(&au, &cw, &u);
+        assert!(quad >= -1e-10, "quadratic form {quad}");
+    });
+}
+
+#[test]
+fn chunker_padding_is_inert() {
+    // Zero-padded elements (zero geometric factors) must contribute w = 0:
+    // computing on [real | padding] equals computing on [real] alone.
+    forall(0x59, 10, |cases| {
+        let n = cases.size(2, 6);
+        let np = n * n * n;
+        let real = cases.size(1, 5);
+        let pad = cases.size(1, 4);
+        let d = nekbone::basis::derivative_matrix(n);
+        let mut u = cases.vec_normal((real + pad) * np);
+        let mut g = cases.vec_normal(real * 6 * np);
+        g.extend(std::iter::repeat(0.0).take(pad * 6 * np));
+        // Garbage in the padded u region must not matter.
+        for v in u[real * np..].iter_mut() {
+            *v = 1e6;
+        }
+        let mut w_all = vec![0.0; (real + pad) * np];
+        CpuVariant::Layered.apply(n, real + pad, &u, &d, &g, &mut w_all);
+        let mut w_real = vec![0.0; real * np];
+        CpuVariant::Layered.apply(n, real, &u[..real * np], &d, &g[..real * 6 * np], &mut w_real);
+        assert_allclose(&w_all[..real * np], &w_real, 1e-12, 1e-12);
+        assert!(w_all[real * np..].iter().all(|&x| x == 0.0), "padding produced output");
+    });
+}
+
+#[test]
+fn dssum_of_consistent_field_scales_by_multiplicity() {
+    forall(0x5A, 10, |cases| {
+        let n = cases.size(2, 5);
+        let mesh = Mesh::new(cases.size(1, 3), cases.size(1, 2), cases.size(1, 2), n).unwrap();
+        let mut gs = GatherScatter::new(&mesh);
+        let mask = mesh.boundary_mask();
+        let v = consistent_field(&mesh, &mut gs, &mask, cases);
+        // A consistent field's copies are equal, so dssum multiplies each
+        // dof by its multiplicity.
+        let mult = mesh.multiplicity();
+        let mut w = v.clone();
+        gs.dssum(&mut w);
+        let want: Vec<f64> = v.iter().zip(&mult).map(|(a, m)| a * m).collect();
+        assert_allclose(&w, &want, 1e-12, 1e-12);
+    });
+}
+
+#[test]
+fn solution_vanishes_on_boundary_and_matches_operator() {
+    // Solve, then verify A x ≈ f on the masked subspace (true residual).
+    use nekbone::config::RunConfig;
+    use nekbone::coordinator::{Backend, Nekbone};
+    let cfg = RunConfig { nelt: 8, n: 5, niter: 400, ..Default::default() };
+    let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+    let mesh = app.mesh().clone();
+    let mut x = vec![0.0; mesh.ndof_local()];
+    let rep = app.run_into(Some(&mut x)).unwrap();
+    assert!(rep.final_residual < 1e-8, "residual {}", rep.final_residual);
+    let mask = mesh.boundary_mask();
+    for (xi, mi) in x.iter().zip(&mask) {
+        if *mi == 0.0 {
+            assert_eq!(*xi, 0.0, "Dirichlet dof nonzero");
+        }
+    }
+}
+
+#[test]
+fn spectral_convergence_of_interpolation_quadrature() {
+    // The SEM machinery converges spectrally: integrating a smooth field
+    // with the GLL quadrature through the geometric factors' weight part
+    // gets exponentially accurate with n. We test via the mass-like sum
+    // sum w |J| f(x) -> integral of f over the unit cube.
+    let pi = std::f64::consts::PI;
+    let f = move |x: f64, y: f64, z: f64| (pi * x).sin() * (pi * y).sin() * (pi * z).sin();
+    // Exact: (∫_0^1 sin(πt) dt)^3 = (2/π)^3.
+    let exact = (2.0 / pi).powi(3);
+    let mut errs = Vec::new();
+    for n in [3, 5, 7, 9] {
+        let mesh = Mesh::new(2, 2, 2, n).unwrap();
+        let basis = Basis::new(n);
+        let (xs, ys, zs) = mesh.coordinates(&basis.points);
+        let mut quad = 0.0;
+        let npts = n * n * n;
+        for e in 0..mesh.nelt() {
+            let (lo, hi) = mesh.element_bounds(e);
+            let detj = (hi[0] - lo[0]) * (hi[1] - lo[1]) * (hi[2] - lo[2]) / 8.0;
+            for k in 0..n {
+                for j in 0..n {
+                    for i in 0..n {
+                        let idx = e * npts + (k * n + j) * n + i;
+                        let w = basis.weights[i] * basis.weights[j] * basis.weights[k];
+                        quad += w * detj * f(xs[idx], ys[idx], zs[idx]);
+                    }
+                }
+            }
+        }
+        errs.push((quad - exact).abs());
+    }
+    // Each degree bump shrinks the error by at least 10x until round-off.
+    for w in errs.windows(2) {
+        assert!(
+            w[1] < w[0] / 10.0 || w[1] < 1e-12,
+            "no spectral decay: {errs:?}"
+        );
+    }
+}
+
+#[test]
+fn jacobi_pcg_converges_no_slower() {
+    // The paper's future work (section VII): preconditioned CG. On the
+    // masked SEM system Jacobi must reach a tolerance in no more
+    // iterations than plain CG, with both converging to the same solution.
+    use nekbone::solver::{cg_solve_pc, CgOptions, CgWorkspace, Jacobi};
+    let n = 5;
+    let mesh = Mesh::new(2, 2, 2, n).unwrap();
+    let basis = Basis::new(n);
+    let geom = GeomFactors::affine(&mesh, &basis);
+    let mask = mesh.boundary_mask();
+    let cw = mesh.inv_multiplicity();
+    let ndof = mesh.ndof_local();
+    let mut rng = nekbone::rng::Rng::new(0x9C6);
+    let mut f = rng.normal_vec(ndof);
+    {
+        let mut gs = GatherScatter::new(&mesh);
+        gs.dssum(&mut f);
+    }
+    for (fi, mi) in f.iter_mut().zip(&mask) {
+        *fi *= mi;
+    }
+
+    let run = |precond: bool| {
+        let mut gs = GatherScatter::new(&mesh);
+        let jac = Jacobi::assemble(n, mesh.nelt(), &basis.d, &geom.g, &mut gs, Some(&mask))
+            .unwrap();
+        let mut ax = |p: &[f64], w: &mut [f64]| -> nekbone::Result<()> {
+            CpuVariant::Layered.apply(n, mesh.nelt(), p, &basis.d, &geom.g, w);
+            Ok(())
+        };
+        let mut x = vec![0.0; ndof];
+        let mut ws = CgWorkspace::new(ndof);
+        let opts = CgOptions { niter: 500, rtol: Some(1e-10), record_residuals: true };
+        let rep = cg_solve_pc(
+            &mut ax,
+            Some(&mut gs),
+            Some(&mask),
+            &cw,
+            &f,
+            &mut x,
+            &opts,
+            &mut ws,
+            precond.then_some(&jac),
+        )
+        .unwrap();
+        (rep.iterations, x)
+    };
+    let (iters_plain, x_plain) = run(false);
+    let (iters_pcg, x_pcg) = run(true);
+    assert!(
+        iters_pcg <= iters_plain,
+        "Jacobi PCG took {iters_pcg} vs plain {iters_plain}"
+    );
+    assert_allclose(&x_pcg, &x_plain, 1e-6, 1e-8);
+}

@@ -1,0 +1,147 @@
+//! Integration: every AOT-compiled Ax artifact must agree with the CPU
+//! oracle on random inputs, through the real PJRT load/execute path.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use nekbone::basis::Basis;
+use nekbone::operators::CpuVariant;
+use nekbone::proputil::assert_allclose;
+use nekbone::rng::Rng;
+use nekbone::runtime::{AxEngine, XlaRuntime};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn parity_for(variant: &str, n: usize, chunk: usize, nelt: usize) {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let basis = Basis::new(n);
+    let np = n * n * n;
+    let mut rng = Rng::new(0xA11CE + nelt as u64);
+    let u = rng.normal_vec(nelt * np);
+    let g = rng.normal_vec(nelt * 6 * np);
+
+    let mut engine =
+        AxEngine::new(&rt, variant, n, chunk, nelt, &basis.d, &g).expect("engine");
+    let mut got = vec![0.0; nelt * np];
+    engine.apply(&rt, &u, &mut got).expect("apply");
+
+    let mut want = vec![0.0; nelt * np];
+    CpuVariant::Layered.apply(n, nelt, &u, &basis.d, &g, &mut want);
+    assert_allclose(&got, &want, 1e-10, 1e-10);
+}
+
+#[test]
+fn layered_matches_cpu_exact_chunk() {
+    parity_for("layered", 10, 64, 64);
+}
+
+#[test]
+fn layered_matches_cpu_multi_chunk() {
+    parity_for("layered", 10, 64, 128);
+}
+
+#[test]
+fn layered_matches_cpu_padded_tail() {
+    // 100 elements over chunk 64: one full + one padded launch.
+    parity_for("layered", 10, 64, 100);
+}
+
+#[test]
+fn layered_matches_cpu_tiny_mesh() {
+    // Whole mesh smaller than one chunk.
+    parity_for("layered", 10, 64, 3);
+}
+
+#[test]
+fn jnp_matches_cpu() {
+    parity_for("jnp", 10, 64, 96);
+}
+
+#[test]
+fn original_matches_cpu() {
+    parity_for("original", 10, 64, 96);
+}
+
+#[test]
+fn shared_matches_cpu() {
+    parity_for("shared", 10, 64, 96);
+}
+
+#[test]
+fn layered_unroll2_matches_cpu() {
+    parity_for("layered_unroll2", 10, 64, 96);
+}
+
+#[test]
+fn layered_other_degrees() {
+    // The portability claim (E7): same kernel at degree 7 and 11.
+    parity_for("layered", 8, 64, 64);
+    parity_for("layered", 12, 64, 64);
+}
+
+#[test]
+fn vector_engines_match_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let size = 64 * 1000;
+    let mut rng = Rng::new(7);
+    let a = rng.normal_vec(size);
+    let b = rng.normal_vec(size);
+    let c = rng.normal_vec(size);
+
+    let glsc3 = nekbone::runtime::VectorEngine::new(&rt, "glsc3", size).unwrap();
+    let got = glsc3.glsc3(&rt, &a, &b, &c).unwrap();
+    let want = nekbone::solver::glsc3(&a, &b, &c);
+    assert!((got - want).abs() < 1e-8 * want.abs().max(1.0), "{got} vs {want}");
+
+    let add2s1 = nekbone::runtime::VectorEngine::new(&rt, "add2s1", size).unwrap();
+    let mut a1 = a.clone();
+    add2s1.axpy(&rt, &mut a1, &b, 1.5).unwrap();
+    let mut a2 = a.clone();
+    nekbone::solver::add2s1(&mut a2, &b, 1.5);
+    assert_allclose(&a1, &a2, 1e-12, 1e-12);
+
+    let add2s2 = nekbone::runtime::VectorEngine::new(&rt, "add2s2", size).unwrap();
+    let mut b1 = a.clone();
+    add2s2.axpy(&rt, &mut b1, &b, -0.25).unwrap();
+    let mut b2 = a.clone();
+    nekbone::solver::add2s2(&mut b2, &b, -0.25);
+    assert_allclose(&b1, &b2, 1e-12, 1e-12);
+}
+
+#[test]
+fn cg_iter_engine_matches_unfused() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let (n, chunk, nelt) = (10, 64, 96);
+    let np = n * n * n;
+    let basis = Basis::new(n);
+    let mut rng = Rng::new(99);
+    let p = rng.normal_vec(nelt * np);
+    let g = rng.normal_vec(nelt * 6 * np);
+    let c = rng.normal_vec(nelt * np);
+
+    let engine = nekbone::runtime::CgIterEngine::new(
+        &rt, "layered", n, chunk, nelt, &basis.d, &g, &c,
+    )
+    .unwrap();
+    let mut w = vec![0.0; nelt * np];
+    let pap = engine.apply(&rt, &p, &mut w).unwrap();
+
+    let mut w_want = vec![0.0; nelt * np];
+    CpuVariant::Layered.apply(n, nelt, &p, &basis.d, &g, &mut w_want);
+    assert_allclose(&w, &w_want, 1e-10, 1e-10);
+    let pap_want = nekbone::solver::glsc3(&w_want, &c, &p);
+    assert!(
+        (pap - pap_want).abs() < 1e-8 * pap_want.abs().max(1.0),
+        "{pap} vs {pap_want}"
+    );
+}
