@@ -20,11 +20,11 @@ use std::f64::consts::PI;
 
 use nekbone::basis::Basis;
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::coordinator::Nekbone;
 
-fn solve_for_degree(n: usize, nelt: usize, backend: Backend) -> nekbone::Result<(f64, f64)> {
+fn solve_for_degree(n: usize, nelt: usize, operator: &str) -> nekbone::Result<(f64, f64)> {
     let cfg = RunConfig { nelt, n, niter: 600, ..RunConfig::default() };
-    let mut app = Nekbone::new(cfg, backend)?;
+    let mut app = Nekbone::builder(cfg).operator(operator).build()?;
     let mesh = app.mesh().clone();
     let basis = Basis::new(n);
     let (xs, ys, zs) = mesh.coordinates(&basis.points);
@@ -87,7 +87,7 @@ fn main() -> nekbone::Result<()> {
     // CPU path: spectral convergence sweep over the polynomial degree.
     let mut last = f64::INFINITY;
     for n in [3usize, 5, 7, 9] {
-        let (linf, l2) = solve_for_degree(n, 8, Backend::CpuLayered)?;
+        let (linf, l2) = solve_for_degree(n, 8, "cpu-layered")?;
         println!("{:>6} {:>14.3e} {:>14.3e}  cpu-layered", n - 1, linf, l2);
         assert!(
             linf < last / 5.0 || linf < 1e-9,
@@ -98,7 +98,7 @@ fn main() -> nekbone::Result<()> {
 
     // The paper's configuration through the full AOT/PJRT path.
     if have_artifacts {
-        let (linf, l2) = solve_for_degree(10, 8, Backend::Xla("layered".into()))?;
+        let (linf, l2) = solve_for_degree(10, 8, "xla-layered")?;
         println!("{:>6} {:>14.3e} {:>14.3e}  xla-layered (AOT/PJRT)", 9, linf, l2);
         assert!(linf < 1e-7, "degree-9 XLA solve too inaccurate: {linf}");
     } else {

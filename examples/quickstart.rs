@@ -5,11 +5,12 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Requires `make artifacts` for the XLA backend; falls back to the CPU
-//! backend with a note otherwise.
+//! The operator is selected **by name** from the operator registry through
+//! the application builder. Requires `make artifacts` for the XLA
+//! operators; falls back to the CPU operator with a note otherwise.
 
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::coordinator::Nekbone;
 
 fn main() -> nekbone::Result<()> {
     let cfg = RunConfig {
@@ -20,22 +21,23 @@ fn main() -> nekbone::Result<()> {
     };
 
     // Prefer the paper's optimized kernel through the AOT/PJRT path.
-    let backend = if std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
-        Backend::Xla("layered".into())
+    let operator = if std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        "xla-layered"
     } else {
-        eprintln!("note: artifacts not built (run `make artifacts`); using the CPU backend");
-        Backend::CpuLayered
+        eprintln!("note: artifacts not built (run `make artifacts`); using the CPU operator");
+        "cpu-layered"
     };
 
     println!("== nekbone-rs quickstart ==");
     println!(
-        "mesh: {} elements, degree {}, {} local dofs",
+        "mesh: {} elements, degree {}, {} local dofs, operator {}",
         cfg.nelt,
         cfg.n - 1,
-        cfg.ndof()
+        cfg.ndof(),
+        operator
     );
 
-    let mut app = Nekbone::new(cfg, backend)?;
+    let mut app = Nekbone::builder(cfg).operator(operator).build()?;
     let report = app.run()?;
 
     println!("{}", report.summary());

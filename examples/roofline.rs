@@ -9,17 +9,17 @@
 
 use nekbone::bench::Table;
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::coordinator::Nekbone;
 use nekbone::metrics::CostModel;
 use nekbone::roofline::measure_bandwidth;
 
 fn main() -> nekbone::Result<()> {
     let have_artifacts = std::path::Path::new("artifacts").join("manifest.json").exists();
-    let backend = if have_artifacts {
-        Backend::Xla("layered".into())
+    let operator = if have_artifacts {
+        "xla-layered"
     } else {
         eprintln!("(artifacts not built; using cpu-layered)");
-        Backend::CpuLayered
+        "cpu-layered"
     };
     let n = 10;
 
@@ -39,7 +39,7 @@ fn main() -> nekbone::Result<()> {
         let bw = measure_bandwidth(cm.dof, 5);
         let roof = cm.roofline_gflops(bw.bandwidth_gbs);
         let cfg = RunConfig { nelt, n, niter: 20, no_comm: true, ..RunConfig::default() };
-        let mut app = Nekbone::new(cfg, backend.clone())?;
+        let mut app = Nekbone::builder(cfg).operator(operator).build()?;
         let rep = app.run()?;
         let achieved = rep.gflops();
         table.row(&[

@@ -8,7 +8,7 @@
 
 use nekbone::bench::Table;
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::coordinator::Nekbone;
 use nekbone::rank::run_ranked;
 
 fn main() -> nekbone::Result<()> {
@@ -51,17 +51,17 @@ fn main() -> nekbone::Result<()> {
     // stops being overhead-bound (the "<500k dofs is not beneficial" claim).
     println!("\n== problem-size dependence (single device, xla-layered) ==");
     let have_artifacts = std::path::Path::new("artifacts").join("manifest.json").exists();
-    let backend = if have_artifacts {
-        Backend::Xla("layered".into())
+    let operator = if have_artifacts {
+        "xla-layered"
     } else {
         eprintln!("(artifacts not built; using cpu-layered)");
-        Backend::CpuLayered
+        "cpu-layered"
     };
     let mut table = Table::new(&["nelt", "dof", "GFlop/s", "GF/s per 100k dof"]);
     for nelt in [8usize, 32, 64, 128, 256, 512, 1024] {
         let cfg = RunConfig { nelt, n: 10, niter: 20, ..RunConfig::default() };
         let dof = cfg.ndof();
-        let mut app = Nekbone::new(cfg, backend.clone())?;
+        let mut app = Nekbone::builder(cfg).operator(operator).build()?;
         let rep = app.run()?;
         table.row(&[
             nelt.to_string(),

@@ -17,18 +17,18 @@
 
 mod common;
 
-use common::{bench_iters, have_artifacts, time_solve};
+use common::{bench_iters, build_app, have_artifacts, time_solve};
 use nekbone::bench::Table;
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
+use nekbone::coordinator::{Nekbone, VectorBackend};
 
 fn ablate_unroll(niter: usize) {
     println!("\n== E5: unroll strategy (paper: CUDA C vs CUDA Fortran < 1%) ==");
     let mut table = Table::new(&["nelt", "layered(GF/s)", "unroll2(GF/s)", "delta"]);
     for nelt in [256usize, 1024] {
         let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
-        let (_s, a, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
-        let (_s, b, _r) = time_solve(&Backend::Xla("layered_unroll2".into()), &cfg);
+        let (_s, a, _r) = time_solve("xla-layered", &cfg);
+        let (_s, b, _r) = time_solve("xla-layered-unroll2", &cfg);
         table.row(&[
             nelt.to_string(),
             format!("{a:.3}"),
@@ -44,10 +44,10 @@ fn ablate_vector_backend(niter: usize) {
     let mut table = Table::new(&["nelt", "rust-vec(GF/s)", "xla-vec(GF/s)", "delta"]);
     for nelt in [64usize, 256] {
         let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
-        let (_s, rust_gf, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+        let (_s, rust_gf, _r) = time_solve("xla-layered", &cfg);
         // XLA vector path (time one full run; the engine setup is amortized
         // by constructing once).
-        let mut app = Nekbone::new(cfg.clone(), Backend::Xla("layered".into())).expect("setup");
+        let mut app = build_app("xla-layered", &cfg);
         let runner = nekbone::bench::Runner::default();
         let samples = runner.run(|| {
             app.run_vector_backend(VectorBackend::Xla).expect("solve");
@@ -70,15 +70,15 @@ fn ablate_degree(niter: usize) {
     for n in [8usize, 10, 12] {
         let nelt = 256;
         let cfg = RunConfig { nelt, n, niter, ..RunConfig::default() };
-        let (_s, gf, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+        let (_s, gf, _r) = time_solve("xla-layered", &cfg);
         let shared_cell = if n <= 10 {
-            let (_s, sg, _r) = time_solve(&Backend::Xla("shared".into()), &cfg);
+            let (_s, sg, _r) = time_solve("xla-shared", &cfg);
             format!("{sg:.3}")
         } else {
             // The capacity wall: no artifact exists (aot.py refuses to
             // build it), matching "does not work for more than 10 GLL
             // points".
-            let err = Nekbone::new(cfg.clone(), Backend::Xla("shared".into())).err();
+            let err = Nekbone::builder(cfg.clone()).operator("xla-shared").build().err();
             assert!(err.is_some(), "shared unexpectedly built at n={n}");
             "CAPACITY-WALL".to_string()
         };
@@ -97,25 +97,17 @@ fn ablate_chunk(niter: usize) {
     println!("\n== chunk-size / fusion sweep (launch-overhead amortization) ==");
     let mut table = Table::new(&["nelt", "chunk", "backend", "GF/s"]);
     for nelt in [1024usize] {
-        for chunk in [64usize, 256, 1024] {
-            let cfg = RunConfig { nelt, n: 10, niter, chunk, ..RunConfig::default() };
-            let (_s, gf, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
-            table.row(&[
-                nelt.to_string(),
-                chunk.to_string(),
-                "xla-layered".into(),
-                format!("{gf:.3}"),
-            ]);
-        }
-        for chunk in [64usize, 256, 1024] {
-            let cfg = RunConfig { nelt, n: 10, niter, chunk, ..RunConfig::default() };
-            let (_s, gf, _r) = time_solve(&Backend::XlaFused("layered".into()), &cfg);
-            table.row(&[
-                nelt.to_string(),
-                chunk.to_string(),
-                "xla-fused".into(),
-                format!("{gf:.3}"),
-            ]);
+        for operator in ["xla-layered", "xla-fused-layered"] {
+            for chunk in [64usize, 256, 1024] {
+                let cfg = RunConfig { nelt, n: 10, niter, chunk, ..RunConfig::default() };
+                let (_s, gf, _r) = time_solve(operator, &cfg);
+                table.row(&[
+                    nelt.to_string(),
+                    chunk.to_string(),
+                    operator.into(),
+                    format!("{gf:.3}"),
+                ]);
+            }
         }
     }
     table.print();

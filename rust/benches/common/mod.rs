@@ -1,8 +1,15 @@
 //! Shared scaffolding for the paper-figure benches.
+//!
+//! All operator construction goes through one place ([`build_app`], backed
+//! by the operator registry), so the benches never name a concrete
+//! implementation — a newly registered variant benches by adding its name
+//! to a list.
+
+#![allow(dead_code)] // each bench includes this module; none uses all of it
 
 use nekbone::bench::{Runner, Samples};
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone};
+use nekbone::coordinator::Nekbone;
 
 /// CG iterations per timed sample (env-overridable:
 /// `NEKBONE_BENCH_ITERS`). The paper runs 100; the default here keeps a
@@ -27,10 +34,19 @@ pub fn have_artifacts() -> bool {
     ok
 }
 
-/// Median-time one full Nekbone solve for a backend/size; returns
+/// Build the application for a registry operator name (the single place
+/// benches construct backends).
+pub fn build_app(operator: &str, cfg: &RunConfig) -> Nekbone {
+    Nekbone::builder(cfg.clone())
+        .operator(operator)
+        .build()
+        .unwrap_or_else(|e| panic!("setup of operator {operator:?} failed: {e}"))
+}
+
+/// Median-time one full Nekbone solve for an operator/size; returns
 /// (samples, GFlop/s at the median, residual).
-pub fn time_solve(backend: &Backend, cfg: &RunConfig) -> (Samples, f64, f64) {
-    let mut app = Nekbone::new(cfg.clone(), backend.clone()).expect("setup");
+pub fn time_solve(operator: &str, cfg: &RunConfig) -> (Samples, f64, f64) {
+    let mut app = build_app(operator, cfg);
     let mut residual = 0.0;
     let runner = Runner::default();
     let samples = runner.run(|| {
@@ -43,13 +59,14 @@ pub fn time_solve(backend: &Backend, cfg: &RunConfig) -> (Samples, f64, f64) {
     (samples, gflops, residual)
 }
 
-/// The paper's five GPU versions in presentation order.
-pub fn paper_versions() -> Vec<(&'static str, Backend)> {
+/// The paper's five GPU versions in presentation order:
+/// (figure label, operator-registry name).
+pub fn paper_versions() -> Vec<(&'static str, &'static str)> {
     vec![
-        ("openacc(jnp)", Backend::Xla("jnp".into())),
-        ("original", Backend::Xla("original".into())),
-        ("shared", Backend::Xla("shared".into())),
-        ("opt-cuda-c(layered)", Backend::Xla("layered".into())),
-        ("opt-cuda-f(unroll2)", Backend::Xla("layered_unroll2".into())),
+        ("openacc(jnp)", "xla-jnp"),
+        ("original", "xla-original"),
+        ("shared", "xla-shared"),
+        ("opt-cuda-c(layered)", "xla-layered"),
+        ("opt-cuda-f(unroll2)", "xla-layered-unroll2"),
     ]
 }

@@ -37,14 +37,13 @@ fn main() {
     for &nelt in &elems {
         let mut cells = vec![nelt.to_string(), (nelt * 1000).to_string()];
         last_row.clear();
-        for (_, backend) in &versions {
+        for (_, operator) in &versions {
             let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
-            let (samples, gflops, _res) = time_solve(backend, &cfg);
+            let (samples, gflops, _res) = time_solve(operator, &cfg);
             cells.push(format!("{gflops:.3}"));
             last_row.push(gflops);
             eprintln!(
-                "  nelt={nelt:<5} {:<22} median {:.3}s (spread {:.1}%)",
-                backend.label(),
+                "  nelt={nelt:<5} {operator:<22} median {:.3}s (spread {:.1}%)",
                 samples.median(),
                 100.0 * samples.rel_spread()
             );

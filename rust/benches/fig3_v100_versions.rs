@@ -12,7 +12,6 @@ mod common;
 use common::{bench_iters, elems_or, have_artifacts, paper_versions, time_solve};
 use nekbone::bench::{Runner, Table};
 use nekbone::config::RunConfig;
-use nekbone::coordinator::Backend;
 use nekbone::rank::run_ranked;
 
 fn main() {
@@ -37,14 +36,14 @@ fn main() {
 
     for &nelt in &elems {
         let mut cells = vec![nelt.to_string(), (nelt * 1000).to_string()];
-        for (_, backend) in &versions {
+        for (_, operator) in &versions {
             let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
-            let (_s, gflops, _r) = time_solve(backend, &cfg);
+            let (_s, gflops, _r) = time_solve(operator, &cfg);
             cells.push(format!("{gflops:.3}"));
         }
         // CPU baseline 1: threaded operator in a serial CG.
         let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
-        let (_s, gflops, _r) = time_solve(&Backend::CpuThreaded, &cfg);
+        let (_s, gflops, _r) = time_solve("cpu-threaded", &cfg);
         cells.push(format!("{gflops:.3}"));
         // CPU baseline 2: the full simulated-MPI path (rank count = what
         // the element grid supports, capped at 4).

@@ -14,7 +14,6 @@ mod common;
 use common::{bench_iters, elems_or, have_artifacts, time_solve};
 use nekbone::bench::Table;
 use nekbone::config::RunConfig;
-use nekbone::coordinator::Backend;
 use nekbone::metrics::CostModel;
 use nekbone::roofline::{measure_bandwidth, measure_compute_ceiling};
 
@@ -49,7 +48,7 @@ fn main() {
         let mem_roof = cm.roofline_gflops(bw.bandwidth_gbs);
         let roof = mem_roof.min(ceiling);
         let cfg = RunConfig { nelt, n, niter, no_comm: true, ..RunConfig::default() };
-        let (_s, achieved, _r) = time_solve(&Backend::Xla("layered".into()), &cfg);
+        let (_s, achieved, _r) = time_solve("xla-layered", &cfg);
         let frac = achieved / roof;
         fractions.push((nelt, frac));
         table.row(&[

@@ -100,7 +100,7 @@ SUBCOMMANDS:
   run        run one Nekbone solve and print the report
   sweep      run a backend over a sweep of element counts (paper Figs. 2-3)
   roofline   measured-roofline comparison (paper Fig. 4)
-  info       print manifest + platform information
+  info       list registered operators + manifest + platform information
   help       this text
 
 COMMON OPTIONS (run/sweep/roofline):
@@ -108,11 +108,15 @@ COMMON OPTIONS (run/sweep/roofline):
   --n N              GLL points per dim            [10]
   --niter N          CG iterations                 [100]
   --chunk N          elements per XLA launch       [64]
-  --backend NAME     cpu-naive | cpu-layered | cpu-threaded | xla-jnp |
-                     xla-original | xla-shared | xla-layered |
-                     xla-layered-unroll2 | xla-fused   [xla-layered]
+  --backend NAME     an operator-registry name     [xla-layered]
+                     built-ins: cpu-naive | cpu-layered | cpu-threaded |
+                     xla-jnp (alias xla-openacc) | xla-original |
+                     xla-shared | xla-layered | xla-layered-unroll2 |
+                     xla-fused-layered (alias xla-fused)
+                     (`nekbone info` prints the live list)
   --vector-backend B rust | xla                    [rust]
-  --ranks R          simulated MPI ranks (cpu path) [1]
+  --ranks R          simulated MPI ranks [1]; with an explicit --backend
+                     each rank runs that operator, else cpu-layered
   --artifacts DIR    artifact directory            [artifacts]
   --seed S           RHS seed                      [0x5EED]
   --no-comm          skip gather-scatter (roofline methodology)

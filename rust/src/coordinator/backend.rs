@@ -1,63 +1,49 @@
 //! Backend selection: which implementation computes the local Ax, and
 //! which computes the CG vector algebra.
+//!
+//! [`Backend`] is a validated operator name — parsing is a lookup in the
+//! [`OperatorRegistry`](crate::operators::OperatorRegistry), not a `match`,
+//! so registered variants (including aliases like `xla-openacc` and
+//! `xla-fused`) resolve here without this module knowing about them.
 
-use crate::error::{Error, Result};
+use crate::error::Result;
+use crate::operators::OperatorRegistry;
 
-/// Where the tensor-product operator runs.
-///
-/// The five `Xla` variants are the paper's five GPU versions (section IV);
-/// the CPU variants provide the Fig. 3 CPU baseline and the parity oracle.
+/// A validated, canonical operator name. `label()` always round-trips
+/// through `parse` back to the same backend.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Listing-1 structure with full-size intermediates, single thread.
-    CpuNaive,
-    /// The paper's layered schedule on one CPU thread.
-    CpuLayered,
-    /// Layered schedule across all cores (the paper's CPU/MPI baseline).
-    CpuThreaded,
-    /// An AOT-compiled kernel variant run via PJRT:
-    /// "jnp" (OpenACC analog), "original", "shared", "layered" (the paper's
-    /// contribution), "layered_unroll2" (CUDA-Fortran analog).
-    Xla(String),
-    /// The fused Ax+pap executable (perf-pass hot path; layered schedule).
-    XlaFused(String),
+pub struct Backend {
+    name: String,
+    needs_artifacts: bool,
 }
 
 impl Backend {
-    /// Parse a CLI name.
+    /// Parse a CLI name against the built-in registry. Aliases resolve to
+    /// their canonical entry; unknown names error with the full list.
     pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "cpu-naive" => Ok(Backend::CpuNaive),
-            "cpu-layered" => Ok(Backend::CpuLayered),
-            "cpu-threaded" => Ok(Backend::CpuThreaded),
-            "xla-jnp" | "xla-openacc" => Ok(Backend::Xla("jnp".into())),
-            "xla-original" => Ok(Backend::Xla("original".into())),
-            "xla-shared" => Ok(Backend::Xla("shared".into())),
-            "xla-layered" => Ok(Backend::Xla("layered".into())),
-            "xla-layered-unroll2" => Ok(Backend::Xla("layered_unroll2".into())),
-            "xla-fused" => Ok(Backend::XlaFused("layered".into())),
-            other => Err(Error::Config(format!(
-                "unknown backend {other:?}; expected one of cpu-naive, cpu-layered, \
-                 cpu-threaded, xla-jnp, xla-original, xla-shared, xla-layered, \
-                 xla-layered-unroll2, xla-fused"
-            ))),
-        }
+        Self::parse_with(s, &OperatorRegistry::with_builtins())
+    }
+
+    /// Parse against a caller-supplied registry (custom operators).
+    pub fn parse_with(s: &str, registry: &OperatorRegistry) -> Result<Self> {
+        let spec = registry.resolve(s)?;
+        Ok(Backend { name: spec.name.clone(), needs_artifacts: spec.needs_artifacts })
     }
 
     /// Does this backend need the PJRT runtime + artifacts?
     pub fn needs_artifacts(&self) -> bool {
-        matches!(self, Backend::Xla(_) | Backend::XlaFused(_))
+        self.needs_artifacts
     }
 
-    /// Stable display name (used in bench tables).
+    /// Canonical registry name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stable display name (used in bench tables). Identical to the
+    /// canonical registry name, so it is always re-parseable.
     pub fn label(&self) -> String {
-        match self {
-            Backend::CpuNaive => "cpu-naive".into(),
-            Backend::CpuLayered => "cpu-layered".into(),
-            Backend::CpuThreaded => "cpu-threaded".into(),
-            Backend::Xla(v) => format!("xla-{}", v.replace('_', "-")),
-            Backend::XlaFused(v) => format!("xla-fused-{}", v.replace('_', "-")),
-        }
+        self.name.clone()
     }
 }
 
@@ -77,7 +63,7 @@ impl VectorBackend {
         match s {
             "rust" => Ok(VectorBackend::Rust),
             "xla" => Ok(VectorBackend::Xla),
-            other => Err(Error::Config(format!(
+            other => Err(crate::error::Error::Config(format!(
                 "unknown vector backend {other:?}; expected rust or xla"
             ))),
         }
@@ -90,30 +76,37 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for name in [
-            "cpu-naive",
-            "cpu-layered",
-            "cpu-threaded",
-            "xla-jnp",
-            "xla-original",
-            "xla-shared",
-            "xla-layered",
-            "xla-layered-unroll2",
-            "xla-fused",
-        ] {
-            let b = Backend::parse(name).unwrap();
-            if name != "xla-fused" {
-                assert_eq!(b.label(), name.replace("openacc", "jnp"));
-            }
+        // Every canonical name labels as itself, and every label (canonical
+        // or produced from an alias) re-parses to an equal backend.
+        let reg = OperatorRegistry::with_builtins();
+        for name in reg.names() {
+            let b = Backend::parse(&name).unwrap();
+            assert_eq!(b.label(), name, "canonical name must round-trip");
+            assert_eq!(Backend::parse(&b.label()).unwrap(), b);
         }
+        for alias in ["xla-openacc", "xla-fused"] {
+            let b = Backend::parse(alias).unwrap();
+            assert_ne!(b.label(), alias, "alias must resolve to canonical");
+            assert_eq!(Backend::parse(&b.label()).unwrap(), b);
+        }
+        // The historical asymmetry: "xla-fused" labels as the canonical
+        // "xla-fused-layered", which parses back to the same backend.
+        assert_eq!(Backend::parse("xla-fused").unwrap().label(), "xla-fused-layered");
         assert!(Backend::parse("cuda").is_err());
     }
 
     #[test]
     fn artifact_need() {
-        assert!(!Backend::CpuLayered.needs_artifacts());
-        assert!(Backend::Xla("layered".into()).needs_artifacts());
-        assert!(Backend::XlaFused("layered".into()).needs_artifacts());
+        assert!(!Backend::parse("cpu-layered").unwrap().needs_artifacts());
+        assert!(Backend::parse("xla-layered").unwrap().needs_artifacts());
+        assert!(Backend::parse("xla-fused").unwrap().needs_artifacts());
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_options() {
+        let err = Backend::parse("cuda").unwrap_err().to_string();
+        assert!(err.contains("cpu-layered"), "{err}");
+        assert!(err.contains("xla-layered"), "{err}");
     }
 
     #[test]

@@ -1,11 +1,11 @@
 //! Layer-3 coordinator: wires mesh, basis, geometry, gather–scatter, the
-//! CG solver, and the selected Ax backend (CPU or AOT-compiled XLA) into
-//! the Nekbone application.
+//! CG solver, and the selected Ax operator (resolved by name from the
+//! operator registry) into the Nekbone application.
 
 mod backend;
 mod pipeline;
 mod report;
 
 pub use backend::{Backend, VectorBackend};
-pub use pipeline::Nekbone;
+pub use pipeline::{Nekbone, NekboneBuilder};
 pub use report::RunReport;

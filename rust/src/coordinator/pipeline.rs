@@ -1,4 +1,8 @@
 //! The Nekbone application object: setup once, run CG many times.
+//!
+//! Built through [`NekboneBuilder`]: the operator is resolved by name from
+//! an [`OperatorRegistry`] and held as a `Box<dyn AxOperator>` — the
+//! application has no knowledge of which implementations exist.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -6,44 +10,75 @@ use std::time::Instant;
 
 use crate::basis::Basis;
 use crate::config::RunConfig;
-use crate::coordinator::{Backend, RunReport, VectorBackend};
+use crate::coordinator::{RunReport, VectorBackend};
 use crate::error::{Error, Result};
 use crate::geometry::GeomFactors;
 use crate::gs::GatherScatter;
 use crate::mesh::Mesh;
 use crate::metrics::CostModel;
-use crate::operators::CpuVariant;
-use crate::runtime::{AxEngine, CgIterEngine, XlaRuntime};
+use crate::operators::{AxOperator, OperatorCtx, OperatorRegistry};
+use crate::runtime::XlaRuntime;
 use crate::solver::{cg_solve, glsc3, mask_apply, CgOptions, CgWorkspace};
 
-/// Everything needed to run Nekbone with one backend on one mesh.
+/// Everything needed to run Nekbone with one operator on one mesh.
 pub struct Nekbone {
     pub cfg: RunConfig,
-    backend: Backend,
+    /// The local Ax, dispatched purely through the trait object.
+    op: Box<dyn AxOperator>,
+    vector_backend: VectorBackend,
     mesh: Mesh,
     basis: Basis,
-    geom: GeomFactors,
     gs: GatherScatter,
     mask: Vec<f64>,
     /// Inverse multiplicity (Nekbone's `c`).
     c: Vec<f64>,
     /// Right-hand side (dssum-consistent, masked).
     f: Vec<f64>,
-    /// XLA state when the backend needs it.
-    xla: Option<XlaState>,
     ws: CgWorkspace,
 }
 
-struct XlaState {
-    rt: XlaRuntime,
-    ax: Option<AxEngine>,
-    fused: Option<CgIterEngine>,
+/// Builder for [`Nekbone`]: pick the operator by registry name, optionally
+/// a custom registry and the vector-algebra backend, then `build()`.
+///
+/// ```no_run
+/// use nekbone::config::RunConfig;
+/// use nekbone::coordinator::Nekbone;
+///
+/// let cfg = RunConfig { nelt: 64, n: 10, ..RunConfig::default() };
+/// let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+/// let report = app.run().unwrap();
+/// ```
+pub struct NekboneBuilder {
+    cfg: RunConfig,
+    operator: String,
+    vector_backend: VectorBackend,
+    registry: Option<OperatorRegistry>,
 }
 
-impl Nekbone {
+impl NekboneBuilder {
+    /// Select the local-Ax operator by registry name (canonical or alias).
+    pub fn operator(mut self, name: impl Into<String>) -> Self {
+        self.operator = name.into();
+        self
+    }
+
+    /// Select where the CG vector algebra runs (default: native Rust).
+    pub fn vector_backend(mut self, vb: VectorBackend) -> Self {
+        self.vector_backend = vb;
+        self
+    }
+
+    /// Use a custom operator registry (e.g. with runtime-registered
+    /// variants) instead of the built-ins.
+    pub fn registry(mut self, registry: OperatorRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
     /// Build the application: mesh, basis, geometry, gather–scatter, RHS,
-    /// and (for XLA backends) the PJRT engines with resident buffers.
-    pub fn new(cfg: RunConfig, backend: Backend) -> Result<Self> {
+    /// and the operator (set up against this problem's data).
+    pub fn build(self) -> Result<Nekbone> {
+        let cfg = self.cfg;
         cfg.validate()?;
         let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
         let basis = Basis::new(cfg.n);
@@ -59,55 +94,58 @@ impl Nekbone {
         gs.dssum(&mut f);
         mask_apply(&mut f, &mask);
 
-        let xla = if backend.needs_artifacts() {
-            let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
-            let (ax, fused) = match &backend {
-                Backend::Xla(variant) => (
-                    Some(AxEngine::new(
-                        &rt,
-                        variant,
-                        cfg.n,
-                        cfg.chunk,
-                        mesh.nelt(),
-                        &basis.d,
-                        &geom.g,
-                    )?),
-                    None,
-                ),
-                Backend::XlaFused(variant) => (
-                    None,
-                    Some(CgIterEngine::new(
-                        &rt,
-                        variant,
-                        cfg.n,
-                        cfg.chunk,
-                        mesh.nelt(),
-                        &basis.d,
-                        &geom.g,
-                        &c,
-                    )?),
-                ),
-                _ => unreachable!(),
-            };
-            Some(XlaState { rt, ax, fused })
-        } else {
-            None
+        let registry = self.registry.unwrap_or_else(OperatorRegistry::with_builtins);
+        let ctx = OperatorCtx {
+            n: cfg.n,
+            nelt: mesh.nelt(),
+            chunk: cfg.chunk,
+            threads: cfg.cpu_threads,
+            artifacts_dir: &cfg.artifacts_dir,
+            d: &basis.d,
+            g: &geom.g,
+            c: &c,
         };
+        let op = registry.build(&self.operator, &ctx)?;
+        // The operator owns whatever it cloned/uploaded from `geom`; the
+        // application itself never needs the geometric factors again.
 
         let ndof = mesh.ndof_local();
         Ok(Nekbone {
             cfg,
-            backend,
+            op,
+            vector_backend: self.vector_backend,
             mesh,
             basis,
-            geom,
             gs,
             mask,
             c,
             f,
-            xla,
             ws: CgWorkspace::new(ndof),
         })
+    }
+}
+
+impl Nekbone {
+    /// Start building an application for this configuration. The default
+    /// operator is `cpu-layered` (always available, no artifacts).
+    pub fn builder(cfg: RunConfig) -> NekboneBuilder {
+        NekboneBuilder {
+            cfg,
+            operator: "cpu-layered".into(),
+            vector_backend: VectorBackend::default(),
+            registry: None,
+        }
+    }
+
+    /// Convenience: build with a parsed [`Backend`](crate::coordinator::Backend).
+    ///
+    /// Resolves against the **built-in** registry only; for a backend
+    /// validated against a custom registry
+    /// ([`Backend::parse_with`](crate::coordinator::Backend::parse_with)),
+    /// use the builder and pass the same registry via
+    /// [`NekboneBuilder::registry`].
+    pub fn new(cfg: RunConfig, backend: crate::coordinator::Backend) -> Result<Self> {
+        Self::builder(cfg).operator(backend.name()).build()
     }
 
     /// The mesh in use.
@@ -118,6 +156,11 @@ impl Nekbone {
     /// The basis in use.
     pub fn basis(&self) -> &Basis {
         &self.basis
+    }
+
+    /// The operator's display label (canonical registry name).
+    pub fn operator_label(&self) -> String {
+        self.op.label()
     }
 
     /// Replace the right-hand side (e.g. a manufactured solution's load).
@@ -135,7 +178,16 @@ impl Nekbone {
     /// Run the configured number of CG iterations; returns the report.
     /// `x_out`, when given, receives the solution field.
     pub fn run_into(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
-        if matches!(self.backend, Backend::XlaFused(_)) {
+        if self.vector_backend == VectorBackend::Xla {
+            return self.run_vector_xla(x_out);
+        }
+        self.run_rust_vectors(x_out)
+    }
+
+    /// The native-Rust vector-algebra CG (the default path), regardless of
+    /// the configured vector backend.
+    fn run_rust_vectors(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
+        if self.op.is_fused() {
             return self.run_fused(x_out);
         }
         let n = self.cfg.n;
@@ -150,28 +202,12 @@ impl Nekbone {
             record_residuals: false,
         };
 
-        // Assemble the AxApply closure for the selected backend.
-        let d = self.basis.d.clone();
-        let g = &self.geom.g;
-        let cpu_threads = self.cfg.cpu_threads;
-        let backend = self.backend.clone();
-        let xla = &mut self.xla;
+        // Time each operator application; dispatch is the trait object.
+        let op = &mut self.op;
         let ax_time_c = Rc::clone(&ax_time);
         let mut ax_fn = move |p: &[f64], w: &mut [f64]| -> Result<()> {
             let t0 = Instant::now();
-            match &backend {
-                Backend::CpuNaive => CpuVariant::Naive.apply(n, nelt, p, &d, g, w),
-                Backend::CpuLayered => CpuVariant::Layered.apply(n, nelt, p, &d, g, w),
-                Backend::CpuThreaded => {
-                    crate::operators::ax_threaded(n, nelt, p, &d, g, w, cpu_threads)
-                }
-                Backend::Xla(_) => {
-                    let st = xla.as_mut().expect("xla state");
-                    let engine = st.ax.as_mut().expect("ax engine");
-                    engine.apply(&st.rt, p, w)?;
-                }
-                Backend::XlaFused(_) => unreachable!(),
-            }
+            op.apply(p, w)?;
             *ax_time_c.borrow_mut() += t0.elapsed().as_secs_f64();
             Ok(())
         };
@@ -198,7 +234,7 @@ impl Nekbone {
         let cm = CostModel::new(n, nelt);
         let ax_seconds = *ax_time.borrow();
         Ok(RunReport {
-            backend: self.backend.label(),
+            backend: self.op.label(),
             nelt,
             n,
             iterations: rep.iterations,
@@ -215,12 +251,10 @@ impl Nekbone {
         self.run_into(None)
     }
 
-    /// The fused hot path: Ax and the pap reduction in one XLA launch per
-    /// chunk (perf pass). The CG logic is inlined here because the fused
-    /// executable returns pap itself.
+    /// The fused hot path: the operator computes Ax and the pap reduction
+    /// in one pass per chunk (perf pass). The CG logic is inlined here
+    /// because the operator returns pap itself.
     fn run_fused(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
-        let st = self.xla.as_mut().expect("xla state");
-        let engine = st.fused.as_ref().expect("fused engine");
         let ndof = self.mesh.ndof_local();
         let (n, nelt) = (self.cfg.n, self.cfg.nelt);
         let mut x = vec![0.0; ndof];
@@ -243,7 +277,10 @@ impl Nekbone {
             let t0 = Instant::now();
             // Fused pap is only exact when no dssum/mask intervenes between
             // Ax and the reduction; with comm on we recompute pap after.
-            let mut pap = engine.apply(&st.rt, &p, &mut w)?;
+            self.op.apply(&p, &mut w)?;
+            let mut pap = self.op.last_pap().ok_or_else(|| {
+                Error::Numerical("fused operator did not produce a pap value".into())
+            })?;
             ax_seconds += t0.elapsed().as_secs_f64();
 
             if !self.cfg.no_comm {
@@ -272,7 +309,7 @@ impl Nekbone {
         }
         let cm = CostModel::new(n, nelt);
         Ok(RunReport {
-            backend: self.backend.label(),
+            backend: self.op.label(),
             nelt,
             n,
             iterations,
@@ -284,52 +321,37 @@ impl Nekbone {
         })
     }
 
-    /// Apply the local operator once with the configured backend (used by
-    /// parity tests and kernel-level benches; no dssum, no mask).
+    /// Apply the local operator once (used by parity tests and
+    /// kernel-level benches; no dssum, no mask).
     pub fn apply_ax_once(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
-        let (n, nelt) = (self.cfg.n, self.cfg.nelt);
-        match &self.backend {
-            Backend::CpuNaive => CpuVariant::Naive.apply(n, nelt, p, &self.basis.d, &self.geom.g, w),
-            Backend::CpuLayered => {
-                CpuVariant::Layered.apply(n, nelt, p, &self.basis.d, &self.geom.g, w)
-            }
-            Backend::CpuThreaded => crate::operators::ax_threaded(
-                n,
-                nelt,
-                p,
-                &self.basis.d,
-                &self.geom.g,
-                w,
-                self.cfg.cpu_threads,
-            ),
-            Backend::Xla(_) => {
-                let st = self.xla.as_mut().expect("xla state");
-                st.ax.as_mut().expect("ax engine").apply(&st.rt, p, w)?;
-            }
-            Backend::XlaFused(_) => {
-                let st = self.xla.as_mut().expect("xla state");
-                st.fused.as_ref().expect("fused engine").apply(&st.rt, p, w)?;
-            }
-        }
-        Ok(())
+        self.op.apply(p, w)
     }
 
-    /// Run CG with the vector algebra offloaded to XLA executables
-    /// (experiment E6). Only the Rust path is otherwise exercised, so this
-    /// lives beside `run` rather than inside it.
+    /// Run CG with the vector algebra on the given backend for this run
+    /// only (experiment E6's rust-vs-xla comparison), overriding whatever
+    /// the builder configured.
     pub fn run_vector_backend(&mut self, vb: VectorBackend) -> Result<RunReport> {
-        if vb == VectorBackend::Rust {
-            return self.run();
+        match vb {
+            VectorBackend::Rust => self.run_rust_vectors(None),
+            VectorBackend::Xla => self.run_vector_xla(None),
         }
-        // XLA vector path: chunked executables for glsc3 / add2s1 / add2s2.
-        let st = self
-            .xla
-            .as_mut()
-            .ok_or_else(|| Error::Config("vector-backend xla requires an XLA Ax backend".into()))?;
+    }
+
+    /// XLA vector path: chunked executables for glsc3 / add2s1 / add2s2,
+    /// sharing the operator's PJRT runtime.
+    fn run_vector_xla(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
+        let rt = self.op.xla_runtime().ok_or_else(|| {
+            Error::Config("vector-backend xla requires an XLA Ax backend".into())
+        })?;
+        if self.op.is_fused() {
+            return Err(Error::Config(
+                "vector-backend xla requires a (non-fused) XLA Ax backend".into(),
+            ));
+        }
         let size = self.cfg.chunk * self.cfg.n.pow(3);
-        let glsc3_e = crate::runtime::VectorEngine::new(&st.rt, "glsc3", size)?;
-        let add2s1_e = crate::runtime::VectorEngine::new(&st.rt, "add2s1", size)?;
-        let add2s2_e = crate::runtime::VectorEngine::new(&st.rt, "add2s2", size)?;
+        let glsc3_e = crate::runtime::VectorEngine::new(&rt, "glsc3", size)?;
+        let add2s1_e = crate::runtime::VectorEngine::new(&rt, "add2s1", size)?;
+        let add2s2_e = crate::runtime::VectorEngine::new(&rt, "add2s2", size)?;
 
         let ndof = self.mesh.ndof_local();
         let (n, nelt) = (self.cfg.n, self.cfg.nelt);
@@ -367,9 +389,6 @@ impl Nekbone {
             Ok(())
         };
 
-        let engine = st.ax.as_mut().ok_or_else(|| {
-            Error::Config("vector-backend xla requires a (non-fused) XLA Ax backend".into())
-        })?;
         let mut x = vec![0.0; ndof];
         let mut r = self.f.clone();
         mask_apply(&mut r, &self.mask);
@@ -381,30 +400,33 @@ impl Nekbone {
         let mut iterations = 0;
         for iter in 0..self.cfg.niter {
             let rtz2 = rtz1;
-            rtz1 = chunked_glsc3(&st.rt, &r, &self.c, &r)?;
+            rtz1 = chunked_glsc3(&rt, &r, &self.c, &r)?;
             let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
-            chunked_axpy(&st.rt, &add2s1_e, &mut p, &r, beta, true)?;
+            chunked_axpy(&rt, &add2s1_e, &mut p, &r, beta, true)?;
             let t0 = Instant::now();
-            engine.apply(&st.rt, &p, &mut w)?;
+            self.op.apply(&p, &mut w)?;
             ax_seconds += t0.elapsed().as_secs_f64();
             if !self.cfg.no_comm {
                 self.gs.dssum(&mut w);
             }
             mask_apply(&mut w, &self.mask);
-            let pap = chunked_glsc3(&st.rt, &w, &self.c, &p)?;
+            let pap = chunked_glsc3(&rt, &w, &self.c, &p)?;
             if pap <= 0.0 || !pap.is_finite() {
                 return Err(Error::Numerical(format!("CG breakdown at iter {iter}: pap {pap}")));
             }
             let alpha = rtz1 / pap;
-            chunked_axpy(&st.rt, &add2s2_e, &mut x, &p, alpha, false)?;
-            chunked_axpy(&st.rt, &add2s2_e, &mut r, &w, -alpha, false)?;
+            chunked_axpy(&rt, &add2s2_e, &mut x, &p, alpha, false)?;
+            chunked_axpy(&rt, &add2s2_e, &mut r, &w, -alpha, false)?;
             iterations = iter + 1;
         }
         let seconds = sw.elapsed().as_secs_f64();
         let final_residual = glsc3(&r, &self.c, &r).max(0.0).sqrt();
+        if let Some(out) = x_out {
+            out.copy_from_slice(&x);
+        }
         let cm = CostModel::new(n, nelt);
         Ok(RunReport {
-            backend: format!("{}+vec-xla", self.backend.label()),
+            backend: format!("{}+vec-xla", self.op.label()),
             nelt,
             n,
             iterations,
@@ -425,14 +447,19 @@ mod tests {
         RunConfig { nelt: 8, n: 4, niter: 30, chunk: 64, ..Default::default() }
     }
 
+    fn app(operator: &str, cfg: RunConfig) -> Nekbone {
+        Nekbone::builder(cfg).operator(operator).build().unwrap()
+    }
+
     #[test]
     fn cpu_backends_agree() {
         let mut reports = Vec::new();
         let mut xs = Vec::new();
-        for b in [Backend::CpuNaive, Backend::CpuLayered, Backend::CpuThreaded] {
-            let mut app = Nekbone::new(small_cfg(), b).unwrap();
+        for name in ["cpu-naive", "cpu-layered", "cpu-threaded"] {
+            let mut app = app(name, small_cfg());
             let mut x = vec![0.0; app.mesh().ndof_local()];
             let rep = app.run_into(Some(&mut x)).unwrap();
+            assert_eq!(rep.backend, name, "report label must be the registry name");
             reports.push(rep);
             xs.push(x);
         }
@@ -453,7 +480,7 @@ mod tests {
     #[test]
     fn residual_decreases() {
         let cfg = RunConfig { niter: 50, ..small_cfg() };
-        let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+        let mut app = app("cpu-layered", cfg);
         let rep = app.run().unwrap();
         // The first residual equals |masked f|_c; after 50 iterations on a
         // 512-dof system CG should be well converged.
@@ -470,9 +497,9 @@ mod tests {
     fn no_comm_differs_from_comm() {
         // Without dssum the operator is block-diagonal — different system,
         // different residual trajectory (sanity that the switch acts).
-        let mut with = Nekbone::new(small_cfg(), Backend::CpuLayered).unwrap();
+        let mut with = app("cpu-layered", small_cfg());
         let cfg_nc = RunConfig { no_comm: true, ..small_cfg() };
-        let mut without = Nekbone::new(cfg_nc, Backend::CpuLayered).unwrap();
+        let mut without = app("cpu-layered", cfg_nc);
         let a = with.run().unwrap();
         let b = without.run().unwrap();
         assert!((a.final_residual - b.final_residual).abs() > 1e-12);
@@ -480,7 +507,7 @@ mod tests {
 
     #[test]
     fn report_flops_use_cost_model() {
-        let mut app = Nekbone::new(small_cfg(), Backend::CpuLayered).unwrap();
+        let mut app = app("cpu-layered", small_cfg());
         let rep = app.run().unwrap();
         let per_iter = CostModel::new(4, 8).flops_per_iter();
         assert_eq!(rep.flops, per_iter * rep.iterations as u64);
@@ -488,11 +515,70 @@ mod tests {
 
     #[test]
     fn set_rhs_changes_solution() {
-        let mut app = Nekbone::new(small_cfg(), Backend::CpuLayered).unwrap();
+        let mut app = app("cpu-layered", small_cfg());
         let r1 = app.run().unwrap();
         let ndof = app.mesh().ndof_local();
         app.set_rhs(&vec![1.0; ndof]).unwrap();
         let r2 = app.run().unwrap();
         assert!((r1.final_residual - r2.final_residual).abs() > 0.0);
+    }
+
+    #[test]
+    fn builder_rejects_unknown_operator() {
+        let err = Nekbone::builder(small_cfg()).operator("gpu-magic").build().err().unwrap();
+        let msg = err.to_string();
+        assert!(msg.contains("gpu-magic"), "{msg}");
+        assert!(msg.contains("cpu-layered"), "error must list registered names: {msg}");
+    }
+
+    #[test]
+    fn builder_accepts_custom_registry() {
+        use crate::operators::{ax_layered, AxOperator, OperatorCtx};
+
+        /// Test-only operator delegating to the layered kernel.
+        #[derive(Default)]
+        struct Custom {
+            st: Option<(usize, usize, Vec<f64>, Vec<f64>)>,
+        }
+        impl AxOperator for Custom {
+            fn label(&self) -> String {
+                "test-custom".into()
+            }
+            fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+                self.st = Some((ctx.n, ctx.nelt, ctx.d.to_vec(), ctx.g.to_vec()));
+                Ok(())
+            }
+            fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+                let (n, nelt, d, g) = self.st.as_ref().unwrap();
+                ax_layered(*n, *nelt, u, d, g, w);
+                Ok(())
+            }
+            fn flops(&self) -> u64 {
+                0
+            }
+        }
+
+        let mut reg = OperatorRegistry::with_builtins();
+        reg.register("test-custom", false, || Box::<Custom>::default()).unwrap();
+        let mut custom = Nekbone::builder(small_cfg())
+            .registry(reg)
+            .operator("test-custom")
+            .build()
+            .unwrap();
+        let got = custom.run().unwrap();
+        let want = app("cpu-layered", small_cfg()).run().unwrap();
+        let denom = want.final_residual.abs().max(1e-30);
+        assert!(
+            (got.final_residual - want.final_residual).abs() / denom < 1e-12,
+            "custom operator must match the kernel it wraps"
+        );
+        assert_eq!(got.backend, "test-custom");
+    }
+
+    #[test]
+    fn vector_xla_requires_xla_operator() {
+        let mut app = app("cpu-layered", small_cfg());
+        let err = app.run_vector_backend(VectorBackend::Xla).err().unwrap();
+        assert!(err.to_string().contains("XLA"), "{err}");
     }
 }

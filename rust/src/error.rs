@@ -1,41 +1,54 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the crate
+//! builds offline, so no proc-macro derive dependency).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors the library surfaces to callers.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid run configuration (sizes, degrees, backend combinations).
-    #[error("configuration error: {0}")]
     Config(String),
 
     /// An artifact referenced by the manifest is missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// JSON parse failure (manifest).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Failure in the XLA/PJRT runtime layer.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Numerical failure (CG breakdown, non-finite values).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// Multi-rank runtime failure (a worker panicked or a channel closed).
-    #[error("rank runtime error: {0}")]
     Rank(String),
 
     /// I/O error with context.
-    #[error("io error on {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
+    Io { path: String, source: std::io::Error },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "configuration error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
+            Error::Rank(msg) => write!(f, "rank runtime error: {msg}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -51,5 +64,28 @@ impl Error {
     /// Helper: I/O error with path context.
     pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
         Error::Io { path: path.into(), source }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_variants() {
+        assert_eq!(Error::Config("bad".into()).to_string(), "configuration error: bad");
+        assert_eq!(Error::Artifact("gone".into()).to_string(), "artifact error: gone");
+        assert_eq!(
+            Error::Json { offset: 7, msg: "oops".into() }.to_string(),
+            "json error at byte 7: oops"
+        );
+    }
+
+    #[test]
+    fn io_error_chains_source() {
+        use std::error::Error as _;
+        let e = Error::io("m.json", std::io::Error::new(std::io::ErrorKind::NotFound, "nope"));
+        assert!(e.to_string().contains("m.json"));
+        assert!(e.source().is_some());
     }
 }

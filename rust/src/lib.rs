@@ -20,14 +20,50 @@
 //!
 //! ## Quick tour
 //!
+//! The application is assembled by a builder; the tensor-product operator
+//! is picked **by name** from the operator registry (see
+//! [`operators::OperatorRegistry`]):
+//!
 //! ```no_run
 //! use nekbone::config::RunConfig;
-//! use nekbone::coordinator::{Backend, Nekbone};
+//! use nekbone::coordinator::Nekbone;
 //!
 //! let cfg = RunConfig { nelt: 64, n: 10, niter: 100, ..RunConfig::default() };
-//! let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+//! let mut app = Nekbone::builder(cfg)
+//!     .operator("cpu-layered") // or "xla-layered", "xla-fused", ...
+//!     .build()
+//!     .unwrap();
 //! let report = app.run().unwrap();
 //! println!("{:.2} GFlop/s, residual {:e}", report.gflops(), report.final_residual);
+//! ```
+//!
+//! The registry is open: implement [`operators::AxOperator`], register a
+//! constructor under a new name, and pass the registry to the builder —
+//! the CLI, the CG solver, the simulated-rank runtime, and the
+//! paper-figure benches all dispatch through the same `Box<dyn
+//! AxOperator>`, so the new variant runs everywhere:
+//!
+//! ```no_run
+//! use nekbone::config::RunConfig;
+//! use nekbone::coordinator::Nekbone;
+//! use nekbone::operators::OperatorRegistry;
+//!
+//! let mut registry = OperatorRegistry::with_builtins();
+//! # struct MyOp;
+//! # impl Default for MyOp { fn default() -> Self { MyOp } }
+//! # impl nekbone::operators::AxOperator for MyOp {
+//! #     fn label(&self) -> String { "my-simd".into() }
+//! #     fn setup(&mut self, _ctx: &nekbone::operators::OperatorCtx) -> nekbone::Result<()> { Ok(()) }
+//! #     fn apply(&mut self, _u: &[f64], _w: &mut [f64]) -> nekbone::Result<()> { Ok(()) }
+//! #     fn flops(&self) -> u64 { 0 }
+//! # }
+//! registry.register("my-simd", false, || Box::<MyOp>::default()).unwrap();
+//! let cfg = RunConfig::default();
+//! let mut app = Nekbone::builder(cfg)
+//!     .registry(registry)
+//!     .operator("my-simd")
+//!     .build()
+//!     .unwrap();
 //! ```
 
 pub mod error;

@@ -1,11 +1,14 @@
 //! `nekbone` — the launcher binary.
 //!
 //! See `nekbone help` (or [`nekbone::cli::USAGE`]) for the interface.
+//! Backends are resolved by name through the operator registry; `nekbone
+//! info` lists everything registered.
 
 use nekbone::bench::Table;
 use nekbone::cli::{parse_elems, Args, USAGE};
 use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
 use nekbone::error::Result;
+use nekbone::operators::OperatorRegistry;
 use nekbone::rank::run_ranked;
 use nekbone::roofline;
 use nekbone::runtime::Manifest;
@@ -43,21 +46,32 @@ fn backend_of(args: &Args) -> Result<Backend> {
     Backend::parse(args.get("backend").unwrap_or("xla-layered"))
 }
 
+/// Ranked run honoring an explicitly chosen `--backend`; without one the
+/// rank runtime keeps its CPU default (the multi-rank analog of the
+/// paper's CPU/MPI baseline, and the only operator that needs no
+/// artifacts).
+fn ranked_report(args: &Args, cfg: &nekbone::config::RunConfig) -> Result<nekbone::coordinator::RunReport> {
+    match args.get("backend") {
+        Some(name) => nekbone::rank::run_ranked_with(cfg, Backend::parse(name)?.name()),
+        None => run_ranked(cfg),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = args.run_config()?;
     let backend = backend_of(args)?;
     let vb = VectorBackend::parse(args.get("vector-backend").unwrap_or("rust"))?;
 
     if cfg.ranks > 1 {
-        let report = run_ranked(&cfg)?;
+        let report = ranked_report(args, &cfg)?;
         println!("{}", report.summary());
         return Ok(());
     }
-    let mut app = Nekbone::new(cfg, backend)?;
-    let report = match vb {
-        VectorBackend::Rust => app.run()?,
-        VectorBackend::Xla => app.run_vector_backend(vb)?,
-    };
+    let mut app = Nekbone::builder(cfg)
+        .operator(backend.name())
+        .vector_backend(vb)
+        .build()?;
+    let report = app.run()?;
     println!("{}", report.summary());
     let cm = report.cost_model();
     println!(
@@ -78,9 +92,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for nelt in elems {
         let cfg = nekbone::config::RunConfig { nelt, ..base.clone() };
         let report = if cfg.ranks > 1 {
-            run_ranked(&cfg)?
+            ranked_report(args, &cfg)?
         } else {
-            Nekbone::new(cfg, backend.clone())?.run()?
+            Nekbone::builder(cfg).operator(backend.name()).build()?.run()?
         };
         table.row(&[
             report.backend.clone(),
@@ -112,7 +126,7 @@ fn cmd_roofline(args: &Args) -> Result<()> {
         let cfg = nekbone::config::RunConfig { nelt, no_comm: true, ..base.clone() };
         let n = cfg.n;
         let (bw, roof) = roofline::roofline_for(n, nelt, 5);
-        let mut app = Nekbone::new(cfg, backend.clone())?;
+        let mut app = Nekbone::builder(cfg).operator(backend.name()).build()?;
         let report = app.run()?;
         let achieved = report.gflops();
         table.row(&[
@@ -131,6 +145,17 @@ fn cmd_roofline(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     println!("nekbone-rs (reproduction of Karp et al. 2020)");
+    let registry = OperatorRegistry::with_builtins();
+    println!("registered operators:");
+    for name in registry.known_names() {
+        let spec = registry.resolve(&name)?;
+        if spec.name == name {
+            let kind = if spec.needs_artifacts { "xla artifacts" } else { "cpu" };
+            println!("  {name:<24} [{kind}]");
+        } else {
+            println!("  {name:<24} [alias of {}]", spec.name);
+        }
+    }
     match Manifest::load(dir) {
         Ok(m) => {
             println!("artifacts dir: {dir} ({} entries)", m.artifacts.len());

@@ -1,22 +1,52 @@
-//! CPU implementations of the local Poisson operator (paper Listing 1).
+//! The operator layer: the local Poisson operator (paper Listing 1) behind
+//! one object-safe abstraction.
 //!
-//! These serve three roles:
-//! * the **CPU baseline** of the paper's Fig. 3 (Kebnekaise's 28-core node),
-//!   here `ax_threaded`;
-//! * the **oracle** the XLA artifacts are integration-tested against;
-//! * the **naive baseline** whose structure mirrors the original
-//!   global-memory GPU kernel (`ax_naive`).
+//! The paper's contribution is a *family* of interchangeable tensor-product
+//! kernel schedules (original, shared, layered, unrolled) measured against
+//! each other; this module makes that family open-ended. Three pieces:
+//!
+//! * the raw CPU kernels ([`ax_naive`], [`ax_layered`], [`ax_threaded`]) —
+//!   the Fig. 3 CPU baseline and the parity oracle for the XLA artifacts;
+//! * the [`AxOperator`] trait — one `apply(u, w)` interface over every
+//!   implementation, CPU or AOT-compiled;
+//! * the [`registry::OperatorRegistry`] — string names → constructors, so
+//!   backend selection is data, not a `match`.
 //!
 //! Layouts match the kernels: `u[e][k][j][i]`, `g[e][m][k][j][i]`,
 //! `d[i][j]` row-major (see `python/compile/kernels/ref.py`).
+//!
+//! ## Adding a backend
+//!
+//! A new schedule variant (SIMD, cached-plan, sharded, a future GPU path)
+//! plugs in without touching any dispatch site:
+//!
+//! 1. Implement [`AxOperator`]. `setup` receives an [`OperatorCtx`] with the
+//!    problem shape and the mesh data (`d`, `g`, `c`); clone what `apply`
+//!    needs. `apply` computes `w = A_local u` — no dssum, no mask; the
+//!    solver applies those.
+//! 2. Register a constructor under a unique kebab-case name:
+//!    `registry.register("my-op", false, || Box::new(MyOp::default()))`.
+//! 3. Build through the application builder:
+//!    `Nekbone::builder(cfg).registry(registry).operator("my-op").build()`.
+//!
+//! Every consumer — the CLI, the CG solver, the simulated-rank runtime, the
+//! paper-figure benches — resolves operators by name through the registry,
+//! so a registered variant is immediately runnable everywhere.
 
-mod naive;
 mod layered;
+mod naive;
+pub mod registry;
 mod threaded;
 
 pub use layered::ax_layered;
 pub use naive::ax_naive;
+pub use registry::{OperatorRegistry, OperatorSpec};
 pub use threaded::ax_threaded;
+
+use std::rc::Rc;
+
+use crate::error::Result;
+use crate::runtime::XlaRuntime;
 
 /// Floating-point operations of one local-Ax application, counted exactly
 /// as the paper's Eq. (1) does for the tensor part: `12 n + 15` flops per
@@ -27,33 +57,71 @@ pub fn ax_flops(n: usize, nelt: usize) -> u64 {
     per_point * (nelt as u64) * (n as u64).pow(3)
 }
 
-/// Dispatchable CPU variant.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CpuVariant {
-    /// Listing-1 structure with full-size intermediates ("global memory").
-    Naive,
-    /// Layer-by-layer sweep, the paper's schedule on CPU.
-    Layered,
-    /// Layered, parallelized over elements with std threads.
-    Threaded,
+/// Everything an operator needs to bind itself to one problem: the shape,
+/// the launch chunking, and the mesh data. Borrowed — implementations clone
+/// (or upload) what `apply` will need, so during `setup` the caller's copy
+/// of `g` and the operator's coexist; callers drop theirs right after
+/// (the builder drops `geom`, the rank runtime clears `slab.g`).
+pub struct OperatorCtx<'a> {
+    /// GLL points per dimension.
+    pub n: usize,
+    /// Local element count.
+    pub nelt: usize,
+    /// Elements per accelerator launch (ignored by CPU operators).
+    pub chunk: usize,
+    /// Worker threads for threaded operators (0 = all cores).
+    pub threads: usize,
+    /// Directory holding `manifest.json` + AOT artifacts.
+    pub artifacts_dir: &'a str,
+    /// Differentiation matrix, `n * n`, row-major.
+    pub d: &'a [f64],
+    /// Geometric factors, `nelt * 6 * n^3`.
+    pub g: &'a [f64],
+    /// Inverse multiplicity (inner-product weights), `nelt * n^3`.
+    pub c: &'a [f64],
 }
 
-impl CpuVariant {
-    /// Apply the variant. `w` must be `nelt * n^3` and is overwritten.
-    pub fn apply(
-        &self,
-        n: usize,
-        nelt: usize,
-        u: &[f64],
-        d: &[f64],
-        g: &[f64],
-        w: &mut [f64],
-    ) {
-        match self {
-            CpuVariant::Naive => ax_naive(n, nelt, u, d, g, w),
-            CpuVariant::Layered => ax_layered(n, nelt, u, d, g, w),
-            CpuVariant::Threaded => ax_threaded(n, nelt, u, d, g, w, 0),
-        }
+/// One local-Ax implementation: `apply` computes `w = A_local(u)` over the
+/// whole local mesh (`nelt * n^3` dofs), with no dssum and no mask — the
+/// solver layers those on top.
+///
+/// Object-safe by design: the application, the rank runtime, and the
+/// benches all hold a `Box<dyn AxOperator>` built by name through the
+/// [`OperatorRegistry`], so adding an implementation never touches a
+/// dispatch site.
+pub trait AxOperator {
+    /// Stable display name; for registered operators this is the canonical
+    /// registry name, so it parses back to the same operator.
+    fn label(&self) -> String;
+
+    /// Bind to one problem: validate shapes, clone/upload mesh data,
+    /// compile/load artifacts. Must be called before `apply`.
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()>;
+
+    /// `w <- A_local(u)`. Both slices are `nelt * n^3` as given at setup.
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()>;
+
+    /// Flops of one `apply` by the paper's Eq. (1) tensor-part count
+    /// (0 before `setup`).
+    fn flops(&self) -> u64;
+
+    /// Does `apply` also compute the CG `pap` reduction in the same pass
+    /// (the fused hot path)? Fused operators make [`AxOperator::last_pap`]
+    /// available after each `apply`.
+    fn is_fused(&self) -> bool {
+        false
+    }
+
+    /// The fused `pap = sum(w * c * u)` from the most recent `apply`;
+    /// `None` for unfused operators or before the first application.
+    fn last_pap(&self) -> Option<f64> {
+        None
+    }
+
+    /// The PJRT runtime backing this operator, when there is one (lets the
+    /// vector-algebra offload share the operator's client and buffers).
+    fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
+        None
     }
 }
 
@@ -125,6 +193,30 @@ mod tests {
         (u, d, g)
     }
 
+    /// Build every registered CPU operator for the given inputs.
+    fn cpu_operators(
+        n: usize,
+        nelt: usize,
+        d: &[f64],
+        g: &[f64],
+    ) -> Vec<Box<dyn AxOperator>> {
+        let reg = OperatorRegistry::with_builtins();
+        let ctx = OperatorCtx {
+            n,
+            nelt,
+            chunk: nelt.max(1),
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d,
+            g,
+            c: &[],
+        };
+        ["cpu-naive", "cpu-layered", "cpu-threaded"]
+            .iter()
+            .map(|name| reg.build(name, &ctx).expect("cpu operator setup"))
+            .collect()
+    }
+
     #[test]
     fn all_variants_match_listing1() {
         crate::proputil::forall(0xAE, 12, |c| {
@@ -132,9 +224,9 @@ mod tests {
             let nelt = c.size(1, 4);
             let (u, d, g) = random_inputs(c, n, nelt);
             let want = ax_listing1(n, nelt, &u, &d, &g);
-            for variant in [CpuVariant::Naive, CpuVariant::Layered, CpuVariant::Threaded] {
+            for mut op in cpu_operators(n, nelt, &d, &g) {
                 let mut w = vec![0.0; nelt * n * n * n];
-                variant.apply(n, nelt, &u, &d, &g, &mut w);
+                op.apply(&u, &mut w).unwrap();
                 assert_allclose(&w, &want, 1e-11, 1e-11);
             }
         });
@@ -146,9 +238,9 @@ mod tests {
         let (n, nelt) = (10, 4);
         let (u, d, g) = random_inputs(&mut c, n, nelt);
         let want = ax_listing1(n, nelt, &u, &d, &g);
-        for variant in [CpuVariant::Naive, CpuVariant::Layered, CpuVariant::Threaded] {
+        for mut op in cpu_operators(n, nelt, &d, &g) {
             let mut w = vec![0.0; nelt * n * n * n];
-            variant.apply(n, nelt, &u, &d, &g, &mut w);
+            op.apply(&u, &mut w).unwrap();
             assert_allclose(&w, &want, 1e-11, 1e-11);
         }
     }
@@ -160,10 +252,20 @@ mod tests {
         let u = vec![1.0; nelt * n * n * n];
         let d = crate::basis::derivative_matrix(n);
         let g = c.vec_normal(nelt * 6 * n * n * n);
-        for variant in [CpuVariant::Naive, CpuVariant::Layered, CpuVariant::Threaded] {
+        for mut op in cpu_operators(n, nelt, &d, &g) {
             let mut w = vec![1.0; nelt * n * n * n];
-            variant.apply(n, nelt, &u, &d, &g, &mut w);
-            assert!(w.iter().all(|&x| x.abs() < 1e-9));
+            op.apply(&u, &mut w).unwrap();
+            assert!(w.iter().all(|&x| x.abs() < 1e-9), "{}", op.label());
+        }
+    }
+
+    #[test]
+    fn operator_flops_match_formula() {
+        let (n, nelt) = (5, 3);
+        let d = crate::basis::derivative_matrix(n);
+        let g = vec![0.0; nelt * 6 * n * n * n];
+        for op in cpu_operators(n, nelt, &d, &g) {
+            assert_eq!(op.flops(), ax_flops(n, nelt), "{}", op.label());
         }
     }
 

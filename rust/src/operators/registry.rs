@@ -1,0 +1,560 @@
+//! The operator registry: string names → [`AxOperator`] constructors.
+//!
+//! This is the **only** module that knows which concrete operator backs
+//! which name. Everything else — the application builder, the CLI, the
+//! rank runtime, the benches — resolves operators by name through
+//! [`OperatorRegistry`] and dispatches through `Box<dyn AxOperator>`.
+//!
+//! Canonical names are chosen so that `label()` output is re-parseable:
+//! every operator's label **is** its canonical registry name. Aliases
+//! (`xla-openacc` → `xla-jnp`, `xla-fused` → `xla-fused-layered`) resolve
+//! to the canonical entry at parse time.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::operators::{ax_flops, ax_layered, ax_naive, ax_threaded, AxOperator, OperatorCtx};
+use crate::runtime::{AxEngine, CgIterEngine, Manifest, XlaRuntime};
+
+/// Constructor for a blank (un-setup) operator.
+pub type OperatorCtor = Box<dyn Fn() -> Box<dyn AxOperator> + Send + Sync>;
+
+/// One registered operator: canonical name, artifact requirement, and the
+/// constructor.
+pub struct OperatorSpec {
+    /// Canonical registry name (also the operator's label).
+    pub name: String,
+    /// Does the operator load AOT artifacts / the PJRT runtime?
+    pub needs_artifacts: bool,
+    ctor: OperatorCtor,
+}
+
+impl OperatorSpec {
+    /// Construct a blank operator (call `setup` before `apply`).
+    pub fn create(&self) -> Box<dyn AxOperator> {
+        (self.ctor)()
+    }
+}
+
+/// Maps operator names to constructors. Third parties (tests, benches,
+/// downstream crates) register additional variants at runtime; the
+/// application builder accepts a custom registry.
+pub struct OperatorRegistry {
+    specs: BTreeMap<String, OperatorSpec>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Default for OperatorRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+impl OperatorRegistry {
+    /// An empty registry (no names resolve).
+    pub fn empty() -> Self {
+        OperatorRegistry { specs: BTreeMap::new(), aliases: BTreeMap::new() }
+    }
+
+    /// The built-in operator family: the three CPU schedules, the paper's
+    /// five AOT kernel variants, and the fused Ax+pap hot path.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        let must = |res: Result<()>| res.expect("builtin registration cannot clash");
+        must(r.register("cpu-naive", false, || Box::new(CpuOp::new("cpu-naive", kernel_naive))));
+        must(r.register("cpu-layered", false, || {
+            Box::new(CpuOp::new("cpu-layered", kernel_layered))
+        }));
+        must(r.register("cpu-threaded", false, || {
+            Box::new(CpuOp::new("cpu-threaded", kernel_threaded))
+        }));
+        for variant in ["jnp", "original", "shared", "layered", "layered_unroll2"] {
+            must(r.register(&xla_name(variant), true, move || {
+                Box::new(XlaAxOp::new(variant))
+            }));
+        }
+        must(r.register("xla-fused-layered", true, || Box::new(XlaFusedOp::new("layered"))));
+        must(r.alias("xla-openacc", "xla-jnp"));
+        must(r.alias("xla-fused", "xla-fused-layered"));
+        r
+    }
+
+    /// Register a constructor under a canonical name. Errors if the name
+    /// (or an alias of it) is already taken.
+    pub fn register(
+        &mut self,
+        name: &str,
+        needs_artifacts: bool,
+        ctor: impl Fn() -> Box<dyn AxOperator> + Send + Sync + 'static,
+    ) -> Result<()> {
+        if self.specs.contains_key(name) || self.aliases.contains_key(name) {
+            return Err(Error::Config(format!(
+                "operator {name:?} is already registered (registered: {})",
+                self.known_names().join(", ")
+            )));
+        }
+        self.specs.insert(
+            name.to_string(),
+            OperatorSpec { name: name.to_string(), needs_artifacts, ctor: Box::new(ctor) },
+        );
+        Ok(())
+    }
+
+    /// Register an alias for an existing canonical name.
+    pub fn alias(&mut self, alias: &str, target: &str) -> Result<()> {
+        if self.specs.contains_key(alias) || self.aliases.contains_key(alias) {
+            return Err(Error::Config(format!("operator alias {alias:?} is already taken")));
+        }
+        if !self.specs.contains_key(target) {
+            return Err(Error::Config(format!(
+                "alias {alias:?} targets unregistered operator {target:?}"
+            )));
+        }
+        self.aliases.insert(alias.to_string(), target.to_string());
+        Ok(())
+    }
+
+    /// Resolve a name (canonical or alias) to its spec. The error for an
+    /// unknown name lists every registered name.
+    pub fn resolve(&self, name: &str) -> Result<&OperatorSpec> {
+        let canonical = self.aliases.get(name).map(String::as_str).unwrap_or(name);
+        self.specs.get(canonical).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown operator {name:?}; registered operators: {}",
+                self.known_names().join(", ")
+            ))
+        })
+    }
+
+    /// Is the name (canonical or alias) registered?
+    pub fn contains(&self, name: &str) -> bool {
+        self.specs.contains_key(name) || self.aliases.contains_key(name)
+    }
+
+    /// Construct a blank operator by name (no setup).
+    pub fn create(&self, name: &str) -> Result<Box<dyn AxOperator>> {
+        Ok(self.resolve(name)?.create())
+    }
+
+    /// Construct and set up an operator for one problem.
+    pub fn build(&self, name: &str, ctx: &OperatorCtx) -> Result<Box<dyn AxOperator>> {
+        let mut op = self.create(name)?;
+        op.setup(ctx)?;
+        Ok(op)
+    }
+
+    /// Canonical names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.specs.keys().cloned().collect()
+    }
+
+    /// Canonical names + aliases, sorted (for error messages and `info`).
+    pub fn known_names(&self) -> Vec<String> {
+        let mut all: Vec<String> =
+            self.specs.keys().chain(self.aliases.keys()).cloned().collect();
+        all.sort();
+        all
+    }
+}
+
+/// Canonical registry name of an XLA kernel variant
+/// (`layered_unroll2` → `xla-layered-unroll2`).
+fn xla_name(variant: &str) -> String {
+    format!("xla-{}", variant.replace('_', "-"))
+}
+
+// ---------------------------------------------------------------------------
+// CPU operators
+// ---------------------------------------------------------------------------
+
+/// Shape + cloned mesh data shared by the CPU operators.
+struct CpuState {
+    n: usize,
+    nelt: usize,
+    threads: usize,
+    d: Vec<f64>,
+    g: Vec<f64>,
+}
+
+impl CpuState {
+    fn capture(ctx: &OperatorCtx) -> Result<Self> {
+        let np = ctx.n * ctx.n * ctx.n;
+        if ctx.d.len() != ctx.n * ctx.n {
+            return Err(Error::Config(format!(
+                "operator setup: d must be n*n = {}, got {}",
+                ctx.n * ctx.n,
+                ctx.d.len()
+            )));
+        }
+        if ctx.g.len() != ctx.nelt * 6 * np {
+            return Err(Error::Config(format!(
+                "operator setup: g must be nelt*6*n^3 = {}, got {}",
+                ctx.nelt * 6 * np,
+                ctx.g.len()
+            )));
+        }
+        Ok(CpuState {
+            n: ctx.n,
+            nelt: ctx.nelt,
+            threads: ctx.threads,
+            d: ctx.d.to_vec(),
+            g: ctx.g.to_vec(),
+        })
+    }
+
+    fn check_lengths(&self, u: &[f64], w: &[f64]) -> Result<()> {
+        let ndof = self.nelt * self.n * self.n * self.n;
+        if u.len() != ndof || w.len() != ndof {
+            return Err(Error::Config(format!(
+                "operator apply: fields must be nelt*n^3 = {ndof}, got u={} w={}",
+                u.len(),
+                w.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn not_setup(label: &str) -> Error {
+    Error::Config(format!("operator {label:?} used before setup"))
+}
+
+/// Unified CPU-kernel signature; the trailing argument is the thread count
+/// (ignored by the single-thread schedules).
+type CpuKernel = fn(usize, usize, &[f64], &[f64], &[f64], &mut [f64], usize);
+
+fn kernel_naive(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64], _t: usize) {
+    ax_naive(n, nelt, u, d, g, w);
+}
+
+fn kernel_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64], _t: usize) {
+    ax_layered(n, nelt, u, d, g, w);
+}
+
+fn kernel_threaded(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64], t: usize) {
+    ax_threaded(n, nelt, u, d, g, w, t);
+}
+
+/// A CPU schedule behind the operator trait: `cpu-naive` (Listing-1
+/// structure, full-size intermediates), `cpu-layered` (the paper's
+/// schedule, one thread), `cpu-threaded` (layered across cores — the
+/// paper's CPU/MPI baseline).
+struct CpuOp {
+    label: &'static str,
+    kernel: CpuKernel,
+    st: Option<CpuState>,
+}
+
+impl CpuOp {
+    fn new(label: &'static str, kernel: CpuKernel) -> Self {
+        CpuOp { label, kernel, st: None }
+    }
+}
+
+impl AxOperator for CpuOp {
+    fn label(&self) -> String {
+        self.label.into()
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        self.st = Some(CpuState::capture(ctx)?);
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let st = self.st.as_ref().ok_or_else(|| not_setup(self.label))?;
+        st.check_lengths(u, w)?;
+        (self.kernel)(st.n, st.nelt, u, &st.d, &st.g, w, st.threads);
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA operators (AOT artifacts through the PJRT runtime)
+// ---------------------------------------------------------------------------
+
+struct XlaAxState {
+    rt: Rc<XlaRuntime>,
+    engine: AxEngine,
+    n: usize,
+    nelt: usize,
+}
+
+/// An AOT-compiled kernel variant run via PJRT: "jnp" (OpenACC analog),
+/// "original", "shared", "layered" (the paper's contribution),
+/// "layered_unroll2" (CUDA-Fortran analog).
+struct XlaAxOp {
+    variant: &'static str,
+    st: Option<XlaAxState>,
+}
+
+impl XlaAxOp {
+    fn new(variant: &'static str) -> Self {
+        XlaAxOp { variant, st: None }
+    }
+}
+
+impl AxOperator for XlaAxOp {
+    fn label(&self) -> String {
+        xla_name(self.variant)
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        // Check artifact presence before constructing the PJRT client, so a
+        // missing artifact reports as an Artifact error even when the
+        // native runtime is unavailable.
+        let manifest = Manifest::load(ctx.artifacts_dir)?;
+        manifest.find_ax(self.variant, ctx.n, ctx.chunk)?;
+        let rt = Rc::new(XlaRuntime::with_manifest(manifest)?);
+        let engine =
+            AxEngine::new(&rt, self.variant, ctx.n, ctx.chunk, ctx.nelt, ctx.d, ctx.g)?;
+        self.st = Some(XlaAxState { rt, engine, n: ctx.n, nelt: ctx.nelt });
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let variant = self.variant;
+        let st = self.st.as_mut().ok_or_else(|| not_setup(&xla_name(variant)))?;
+        st.engine.apply(&st.rt, u, w)
+    }
+
+    fn flops(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+
+    fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
+        self.st.as_ref().map(|s| Rc::clone(&s.rt))
+    }
+}
+
+struct XlaFusedState {
+    rt: Rc<XlaRuntime>,
+    engine: CgIterEngine,
+    n: usize,
+    nelt: usize,
+}
+
+/// The fused Ax + partial-pap executable (perf-pass hot path): one launch
+/// per chunk computes `w = Ax(p)` and the partial `pap` reduction.
+struct XlaFusedOp {
+    variant: &'static str,
+    st: Option<XlaFusedState>,
+    last_pap: Option<f64>,
+}
+
+impl XlaFusedOp {
+    fn new(variant: &'static str) -> Self {
+        XlaFusedOp { variant, st: None, last_pap: None }
+    }
+}
+
+/// Canonical registry name of a fused variant
+/// (`layered` → `xla-fused-layered`).
+fn fused_name(variant: &str) -> String {
+    format!("xla-fused-{}", variant.replace('_', "-"))
+}
+
+impl AxOperator for XlaFusedOp {
+    fn label(&self) -> String {
+        fused_name(self.variant)
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        let manifest = Manifest::load(ctx.artifacts_dir)?;
+        manifest.find(&format!("cg_iter_{}_n{}_e{}", self.variant, ctx.n, ctx.chunk))?;
+        let rt = Rc::new(XlaRuntime::with_manifest(manifest)?);
+        let engine = CgIterEngine::new(
+            &rt,
+            self.variant,
+            ctx.n,
+            ctx.chunk,
+            ctx.nelt,
+            ctx.d,
+            ctx.g,
+            ctx.c,
+        )?;
+        self.st = Some(XlaFusedState { rt, engine, n: ctx.n, nelt: ctx.nelt });
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let variant = self.variant;
+        let st = self.st.as_mut().ok_or_else(|| not_setup(&fused_name(variant)))?;
+        let pap = st.engine.apply(&st.rt, u, w)?;
+        self.last_pap = Some(pap);
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+
+    fn is_fused(&self) -> bool {
+        true
+    }
+
+    fn last_pap(&self) -> Option<f64> {
+        self.last_pap
+    }
+
+    fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
+        self.st.as_ref().map(|s| Rc::clone(&s.rt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::assert_allclose;
+
+    fn tiny_ctx<'a>(n: usize, nelt: usize, d: &'a [f64], g: &'a [f64]) -> OperatorCtx<'a> {
+        OperatorCtx {
+            n,
+            nelt,
+            chunk: nelt,
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d,
+            g,
+            c: &[],
+        }
+    }
+
+    #[test]
+    fn builtins_present() {
+        let r = OperatorRegistry::with_builtins();
+        for name in [
+            "cpu-naive",
+            "cpu-layered",
+            "cpu-threaded",
+            "xla-jnp",
+            "xla-original",
+            "xla-shared",
+            "xla-layered",
+            "xla-layered-unroll2",
+            "xla-fused-layered",
+        ] {
+            assert!(r.contains(name), "missing builtin {name}");
+            assert_eq!(r.resolve(name).unwrap().name, name);
+        }
+        // Aliases resolve to their canonical entries.
+        assert_eq!(r.resolve("xla-openacc").unwrap().name, "xla-jnp");
+        assert_eq!(r.resolve("xla-fused").unwrap().name, "xla-fused-layered");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered() {
+        let r = OperatorRegistry::with_builtins();
+        let err = r.resolve("cuda").unwrap_err().to_string();
+        for name in r.known_names() {
+            assert!(err.contains(&name), "error {err:?} missing {name}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_errors() {
+        let mut r = OperatorRegistry::with_builtins();
+        let dup = || Box::new(CpuOp::new("dup", kernel_layered)) as Box<dyn AxOperator>;
+        let err = r.register("cpu-layered", false, dup);
+        assert!(err.is_err(), "duplicate canonical name accepted");
+        // A name colliding with an alias is also rejected.
+        let err = r.register("xla-fused", false, dup);
+        assert!(err.is_err(), "name shadowing an alias accepted");
+        // And so is a duplicate alias, or an alias to nothing.
+        assert!(r.alias("xla-openacc", "cpu-naive").is_err());
+        assert!(r.alias("fresh-alias", "no-such-op").is_err());
+    }
+
+    #[test]
+    fn labels_are_canonical_names() {
+        // Every builtin's label is exactly its canonical registry name, so
+        // labels printed in reports/benches parse back to the operator.
+        let r = OperatorRegistry::with_builtins();
+        for name in r.names() {
+            let op = r.create(&name).unwrap();
+            assert_eq!(op.label(), name);
+        }
+    }
+
+    #[test]
+    fn custom_operator_registers_and_applies() {
+        /// Test-only operator: identity (w = u).
+        #[derive(Default)]
+        struct IdentityOp {
+            ndof: usize,
+        }
+        impl AxOperator for IdentityOp {
+            fn label(&self) -> String {
+                "test-identity".into()
+            }
+            fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+                self.ndof = ctx.nelt * ctx.n * ctx.n * ctx.n;
+                Ok(())
+            }
+            fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+                if u.len() != self.ndof {
+                    return Err(Error::Config("identity: length mismatch".into()));
+                }
+                w.copy_from_slice(u);
+                Ok(())
+            }
+            fn flops(&self) -> u64 {
+                0
+            }
+        }
+
+        let mut r = OperatorRegistry::with_builtins();
+        r.register("test-identity", false, || Box::<IdentityOp>::default()).unwrap();
+        let n = 3;
+        let d = crate::basis::derivative_matrix(n);
+        let g = vec![0.0; 6 * n * n * n];
+        let mut op = r.build("test-identity", &tiny_ctx(n, 1, &d, &g)).unwrap();
+        let u: Vec<f64> = (0..n * n * n).map(|i| i as f64).collect();
+        let mut w = vec![0.0; n * n * n];
+        op.apply(&u, &mut w).unwrap();
+        assert_eq!(u, w);
+    }
+
+    #[test]
+    fn cpu_operators_validate_shapes() {
+        let r = OperatorRegistry::with_builtins();
+        let n = 3;
+        let d = crate::basis::derivative_matrix(n);
+        let g = vec![0.0; 6 * n * n * n];
+        // Wrong g length at setup.
+        let bad = OperatorCtx { g: &g[..10], ..tiny_ctx(n, 1, &d, &g) };
+        assert!(r.build("cpu-layered", &bad).is_err());
+        // Wrong field length at apply.
+        let mut op = r.build("cpu-layered", &tiny_ctx(n, 1, &d, &g)).unwrap();
+        let mut w = vec![0.0; 5];
+        assert!(op.apply(&[0.0; 27], &mut w).is_err());
+        // Un-setup operator refuses to apply.
+        let mut blank = r.create("cpu-layered").unwrap();
+        let mut w = vec![0.0; 27];
+        assert!(blank.apply(&[0.0; 27], &mut w).is_err());
+    }
+
+    #[test]
+    fn registry_built_cpu_ops_agree() {
+        let n = 4;
+        let nelt = 2;
+        let mut rng = crate::rng::Rng::new(42);
+        let u = rng.normal_vec(nelt * n * n * n);
+        let g = rng.normal_vec(nelt * 6 * n * n * n);
+        let d = crate::basis::derivative_matrix(n);
+        let r = OperatorRegistry::with_builtins();
+        let mut want = vec![0.0; nelt * n * n * n];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        for name in ["cpu-naive", "cpu-layered", "cpu-threaded"] {
+            let mut op = r.build(name, &tiny_ctx(n, nelt, &d, &g)).unwrap();
+            let mut w = vec![0.0; nelt * n * n * n];
+            op.apply(&u, &mut w).unwrap();
+            assert_allclose(&w, &want, 1e-11, 1e-11);
+        }
+    }
+}

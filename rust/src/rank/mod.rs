@@ -8,9 +8,10 @@
 //! exactly the communication structure of the real code, with
 //! `std::sync::mpsc` standing in for MPI.
 //!
-//! The per-rank compute uses the layered CPU operator (the paper's
-//! multi-GPU runs are out of scope; its CPU baseline is MPI-parallel, which
-//! this reproduces on one node).
+//! The per-rank compute dispatches through a `Box<dyn AxOperator>` built by
+//! name from the [`OperatorRegistry`], so any registered operator (default:
+//! the paper's layered CPU schedule, the CPU/MPI baseline) runs inside the
+//! rank loop without this module knowing about it.
 
 mod comm;
 
@@ -26,8 +27,11 @@ use crate::geometry::GeomFactors;
 use crate::gs::GatherScatter;
 use crate::mesh::Mesh;
 use crate::metrics::CostModel;
-use crate::operators::ax_layered;
+use crate::operators::{OperatorCtx, OperatorRegistry};
 use crate::solver::{add2s1, add2s2, glsc3, mask_apply};
+
+/// The operator each rank runs when the caller does not pick one.
+pub const DEFAULT_RANK_OPERATOR: &str = "cpu-layered";
 
 /// How one rank sees the mesh.
 struct RankSlab {
@@ -180,18 +184,37 @@ fn dssum_ranked(
 }
 
 /// SPMD CG over the slabs. Mirrors `solver::cg_solve` with allreduce in
-/// place of plain sums and `dssum_ranked` in place of serial dssum.
+/// place of plain sums, `dssum_ranked` in place of serial dssum, and the
+/// rank-local operator built by name from the registry.
 fn rank_main(
     mut slab: RankSlab,
     mut comm: Comm,
-    n: usize,
-    niter: usize,
-    no_comm: bool,
+    cfg: &RunConfig,
+    operator: &str,
+    registry: &OperatorRegistry,
 ) -> Result<(f64, f64)> {
+    let n = cfg.n;
     let np = n * n * n;
     let nelt_local = slab.e1 - slab.e0;
     let ndof = nelt_local * np;
     let d = crate::basis::derivative_matrix(n);
+
+    // Each rank owns its operator instance, set up on the slab's data.
+    let ctx = OperatorCtx {
+        n,
+        nelt: nelt_local,
+        chunk: cfg.chunk,
+        threads: cfg.cpu_threads,
+        artifacts_dir: &cfg.artifacts_dir,
+        d: &d,
+        g: &slab.g,
+        c: &slab.c,
+    };
+    let mut op = registry.build(operator, &ctx)?;
+    // The operator cloned (or uploaded) what it needs from the slab's
+    // geometric factors; free the slab copy so the two don't coexist for
+    // the whole solve (mirrors the serial pipeline dropping `geom`).
+    slab.g = Vec::new();
 
     let mut x = vec![0.0; ndof];
     let mut r = slab.f.clone();
@@ -201,7 +224,7 @@ fn rank_main(
     let mut rtz1 = 1.0f64;
     let mut ax_seconds = 0.0;
 
-    for iter in 0..niter {
+    for iter in 0..cfg.niter {
         // Tag layout: bits 3.. = iteration, bits 0..3 = collective id,
         // bits 16.. reserved for the halo pair id (see dssum_ranked).
         let tag_base = (iter as u64 + 1) << 3;
@@ -212,9 +235,9 @@ fn rank_main(
         add2s1(&mut p, &r, beta);
 
         let t0 = Instant::now();
-        ax_layered(n, nelt_local, &p, &d, &slab.g, &mut w);
+        op.apply(&p, &mut w)?;
         ax_seconds += t0.elapsed().as_secs_f64();
-        if !no_comm {
+        if !cfg.no_comm {
             dssum_ranked(&mut slab, &mut comm, &mut w, tag_base | 1)?;
         }
         mask_apply(&mut w, &slab.mask);
@@ -234,17 +257,35 @@ fn rank_main(
     Ok((rr.max(0.0).sqrt(), ax_seconds))
 }
 
-/// Run Nekbone across `cfg.ranks` simulated ranks; returns the report (the
-/// global residual, wall time of the slowest rank path).
+/// Run Nekbone across `cfg.ranks` simulated ranks with the default
+/// operator ([`DEFAULT_RANK_OPERATOR`]).
 pub fn run_ranked(cfg: &RunConfig) -> Result<RunReport> {
+    run_ranked_with(cfg, DEFAULT_RANK_OPERATOR)
+}
+
+/// Run Nekbone across `cfg.ranks` simulated ranks, with the per-rank local
+/// operator built by registry name from the built-in registry; returns the
+/// report (the global residual, wall time of the slowest rank path).
+pub fn run_ranked_with(cfg: &RunConfig, operator: &str) -> Result<RunReport> {
+    run_ranked_in(cfg, operator, &OperatorRegistry::with_builtins())
+}
+
+/// [`run_ranked_with`] against a caller-supplied registry, so
+/// runtime-registered operators run ranked too (the registry is shared by
+/// reference across the rank threads).
+pub fn run_ranked_in(
+    cfg: &RunConfig,
+    operator: &str,
+    registry: &OperatorRegistry,
+) -> Result<RunReport> {
     cfg.validate()?;
+    // Fail fast on unknown operators (and get the canonical label) before
+    // spawning any rank thread.
+    let label = registry.resolve(operator)?.name.clone();
     let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
     let basis = Basis::new(cfg.n);
     let slabs = build_slabs(&mesh, &basis, cfg)?;
     let comms = Comm::mesh(cfg.ranks);
-    let n = cfg.n;
-    let niter = cfg.niter;
-    let no_comm = cfg.no_comm;
 
     let sw = Instant::now();
     let mut results = Vec::with_capacity(cfg.ranks);
@@ -252,7 +293,7 @@ pub fn run_ranked(cfg: &RunConfig) -> Result<RunReport> {
         let handles: Vec<_> = slabs
             .into_iter()
             .zip(comms)
-            .map(|(slab, comm)| scope.spawn(move || rank_main(slab, comm, n, niter, no_comm)))
+            .map(|(slab, comm)| scope.spawn(|| rank_main(slab, comm, cfg, &label, registry)))
             .collect();
         for h in handles {
             results.push(h.join().map_err(|_| Error::Rank("rank thread panicked".into())));
@@ -269,14 +310,14 @@ pub fn run_ranked(cfg: &RunConfig) -> Result<RunReport> {
     }
     let cm = CostModel::new(cfg.n, cfg.nelt);
     Ok(RunReport {
-        backend: format!("ranked-cpu-layered-r{}", cfg.ranks),
+        backend: format!("ranked-{}-r{}", label, cfg.ranks),
         nelt: cfg.nelt,
         n: cfg.n,
-        iterations: niter,
+        iterations: cfg.niter,
         final_residual,
         seconds,
         ax_seconds,
-        flops: cm.flops_per_iter() * niter as u64,
+        flops: cm.flops_per_iter() * cfg.niter as u64,
         rnorms: vec![],
     })
 }
@@ -284,7 +325,7 @@ pub fn run_ranked(cfg: &RunConfig) -> Result<RunReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{Backend, Nekbone};
+    use crate::coordinator::Nekbone;
 
     #[test]
     fn slab_ranges_cover() {
@@ -304,7 +345,8 @@ mod tests {
     fn ranked_matches_serial_residual() {
         // The distributed CG must track the serial one to round-off.
         let base = RunConfig { nelt: 8, n: 4, niter: 25, ..Default::default() };
-        let mut serial = Nekbone::new(base.clone(), Backend::CpuLayered).unwrap();
+        let mut serial =
+            Nekbone::builder(base.clone()).operator("cpu-layered").build().unwrap();
         let want = serial.run().unwrap();
         for ranks in [1, 2] {
             let cfg = RunConfig { ranks, ..base.clone() };
@@ -331,6 +373,74 @@ mod tests {
             r1.final_residual,
             r4.final_residual
         );
+    }
+
+    #[test]
+    fn ranked_with_other_cpu_operator_matches() {
+        // Any registered (artifact-free) operator slots into the rank loop.
+        let base = RunConfig { nelt: 8, n: 4, niter: 20, ..Default::default() };
+        let layered = run_ranked_with(&RunConfig { ranks: 2, ..base.clone() }, "cpu-layered")
+            .unwrap();
+        let naive =
+            run_ranked_with(&RunConfig { ranks: 2, ..base.clone() }, "cpu-naive").unwrap();
+        assert!(naive.backend.contains("cpu-naive"), "{}", naive.backend);
+        let denom = layered.final_residual.abs().max(1e-30);
+        assert!(
+            (layered.final_residual - naive.final_residual).abs() / denom < 1e-9,
+            "{} vs {}",
+            layered.final_residual,
+            naive.final_residual
+        );
+    }
+
+    #[test]
+    fn ranked_runs_custom_registry_operator() {
+        use crate::operators::{ax_layered, AxOperator, OperatorCtx};
+
+        /// Test-only operator delegating to the layered kernel.
+        struct Wrapped {
+            st: Option<(usize, usize, Vec<f64>, Vec<f64>)>,
+        }
+        impl AxOperator for Wrapped {
+            fn label(&self) -> String {
+                "test-ranked-custom".into()
+            }
+            fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+                self.st = Some((ctx.n, ctx.nelt, ctx.d.to_vec(), ctx.g.to_vec()));
+                Ok(())
+            }
+            fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+                let (n, nelt, d, g) = self.st.as_ref().unwrap();
+                ax_layered(*n, *nelt, u, d, g, w);
+                Ok(())
+            }
+            fn flops(&self) -> u64 {
+                0
+            }
+        }
+
+        let mut registry = OperatorRegistry::with_builtins();
+        registry
+            .register("test-ranked-custom", false, || Box::new(Wrapped { st: None }))
+            .unwrap();
+        let cfg = RunConfig { nelt: 8, n: 4, niter: 20, ranks: 2, ..Default::default() };
+        let got = run_ranked_in(&cfg, "test-ranked-custom", &registry).unwrap();
+        assert!(got.backend.contains("test-ranked-custom"), "{}", got.backend);
+        let want = run_ranked(&cfg).unwrap();
+        let denom = want.final_residual.abs().max(1e-30);
+        assert!(
+            (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+            "{} vs {}",
+            got.final_residual,
+            want.final_residual
+        );
+    }
+
+    #[test]
+    fn ranked_unknown_operator_fails_fast() {
+        let cfg = RunConfig { nelt: 8, n: 4, niter: 5, ranks: 2, ..Default::default() };
+        let err = run_ranked_with(&cfg, "no-such-op").unwrap_err().to_string();
+        assert!(err.contains("no-such-op"), "{err}");
     }
 
     #[test]

@@ -28,7 +28,12 @@ pub struct XlaRuntime {
 impl XlaRuntime {
     /// Connect to the CPU PJRT client and load `<dir>/manifest.json`.
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
+        Self::with_manifest(Manifest::load(artifacts_dir)?)
+    }
+
+    /// Connect to the CPU PJRT client with an already-loaded manifest
+    /// (avoids re-reading `manifest.json` when the caller has checked it).
+    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
         Ok(XlaRuntime { client, manifest })
     }

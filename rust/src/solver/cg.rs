@@ -38,6 +38,24 @@ where
     }
 }
 
+/// Run [`cg_solve`] with a trait-based operator (anything built through
+/// the [`OperatorRegistry`](crate::operators::OperatorRegistry)): the
+/// operator's `apply` is the local Ax hook.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_solve_op(
+    op: &mut dyn crate::operators::AxOperator,
+    gs: Option<&mut GatherScatter>,
+    mask: Option<&[f64]>,
+    c: &[f64],
+    f: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    ws: &mut CgWorkspace,
+) -> Result<CgReport> {
+    let mut ax = |p: &[f64], w: &mut [f64]| -> Result<()> { op.apply(p, w) };
+    cg_solve(&mut ax, gs, mask, c, f, x, opts, ws)
+}
+
 /// Solver options.
 #[derive(Clone, Debug)]
 pub struct CgOptions {
@@ -325,6 +343,78 @@ mod tests {
         let mut ws = CgWorkspace::new(n);
         let err = cg_solve(&mut neg, None, None, &c, &f, &mut x, &CgOptions::default(), &mut ws);
         assert!(matches!(err, Err(Error::Numerical(_))));
+    }
+
+    #[test]
+    fn cg_solve_op_routes_registry_operator() {
+        // A registry-built operator drops straight into the solver: same
+        // trajectory as the closure route over the same kernel.
+        use crate::operators::{OperatorCtx, OperatorRegistry};
+        let n = 4;
+        let mesh = crate::mesh::Mesh::new(2, 1, 1, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(3).normal_vec(ndof);
+        {
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            gs.dssum(&mut f);
+        }
+        crate::solver::mask_apply(&mut f, &mask);
+        let opts = CgOptions { niter: 40, rtol: None, record_residuals: false };
+
+        let mut op = OperatorRegistry::with_builtins()
+            .build(
+                "cpu-layered",
+                &OperatorCtx {
+                    n,
+                    nelt: mesh.nelt(),
+                    chunk: mesh.nelt(),
+                    threads: 0,
+                    artifacts_dir: "artifacts",
+                    d: &basis.d,
+                    g: &geom.g,
+                    c: &cw,
+                },
+            )
+            .unwrap();
+        let mut gs = crate::gs::GatherScatter::new(&mesh);
+        let mut x_op = vec![0.0; ndof];
+        let mut ws = CgWorkspace::new(ndof);
+        let rep_op = cg_solve_op(
+            op.as_mut(),
+            Some(&mut gs),
+            Some(&mask),
+            &cw,
+            &f,
+            &mut x_op,
+            &opts,
+            &mut ws,
+        )
+        .unwrap();
+
+        let mut ax = |p: &[f64], w: &mut [f64]| -> Result<()> {
+            crate::operators::ax_layered(n, mesh.nelt(), p, &basis.d, &geom.g, w);
+            Ok(())
+        };
+        let mut gs2 = crate::gs::GatherScatter::new(&mesh);
+        let mut x_cl = vec![0.0; ndof];
+        let mut ws2 = CgWorkspace::new(ndof);
+        let rep_cl = cg_solve(
+            &mut ax,
+            Some(&mut gs2),
+            Some(&mask),
+            &cw,
+            &f,
+            &mut x_cl,
+            &opts,
+            &mut ws2,
+        )
+        .unwrap();
+        assert_eq!(rep_op.iterations, rep_cl.iterations);
+        crate::proputil::assert_allclose(&x_op, &x_cl, 1e-12, 1e-12);
     }
 
     #[test]

@@ -111,7 +111,7 @@ mod tests {
     use crate::basis::Basis;
     use crate::geometry::GeomFactors;
     use crate::mesh::Mesh;
-    use crate::operators::CpuVariant;
+    use crate::operators::ax_layered;
 
     /// The assembled diagonal must match A e_i probed column by column.
     #[test]
@@ -138,7 +138,7 @@ mod tests {
                 }
             }
             let mut w = vec![0.0; ndof];
-            CpuVariant::Layered.apply(n, mesh.nelt(), &e_i, &basis.d, &geom.g, &mut w);
+            ax_layered(n, mesh.nelt(), &e_i, &basis.d, &geom.g, &mut w);
             gs.dssum(&mut w);
             let want = w[probe];
             let got = 1.0 / jac.inv_diag()[probe];

@@ -1,8 +1,10 @@
-//! End-to-end integration: full Nekbone solves across backends, ranked vs
-//! serial, and the paper's no-comm roofline mode.
+//! End-to-end integration: full Nekbone solves across operators, ranked vs
+//! serial, the paper's no-comm roofline mode, and a runtime-registered
+//! custom operator through the builder + registry API.
 
 use nekbone::config::RunConfig;
-use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
+use nekbone::coordinator::{Nekbone, VectorBackend};
+use nekbone::operators::{ax_layered, AxOperator, OperatorCtx, OperatorRegistry};
 use nekbone::rank::run_ranked;
 
 fn have_artifacts() -> bool {
@@ -18,21 +20,27 @@ fn cfg(nelt: usize, n: usize, niter: usize) -> RunConfig {
     RunConfig { nelt, n, niter, ..Default::default() }
 }
 
+fn app(operator: &str, cfg: RunConfig) -> Nekbone {
+    Nekbone::builder(cfg).operator(operator).build().expect("operator setup")
+}
+
 #[test]
 fn xla_backends_match_cpu_end_to_end() {
     if !have_artifacts() {
         return;
     }
     // Full CG: identical residual trajectory on CPU and through PJRT.
-    let mut cpu = Nekbone::new(cfg(64, 10, 15), Backend::CpuLayered).unwrap();
+    let mut cpu = app("cpu-layered", cfg(64, 10, 15));
     let want = cpu.run().unwrap();
-    for variant in ["jnp", "original", "shared", "layered", "layered_unroll2"] {
-        let mut app = Nekbone::new(cfg(64, 10, 15), Backend::Xla(variant.into())).unwrap();
-        let got = app.run().unwrap();
+    for operator in
+        ["xla-jnp", "xla-original", "xla-shared", "xla-layered", "xla-layered-unroll2"]
+    {
+        let mut xla = app(operator, cfg(64, 10, 15));
+        let got = xla.run().unwrap();
         let denom = want.final_residual.abs().max(1e-30);
         assert!(
             (got.final_residual - want.final_residual).abs() / denom < 1e-9,
-            "{variant}: {} vs {}",
+            "{operator}: {} vs {}",
             got.final_residual,
             want.final_residual
         );
@@ -46,10 +54,10 @@ fn xla_padded_mesh_matches_cpu() {
     }
     // nelt = 100 is not a multiple of the chunk: exercises zero-padding
     // through a complete solve (dssum + mask + CG).
-    let mut cpu = Nekbone::new(cfg(100, 10, 10), Backend::CpuLayered).unwrap();
+    let mut cpu = app("cpu-layered", cfg(100, 10, 10));
     let want = cpu.run().unwrap();
-    let mut app = Nekbone::new(cfg(100, 10, 10), Backend::Xla("layered".into())).unwrap();
-    let got = app.run().unwrap();
+    let mut xla = app("xla-layered", cfg(100, 10, 10));
+    let got = xla.run().unwrap();
     let denom = want.final_residual.abs().max(1e-30);
     assert!((got.final_residual - want.final_residual).abs() / denom < 1e-9);
 }
@@ -59,10 +67,12 @@ fn fused_backend_matches_unfused() {
     if !have_artifacts() {
         return;
     }
-    let mut plain = Nekbone::new(cfg(64, 10, 12), Backend::Xla("layered".into())).unwrap();
+    let mut plain = app("xla-layered", cfg(64, 10, 12));
     let want = plain.run().unwrap();
-    let mut fused = Nekbone::new(cfg(64, 10, 12), Backend::XlaFused("layered".into())).unwrap();
+    // Through the alias: "xla-fused" resolves to "xla-fused-layered".
+    let mut fused = app("xla-fused", cfg(64, 10, 12));
     let got = fused.run().unwrap();
+    assert_eq!(got.backend, "xla-fused-layered", "fused label must be canonical");
     let denom = want.final_residual.abs().max(1e-30);
     assert!(
         (got.final_residual - want.final_residual).abs() / denom < 1e-9,
@@ -80,9 +90,9 @@ fn fused_no_comm_uses_fused_pap() {
     // In no-comm, no-mask mode the fused pap is used directly; it must
     // still agree with the plain path.
     let mk = || RunConfig { no_comm: true, no_mask: true, ..cfg(64, 10, 8) };
-    let mut plain = Nekbone::new(mk(), Backend::Xla("layered".into())).unwrap();
+    let mut plain = app("xla-layered", mk());
     let want = plain.run().unwrap();
-    let mut fused = Nekbone::new(mk(), Backend::XlaFused("layered".into())).unwrap();
+    let mut fused = app("xla-fused-layered", mk());
     let got = fused.run().unwrap();
     let denom = want.final_residual.abs().max(1e-30);
     assert!((got.final_residual - want.final_residual).abs() / denom < 1e-9);
@@ -93,10 +103,14 @@ fn vector_backend_xla_matches_rust() {
     if !have_artifacts() {
         return;
     }
-    let mut rust_vec = Nekbone::new(cfg(64, 10, 10), Backend::Xla("layered".into())).unwrap();
+    let mut rust_vec = app("xla-layered", cfg(64, 10, 10));
     let want = rust_vec.run().unwrap();
-    let mut xla_vec = Nekbone::new(cfg(64, 10, 10), Backend::Xla("layered".into())).unwrap();
-    let got = xla_vec.run_vector_backend(VectorBackend::Xla).unwrap();
+    let mut xla_vec = Nekbone::builder(cfg(64, 10, 10))
+        .operator("xla-layered")
+        .vector_backend(VectorBackend::Xla)
+        .build()
+        .unwrap();
+    let got = xla_vec.run().unwrap();
     let denom = want.final_residual.abs().max(1e-30);
     assert!(
         (got.final_residual - want.final_residual).abs() / denom < 1e-8,
@@ -109,7 +123,7 @@ fn vector_backend_xla_matches_rust() {
 #[test]
 fn ranked_matches_serial_on_larger_mesh() {
     let base = RunConfig { nelt: 27, n: 5, niter: 20, ..Default::default() };
-    let mut serial = Nekbone::new(base.clone(), Backend::CpuLayered).unwrap();
+    let mut serial = app("cpu-layered", base.clone());
     let want = serial.run().unwrap();
     for ranks in [1, 3] {
         let got = run_ranked(&RunConfig { ranks, ..base.clone() }).unwrap();
@@ -130,10 +144,89 @@ fn chunk_256_matches_chunk_64() {
     }
     let c64 = cfg(256, 10, 8);
     let c256 = RunConfig { chunk: 256, ..cfg(256, 10, 8) };
-    let mut a = Nekbone::new(c64, Backend::Xla("layered".into())).unwrap();
-    let mut b = Nekbone::new(c256, Backend::Xla("layered".into())).unwrap();
+    let mut a = app("xla-layered", c64);
+    let mut b = app("xla-layered", c256);
     let ra = a.run().unwrap();
     let rb = b.run().unwrap();
     let denom = ra.final_residual.abs().max(1e-30);
     assert!((ra.final_residual - rb.final_residual).abs() / denom < 1e-9);
+}
+
+/// A third-party operator: wraps the layered kernel. Registered at runtime
+/// under a new name and driven through the full application (mesh, dssum,
+/// mask, CG) — no artifacts, no enum variants.
+#[derive(Default)]
+struct CountingLayered {
+    st: Option<(usize, usize, Vec<f64>, Vec<f64>)>,
+}
+
+impl AxOperator for CountingLayered {
+    fn label(&self) -> String {
+        "test-counting-layered".into()
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> nekbone::Result<()> {
+        self.st = Some((ctx.n, ctx.nelt, ctx.d.to_vec(), ctx.g.to_vec()));
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> nekbone::Result<()> {
+        let (n, nelt, d, g) = self.st.as_ref().expect("setup ran");
+        ax_layered(*n, *nelt, u, d, g, w);
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        self.st
+            .as_ref()
+            .map_or(0, |(n, nelt, _, _)| nekbone::operators::ax_flops(*n, *nelt))
+    }
+}
+
+#[test]
+fn runtime_registered_operator_runs_full_cg() {
+    // The acceptance path for the registry API: register a custom operator
+    // at runtime, build the application by name, run a full CG solve, and
+    // match the builtin it wraps.
+    let mut registry = OperatorRegistry::with_builtins();
+    registry
+        .register("test-counting-layered", false, || Box::<CountingLayered>::default())
+        .unwrap();
+
+    let run_cfg = cfg(8, 5, 25);
+    let mut custom = Nekbone::builder(run_cfg.clone())
+        .registry(registry)
+        .operator("test-counting-layered")
+        .build()
+        .unwrap();
+    let got = custom.run().unwrap();
+    assert_eq!(got.backend, "test-counting-layered");
+    assert_eq!(got.iterations, 25);
+
+    let mut builtin = app("cpu-layered", run_cfg);
+    let want = builtin.run().unwrap();
+    let denom = want.final_residual.abs().max(1e-30);
+    assert!(
+        (got.final_residual - want.final_residual).abs() / denom < 1e-12,
+        "custom {} vs builtin {}",
+        got.final_residual,
+        want.final_residual
+    );
+}
+
+#[test]
+fn custom_registry_does_not_leak_into_builtins() {
+    // Registration is per-registry: the builtin set never sees test names.
+    let mut registry = OperatorRegistry::with_builtins();
+    registry
+        .register("test-counting-layered", false, || Box::<CountingLayered>::default())
+        .unwrap();
+    assert!(registry.contains("test-counting-layered"));
+    assert!(!OperatorRegistry::with_builtins().contains("test-counting-layered"));
+    let err = Nekbone::builder(cfg(8, 4, 5))
+        .operator("test-counting-layered")
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.to_string().contains("test-counting-layered"), "{err}");
 }

@@ -6,7 +6,7 @@ use nekbone::basis::Basis;
 use nekbone::geometry::GeomFactors;
 use nekbone::gs::GatherScatter;
 use nekbone::mesh::Mesh;
-use nekbone::operators::CpuVariant;
+use nekbone::operators::ax_layered;
 use nekbone::proputil::{assert_allclose, forall, Cases};
 use nekbone::solver::{glsc3, mask_apply};
 
@@ -20,7 +20,7 @@ fn assembled_ax(
     u: &[f64],
 ) -> Vec<f64> {
     let mut w = vec![0.0; u.len()];
-    CpuVariant::Layered.apply(mesh.n, mesh.nelt(), u, &basis.d, &geom.g, &mut w);
+    ax_layered(mesh.n, mesh.nelt(), u, &basis.d, &geom.g, &mut w);
     gs.dssum(&mut w);
     let mut w2 = w;
     mask_apply(&mut w2, mask);
@@ -94,9 +94,9 @@ fn chunker_padding_is_inert() {
             *v = 1e6;
         }
         let mut w_all = vec![0.0; (real + pad) * np];
-        CpuVariant::Layered.apply(n, real + pad, &u, &d, &g, &mut w_all);
+        ax_layered(n, real + pad, &u, &d, &g, &mut w_all);
         let mut w_real = vec![0.0; real * np];
-        CpuVariant::Layered.apply(n, real, &u[..real * np], &d, &g[..real * 6 * np], &mut w_real);
+        ax_layered(n, real, &u[..real * np], &d, &g[..real * 6 * np], &mut w_real);
         assert_allclose(&w_all[..real * np], &w_real, 1e-12, 1e-12);
         assert!(w_all[real * np..].iter().all(|&x| x == 0.0), "padding produced output");
     });
@@ -124,9 +124,9 @@ fn dssum_of_consistent_field_scales_by_multiplicity() {
 fn solution_vanishes_on_boundary_and_matches_operator() {
     // Solve, then verify A x ≈ f on the masked subspace (true residual).
     use nekbone::config::RunConfig;
-    use nekbone::coordinator::{Backend, Nekbone};
+    use nekbone::coordinator::Nekbone;
     let cfg = RunConfig { nelt: 8, n: 5, niter: 400, ..Default::default() };
-    let mut app = Nekbone::new(cfg, Backend::CpuLayered).unwrap();
+    let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
     let mesh = app.mesh().clone();
     let mut x = vec![0.0; mesh.ndof_local()];
     let rep = app.run_into(Some(&mut x)).unwrap();
@@ -208,7 +208,7 @@ fn jacobi_pcg_converges_no_slower() {
         let jac = Jacobi::assemble(n, mesh.nelt(), &basis.d, &geom.g, &mut gs, Some(&mask))
             .unwrap();
         let mut ax = |p: &[f64], w: &mut [f64]| -> nekbone::Result<()> {
-            CpuVariant::Layered.apply(n, mesh.nelt(), p, &basis.d, &geom.g, w);
+            ax_layered(n, mesh.nelt(), p, &basis.d, &geom.g, w);
             Ok(())
         };
         let mut x = vec![0.0; ndof];

@@ -4,7 +4,7 @@
 //! Requires `make artifacts` (skipped with a message otherwise).
 
 use nekbone::basis::Basis;
-use nekbone::operators::CpuVariant;
+use nekbone::operators::ax_layered;
 use nekbone::proputil::assert_allclose;
 use nekbone::rng::Rng;
 use nekbone::runtime::{AxEngine, XlaRuntime};
@@ -34,7 +34,7 @@ fn parity_for(variant: &str, n: usize, chunk: usize, nelt: usize) {
     engine.apply(&rt, &u, &mut got).expect("apply");
 
     let mut want = vec![0.0; nelt * np];
-    CpuVariant::Layered.apply(n, nelt, &u, &basis.d, &g, &mut want);
+    ax_layered(n, nelt, &u, &basis.d, &g, &mut want);
     assert_allclose(&got, &want, 1e-10, 1e-10);
 }
 
@@ -137,7 +137,7 @@ fn cg_iter_engine_matches_unfused() {
     let pap = engine.apply(&rt, &p, &mut w).unwrap();
 
     let mut w_want = vec![0.0; nelt * np];
-    CpuVariant::Layered.apply(n, nelt, &p, &basis.d, &g, &mut w_want);
+    ax_layered(n, nelt, &p, &basis.d, &g, &mut w_want);
     assert_allclose(&w, &w_want, 1e-10, 1e-10);
     let pap_want = nekbone::solver::glsc3(&w_want, &c, &p);
     assert!(
