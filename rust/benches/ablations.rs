@@ -11,6 +11,9 @@
 //!                      shared-memory version cannot build 11 at all).
 //! * `chunk-size`     — launch-batch sweep 64/256/1024 + the fused Ax+pap
 //!                      executable (dispatch-overhead amortization).
+//! * `cpu-fused`      — the fused Ax+pap CPU hot path (persistent worker
+//!                      pool; one fewer glsc3 full-vector sweep per CG
+//!                      iteration). Runs without artifacts.
 //!
 //! Run all: `cargo bench --bench ablations`
 //! One:     `cargo bench --bench ablations -- unroll`
@@ -113,14 +116,49 @@ fn ablate_chunk(niter: usize) {
     table.print();
 }
 
-fn main() {
-    if !have_artifacts() {
-        return;
+fn ablate_cpu_fused(niter: usize) {
+    println!("\n== cpu-fused: Ax+pap fusion on the persistent worker pool ==");
+    println!("(fused backends skip one glsc3 full-vector sweep per CG iteration)");
+    let mut table = Table::new(&["nelt", "unfused", "GF/s", "fused", "GF/s", "delta"]);
+    for nelt in [64usize, 256] {
+        for (plain, fused) in
+            [("cpu-layered", "cpu-layered-fused"), ("cpu-threaded", "cpu-threaded-fused")]
+        {
+            let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+            let (_s, a, ra) = time_solve(plain, &cfg);
+            let (_s, b, rb) = time_solve(fused, &cfg);
+            // Relative agreement with an absolute floor: at large
+            // NEKBONE_BENCH_ITERS both solves hit the roundoff floor,
+            // where last-bit differences dominate the relative error.
+            assert!(
+                (ra - rb).abs() < 1e-9 * ra.abs() + 1e-12,
+                "{fused} residual diverged from {plain}: {rb} vs {ra}"
+            );
+            table.row(&[
+                nelt.to_string(),
+                plain.into(),
+                format!("{a:.3}"),
+                fused.into(),
+                format!("{b:.3}"),
+                format!("{:+.1}%", 100.0 * (b / a - 1.0)),
+            ]);
+        }
     }
+    table.print();
+}
+
+fn main() {
     let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let all = which.is_empty();
     let niter = bench_iters();
     println!("# ablations, degree 9, {niter} CG iterations per run");
+    // CPU-only ablation: no artifacts needed.
+    if all || which.iter().any(|w| w == "cpu-fused") {
+        ablate_cpu_fused(niter);
+    }
+    if !have_artifacts() {
+        return;
+    }
     if all || which.iter().any(|w| w == "unroll") {
         ablate_unroll(niter);
     }

@@ -110,9 +110,13 @@ COMMON OPTIONS (run/sweep/roofline):
   --chunk N          elements per XLA launch       [64]
   --backend NAME     an operator-registry name     [xla-layered]
                      built-ins: cpu-naive | cpu-layered | cpu-threaded |
+                     cpu-layered-fused | cpu-threaded-fused |
                      xla-jnp (alias xla-openacc) | xla-original |
                      xla-shared | xla-layered | xla-layered-unroll2 |
                      xla-fused-layered (alias xla-fused)
+                     -fused backends compute the CG pap reduction inside
+                     Ax (one fewer full-vector sweep per iteration);
+                     cpu-threaded* run on a persistent worker pool
                      (`nekbone info` prints the live list)
   --vector-backend B rust | xla                    [rust]
   --ranks R          simulated MPI ranks [1]; with an explicit --backend
@@ -178,6 +182,27 @@ mod tests {
     #[test]
     fn non_option_token_rejected() {
         assert!(Args::parse(&["run".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn usage_lists_all_builtin_backends() {
+        // The --backend help must name every registered built-in (aliases
+        // are described inline), so new operators update the help too.
+        // Whole-word match: a bare `contains` would let e.g. "cpu-threaded"
+        // vanish from the help while "cpu-threaded-fused" keeps the test
+        // green.
+        fn listed(text: &str, name: &str) -> bool {
+            let word_char = |c: char| c.is_ascii_alphanumeric() || c == '-';
+            text.match_indices(name).any(|(i, _)| {
+                let before = text[..i].chars().next_back();
+                let after = text[i + name.len()..].chars().next();
+                !before.is_some_and(word_char) && !after.is_some_and(word_char)
+            })
+        }
+        let reg = crate::operators::OperatorRegistry::with_builtins();
+        for name in reg.names() {
+            assert!(listed(USAGE, &name), "USAGE missing backend {name}");
+        }
     }
 
     #[test]

@@ -4,8 +4,6 @@
 //! an [`OperatorRegistry`] and held as a `Box<dyn AxOperator>` — the
 //! application has no knowledge of which implementations exist.
 
-use std::cell::RefCell;
-use std::rc::Rc;
 use std::time::Instant;
 
 use crate::basis::Basis;
@@ -18,7 +16,7 @@ use crate::mesh::Mesh;
 use crate::metrics::CostModel;
 use crate::operators::{AxOperator, OperatorCtx, OperatorRegistry};
 use crate::runtime::XlaRuntime;
-use crate::solver::{cg_solve, glsc3, mask_apply, CgOptions, CgWorkspace};
+use crate::solver::{cg_solve, glsc3, mask_apply, AxApply, CgOptions, CgWorkspace};
 
 /// Everything needed to run Nekbone with one operator on one mesh.
 pub struct Nekbone {
@@ -125,6 +123,31 @@ impl NekboneBuilder {
     }
 }
 
+/// [`AxApply`] adapter that times each operator application and forwards
+/// the fused-pap hooks, so one [`cg_solve`] call serves fused and unfused
+/// operators alike.
+struct TimedAx<'a> {
+    op: &'a mut dyn AxOperator,
+    seconds: f64,
+}
+
+impl AxApply for TimedAx<'_> {
+    fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
+        let t0 = Instant::now();
+        self.op.apply(p, w)?;
+        self.seconds += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn is_fused(&self) -> bool {
+        self.op.is_fused()
+    }
+
+    fn fused_pap(&self) -> Option<f64> {
+        self.op.last_pap()
+    }
+}
+
 impl Nekbone {
     /// Start building an application for this configuration. The default
     /// operator is `cpu-layered` (always available, no artifacts).
@@ -185,39 +208,28 @@ impl Nekbone {
     }
 
     /// The native-Rust vector-algebra CG (the default path), regardless of
-    /// the configured vector backend.
+    /// the configured vector backend. Fused operators take the same route:
+    /// [`cg_solve`] consults the operator's fused-pap hooks (via
+    /// [`TimedAx`]) and skips its own pap sweep.
     fn run_rust_vectors(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
-        if self.op.is_fused() {
-            return self.run_fused(x_out);
-        }
         let n = self.cfg.n;
         let nelt = self.cfg.nelt;
         let ndof = self.mesh.ndof_local();
         let mut x = vec![0.0; ndof];
 
-        let ax_time = Rc::new(RefCell::new(0.0f64));
         let opts = CgOptions {
             niter: self.cfg.niter,
             rtol: None,
             record_residuals: false,
         };
 
-        // Time each operator application; dispatch is the trait object.
-        let op = &mut self.op;
-        let ax_time_c = Rc::clone(&ax_time);
-        let mut ax_fn = move |p: &[f64], w: &mut [f64]| -> Result<()> {
-            let t0 = Instant::now();
-            op.apply(p, w)?;
-            *ax_time_c.borrow_mut() += t0.elapsed().as_secs_f64();
-            Ok(())
-        };
-
+        let mut ax = TimedAx { op: self.op.as_mut(), seconds: 0.0 };
         let gs_opt = if self.cfg.no_comm { None } else { Some(&mut self.gs) };
         let mask_opt = if self.cfg.no_mask { None } else { Some(self.mask.as_slice()) };
 
         let sw = Instant::now();
         let rep = cg_solve(
-            &mut ax_fn,
+            &mut ax,
             gs_opt,
             mask_opt,
             &self.c,
@@ -227,12 +239,12 @@ impl Nekbone {
             &mut self.ws,
         )?;
         let seconds = sw.elapsed().as_secs_f64();
+        let ax_seconds = ax.seconds;
 
         if let Some(out) = x_out {
             out.copy_from_slice(&x);
         }
         let cm = CostModel::new(n, nelt);
-        let ax_seconds = *ax_time.borrow();
         Ok(RunReport {
             backend: self.op.label(),
             nelt,
@@ -249,76 +261,6 @@ impl Nekbone {
     /// Convenience: run and discard the solution.
     pub fn run(&mut self) -> Result<RunReport> {
         self.run_into(None)
-    }
-
-    /// The fused hot path: the operator computes Ax and the pap reduction
-    /// in one pass per chunk (perf pass). The CG logic is inlined here
-    /// because the operator returns pap itself.
-    fn run_fused(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
-        let ndof = self.mesh.ndof_local();
-        let (n, nelt) = (self.cfg.n, self.cfg.nelt);
-        let mut x = vec![0.0; ndof];
-        let mut r = self.f.clone();
-        if !self.cfg.no_mask {
-            mask_apply(&mut r, &self.mask);
-        }
-        let mut p = vec![0.0; ndof];
-        let mut w = vec![0.0; ndof];
-        let mut rtz1 = 1.0f64;
-        let mut ax_seconds = 0.0;
-        let sw = Instant::now();
-        let mut iterations = 0;
-        for iter in 0..self.cfg.niter {
-            let rtz2 = rtz1;
-            rtz1 = glsc3(&r, &self.c, &r);
-            let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
-            crate::solver::add2s1(&mut p, &r, beta);
-
-            let t0 = Instant::now();
-            // Fused pap is only exact when no dssum/mask intervenes between
-            // Ax and the reduction; with comm on we recompute pap after.
-            self.op.apply(&p, &mut w)?;
-            let mut pap = self.op.last_pap().ok_or_else(|| {
-                Error::Numerical("fused operator did not produce a pap value".into())
-            })?;
-            ax_seconds += t0.elapsed().as_secs_f64();
-
-            if !self.cfg.no_comm {
-                self.gs.dssum(&mut w);
-            }
-            if !self.cfg.no_mask {
-                mask_apply(&mut w, &self.mask);
-            }
-            if !self.cfg.no_comm || !self.cfg.no_mask {
-                pap = glsc3(&w, &self.c, &p);
-            }
-            if pap <= 0.0 || !pap.is_finite() {
-                return Err(Error::Numerical(format!(
-                    "fused CG breakdown at iter {iter}: pap = {pap}"
-                )));
-            }
-            let alpha = rtz1 / pap;
-            crate::solver::add2s2(&mut x, &p, alpha);
-            crate::solver::add2s2(&mut r, &w, -alpha);
-            iterations = iter + 1;
-        }
-        let seconds = sw.elapsed().as_secs_f64();
-        let final_residual = glsc3(&r, &self.c, &r).max(0.0).sqrt();
-        if let Some(out) = x_out {
-            out.copy_from_slice(&x);
-        }
-        let cm = CostModel::new(n, nelt);
-        Ok(RunReport {
-            backend: self.op.label(),
-            nelt,
-            n,
-            iterations,
-            final_residual,
-            seconds,
-            ax_seconds,
-            flops: cm.flops_per_iter() * iterations as u64,
-            rnorms: vec![],
-        })
     }
 
     /// Apply the local operator once (used by parity tests and
@@ -455,7 +397,13 @@ mod tests {
     fn cpu_backends_agree() {
         let mut reports = Vec::new();
         let mut xs = Vec::new();
-        for name in ["cpu-naive", "cpu-layered", "cpu-threaded"] {
+        for name in [
+            "cpu-naive",
+            "cpu-layered",
+            "cpu-threaded",
+            "cpu-layered-fused",
+            "cpu-threaded-fused",
+        ] {
             let mut app = app(name, small_cfg());
             let mut x = vec![0.0; app.mesh().ndof_local()];
             let rep = app.run_into(Some(&mut x)).unwrap();
@@ -490,6 +438,22 @@ mod tests {
             "residual {} vs f {}",
             rep.final_residual,
             f_norm
+        );
+    }
+
+    #[test]
+    fn fused_no_comm_matches_unfused_no_comm() {
+        // In no-comm mode the fused pap is consumed with no correction at
+        // all; the trajectory must still track the unfused operator.
+        let mk = || RunConfig { no_comm: true, ..small_cfg() };
+        let a = app("cpu-layered", mk()).run().unwrap();
+        let b = app("cpu-layered-fused", mk()).run().unwrap();
+        let denom = a.final_residual.abs().max(1e-30);
+        assert!(
+            (a.final_residual - b.final_residual).abs() / denom < 1e-9,
+            "{} vs {}",
+            a.final_residual,
+            b.final_residual
         );
     }
 

@@ -134,6 +134,15 @@ impl GatherScatter {
         }
     }
 
+    /// Local indices of every dof with multiplicity > 1 — exactly the dofs
+    /// `dssum` can change (each copy listed once, grouped by global dof).
+    /// The fused Ax+pap solver path snapshots `w` here before `dssum` and
+    /// patches the fused reduction afterwards, turning a full `ndof` sweep
+    /// into an O(surface) correction.
+    pub fn shared_dofs(&self) -> &[u32] {
+        &self.shared_locals
+    }
+
     /// Multiplicity of every local dof (copies per global point) — the
     /// denominator of Nekbone's `c` weight vector.
     pub fn multiplicity(&self) -> Vec<f64> {
@@ -222,6 +231,27 @@ mod tests {
             let lhs: f64 = u.iter().zip(&v0).map(|(a, b)| a * b).sum();
             let rhs: f64 = u0.iter().zip(&v).map(|(a, b)| a * b).sum();
             assert!((lhs - rhs).abs() < 1e-8 * lhs.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn shared_dofs_are_exactly_the_dssum_support() {
+        let m = mesh();
+        let mut gs = GatherScatter::new(&m);
+        let mult = gs.multiplicity();
+        let shared: std::collections::BTreeSet<usize> =
+            gs.shared_dofs().iter().map(|&l| l as usize).collect();
+        for (l, &mu) in mult.iter().enumerate() {
+            assert_eq!(shared.contains(&l), mu > 1.0, "dof {l} mult {mu}");
+        }
+        // dssum never changes a value outside shared_dofs.
+        let mut v: Vec<f64> = (0..m.ndof_local()).map(|i| (i as f64 * 0.3).cos()).collect();
+        let before = v.clone();
+        gs.dssum(&mut v);
+        for (l, (a, b)) in before.iter().zip(&v).enumerate() {
+            if !shared.contains(&l) {
+                assert_eq!(a, b, "dssum changed unshared dof {l}");
+            }
         }
     }
 

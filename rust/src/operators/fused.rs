@@ -1,0 +1,182 @@
+//! Fused Ax + pap: the paper's fusion-of-reductions hot path on CPU.
+//!
+//! The CG inner product `pap = glsc3(w, c, p)` normally costs one extra
+//! full sweep over three `ndof` vectors after the operator has already
+//! streamed them through cache. Fusing the reduction into the operator
+//! (Świrydowicz et al., arXiv:1711.00903; HipBone's first-class fused
+//! dot-product kernels, arXiv:2202.12477) accumulates the partial sums
+//! while the element's output is still resident — the same trick the
+//! `xla-fused-layered` artifact plays in one launch per chunk.
+//!
+//! Determinism contract: the reduction is accumulated element by element in
+//! ascending element order (and layer by layer within an element), so the
+//! result is bit-reproducible run to run for a fixed shape. The threaded
+//! variant ([`super::pool::WorkerPool`]) reduces its per-worker partial
+//! sums in element-range order for the same reason.
+
+use crate::error::{Error, Result};
+use crate::operators::layered::{ax_layered_element, LayeredScratch};
+use crate::operators::{ax_flops, AxOperator, OperatorCtx};
+
+/// Layered local Ax with the pap reduction fused in: computes
+/// `w = A_local(u)` exactly as [`super::ax_layered`] (bit-identical output)
+/// and returns `pap = Σ_i w_i c_i u_i` over the local dofs.
+///
+/// The accumulation runs once per element, immediately after that
+/// element's k-sweep — the earliest point at which any of its `w` is final
+/// (the stage-2 t-contraction scatters into every layer), and while the
+/// element's `n^3` tiles are still in cache. Streaming the reduction
+/// element by element is what saves the separate whole-array sweep.
+pub fn ax_layered_fused(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f64],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(c.len(), nelt * np);
+    assert_eq!(w.len(), nelt * np);
+
+    let mut scratch = LayeredScratch::new(n);
+    let mut pap = 0.0;
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        let ge = &g[e * 6 * np..(e + 1) * 6 * np];
+        let ce = &c[e * np..(e + 1) * np];
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_layered_element(n, d, ue, ge, we, &mut scratch);
+        // Fused reduction: one pass over the just-written element,
+        // accumulated in linear dof order (determinism contract).
+        let mut pap_e = 0.0;
+        for ((wi, ci), ui) in we.iter().zip(ce).zip(ue) {
+            pap_e += wi * ci * ui;
+        }
+        pap += pap_e;
+    }
+    pap
+}
+
+/// `cpu-layered-fused`: the layered schedule with the pap reduction fused
+/// in, one thread. `last_pap()` is `glsc3(w, c, u)` of the most recent
+/// apply, with `c` as captured at setup.
+#[derive(Default)]
+pub(crate) struct FusedLayeredOp {
+    st: Option<FusedState>,
+    last_pap: Option<f64>,
+}
+
+struct FusedState {
+    n: usize,
+    nelt: usize,
+    d: Vec<f64>,
+    g: Vec<f64>,
+    c: Vec<f64>,
+}
+
+impl AxOperator for FusedLayeredOp {
+    fn label(&self) -> String {
+        "cpu-layered-fused".into()
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        super::check_setup_shapes(ctx, true)?;
+        self.st = Some(FusedState {
+            n: ctx.n,
+            nelt: ctx.nelt,
+            d: ctx.d.to_vec(),
+            g: ctx.g.to_vec(),
+            c: ctx.c.to_vec(),
+        });
+        self.last_pap = None;
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let st = self.st.as_ref().ok_or_else(|| {
+            Error::Config("operator \"cpu-layered-fused\" used before setup".into())
+        })?;
+        super::check_apply_shapes(st.n, st.nelt, u, w)?;
+        let pap = ax_layered_fused(st.n, st.nelt, u, &st.d, &st.g, &st.c, w);
+        self.last_pap = Some(pap);
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+
+    fn is_fused(&self) -> bool {
+        true
+    }
+
+    fn last_pap(&self) -> Option<f64> {
+        self.last_pap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::ax_layered;
+    use crate::proputil::{assert_allclose, Cases};
+    use crate::solver::glsc3;
+
+    #[test]
+    fn fused_output_bit_identical_to_layered() {
+        let mut cases = Cases::new(0xF0);
+        for _ in 0..6 {
+            let n = cases.size(2, 8);
+            let nelt = cases.size(1, 4);
+            let np = n * n * n;
+            let u = cases.vec_normal(nelt * np);
+            let d = crate::basis::derivative_matrix(n);
+            let g = cases.vec_normal(nelt * 6 * np);
+            let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+            let mut want = vec![0.0; nelt * np];
+            ax_layered(n, nelt, &u, &d, &g, &mut want);
+            let mut got = vec![123.0; nelt * np]; // poisoned
+            ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut got);
+            assert_eq!(got, want, "fused w must be bit-identical to layered");
+        }
+    }
+
+    #[test]
+    fn fused_pap_matches_glsc3() {
+        let mut cases = Cases::new(0xF1);
+        for _ in 0..6 {
+            let n = cases.size(2, 7);
+            let nelt = cases.size(1, 5);
+            let np = n * n * n;
+            let u = cases.vec_normal(nelt * np);
+            let d = crate::basis::derivative_matrix(n);
+            let g = cases.vec_normal(nelt * 6 * np);
+            let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+            let mut w = vec![0.0; nelt * np];
+            let pap = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut w);
+            let want = glsc3(&w, &c, &u);
+            assert_allclose(&[pap], &[want], 1e-11, 1e-11);
+        }
+    }
+
+    #[test]
+    fn fused_pap_deterministic() {
+        let mut cases = Cases::new(0xF2);
+        let (n, nelt) = (5, 3);
+        let np = n * n * n;
+        let u = cases.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = cases.vec_normal(nelt * 6 * np);
+        let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+        let mut w1 = vec![0.0; nelt * np];
+        let mut w2 = vec![0.0; nelt * np];
+        let p1 = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut w1);
+        let p2 = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut w2);
+        assert_eq!(p1.to_bits(), p2.to_bits(), "pap must be run-to-run reproducible");
+    }
+}

@@ -6,6 +6,109 @@
 //! per-element accumulator — the same dataflow as the CUDA kernel and the
 //! Pallas kernel (`ax_layered.py`), with no full-size intermediates.
 
+/// Per-layer tiles of the layered schedule (the CUDA kernel's
+/// shared-memory arrays), allocated once and reused across elements so the
+/// per-element routine stays alloc-free.
+pub(crate) struct LayeredScratch {
+    wr: Vec<f64>,
+    ws: Vec<f64>,
+    wt: Vec<f64>,
+    ur: Vec<f64>,
+    us: Vec<f64>,
+    ut: Vec<f64>,
+}
+
+impl LayeredScratch {
+    pub(crate) fn new(n: usize) -> Self {
+        let nn = n * n;
+        LayeredScratch {
+            wr: vec![0.0; nn],
+            ws: vec![0.0; nn],
+            wt: vec![0.0; nn],
+            ur: vec![0.0; nn],
+            us: vec![0.0; nn],
+            ut: vec![0.0; nn],
+        }
+    }
+}
+
+/// One element of the layered schedule: `we = A_local u_e`. Slices are the
+/// element's own `n^3` field (`ue`, `we`) and `6 n^3` geometric factors
+/// (`ge`); `we` is fully overwritten. Shared by [`ax_layered`] and the
+/// fused Ax+pap kernel ([`super::ax_layered_fused`]) so the two schedules
+/// cannot drift apart.
+pub(crate) fn ax_layered_element(
+    n: usize,
+    d: &[f64],
+    ue: &[f64],
+    ge: &[f64],
+    we: &mut [f64],
+    s: &mut LayeredScratch,
+) {
+    let nn = n * n;
+    let np = nn * n;
+    let (wr, ws, wt) = (&mut s.wr, &mut s.ws, &mut s.wt);
+    let (ur, us, ut) = (&mut s.ur, &mut s.us, &mut s.ut);
+    we.fill(0.0);
+
+    for k in 0..n {
+        let uk = &ue[k * nn..(k + 1) * nn]; // the staged layer
+        // stage 1: r and s derivatives from the layer tile
+        // (two (n,n)x(n,n) matmuls — the MXU-shaped pair).
+        for j in 0..n {
+            for i in 0..n {
+                let mut accr = 0.0;
+                let mut accs = 0.0;
+                for l in 0..n {
+                    accr += d[i * n + l] * uk[j * n + l];
+                    accs += d[j * n + l] * uk[l * n + i];
+                }
+                wr[j * n + i] = accr;
+                ws[j * n + i] = accs;
+            }
+        }
+        // t derivative from the register column u(i,j,:).
+        let dk = &d[k * n..(k + 1) * n];
+        for p in 0..nn {
+            let mut acc = 0.0;
+            for l in 0..n {
+                acc += dk[l] * ue[l * nn + p];
+            }
+            wt[p] = acc;
+        }
+        // geometric factors, preloaded per layer
+        let gk = |m: usize| &ge[m * np + k * nn..m * np + (k + 1) * nn];
+        let (g11, g12, g13, g22, g23, g33) = (gk(0), gk(1), gk(2), gk(3), gk(4), gk(5));
+        for p in 0..nn {
+            ur[p] = g11[p] * wr[p] + g12[p] * ws[p] + g13[p] * wt[p];
+            us[p] = g12[p] * wr[p] + g22[p] * ws[p] + g23[p] * wt[p];
+            ut[p] = g13[p] * wr[p] + g23[p] * ws[p] + g33[p] * wt[p];
+        }
+        // stage 2, r/s parts land in layer k
+        for j in 0..n {
+            for i in 0..n {
+                let mut acc = 0.0;
+                for l in 0..n {
+                    acc += d[l * n + i] * ur[j * n + l];
+                    acc += d[l * n + j] * us[l * n + i];
+                }
+                we[k * nn + j * n + i] += acc;
+            }
+        }
+        // stage 2, t part scatters into all layers m with weight d[k,m]
+        // (the CUDA per-thread register accumulator rw[m]).
+        for m in 0..n {
+            let dkm = d[k * n + m];
+            if dkm != 0.0 {
+                let wm = &mut we[m * nn..(m + 1) * nn];
+                for p in 0..nn {
+                    wm[p] += dkm * ut[p];
+                }
+            }
+        }
+    }
+}
+
 /// Local Poisson operator with the layered schedule. Signature and layout
 /// as [`super::ax_naive`]. Scratch is stack/small-heap per element tile; the
 /// only `n^3` temporary is the per-element output accumulator written once.
@@ -16,77 +119,12 @@ pub fn ax_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mu
     assert_eq!(g.len(), nelt * 6 * np);
     assert_eq!(w.len(), nelt * np);
 
-    let nn = n * n;
-    // Per-layer tiles (the CUDA kernel's shared-memory arrays).
-    let mut wr = vec![0.0; nn];
-    let mut ws = vec![0.0; nn];
-    let mut wt = vec![0.0; nn];
-    let mut ur = vec![0.0; nn];
-    let mut us = vec![0.0; nn];
-    let mut ut = vec![0.0; nn];
-
+    let mut scratch = LayeredScratch::new(n);
     for e in 0..nelt {
         let ue = &u[e * np..(e + 1) * np];
         let ge = &g[e * 6 * np..(e + 1) * 6 * np];
         let we = &mut w[e * np..(e + 1) * np];
-        we.fill(0.0);
-
-        for k in 0..n {
-            let uk = &ue[k * nn..(k + 1) * nn]; // the staged layer
-            // stage 1: r and s derivatives from the layer tile
-            // (two (n,n)x(n,n) matmuls — the MXU-shaped pair).
-            for j in 0..n {
-                for i in 0..n {
-                    let mut accr = 0.0;
-                    let mut accs = 0.0;
-                    for l in 0..n {
-                        accr += d[i * n + l] * uk[j * n + l];
-                        accs += d[j * n + l] * uk[l * n + i];
-                    }
-                    wr[j * n + i] = accr;
-                    ws[j * n + i] = accs;
-                }
-            }
-            // t derivative from the register column u(i,j,:).
-            let dk = &d[k * n..(k + 1) * n];
-            for p in 0..nn {
-                let mut acc = 0.0;
-                for l in 0..n {
-                    acc += dk[l] * ue[l * nn + p];
-                }
-                wt[p] = acc;
-            }
-            // geometric factors, preloaded per layer
-            let gk = |m: usize| &ge[m * np + k * nn..m * np + (k + 1) * nn];
-            let (g11, g12, g13, g22, g23, g33) = (gk(0), gk(1), gk(2), gk(3), gk(4), gk(5));
-            for p in 0..nn {
-                ur[p] = g11[p] * wr[p] + g12[p] * ws[p] + g13[p] * wt[p];
-                us[p] = g12[p] * wr[p] + g22[p] * ws[p] + g23[p] * wt[p];
-                ut[p] = g13[p] * wr[p] + g23[p] * ws[p] + g33[p] * wt[p];
-            }
-            // stage 2, r/s parts land in layer k
-            for j in 0..n {
-                for i in 0..n {
-                    let mut acc = 0.0;
-                    for l in 0..n {
-                        acc += d[l * n + i] * ur[j * n + l];
-                        acc += d[l * n + j] * us[l * n + i];
-                    }
-                    we[k * nn + j * n + i] += acc;
-                }
-            }
-            // stage 2, t part scatters into all layers m with weight d[k,m]
-            // (the CUDA per-thread register accumulator rw[m]).
-            for m in 0..n {
-                let dkm = d[k * n + m];
-                if dkm != 0.0 {
-                    let wm = &mut we[m * nn..(m + 1) * nn];
-                    for p in 0..nn {
-                        wm[p] += dkm * ut[p];
-                    }
-                }
-            }
-        }
+        ax_layered_element(n, d, ue, ge, we, &mut scratch);
     }
 }
 

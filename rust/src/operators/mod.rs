@@ -32,14 +32,43 @@
 //! Every consumer — the CLI, the CG solver, the simulated-rank runtime, the
 //! paper-figure benches — resolves operators by name through the registry,
 //! so a registered variant is immediately runnable everywhere.
+//!
+//! ## The fused-operator contract
+//!
+//! An operator that returns `true` from [`AxOperator::is_fused`] promises
+//! to compute the CG reduction in the same pass as the operator itself
+//! (`cpu-layered-fused`, `cpu-threaded-fused`, `xla-fused-layered`), and
+//! the solvers ([`cg_solve`](crate::solver::cg_solve), the rank runtime)
+//! then **skip the separate full-length `glsc3(w, c, p)` sweep**. The
+//! promise, precisely:
+//!
+//! * After every successful `apply(u, w)`, [`AxOperator::last_pap`] is
+//!   `Some(Σ_i w_i · c_i · u_i)` over the operator's **local, pre-dssum**
+//!   output, with `c` as captured from [`OperatorCtx::c`] at `setup` (fused
+//!   operators must reject an empty/mis-sized `c`). Before the first
+//!   `apply` it is `None`.
+//! * Determinism: for a fixed setup, the same `u` must reproduce the same
+//!   `pap` bit for bit, run to run. Parallel implementations reduce
+//!   per-worker partial sums in element order (see
+//!   [`pool::WorkerPool::run`]) rather than in completion order.
+//! * Callers must set the operator up with the **same** `c` they pass to
+//!   the solve as inner-product weights: the solver turns the local fused
+//!   value into the assembled `glsc3(dssum(w), c, p)` by patching only the
+//!   gather–scatter's shared dofs (an O(surface) correction), which is only
+//!   exact when the two weight vectors agree and the iterate `p` is zero on
+//!   masked dofs (true for every CG iterate).
 
+pub(crate) mod fused;
 mod layered;
 mod naive;
+pub(crate) mod pool;
 pub mod registry;
 mod threaded;
 
+pub use fused::ax_layered_fused;
 pub use layered::ax_layered;
 pub use naive::ax_naive;
+pub use pool::{resolve_threads, WorkerPool};
 pub use registry::{OperatorRegistry, OperatorSpec};
 pub use threaded::ax_threaded;
 
@@ -79,6 +108,49 @@ pub struct OperatorCtx<'a> {
     pub g: &'a [f64],
     /// Inverse multiplicity (inner-product weights), `nelt * n^3`.
     pub c: &'a [f64],
+}
+
+/// Validate the mesh-data shapes of an [`OperatorCtx`] at `setup`; fused
+/// operators additionally require the inner-product weights `c` (their
+/// `last_pap` contract needs them).
+pub(crate) fn check_setup_shapes(ctx: &OperatorCtx, need_c: bool) -> Result<()> {
+    let np = ctx.n * ctx.n * ctx.n;
+    if ctx.d.len() != ctx.n * ctx.n {
+        return Err(crate::error::Error::Config(format!(
+            "operator setup: d must be n*n = {}, got {}",
+            ctx.n * ctx.n,
+            ctx.d.len()
+        )));
+    }
+    if ctx.g.len() != ctx.nelt * 6 * np {
+        return Err(crate::error::Error::Config(format!(
+            "operator setup: g must be nelt*6*n^3 = {}, got {}",
+            ctx.nelt * 6 * np,
+            ctx.g.len()
+        )));
+    }
+    if need_c && ctx.c.len() != ctx.nelt * np {
+        return Err(crate::error::Error::Config(format!(
+            "operator setup: fused operators need the inner-product weights \
+             c (nelt*n^3 = {}), got {}",
+            ctx.nelt * np,
+            ctx.c.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Validate the field lengths of one `apply` call.
+pub(crate) fn check_apply_shapes(n: usize, nelt: usize, u: &[f64], w: &[f64]) -> Result<()> {
+    let ndof = nelt * n * n * n;
+    if u.len() != ndof || w.len() != ndof {
+        return Err(crate::error::Error::Config(format!(
+            "operator apply: fields must be nelt*n^3 = {ndof}, got u={} w={}",
+            u.len(),
+            w.len()
+        )));
+    }
+    Ok(())
 }
 
 /// One local-Ax implementation: `apply` computes `w = A_local(u)` over the
@@ -193,7 +265,9 @@ mod tests {
         (u, d, g)
     }
 
-    /// Build every registered CPU operator for the given inputs.
+    /// Build every registered CPU operator (fused ones included — their
+    /// `w` output must match Listing 1 exactly like the unfused ones) for
+    /// the given inputs.
     fn cpu_operators(
         n: usize,
         nelt: usize,
@@ -201,6 +275,9 @@ mod tests {
         g: &[f64],
     ) -> Vec<Box<dyn AxOperator>> {
         let reg = OperatorRegistry::with_builtins();
+        // Unit weights satisfy the fused operators' setup requirement; the
+        // unfused ones ignore them.
+        let c = vec![1.0; nelt * n * n * n];
         let ctx = OperatorCtx {
             n,
             nelt,
@@ -209,12 +286,18 @@ mod tests {
             artifacts_dir: "artifacts",
             d,
             g,
-            c: &[],
+            c: &c,
         };
-        ["cpu-naive", "cpu-layered", "cpu-threaded"]
-            .iter()
-            .map(|name| reg.build(name, &ctx).expect("cpu operator setup"))
-            .collect()
+        [
+            "cpu-naive",
+            "cpu-layered",
+            "cpu-threaded",
+            "cpu-layered-fused",
+            "cpu-threaded-fused",
+        ]
+        .iter()
+        .map(|name| reg.build(name, &ctx).expect("cpu operator setup"))
+        .collect()
     }
 
     #[test]

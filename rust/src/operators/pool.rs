@@ -1,0 +1,425 @@
+//! Persistent worker pool for the threaded CPU operators.
+//!
+//! [`super::ax_threaded`] parallelizes one application with
+//! `std::thread::scope`, which spawns and joins OS threads on **every**
+//! call — ~100 times per CG solve. [`WorkerPool`] spawns the workers once
+//! (at operator `setup`) and feeds them element ranges over channels on
+//! each `apply`, so the per-application cost is two channel hops per
+//! worker instead of a thread spawn/join.
+//!
+//! Each worker owns its slice of the setup data (`d`, its element range of
+//! `g` and `c`), so a job message carries only the base pointers of the
+//! caller's `u`/`w` slices. Safety: `run` does not return until every
+//! worker that received a job has signalled completion (or provably died),
+//! so the pointers never outlive the borrow they were derived from.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::operators::fused::ax_layered_fused;
+use crate::operators::layered::ax_layered;
+use crate::operators::{ax_flops, AxOperator, OperatorCtx};
+
+/// Raw slice bounds shipped to a worker. The pointers are only
+/// dereferenced between job receipt and the completion signal, while the
+/// caller is blocked inside [`WorkerPool::run`] holding the borrows.
+struct Job {
+    u: *const f64,
+    w: *mut f64,
+    len: usize,
+    fused: bool,
+}
+
+// SAFETY: the pointers are plain data here; the aliasing discipline is
+// enforced by `run` (disjoint `w` ranges per worker, completion barrier
+// before returning).
+unsafe impl Send for Job {}
+
+struct Worker {
+    job_tx: Sender<Job>,
+    done_rx: Receiver<f64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Long-lived workers, each bound at construction to one contiguous
+/// element range of the problem.
+pub struct WorkerPool {
+    workers: Vec<Worker>,
+    /// Elements per worker (parallel to `workers`).
+    counts: Vec<usize>,
+    n: usize,
+    /// Were inner-product weights supplied at spawn? Fused runs need them.
+    has_weights: bool,
+}
+
+/// Resolve a requested thread count: `0` = all available cores, always
+/// clamped to the element count (a worker with no elements is useless).
+pub fn resolve_threads(requested: usize, nelt: usize) -> usize {
+    let hw = if requested == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    hw.min(nelt).max(1)
+}
+
+/// Contiguous element ranges: `nelt` split over `nworkers`, remainder
+/// spread over the first workers. [`super::ax_threaded`] uses this same
+/// split, so pooled and scoped execution are bit-identical.
+pub(crate) fn element_counts(nelt: usize, nworkers: usize) -> Vec<usize> {
+    let base = nelt / nworkers;
+    let rem = nelt % nworkers;
+    (0..nworkers).map(|t| base + usize::from(t < rem)).collect()
+}
+
+impl WorkerPool {
+    /// Spawn `nworkers` workers for an `nelt`-element problem. Each worker
+    /// clones only its own element range of `g` (and `c`, when present), so
+    /// the pool's total copy is the same size as a single-threaded
+    /// operator's. Pass an empty `c` for pools that will never run fused.
+    pub fn spawn(
+        n: usize,
+        nelt: usize,
+        nworkers: usize,
+        d: &[f64],
+        g: &[f64],
+        c: &[f64],
+    ) -> Self {
+        let np = n * n * n;
+        let has_weights = !c.is_empty();
+        let nworkers = nworkers.min(nelt).max(1);
+        let counts = element_counts(nelt, nworkers);
+        let mut workers = Vec::with_capacity(nworkers);
+        let mut e0 = 0usize;
+        for &count in &counts {
+            let (job_tx, job_rx) = channel::<Job>();
+            let (done_tx, done_rx) = channel::<f64>();
+            let d = d.to_vec();
+            let g = g[e0 * 6 * np..(e0 + count) * 6 * np].to_vec();
+            let c = if c.is_empty() { Vec::new() } else { c[e0 * np..(e0 + count) * np].to_vec() };
+            let handle = std::thread::spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    // SAFETY: the caller of `run` holds `&[f64]`/`&mut [f64]`
+                    // borrows covering exactly these ranges and blocks until
+                    // our completion signal; `w` ranges are disjoint across
+                    // workers.
+                    let u = unsafe { std::slice::from_raw_parts(job.u, job.len) };
+                    let w = unsafe { std::slice::from_raw_parts_mut(job.w, job.len) };
+                    let pap = if job.fused {
+                        ax_layered_fused(n, count, u, &d, &g, &c, w)
+                    } else {
+                        ax_layered(n, count, u, &d, &g, w);
+                        0.0
+                    };
+                    if done_tx.send(pap).is_err() {
+                        break; // pool dropped mid-job
+                    }
+                }
+            });
+            workers.push(Worker { job_tx, done_rx, handle: Some(handle) });
+            e0 += count;
+        }
+        WorkerPool { workers, counts, n, has_weights }
+    }
+
+    /// Number of live workers.
+    pub fn nworkers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// One parallel application: `w <- A_local(u)` over all element ranges;
+    /// with `fused`, additionally returns `pap = Σ w·c·u`, reduced over the
+    /// per-worker partials **in element-range order** so the sum is
+    /// deterministic for a fixed pool shape.
+    pub fn run(&self, u: &[f64], w: &mut [f64], fused: bool) -> Result<f64> {
+        if fused && !self.has_weights {
+            return Err(Error::Config(
+                "fused pool run requires inner-product weights; spawn the \
+                 pool with a non-empty c"
+                    .into(),
+            ));
+        }
+        let np = self.n * self.n * self.n;
+        // Validate BEFORE dispatching any job: a length panic after the
+        // first send would unwind while a worker still writes through the
+        // caller's buffers (use-after-free from safe code).
+        let ndof: usize = self.counts.iter().sum::<usize>() * np;
+        if u.len() != ndof || w.len() != ndof {
+            return Err(Error::Config(format!(
+                "pool run: fields must be nelt*n^3 = {ndof}, got u={} w={}",
+                u.len(),
+                w.len()
+            )));
+        }
+        // Phase 1: dispatch one job per worker (disjoint w ranges).
+        let mut sent = vec![false; self.workers.len()];
+        {
+            let mut w_rest = &mut w[..];
+            let mut e0 = 0usize;
+            for ((worker, &count), ok) in
+                self.workers.iter().zip(&self.counts).zip(sent.iter_mut())
+            {
+                let (w_mine, tail) = w_rest.split_at_mut(count * np);
+                w_rest = tail;
+                let u_mine = &u[e0 * np..(e0 + count) * np];
+                let job = Job {
+                    u: u_mine.as_ptr(),
+                    w: w_mine.as_mut_ptr(),
+                    len: count * np,
+                    fused,
+                };
+                *ok = worker.job_tx.send(job).is_ok();
+                e0 += count;
+            }
+        }
+        // Phase 2: barrier — collect every dispatched job's completion
+        // before returning, even on failure, so no worker still holds the
+        // borrowed pointers when `run` exits.
+        let mut pap = 0.0;
+        let mut dead = false;
+        for (worker, &ok) in self.workers.iter().zip(&sent) {
+            if !ok {
+                dead = true;
+                continue;
+            }
+            match worker.done_rx.recv() {
+                Ok(partial) => pap += partial,
+                Err(_) => dead = true,
+            }
+        }
+        if dead {
+            return Err(Error::Rank("worker pool thread died (panicked?)".into()));
+        }
+        Ok(pap)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for worker in &mut self.workers {
+            // Replacing the sender with a dead channel drops the original,
+            // which ends the worker's recv loop.
+            let (dead_tx, _) = channel();
+            worker.job_tx = dead_tx;
+            if let Some(handle) = worker.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+/// `cpu-threaded` / `cpu-threaded-fused`: the layered schedule across a
+/// persistent [`WorkerPool`]. Workers spawn once at `setup` and are reused
+/// by every `apply` (no per-apply thread creation).
+pub(crate) struct PooledOp {
+    label: &'static str,
+    fused: bool,
+    st: Option<PooledState>,
+    last_pap: Option<f64>,
+}
+
+struct PooledState {
+    n: usize,
+    nelt: usize,
+    pool: WorkerPool,
+}
+
+impl PooledOp {
+    pub(crate) fn new(label: &'static str, fused: bool) -> Self {
+        PooledOp { label, fused, st: None, last_pap: None }
+    }
+
+    /// The live worker count (0 before setup) — test hook for the
+    /// spawn-once contract.
+    #[cfg(test)]
+    fn nworkers(&self) -> usize {
+        self.st.as_ref().map_or(0, |s| s.pool.nworkers())
+    }
+}
+
+impl AxOperator for PooledOp {
+    fn label(&self) -> String {
+        self.label.into()
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        super::check_setup_shapes(ctx, self.fused)?;
+        let nworkers = resolve_threads(ctx.threads, ctx.nelt);
+        let c = if self.fused { ctx.c } else { &[] };
+        // Replacing the state drops any previous pool (joins its workers).
+        self.st = Some(PooledState {
+            n: ctx.n,
+            nelt: ctx.nelt,
+            pool: WorkerPool::spawn(ctx.n, ctx.nelt, nworkers, ctx.d, ctx.g, c),
+        });
+        self.last_pap = None;
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let st = self
+            .st
+            .as_ref()
+            .ok_or_else(|| Error::Config(format!("operator {:?} used before setup", self.label)))?;
+        super::check_apply_shapes(st.n, st.nelt, u, w)?;
+        let pap = st.pool.run(u, w, self.fused)?;
+        if self.fused {
+            self.last_pap = Some(pap);
+        }
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+
+    fn is_fused(&self) -> bool {
+        self.fused
+    }
+
+    fn last_pap(&self) -> Option<f64> {
+        self.last_pap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{ax_layered, ax_threaded};
+    use crate::proputil::Cases;
+
+    fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut cases = Cases::new(seed);
+        let np = n * n * n;
+        let u = cases.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = cases.vec_normal(nelt * 6 * np);
+        let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+        (u, d, g, c)
+    }
+
+    #[test]
+    fn pool_matches_scoped_threads_bit_identical() {
+        let (n, nelt) = (4, 7); // odd count exercises the remainder split
+        let (u, d, g, _c) = inputs(11, n, nelt);
+        let np = n * n * n;
+        for nworkers in [1, 2, 3, 7, 16] {
+            let pool = WorkerPool::spawn(n, nelt, nworkers, &d, &g, &[]);
+            let mut got = vec![0.0; nelt * np];
+            pool.run(&u, &mut got, false).unwrap();
+            let mut want = vec![0.0; nelt * np];
+            ax_threaded(n, nelt, &u, &d, &g, &mut want, nworkers);
+            assert_eq!(got, want, "nworkers={nworkers}");
+        }
+    }
+
+    #[test]
+    fn pool_reused_across_applies() {
+        let (n, nelt) = (3, 4);
+        let (u, d, g, c) = inputs(12, n, nelt);
+        let np = n * n * n;
+        let pool = WorkerPool::spawn(n, nelt, 2, &d, &g, &c);
+        let mut w1 = vec![0.0; nelt * np];
+        let mut w2 = vec![0.0; nelt * np];
+        let p1 = pool.run(&u, &mut w1, true).unwrap();
+        let p2 = pool.run(&u, &mut w2, true).unwrap();
+        assert_eq!(w1, w2);
+        assert_eq!(p1.to_bits(), p2.to_bits(), "fused pap must be reproducible");
+    }
+
+    #[test]
+    fn pooled_fused_pap_matches_single_thread() {
+        let (n, nelt) = (5, 6);
+        let (u, d, g, c) = inputs(13, n, nelt);
+        let np = n * n * n;
+        let mut want_w = vec![0.0; nelt * np];
+        let want_pap = crate::operators::fused::ax_layered_fused(
+            n, nelt, &u, &d, &g, &c, &mut want_w,
+        );
+        for nworkers in [1, 2, 3, 6] {
+            let pool = WorkerPool::spawn(n, nelt, nworkers, &d, &g, &c);
+            let mut w = vec![0.0; nelt * np];
+            let pap = pool.run(&u, &mut w, true).unwrap();
+            assert_eq!(w, want_w, "nworkers={nworkers}");
+            let denom = want_pap.abs().max(1e-30);
+            assert!(
+                (pap - want_pap).abs() / denom < 1e-12,
+                "nworkers={nworkers}: {pap} vs {want_pap}"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_operator_spawns_once_at_setup() {
+        use crate::operators::OperatorCtx;
+        let (n, nelt) = (3, 4);
+        let (u, d, g, c) = inputs(14, n, nelt);
+        let np = n * n * n;
+        let mut op = PooledOp::new("cpu-threaded", false);
+        assert_eq!(op.nworkers(), 0, "no workers before setup");
+        op.setup(&OperatorCtx {
+            n,
+            nelt,
+            chunk: nelt,
+            threads: 2,
+            artifacts_dir: "artifacts",
+            d: &d,
+            g: &g,
+            c: &c,
+        })
+        .unwrap();
+        assert_eq!(op.nworkers(), 2, "workers spawn at setup");
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        for _ in 0..5 {
+            let mut w = vec![0.0; nelt * np];
+            op.apply(&u, &mut w).unwrap();
+            assert_eq!(w, want);
+            assert_eq!(op.nworkers(), 2, "applies reuse the same workers");
+        }
+    }
+
+    #[test]
+    fn mis_sized_fields_rejected_before_dispatch() {
+        let (n, nelt) = (3, 4);
+        let (u, d, g, _c) = inputs(17, n, nelt);
+        let np = n * n * n;
+        let pool = WorkerPool::spawn(n, nelt, 2, &d, &g, &[]);
+        // Covers worker 0's range but not worker 1's: must error cleanly,
+        // not panic mid-dispatch.
+        let mut w = vec![0.0; nelt * np];
+        assert!(pool.run(&u[..2 * np], &mut w, false).is_err());
+        let mut w_short = vec![0.0; 2 * np];
+        assert!(pool.run(&u, &mut w_short, false).is_err());
+        // Pool still healthy afterwards.
+        pool.run(&u, &mut w, false).unwrap();
+    }
+
+    #[test]
+    fn fused_run_without_weights_is_a_config_error() {
+        let (n, nelt) = (3, 2);
+        let (u, d, g, _c) = inputs(16, n, nelt);
+        let np = n * n * n;
+        let pool = WorkerPool::spawn(n, nelt, 2, &d, &g, &[]);
+        let mut w = vec![0.0; nelt * np];
+        let err = pool.run(&u, &mut w, true).unwrap_err().to_string();
+        assert!(err.contains("weights"), "{err}");
+        // The pool is still usable for unfused runs afterwards.
+        pool.run(&u, &mut w, false).unwrap();
+    }
+
+    #[test]
+    fn more_workers_than_elements_clamped() {
+        let (n, nelt) = (3, 2);
+        let (u, d, g, _c) = inputs(15, n, nelt);
+        let np = n * n * n;
+        let pool = WorkerPool::spawn(n, nelt, 64, &d, &g, &[]);
+        assert_eq!(pool.nworkers(), 2);
+        let mut got = vec![0.0; nelt * np];
+        pool.run(&u, &mut got, false).unwrap();
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        assert_eq!(got, want);
+    }
+}

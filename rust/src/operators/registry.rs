@@ -14,7 +14,9 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::error::{Error, Result};
-use crate::operators::{ax_flops, ax_layered, ax_naive, ax_threaded, AxOperator, OperatorCtx};
+use crate::operators::fused::FusedLayeredOp;
+use crate::operators::pool::PooledOp;
+use crate::operators::{ax_flops, ax_layered, ax_naive, AxOperator, OperatorCtx};
 use crate::runtime::{AxEngine, CgIterEngine, Manifest, XlaRuntime};
 
 /// Constructor for a blank (un-setup) operator.
@@ -57,8 +59,9 @@ impl OperatorRegistry {
         OperatorRegistry { specs: BTreeMap::new(), aliases: BTreeMap::new() }
     }
 
-    /// The built-in operator family: the three CPU schedules, the paper's
-    /// five AOT kernel variants, and the fused Ax+pap hot path.
+    /// The built-in operator family: the CPU schedules (plain, fused, and
+    /// worker-pool threaded), the paper's five AOT kernel variants, and the
+    /// fused Ax+pap hot paths.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         let must = |res: Result<()>| res.expect("builtin registration cannot clash");
@@ -67,7 +70,11 @@ impl OperatorRegistry {
             Box::new(CpuOp::new("cpu-layered", kernel_layered))
         }));
         must(r.register("cpu-threaded", false, || {
-            Box::new(CpuOp::new("cpu-threaded", kernel_threaded))
+            Box::new(PooledOp::new("cpu-threaded", false))
+        }));
+        must(r.register("cpu-layered-fused", false, || Box::<FusedLayeredOp>::default()));
+        must(r.register("cpu-threaded-fused", false, || {
+            Box::new(PooledOp::new("cpu-threaded-fused", true))
         }));
         for variant in ["jnp", "original", "shared", "layered", "layered_unroll2"] {
             must(r.register(&xla_name(variant), true, move || {
@@ -168,51 +175,18 @@ fn xla_name(variant: &str) -> String {
 // CPU operators
 // ---------------------------------------------------------------------------
 
-/// Shape + cloned mesh data shared by the CPU operators.
+/// Shape + cloned mesh data shared by the single-thread CPU operators.
 struct CpuState {
     n: usize,
     nelt: usize,
-    threads: usize,
     d: Vec<f64>,
     g: Vec<f64>,
 }
 
 impl CpuState {
     fn capture(ctx: &OperatorCtx) -> Result<Self> {
-        let np = ctx.n * ctx.n * ctx.n;
-        if ctx.d.len() != ctx.n * ctx.n {
-            return Err(Error::Config(format!(
-                "operator setup: d must be n*n = {}, got {}",
-                ctx.n * ctx.n,
-                ctx.d.len()
-            )));
-        }
-        if ctx.g.len() != ctx.nelt * 6 * np {
-            return Err(Error::Config(format!(
-                "operator setup: g must be nelt*6*n^3 = {}, got {}",
-                ctx.nelt * 6 * np,
-                ctx.g.len()
-            )));
-        }
-        Ok(CpuState {
-            n: ctx.n,
-            nelt: ctx.nelt,
-            threads: ctx.threads,
-            d: ctx.d.to_vec(),
-            g: ctx.g.to_vec(),
-        })
-    }
-
-    fn check_lengths(&self, u: &[f64], w: &[f64]) -> Result<()> {
-        let ndof = self.nelt * self.n * self.n * self.n;
-        if u.len() != ndof || w.len() != ndof {
-            return Err(Error::Config(format!(
-                "operator apply: fields must be nelt*n^3 = {ndof}, got u={} w={}",
-                u.len(),
-                w.len()
-            )));
-        }
-        Ok(())
+        crate::operators::check_setup_shapes(ctx, false)?;
+        Ok(CpuState { n: ctx.n, nelt: ctx.nelt, d: ctx.d.to_vec(), g: ctx.g.to_vec() })
     }
 }
 
@@ -220,26 +194,23 @@ fn not_setup(label: &str) -> Error {
     Error::Config(format!("operator {label:?} used before setup"))
 }
 
-/// Unified CPU-kernel signature; the trailing argument is the thread count
-/// (ignored by the single-thread schedules).
-type CpuKernel = fn(usize, usize, &[f64], &[f64], &[f64], &mut [f64], usize);
+/// Unified single-thread CPU-kernel signature.
+type CpuKernel = fn(usize, usize, &[f64], &[f64], &[f64], &mut [f64]);
 
-fn kernel_naive(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64], _t: usize) {
+fn kernel_naive(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
     ax_naive(n, nelt, u, d, g, w);
 }
 
-fn kernel_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64], _t: usize) {
+fn kernel_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
     ax_layered(n, nelt, u, d, g, w);
 }
 
-fn kernel_threaded(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64], t: usize) {
-    ax_threaded(n, nelt, u, d, g, w, t);
-}
-
-/// A CPU schedule behind the operator trait: `cpu-naive` (Listing-1
-/// structure, full-size intermediates), `cpu-layered` (the paper's
-/// schedule, one thread), `cpu-threaded` (layered across cores — the
-/// paper's CPU/MPI baseline).
+/// A single-thread CPU schedule behind the operator trait: `cpu-naive`
+/// (Listing-1 structure, full-size intermediates), `cpu-layered` (the
+/// paper's schedule). The threaded variants (`cpu-threaded`,
+/// `cpu-threaded-fused`) live in [`crate::operators::pool`] on a
+/// persistent worker pool; the fused single-thread variant
+/// (`cpu-layered-fused`) in [`crate::operators::fused`].
 struct CpuOp {
     label: &'static str,
     kernel: CpuKernel,
@@ -264,8 +235,8 @@ impl AxOperator for CpuOp {
 
     fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
         let st = self.st.as_ref().ok_or_else(|| not_setup(self.label))?;
-        st.check_lengths(u, w)?;
-        (self.kernel)(st.n, st.nelt, u, &st.d, &st.g, w, st.threads);
+        crate::operators::check_apply_shapes(st.n, st.nelt, u, w)?;
+        (self.kernel)(st.n, st.nelt, u, &st.d, &st.g, w);
         Ok(())
     }
 
@@ -365,6 +336,10 @@ impl AxOperator for XlaFusedOp {
     }
 
     fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        // Fused-operator contract (see `operators` module docs): the
+        // weights must be present and well-shaped, and a stale pap from a
+        // previous setup must not leak through `last_pap`.
+        crate::operators::check_setup_shapes(ctx, true)?;
         let manifest = Manifest::load(ctx.artifacts_dir)?;
         manifest.find(&format!("cg_iter_{}_n{}_e{}", self.variant, ctx.n, ctx.chunk))?;
         let rt = Rc::new(XlaRuntime::with_manifest(manifest)?);
@@ -379,6 +354,7 @@ impl AxOperator for XlaFusedOp {
             ctx.c,
         )?;
         self.st = Some(XlaFusedState { rt, engine, n: ctx.n, nelt: ctx.nelt });
+        self.last_pap = None;
         Ok(())
     }
 
@@ -432,6 +408,8 @@ mod tests {
             "cpu-naive",
             "cpu-layered",
             "cpu-threaded",
+            "cpu-layered-fused",
+            "cpu-threaded-fused",
             "xla-jnp",
             "xla-original",
             "xla-shared",
@@ -537,6 +515,48 @@ mod tests {
         let mut blank = r.create("cpu-layered").unwrap();
         let mut w = vec![0.0; 27];
         assert!(blank.apply(&[0.0; 27], &mut w).is_err());
+    }
+
+    #[test]
+    fn fused_cpu_ops_build_and_report_pap() {
+        let r = OperatorRegistry::with_builtins();
+        let n = 4;
+        let nelt = 2;
+        let np = n * n * n;
+        let mut rng = crate::rng::Rng::new(7);
+        let u = rng.normal_vec(nelt * np);
+        let g = rng.normal_vec(nelt * 6 * np);
+        let c: Vec<f64> = (0..nelt * np).map(|i| 0.5 + (i % 3) as f64 * 0.25).collect();
+        let d = crate::basis::derivative_matrix(n);
+        let ctx = OperatorCtx { c: &c, ..tiny_ctx(n, nelt, &d, &g) };
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        let want_pap = crate::solver::glsc3(&want, &c, &u);
+        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+            let mut op = r.build(name, &ctx).unwrap();
+            assert!(op.is_fused(), "{name} must declare itself fused");
+            assert_eq!(op.last_pap(), None, "{name}: no pap before first apply");
+            let mut w = vec![0.0; nelt * np];
+            op.apply(&u, &mut w).unwrap();
+            assert_allclose(&w, &want, 1e-11, 1e-11);
+            let pap = op.last_pap().expect("fused apply must produce pap");
+            let denom = want_pap.abs().max(1e-30);
+            assert!((pap - want_pap).abs() / denom < 1e-12, "{name}: {pap} vs {want_pap}");
+        }
+    }
+
+    #[test]
+    fn fused_cpu_ops_require_weights_at_setup() {
+        let r = OperatorRegistry::with_builtins();
+        let n = 3;
+        let d = crate::basis::derivative_matrix(n);
+        let g = vec![0.0; 6 * n * n * n];
+        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+            let err = r.build(name, &tiny_ctx(n, 1, &d, &g)).unwrap_err().to_string();
+            assert!(err.contains("weights"), "{name}: {err}");
+        }
+        // The unfused operators accept an empty c (they never read it).
+        assert!(r.build("cpu-threaded", &tiny_ctx(n, 1, &d, &g)).is_ok());
     }
 
     #[test]

@@ -1,12 +1,23 @@
 //! Multi-threaded CPU Ax: the layered schedule parallelized over elements
 //! with scoped std threads — the analog of the paper's 28-core CPU baseline
 //! (Fig. 3, "one node with 28 cores and MPI for parallelization").
+//!
+//! This is the **one-shot** entry point: it spawns and joins its threads on
+//! every call, which is fine for a single application but wasteful inside a
+//! solver loop (~100 applies per solve). The registered `cpu-threaded` /
+//! `cpu-threaded-fused` operators instead run on a persistent
+//! [`super::pool::WorkerPool`] spawned once at operator `setup`; both use
+//! the same contiguous element split, so their outputs are bit-identical to
+//! this function's.
 
 use super::layered::ax_layered;
+use super::pool::{element_counts, resolve_threads};
 
 /// Layered Ax over `nthreads` workers (`0` = one per available core).
-/// Elements are split into contiguous ranges; each worker owns a disjoint
-/// slice of `w`, so no synchronization is needed beyond the join.
+/// Elements are split into contiguous ranges (the same
+/// [`element_counts`] split the worker pool uses, so the two paths are
+/// bit-identical); each worker owns a disjoint slice of `w`, so no
+/// synchronization is needed beyond the join.
 pub fn ax_threaded(
     n: usize,
     nelt: usize,
@@ -19,26 +30,17 @@ pub fn ax_threaded(
     let np = n * n * n;
     assert_eq!(u.len(), nelt * np);
     assert_eq!(w.len(), nelt * np);
-    let nthreads = if nthreads == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    } else {
-        nthreads
-    }
-    .min(nelt.max(1));
+    let nthreads = resolve_threads(nthreads, nelt);
 
     if nthreads <= 1 || nelt == 0 {
         ax_layered(n, nelt, u, d, g, w);
         return;
     }
 
-    // Contiguous element ranges, remainder spread over the first workers.
-    let base = nelt / nthreads;
-    let rem = nelt % nthreads;
     std::thread::scope(|scope| {
         let mut w_rest = &mut w[..];
         let mut start = 0usize;
-        for t in 0..nthreads {
-            let count = base + usize::from(t < rem);
+        for count in element_counts(nelt, nthreads) {
             let (w_mine, tail) = w_rest.split_at_mut(count * np);
             w_rest = tail;
             let u_mine = &u[start * np..(start + count) * np];

@@ -28,10 +28,73 @@ use crate::gs::GatherScatter;
 use crate::mesh::Mesh;
 use crate::metrics::CostModel;
 use crate::operators::{OperatorCtx, OperatorRegistry};
-use crate::solver::{add2s1, add2s2, glsc3, mask_apply};
+use crate::solver::{add2s1, add2s2, glsc3, mask_apply, PapCorrection};
 
 /// The operator each rank runs when the caller does not pick one.
 pub const DEFAULT_RANK_OPERATOR: &str = "cpu-layered";
+
+// ---------------------------------------------------------------------------
+// Collective tags
+// ---------------------------------------------------------------------------
+//
+// Layout of the 64-bit tag space:
+//
+// ```text
+// bits  0..3   collective id within an iteration
+//              (0 = rtz1 allreduce, 1 = dssum halo, 2 = pap allreduce)
+// bits  3..32  halo pair id (shared plane's first global id + 1);
+//              zero for non-halo collectives
+// bits 32..63  iteration + 1 (zero only for TAG_FINAL)
+// bit  63      reserved by `Comm::allreduce_sum` for broadcast legs
+// ```
+//
+// The previous layout packed the iteration into the same bits as the halo
+// pair id, so `niter >= 8192` silently collided iteration tags with halo
+// tags in release builds (the overflow was only a `debug_assert`) and
+// ranks exchanged wrong plane data. Iterations now own their own high bit
+// range, and [`check_tag_capacity`] rejects genuinely unrepresentable
+// runs with a `Config` error instead of corrupting the exchange.
+
+const TAG_COLLECTIVE_BITS: u32 = 3;
+const TAG_PAIR_BITS: u32 = 29;
+const TAG_ITER_SHIFT: u32 = TAG_COLLECTIVE_BITS + TAG_PAIR_BITS;
+
+/// Tag of the single post-loop residual allreduce. Never produced by
+/// [`iter_tag`] / [`halo_pair_tag`]: their iteration field is always >= 1.
+const TAG_FINAL: u64 = 3;
+
+/// Tag of one per-iteration collective.
+fn iter_tag(iter: usize, collective: u64) -> u64 {
+    debug_assert!(collective < (1 << TAG_COLLECTIVE_BITS));
+    ((iter as u64 + 1) << TAG_ITER_SHIFT) | collective
+}
+
+/// Tag of one halo pair exchange within a dssum (both sides derive it from
+/// the plane's first global id, so the pair agrees without negotiation).
+fn halo_pair_tag(base: u64, gid: usize) -> u64 {
+    base | ((gid as u64 + 1) << TAG_COLLECTIVE_BITS)
+}
+
+/// Reject runs whose collective tags cannot be represented: the iteration
+/// field holds 31 bits (bit 63 stays clear for the broadcast marker), the
+/// halo pair field [`TAG_PAIR_BITS`] bits of global id.
+fn check_tag_capacity(niter: usize, ndof_global: usize) -> Result<()> {
+    if niter as u64 >= 1u64 << 31 {
+        return Err(Error::Config(format!(
+            "niter = {niter} is unrepresentable in the collective tag space \
+             (max {})",
+            (1u64 << 31) - 1
+        )));
+    }
+    if ndof_global as u64 >= 1u64 << TAG_PAIR_BITS {
+        return Err(Error::Config(format!(
+            "global dof count {ndof_global} is unrepresentable in the \
+             halo-pair tag space (max {})",
+            (1u64 << TAG_PAIR_BITS) - 1
+        )));
+    }
+    Ok(())
+}
 
 /// How one rank sees the mesh.
 struct RankSlab {
@@ -159,7 +222,7 @@ fn dssum_ranked(
     // plane in ascending-gid order, so the vectors align; the pair tag is
     // derived from the plane's first global id, identical on both sides.
     if !slab.lo_plane.is_empty() {
-        let pair_tag = tag | ((slab.lo_plane[0].0 as u64 + 1) << 16);
+        let pair_tag = halo_pair_tag(tag, slab.lo_plane[0].0);
         let mine: Vec<f64> = slab.lo_plane.iter().map(|(_, ls)| v[ls[0]]).collect();
         let theirs = comm.sendrecv(slab.rank - 1, pair_tag, mine)?;
         for ((_, ls), t) in slab.lo_plane.iter().zip(&theirs) {
@@ -170,7 +233,7 @@ fn dssum_ranked(
         }
     }
     if !slab.hi_plane.is_empty() {
-        let pair_tag = tag | ((slab.hi_plane[0].0 as u64 + 1) << 16);
+        let pair_tag = halo_pair_tag(tag, slab.hi_plane[0].0);
         let mine: Vec<f64> = slab.hi_plane.iter().map(|(_, ls)| v[ls[0]]).collect();
         let theirs = comm.sendrecv(slab.rank + 1, pair_tag, mine)?;
         for ((_, ls), t) in slab.hi_plane.iter().zip(&theirs) {
@@ -183,16 +246,30 @@ fn dssum_ranked(
     Ok(())
 }
 
+/// What one rank reports back from its CG loop.
+struct RankOutcome {
+    /// Global residual norm (allreduced — must agree across ranks).
+    rnorm: f64,
+    /// Wall time inside the local operator.
+    ax_seconds: f64,
+    /// Iterations executed (may undershoot `niter` on exact convergence).
+    iterations: usize,
+}
+
 /// SPMD CG over the slabs. Mirrors `solver::cg_solve` with allreduce in
 /// place of plain sums, `dssum_ranked` in place of serial dssum, and the
-/// rank-local operator built by name from the registry.
+/// rank-local operator built by name from the registry. Fused operators
+/// take the same shortcut as the serial solver: the rank's pap
+/// contribution is the operator's fused value plus a correction over the
+/// dofs the distributed dssum can change (rank-local shared dofs + halo
+/// planes), so the full-length `glsc3(w, c, p)` sweep is skipped.
 fn rank_main(
     mut slab: RankSlab,
     mut comm: Comm,
     cfg: &RunConfig,
     operator: &str,
     registry: &OperatorRegistry,
-) -> Result<(f64, f64)> {
+) -> Result<RankOutcome> {
     let n = cfg.n;
     let np = n * n * n;
     let nelt_local = slab.e1 - slab.e0;
@@ -216,33 +293,77 @@ fn rank_main(
     // the whole solve (mirrors the serial pipeline dropping `geom`).
     slab.g = Vec::new();
 
+    // Fused hot path: dssum_ranked changes `w` only on the rank-local
+    // shared dofs and the halo planes, so the fused pap is patched over
+    // those dofs alone — the same [`PapCorrection`] the serial solver uses.
+    let fused = op.is_fused();
+    let mut correction = PapCorrection::new(if fused && !cfg.no_comm {
+        let mut s: Vec<u32> = slab.gs.shared_dofs().to_vec();
+        for (_, ls) in slab.lo_plane.iter().chain(slab.hi_plane.iter()) {
+            for &l in ls {
+                s.push(l as u32);
+            }
+        }
+        s.sort_unstable();
+        s.dedup();
+        s
+    } else {
+        Vec::new()
+    });
+
     let mut x = vec![0.0; ndof];
     let mut r = slab.f.clone();
     mask_apply(&mut r, &slab.mask);
     let mut p = vec![0.0; ndof];
     let mut w = vec![0.0; ndof];
     let mut rtz1 = 1.0f64;
+    let mut rtz_first: Option<f64> = None;
     let mut ax_seconds = 0.0;
+    let mut iterations = cfg.niter;
 
     for iter in 0..cfg.niter {
-        // Tag layout: bits 3.. = iteration, bits 0..3 = collective id,
-        // bits 16.. reserved for the halo pair id (see dssum_ranked).
-        let tag_base = (iter as u64 + 1) << 3;
-        debug_assert!(tag_base < 1 << 16, "iteration count overflows tag space");
         let rtz2 = rtz1;
-        rtz1 = comm.allreduce_sum(glsc3(&r, &slab.c, &r), tag_base)?;
+        rtz1 = comm.allreduce_sum(glsc3(&r, &slab.c, &r), iter_tag(iter, 0))?;
+        if !rtz1.is_finite() {
+            return Err(Error::Numerical(format!(
+                "ranked CG breakdown at iter {iter} on rank {}: rtz1 = {rtz1}",
+                slab.rank
+            )));
+        }
+        let first = *rtz_first.get_or_insert(rtz1.max(f64::MIN_POSITIVE));
+        if rtz1 <= 1e-30 * first {
+            // Exact convergence well inside the iteration budget (mirrors
+            // `cg_solve`): stop instead of dividing by ~0 and reporting a
+            // spurious pap breakdown. rtz1 is an allreduced value —
+            // bit-identical on every rank — so all ranks exit together.
+            iterations = iter;
+            break;
+        }
         let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
         add2s1(&mut p, &r, beta);
 
         let t0 = Instant::now();
         op.apply(&p, &mut w)?;
         ax_seconds += t0.elapsed().as_secs_f64();
+        let pap_fused = if fused {
+            let local = op.last_pap().ok_or_else(|| {
+                Error::Numerical("fused operator did not produce a pap value".into())
+            })?;
+            correction.snapshot(&w);
+            Some(local)
+        } else {
+            None
+        };
         if !cfg.no_comm {
-            dssum_ranked(&mut slab, &mut comm, &mut w, tag_base | 1)?;
+            dssum_ranked(&mut slab, &mut comm, &mut w, iter_tag(iter, 1))?;
         }
         mask_apply(&mut w, &slab.mask);
 
-        let pap = comm.allreduce_sum(glsc3(&w, &slab.c, &p), tag_base | 2)?;
+        let pap_local = match pap_fused {
+            Some(local) => correction.patch(local, &w, &slab.c, &p),
+            None => glsc3(&w, &slab.c, &p),
+        };
+        let pap = comm.allreduce_sum(pap_local, iter_tag(iter, 2))?;
         if pap <= 0.0 || !pap.is_finite() {
             return Err(Error::Numerical(format!(
                 "ranked CG breakdown at iter {iter} on rank {}: pap = {pap}",
@@ -253,8 +374,8 @@ fn rank_main(
         add2s2(&mut x, &p, alpha);
         add2s2(&mut r, &w, -alpha);
     }
-    let rr = comm.allreduce_sum(glsc3(&r, &slab.c, &r), u64::MAX >> 1)?;
-    Ok((rr.max(0.0).sqrt(), ax_seconds))
+    let rr = comm.allreduce_sum(glsc3(&r, &slab.c, &r), TAG_FINAL)?;
+    Ok(RankOutcome { rnorm: rr.max(0.0).sqrt(), ax_seconds, iterations })
 }
 
 /// Run Nekbone across `cfg.ranks` simulated ranks with the default
@@ -283,6 +404,7 @@ pub fn run_ranked_in(
     // spawning any rank thread.
     let label = registry.resolve(operator)?.name.clone();
     let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
+    check_tag_capacity(cfg.niter, mesh.ndof_global())?;
     let basis = Basis::new(cfg.n);
     let slabs = build_slabs(&mesh, &basis, cfg)?;
     let comms = Comm::mesh(cfg.ranks);
@@ -301,23 +423,43 @@ pub fn run_ranked_in(
     });
     let seconds = sw.elapsed().as_secs_f64();
 
-    let mut final_residual = 0.0;
-    let mut ax_seconds: f64 = 0.0;
+    let mut outcomes = Vec::with_capacity(cfg.ranks);
     for res in results {
-        let (rnorm, ax_s) = res??;
-        final_residual = rnorm; // identical on all ranks (allreduced)
-        ax_seconds = ax_seconds.max(ax_s);
+        outcomes.push(res??);
+    }
+    // Every rank's residual comes out of the same allreduce, so they must
+    // agree; verify instead of assuming, so a future halo/tag bug fails
+    // loudly here rather than silently reporting one rank's value.
+    let first = &outcomes[0];
+    let (final_residual, iterations) = (first.rnorm, first.iterations);
+    let mut ax_seconds: f64 = 0.0;
+    for (rank, o) in outcomes.iter().enumerate() {
+        let denom = final_residual.abs().max(1e-30);
+        if (o.rnorm - final_residual).abs() / denom > 1e-12 {
+            return Err(Error::Rank(format!(
+                "rank {rank} disagrees on the final residual: {} vs {} \
+                 (halo exchange or collective-tag bug?)",
+                o.rnorm, final_residual
+            )));
+        }
+        if o.iterations != iterations {
+            return Err(Error::Rank(format!(
+                "rank {rank} executed {} iterations, rank 0 executed {iterations}",
+                o.iterations
+            )));
+        }
+        ax_seconds = ax_seconds.max(o.ax_seconds);
     }
     let cm = CostModel::new(cfg.n, cfg.nelt);
     Ok(RunReport {
         backend: format!("ranked-{}-r{}", label, cfg.ranks),
         nelt: cfg.nelt,
         n: cfg.n,
-        iterations: cfg.niter,
+        iterations,
         final_residual,
         seconds,
         ax_seconds,
-        flops: cm.flops_per_iter() * cfg.niter as u64,
+        flops: cm.flops_per_iter() * iterations as u64,
         rnorms: vec![],
     })
 }
@@ -338,6 +480,193 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0);
                 assert!(w[0].1 > w[0].0);
             }
+        }
+    }
+
+    #[test]
+    fn tag_layout_has_no_collisions_at_old_boundary() {
+        // niter >= 8192 used to fold the iteration bits into the halo-pair
+        // bits; every tag kind must now be distinct across iterations
+        // around (and far past) that boundary.
+        let mut seen = std::collections::BTreeSet::new();
+        let iters = [0usize, 1, 8190, 8191, 8192, 8193, 1_000_000, (1 << 31) - 2];
+        let gids = [0usize, 1, 4095, (1 << TAG_PAIR_BITS) - 2];
+        for &iter in &iters {
+            for coll in 0..3u64 {
+                assert!(seen.insert(iter_tag(iter, coll)), "collective tag collision");
+            }
+            for &gid in &gids {
+                let t = halo_pair_tag(iter_tag(iter, 1), gid);
+                assert!(seen.insert(t), "halo tag collision at iter {iter} gid {gid}");
+            }
+        }
+        // None of them may collide with the final-residual tag or set the
+        // allreduce broadcast bit.
+        assert!(!seen.contains(&TAG_FINAL));
+        for &t in &seen {
+            assert_eq!(t & (1 << 63), 0, "tag {t:#x} sets the broadcast bit");
+        }
+    }
+
+    #[test]
+    fn tag_capacity_limits_are_config_errors() {
+        check_tag_capacity(8192, 1000).unwrap();
+        check_tag_capacity((1 << 31) - 1, 1000).unwrap();
+        assert!(matches!(check_tag_capacity(1 << 31, 1000), Err(Error::Config(_))));
+        assert!(matches!(
+            check_tag_capacity(100, 1 << TAG_PAIR_BITS),
+            Err(Error::Config(_))
+        ));
+        // And the runtime rejects such a run up front.
+        let cfg = RunConfig { nelt: 8, n: 3, niter: 1 << 31, ranks: 2, ..Default::default() };
+        let err = run_ranked(&cfg).unwrap_err().to_string();
+        assert!(err.contains("tag space"), "{err}");
+    }
+
+    #[test]
+    fn halo_exchange_clean_at_high_iterations() {
+        // Drive the distributed dssum + the per-iteration collectives
+        // directly at iterations around the old 8192 boundary: partial
+        // sums must still route to the right collective.
+        let cfg = RunConfig { nelt: 8, n: 3, ranks: 2, ..Default::default() };
+        let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
+        let basis = Basis::new(cfg.n);
+        let slabs = build_slabs(&mesh, &basis, &cfg).unwrap();
+        let comms = Comm::mesh(cfg.ranks);
+        // Serial reference: dssum of all-ones is the global multiplicity.
+        let mut gs_full = GatherScatter::new(&mesh);
+        let mut want_full = vec![1.0; mesh.ndof_local()];
+        gs_full.dssum(&mut want_full);
+        let np = cfg.n * cfg.n * cfg.n;
+        std::thread::scope(|scope| {
+            for (mut slab, mut comm) in slabs.into_iter().zip(comms) {
+                let want = want_full[slab.e0 * np..slab.e1 * np].to_vec();
+                scope.spawn(move || {
+                    for iter in [8190usize, 8191, 8192, 8193] {
+                        let s = comm.allreduce_sum(1.0, iter_tag(iter, 0)).unwrap();
+                        assert_eq!(s, 2.0);
+                        let mut v = vec![1.0; want.len()];
+                        dssum_ranked(&mut slab, &mut comm, &mut v, iter_tag(iter, 1))
+                            .unwrap();
+                        assert_eq!(v, want, "iter {iter}");
+                        let s = comm
+                            .allreduce_sum(iter as f64, iter_tag(iter, 2))
+                            .unwrap();
+                        assert_eq!(s, 2.0 * iter as f64);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn ranked_niter_8192_matches_serial() {
+        // End-to-end run at the old tag-collision boundary (a release
+        // build with niter >= 8192 used to exchange wrong halo data). On
+        // this 864-dof system finite-precision CG typically stalls above
+        // the exact-convergence floor and runs the full 8192 iterations —
+        // straight through the old collision point — but whether or not
+        // the floor fires, ranked must match serial on the
+        // initial-residual scale (~10); corrupted halos would miss by many
+        // orders of magnitude. (Deterministic coverage of the boundary
+        // itself, independent of CG's convergence behavior, is in
+        // `halo_exchange_clean_at_high_iterations`.)
+        let base = RunConfig { nelt: 8, n: 4, niter: 8192, ..Default::default() };
+        let mut serial =
+            Nekbone::builder(base.clone()).operator("cpu-layered").build().unwrap();
+        let want = serial.run().unwrap();
+        let got = run_ranked(&RunConfig { ranks: 2, ..base }).unwrap();
+        assert!(want.final_residual < 1e-10, "serial residual {}", want.final_residual);
+        assert!(got.final_residual < 1e-10, "ranked residual {}", got.final_residual);
+        assert!(
+            (got.final_residual - want.final_residual).abs() < 1e-10,
+            "{} vs {}",
+            got.final_residual,
+            want.final_residual
+        );
+    }
+
+    #[test]
+    fn ranked_exact_convergence_early_exits_instead_of_breakdown() {
+        // A system that converges exactly mid-budget (here: a zero RHS,
+        // converged at iteration 0 — the degenerate endpoint serial
+        // cg_solve already handles) used to abort the ranked path with a
+        // spurious "pap breakdown". The ported rtz floor must exit all
+        // ranks together instead.
+        let cfg = RunConfig { nelt: 8, n: 3, niter: 50, ranks: 2, ..Default::default() };
+        let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
+        let basis = Basis::new(cfg.n);
+        let mut slabs = build_slabs(&mesh, &basis, &cfg).unwrap();
+        for slab in &mut slabs {
+            slab.f.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let comms = Comm::mesh(cfg.ranks);
+        let registry = OperatorRegistry::with_builtins();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = slabs
+                .into_iter()
+                .zip(comms)
+                .map(|(slab, comm)| {
+                    scope.spawn(|| rank_main(slab, comm, &cfg, "cpu-layered", &registry))
+                })
+                .collect();
+            for h in handles {
+                let out = h
+                    .join()
+                    .unwrap()
+                    .expect("exact convergence must early-exit, not break down");
+                assert_eq!(out.iterations, 0, "all ranks exit together at iteration 0");
+                assert_eq!(out.rnorm, 0.0);
+            }
+        });
+        // Serial cg_solve agrees on the same degenerate system.
+        let mut app = Nekbone::builder(RunConfig { ranks: 1, ..cfg.clone() })
+            .operator("cpu-layered")
+            .build()
+            .unwrap();
+        let ndof = app.mesh().ndof_local();
+        app.set_rhs(&vec![0.0; ndof]).unwrap();
+        let rep = app.run().unwrap();
+        assert_eq!(rep.iterations, 0);
+        assert_eq!(rep.final_residual, 0.0);
+    }
+
+    #[test]
+    fn ranked_large_budget_no_spurious_breakdown() {
+        // Generous budgets on small systems must never error out, and the
+        // ranked residual must track serial on the initial-residual scale.
+        let base = RunConfig { nelt: 8, n: 4, niter: 400, ..Default::default() };
+        let mut serial =
+            Nekbone::builder(base.clone()).operator("cpu-layered").build().unwrap();
+        let want = serial.run().unwrap();
+        for ranks in [1, 2] {
+            let got = run_ranked(&RunConfig { ranks, ..base.clone() }).unwrap();
+            assert!(got.final_residual < 1e-10, "ranks={ranks}: {}", got.final_residual);
+            assert!(
+                (got.final_residual - want.final_residual).abs() < 1e-10,
+                "ranks={ranks}: {} vs {}",
+                got.final_residual,
+                want.final_residual
+            );
+        }
+    }
+
+    #[test]
+    fn ranked_fused_operators_match_default() {
+        // The fused hot path through the rank runtime (operator-side pap +
+        // shared/halo correction) must track the unfused operator.
+        let base = RunConfig { nelt: 8, n: 4, niter: 20, ranks: 2, ..Default::default() };
+        let want = run_ranked(&base).unwrap();
+        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+            let got = run_ranked_with(&base, name).unwrap();
+            assert!(got.backend.contains(name), "{}", got.backend);
+            let denom = want.final_residual.abs().max(1e-30);
+            assert!(
+                (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+                "{name}: {} vs {}",
+                got.final_residual,
+                want.final_residual
+            );
         }
     }
 

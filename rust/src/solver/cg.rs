@@ -25,8 +25,25 @@ use crate::solver::vector::{add2s1, add2s2, copy, glsc3, mask_apply, rzero};
 /// The local Ax hook: `w <- A_local(p)` (no dssum, no mask — the solver
 /// applies those). Implementations: CPU operators, the PJRT runtime, or the
 /// rank-distributed pipeline.
+///
+/// Fused implementations (see the fused-operator contract in
+/// [`crate::operators`]) also report the reduction they computed in the
+/// same pass; the solver then skips its own full-length `glsc3(w, c, p)`
+/// sweep, replacing it with an O(surface) correction over the
+/// gather–scatter's shared dofs.
 pub trait AxApply {
     fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()>;
+
+    /// Does `apply` also compute `pap = Σ w·c·p` in the same pass?
+    fn is_fused(&self) -> bool {
+        false
+    }
+
+    /// The fused `pap` of the most recent `apply` (pre-dssum, pre-mask);
+    /// `None` for unfused implementations.
+    fn fused_pap(&self) -> Option<f64> {
+        None
+    }
 }
 
 impl<F> AxApply for F
@@ -38,9 +55,67 @@ where
     }
 }
 
+/// Turns a fused operator's **local** pap into the assembled
+/// `glsc3(dssum(w), c, p)` without a full sweep: [`Self::snapshot`] saves
+/// `w` on the dofs dssum can change right after the operator ran, and
+/// [`Self::patch`] adds `c·p·(w_post − w_pre)` over those dofs after
+/// dssum/mask. Exact because dssum only writes the given shared dofs and
+/// the mask only writes dofs where `p = 0` (every CG iterate is masked).
+/// Shared by [`cg_solve`] and the rank runtime so the two solvers cannot
+/// drift apart.
+pub(crate) struct PapCorrection {
+    /// Local dof indices dssum can change (serial: the gather–scatter's
+    /// shared dofs; ranked: those plus the halo planes).
+    shared: Vec<u32>,
+    w_pre: Vec<f64>,
+}
+
+impl PapCorrection {
+    pub(crate) fn new(shared: Vec<u32>) -> Self {
+        let w_pre = vec![0.0f64; shared.len()];
+        PapCorrection { shared, w_pre }
+    }
+
+    /// Record `w` on the shared dofs (call between the operator and dssum).
+    pub(crate) fn snapshot(&mut self, w: &[f64]) {
+        for (slot, &l) in self.w_pre.iter_mut().zip(&self.shared) {
+            *slot = w[l as usize];
+        }
+    }
+
+    /// The assembled pap: fused `local` plus the shared-dof correction
+    /// (call after dssum + mask).
+    pub(crate) fn patch(&self, mut local: f64, w: &[f64], c: &[f64], p: &[f64]) -> f64 {
+        for (&pre, &l) in self.w_pre.iter().zip(&self.shared) {
+            let l = l as usize;
+            local += c[l] * p[l] * (w[l] - pre);
+        }
+        local
+    }
+}
+
+/// Adapter giving a registry operator the [`AxApply`] face, forwarding the
+/// fused-pap hooks so [`cg_solve`] can skip the separate reduction sweep.
+struct OperatorAx<'a>(&'a mut dyn crate::operators::AxOperator);
+
+impl AxApply for OperatorAx<'_> {
+    fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
+        self.0.apply(p, w)
+    }
+
+    fn is_fused(&self) -> bool {
+        self.0.is_fused()
+    }
+
+    fn fused_pap(&self) -> Option<f64> {
+        self.0.last_pap()
+    }
+}
+
 /// Run [`cg_solve`] with a trait-based operator (anything built through
 /// the [`OperatorRegistry`](crate::operators::OperatorRegistry)): the
-/// operator's `apply` is the local Ax hook.
+/// operator's `apply` is the local Ax hook, and a fused operator's
+/// `last_pap` feeds the solver's fused path.
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve_op(
     op: &mut dyn crate::operators::AxOperator,
@@ -52,7 +127,7 @@ pub fn cg_solve_op(
     opts: &CgOptions,
     ws: &mut CgWorkspace,
 ) -> Result<CgReport> {
-    let mut ax = |p: &[f64], w: &mut [f64]| -> Result<()> { op.apply(p, w) };
+    let mut ax = OperatorAx(op);
     cg_solve(&mut ax, gs, mask, c, f, x, opts, ws)
 }
 
@@ -87,6 +162,11 @@ pub struct CgReport {
     pub rnorms: Vec<f64>,
     /// Final `rtz1` (the CG scalar, useful for regression tests).
     pub rtz1: f64,
+    /// Full-length `glsc3` sweeps the solver performed (one per iteration
+    /// for `rtz1`, one per iteration for `pap` **unless the operator is
+    /// fused**, plus one for the exit residual) — the accounting behind the
+    /// fused path's "one fewer sweep per iteration" win.
+    pub glsc3_sweeps: usize,
 }
 
 /// Workspace so repeated solves don't allocate (benchmarks call this in a
@@ -162,10 +242,20 @@ pub fn cg_solve_pc(
     }
     rzero(p);
 
+    // Fused hot path: the operator computes the local `Σ w·c·p` inside its
+    // own pass; [`PapCorrection`] turns that into the assembled pap with an
+    // O(surface) patch instead of a second full sweep.
+    let fused = ax.is_fused();
+    let mut correction = PapCorrection::new(match (&gs, fused) {
+        (Some(g), true) => g.shared_dofs().to_vec(),
+        _ => Vec::new(),
+    });
+
     let mut rtz1 = 1.0f64;
     let mut rtz_first: Option<f64> = None;
     let mut rnorms = Vec::new();
     let mut iterations = 0;
+    let mut glsc3_sweeps = 0usize;
 
     for iter in 0..opts.niter {
         // Preconditioner slot (identity by default — the paper runs
@@ -176,6 +266,7 @@ pub fn cg_solve_pc(
         }
         let rtz2 = rtz1;
         rtz1 = glsc3(r, c, z);
+        glsc3_sweeps += 1;
         if !rtz1.is_finite() {
             return Err(Error::Numerical(format!("CG breakdown at iter {iter}: rtz1 = {rtz1}")));
         }
@@ -185,7 +276,7 @@ pub fn cg_solve_pc(
             // fixed iteration budget): stop instead of dividing by ~0.
             iterations = iter;
             let final_rnorm = rtz1.max(0.0).sqrt();
-            return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1 });
+            return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps });
         }
         if opts.record_residuals || opts.rtol.is_some() {
             rnorms.push(rtz1.max(0.0).sqrt());
@@ -194,13 +285,22 @@ pub fn cg_solve_pc(
             if rtz1.max(0.0).sqrt() <= tol {
                 iterations = iter;
                 let final_rnorm = rtz1.max(0.0).sqrt();
-                return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1 });
+                return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps });
             }
         }
         let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
         add2s1(p, z, beta);
 
         ax.apply(p, w)?;
+        let pap_fused = if fused {
+            let local = ax.fused_pap().ok_or_else(|| {
+                Error::Numerical("fused operator did not produce a pap value".into())
+            })?;
+            correction.snapshot(w);
+            Some(local)
+        } else {
+            None
+        };
         if let Some(gs) = gs.as_deref_mut() {
             gs.dssum(w);
         }
@@ -208,7 +308,13 @@ pub fn cg_solve_pc(
             mask_apply(w, m);
         }
 
-        let pap = glsc3(w, c, p);
+        let pap = match pap_fused {
+            Some(local) => correction.patch(local, w, c, p),
+            None => {
+                glsc3_sweeps += 1;
+                glsc3(w, c, p)
+            }
+        };
         if pap <= 0.0 || !pap.is_finite() {
             return Err(Error::Numerical(format!(
                 "CG breakdown at iter {iter}: pap = {pap} (operator not SPD?)"
@@ -221,7 +327,8 @@ pub fn cg_solve_pc(
     }
 
     let final_rnorm = glsc3(r, c, r).max(0.0).sqrt();
-    Ok(CgReport { iterations, final_rnorm, rnorms, rtz1 })
+    glsc3_sweeps += 1;
+    Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps })
 }
 
 #[cfg(test)]
@@ -415,6 +522,131 @@ mod tests {
         .unwrap();
         assert_eq!(rep_op.iterations, rep_cl.iterations);
         crate::proputil::assert_allclose(&x_op, &x_cl, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn fused_operator_matches_unfused_trajectory_and_saves_sweeps() {
+        // The fused path (operator-side pap + shared-dof correction) must
+        // reproduce the unfused trajectory through full dssum + mask, while
+        // performing exactly `niter` fewer full glsc3 sweeps.
+        use crate::operators::{OperatorCtx, OperatorRegistry};
+        let n = 4;
+        let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(17).normal_vec(ndof);
+        {
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            gs.dssum(&mut f);
+        }
+        crate::solver::mask_apply(&mut f, &mask);
+        let opts = CgOptions { niter: 25, rtol: None, record_residuals: false };
+        let registry = OperatorRegistry::with_builtins();
+        let ctx = OperatorCtx {
+            n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: 2,
+            artifacts_dir: "artifacts",
+            d: &basis.d,
+            g: &geom.g,
+            c: &cw,
+        };
+
+        let mut solve = |name: &str| {
+            let mut op = registry.build(name, &ctx).unwrap();
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            let mut x = vec![0.0; ndof];
+            let mut ws = CgWorkspace::new(ndof);
+            let rep = cg_solve_op(
+                op.as_mut(),
+                Some(&mut gs),
+                Some(&mask),
+                &cw,
+                &f,
+                &mut x,
+                &opts,
+                &mut ws,
+            )
+            .unwrap();
+            (rep, x)
+        };
+
+        let (rep_u, x_u) = solve("cpu-layered");
+        for fused_name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+            let (rep_f, x_f) = solve(fused_name);
+            assert_eq!(rep_f.iterations, rep_u.iterations, "{fused_name}");
+            assert_eq!(
+                rep_u.glsc3_sweeps - rep_f.glsc3_sweeps,
+                opts.niter,
+                "{fused_name}: fused path must save exactly one sweep per iteration \
+                 (unfused {} vs fused {})",
+                rep_u.glsc3_sweeps,
+                rep_f.glsc3_sweeps
+            );
+            crate::proputil::assert_allclose(&x_f, &x_u, 1e-9, 1e-11);
+            let denom = rep_u.final_rnorm.abs().max(1e-30);
+            assert!(
+                (rep_f.final_rnorm - rep_u.final_rnorm).abs() / denom < 1e-9,
+                "{fused_name}: {} vs {}",
+                rep_f.final_rnorm,
+                rep_u.final_rnorm
+            );
+        }
+    }
+
+    #[test]
+    fn fused_without_gather_scatter_uses_pap_directly() {
+        // no-comm mode (the paper's roofline methodology): no dssum, so the
+        // fused value needs no correction at all, and the trajectory still
+        // matches the unfused one.
+        use crate::operators::{OperatorCtx, OperatorRegistry};
+        let n = 4;
+        let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(29).normal_vec(ndof);
+        crate::solver::mask_apply(&mut f, &mask);
+        let opts = CgOptions { niter: 10, rtol: None, record_residuals: false };
+        let registry = OperatorRegistry::with_builtins();
+        let ctx = OperatorCtx {
+            n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d: &basis.d,
+            g: &geom.g,
+            c: &cw,
+        };
+        let mut solve = |name: &str| {
+            let mut op = registry.build(name, &ctx).unwrap();
+            let mut x = vec![0.0; ndof];
+            let mut ws = CgWorkspace::new(ndof);
+            let rep = cg_solve_op(
+                op.as_mut(),
+                None,
+                Some(&mask),
+                &cw,
+                &f,
+                &mut x,
+                &opts,
+                &mut ws,
+            )
+            .unwrap();
+            (rep, x)
+        };
+        let (rep_u, x_u) = solve("cpu-layered");
+        let (rep_f, x_f) = solve("cpu-layered-fused");
+        assert_eq!(rep_f.iterations, rep_u.iterations);
+        assert_eq!(rep_u.glsc3_sweeps - rep_f.glsc3_sweeps, opts.niter);
+        crate::proputil::assert_allclose(&x_f, &x_u, 1e-9, 1e-11);
     }
 
     #[test]

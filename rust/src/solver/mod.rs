@@ -5,5 +5,6 @@ mod cg;
 mod precond;
 
 pub use cg::{cg_solve, cg_solve_op, cg_solve_pc, AxApply, CgOptions, CgReport, CgWorkspace};
+pub(crate) use cg::PapCorrection;
 pub use precond::Jacobi;
 pub use vector::{add2s1, add2s2, copy, glsc3, mask_apply, rzero};

@@ -99,6 +99,48 @@ fn fused_no_comm_uses_fused_pap() {
 }
 
 #[test]
+fn cpu_fused_backends_match_unfused_end_to_end() {
+    // No artifacts needed: the CPU fused hot path (cpu-layered-fused
+    // single thread, cpu-threaded-fused on the persistent worker pool)
+    // must reproduce the unfused residual through a full solve — dssum,
+    // mask, CG — and report its canonical label.
+    let mut plain = app("cpu-layered", cfg(27, 5, 20));
+    let mut x_plain = vec![0.0; plain.mesh().ndof_local()];
+    let want = plain.run_into(Some(&mut x_plain)).unwrap();
+    for operator in ["cpu-layered-fused", "cpu-threaded-fused"] {
+        let mut fused = app(operator, cfg(27, 5, 20));
+        let mut x_fused = vec![0.0; fused.mesh().ndof_local()];
+        let got = fused.run_into(Some(&mut x_fused)).unwrap();
+        assert_eq!(got.backend, operator, "fused label must be canonical");
+        assert_eq!(got.iterations, want.iterations);
+        let denom = want.final_residual.abs().max(1e-30);
+        assert!(
+            (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+            "{operator}: {} vs {}",
+            got.final_residual,
+            want.final_residual
+        );
+        nekbone::proputil::assert_allclose(&x_fused, &x_plain, 1e-9, 1e-11);
+    }
+}
+
+#[test]
+fn cpu_fused_backends_match_unfused_ranked() {
+    // The fused operators drop into the simulated-MPI runtime too.
+    let base = RunConfig { nelt: 27, n: 4, niter: 15, ranks: 3, ..Default::default() };
+    let want = nekbone::rank::run_ranked_with(&base, "cpu-layered").unwrap();
+    let got = nekbone::rank::run_ranked_with(&base, "cpu-threaded-fused").unwrap();
+    assert!(got.backend.contains("cpu-threaded-fused"), "{}", got.backend);
+    let denom = want.final_residual.abs().max(1e-30);
+    assert!(
+        (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+        "{} vs {}",
+        got.final_residual,
+        want.final_residual
+    );
+}
+
+#[test]
 fn vector_backend_xla_matches_rust() {
     if !have_artifacts() {
         return;

@@ -6,7 +6,7 @@ use nekbone::basis::Basis;
 use nekbone::geometry::GeomFactors;
 use nekbone::gs::GatherScatter;
 use nekbone::mesh::Mesh;
-use nekbone::operators::ax_layered;
+use nekbone::operators::{ax_layered, OperatorCtx, OperatorRegistry};
 use nekbone::proputil::{assert_allclose, forall, Cases};
 use nekbone::solver::{glsc3, mask_apply};
 
@@ -178,6 +178,110 @@ fn spectral_convergence_of_interpolation_quadrature() {
             "no spectral decay: {errs:?}"
         );
     }
+}
+
+#[test]
+fn fused_pap_matches_unfused_glsc3_across_shapes() {
+    // The fused-operator contract: after apply(u, w), last_pap() equals
+    // glsc3(w, c, u) of the unfused path, for both fused backends, across
+    // random shapes/thread counts.
+    let registry = OperatorRegistry::with_builtins();
+    forall(0xFA7, 12, |cases| {
+        let n = cases.size(2, 7);
+        let nelt = cases.size(1, 6);
+        let np = n * n * n;
+        let u = cases.vec_normal(nelt * np);
+        let d = nekbone::basis::derivative_matrix(n);
+        let g = cases.vec_normal(nelt * 6 * np);
+        let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+        let threads = cases.size(1, 4);
+        let ctx = OperatorCtx {
+            n,
+            nelt,
+            chunk: nelt,
+            threads,
+            artifacts_dir: "artifacts",
+            d: &d,
+            g: &g,
+            c: &c,
+        };
+        // Unfused reference: the layered kernel + a separate glsc3 sweep.
+        let mut w_ref = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
+        let want_pap = glsc3(&w_ref, &c, &u);
+        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+            let mut op = registry.build(name, &ctx).unwrap();
+            let mut w = vec![0.0; nelt * np];
+            op.apply(&u, &mut w).unwrap();
+            assert_allclose(&w, &w_ref, 1e-11, 1e-11);
+            let pap = op.last_pap().expect("fused operator must report pap");
+            assert_allclose(&[pap], &[want_pap], 1e-11, 1e-11);
+        }
+    });
+}
+
+#[test]
+fn fused_cg_reproduces_unfused_trajectory() {
+    // A CG solve through cpu-layered-fused must walk the same iterate
+    // trajectory as the unfused operator: same iteration count, solution
+    // allclose — and save exactly niter full glsc3 sweeps along the way.
+    use nekbone::solver::{cg_solve_op, CgOptions, CgWorkspace};
+    let n = 5;
+    let mesh = Mesh::new(2, 2, 2, n).unwrap();
+    let basis = Basis::new(n);
+    let geom = GeomFactors::affine(&mesh, &basis);
+    let mask = mesh.boundary_mask();
+    let cw = mesh.inv_multiplicity();
+    let ndof = mesh.ndof_local();
+    let mut rng = nekbone::rng::Rng::new(0xF00D);
+    let mut f = rng.normal_vec(ndof);
+    {
+        let mut gs = GatherScatter::new(&mesh);
+        gs.dssum(&mut f);
+    }
+    mask_apply(&mut f, &mask);
+    let opts = CgOptions { niter: 30, rtol: None, record_residuals: false };
+    let registry = OperatorRegistry::with_builtins();
+    let ctx = OperatorCtx {
+        n,
+        nelt: mesh.nelt(),
+        chunk: mesh.nelt(),
+        threads: 0,
+        artifacts_dir: "artifacts",
+        d: &basis.d,
+        g: &geom.g,
+        c: &cw,
+    };
+    let mut solve = |name: &str| {
+        let mut op = registry.build(name, &ctx).unwrap();
+        let mut gs = GatherScatter::new(&mesh);
+        let mut x = vec![0.0; ndof];
+        let mut ws = CgWorkspace::new(ndof);
+        let rep = cg_solve_op(
+            op.as_mut(),
+            Some(&mut gs),
+            Some(&mask),
+            &cw,
+            &f,
+            &mut x,
+            &opts,
+            &mut ws,
+        )
+        .unwrap();
+        (rep, x)
+    };
+    let (rep_u, x_u) = solve("cpu-layered");
+    let (rep_f, x_f) = solve("cpu-layered-fused");
+    assert_eq!(rep_f.iterations, rep_u.iterations, "same trajectory length");
+    assert_allclose(&x_f, &x_u, 1e-9, 1e-11);
+    assert_eq!(
+        rep_u.glsc3_sweeps - rep_f.glsc3_sweeps,
+        opts.niter,
+        "fused CG must perform exactly niter fewer glsc3 sweeps \
+         (unfused {} vs fused {})",
+        rep_u.glsc3_sweeps,
+        rep_f.glsc3_sweeps
+    );
 }
 
 #[test]
