@@ -1,0 +1,54 @@
+//! Multi-RHS serving through a `SolveSession`: build the application once,
+//! then answer a stream of right-hand sides with zero per-solve setup —
+//! the "one setup, many requests" shape of a production deployment.
+//!
+//! ```bash
+//! cargo run --release --example multi_rhs_session
+//! ```
+//!
+//! Needs no artifacts (CPU operator); pass a different operator name as
+//! the first argument to try others, e.g. `cpu-threaded-fused`.
+
+use std::time::Instant;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Nekbone;
+
+fn main() -> nekbone::Result<()> {
+    let operator = std::env::args().nth(1).unwrap_or_else(|| "cpu-layered".into());
+    let cfg = RunConfig { nelt: 64, n: 8, niter: 50, ..RunConfig::default() };
+
+    println!("== multi-RHS session ({operator}) ==");
+    let t0 = Instant::now();
+    let mut app = Nekbone::builder(cfg).operator(operator.as_str()).build()?;
+    let setup_s = t0.elapsed().as_secs_f64();
+    let ndof = app.mesh().ndof_local();
+    println!("setup: {setup_s:.3}s for {ndof} local dofs");
+
+    // A batch of independent loads, as one burst...
+    let batch: Vec<Vec<f64>> =
+        (0..4u64).map(|s| nekbone::rng::Rng::new(s).normal_vec(ndof)).collect();
+    let mut session = app.session();
+    let t1 = Instant::now();
+    let reports = session.solve_batch(&batch)?;
+    let batch_s = t1.elapsed().as_secs_f64();
+    for (i, rep) in reports.iter().enumerate() {
+        println!("  batch rhs {i}: {} iters, |r| = {:.3e}", rep.iterations, rep.final_rnorm);
+    }
+    println!("batch of {}: {batch_s:.3}s total, {:.3}s/solve", batch.len(), batch_s / 4.0);
+
+    // ...then a trickle of single requests against the same session.
+    for seed in 100..103u64 {
+        let rhs = nekbone::rng::Rng::new(seed).normal_vec(ndof);
+        let t = Instant::now();
+        let rep = session.solve(&rhs)?;
+        println!(
+            "  request {}: {} iters, |r| = {:.3e}, {:.3}s (no re-setup)",
+            session.solves(),
+            rep.iterations,
+            rep.final_rnorm,
+            t.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}

@@ -14,6 +14,9 @@
 //! * `cpu-fused`      — the fused Ax+pap CPU hot path (persistent worker
 //!                      pool; one fewer glsc3 full-vector sweep per CG
 //!                      iteration). Runs without artifacts.
+//! * `session`        — SolveSession reuse: one application setup serving
+//!                      many right-hand sides vs rebuilding the
+//!                      application per solve. Runs without artifacts.
 //!
 //! Run all: `cargo bench --bench ablations`
 //! One:     `cargo bench --bench ablations -- unroll`
@@ -21,7 +24,7 @@
 mod common;
 
 use common::{bench_iters, build_app, have_artifacts, time_solve};
-use nekbone::bench::Table;
+use nekbone::bench::{Runner, Table};
 use nekbone::config::RunConfig;
 use nekbone::coordinator::{Nekbone, VectorBackend};
 
@@ -147,14 +150,61 @@ fn ablate_cpu_fused(niter: usize) {
     table.print();
 }
 
+fn ablate_session(niter: usize) {
+    println!("\n== session: one setup serving many right-hand sides ==");
+    println!("(SolveSession reuses operator + CG workspace; 'rebuild' constructs the");
+    println!(" application — mesh, gather-scatter, operator setup — for every solve)");
+    let mut table =
+        Table::new(&["nelt", "backend", "rebuild(s)", "session(s)", "delta"]);
+    for nelt in [64usize] {
+        for name in ["cpu-layered", "cpu-threaded-fused"] {
+            let cfg = RunConfig { nelt, n: 10, niter, ..RunConfig::default() };
+            let rhs = nekbone::rng::Rng::new(0xBEEF).normal_vec(cfg.ndof());
+            let runner = Runner::default();
+
+            let mut resid_rebuild = 0.0;
+            let rebuild = runner.run(|| {
+                let mut app = build_app(name, &cfg);
+                app.set_rhs(&rhs).expect("rhs");
+                resid_rebuild = app.run().expect("solve").final_residual;
+            });
+
+            let mut app = build_app(name, &cfg);
+            let mut session = app.session();
+            let mut resid_session = 0.0;
+            let sess = runner.run(|| {
+                resid_session = session.solve(&rhs).expect("solve").final_rnorm;
+            });
+
+            assert!(
+                (resid_rebuild - resid_session).abs()
+                    <= 1e-9 * resid_rebuild.abs() + 1e-12,
+                "{name}: session residual diverged from rebuild: \
+                 {resid_session} vs {resid_rebuild}"
+            );
+            table.row(&[
+                nelt.to_string(),
+                name.into(),
+                format!("{:.4}", rebuild.median()),
+                format!("{:.4}", sess.median()),
+                format!("{:+.1}%", 100.0 * (sess.median() / rebuild.median() - 1.0)),
+            ]);
+        }
+    }
+    table.print();
+}
+
 fn main() {
     let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let all = which.is_empty();
     let niter = bench_iters();
     println!("# ablations, degree 9, {niter} CG iterations per run");
-    // CPU-only ablation: no artifacts needed.
+    // CPU-only ablations: no artifacts needed.
     if all || which.iter().any(|w| w == "cpu-fused") {
         ablate_cpu_fused(niter);
+    }
+    if all || which.iter().any(|w| w == "session") {
+        ablate_session(niter);
     }
     if !have_artifacts() {
         return;

@@ -70,6 +70,16 @@ impl Args {
         }
     }
 
+    pub fn get_f64_opt(&self, name: &str) -> Result<Option<f64>> {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got {v:?}"))),
+        }
+    }
+
     /// Assemble a [`RunConfig`] from the common options.
     pub fn run_config(&self) -> Result<RunConfig> {
         let dflt = RunConfig::default();
@@ -84,6 +94,8 @@ impl Args {
             artifacts_dir: self.get("artifacts").unwrap_or(&dflt.artifacts_dir).to_string(),
             cpu_threads: self.get_usize("cpu-threads", dflt.cpu_threads)?,
             ranks: self.get_usize("ranks", dflt.ranks)?,
+            rtol: self.get_f64_opt("rtol")?,
+            record_residuals: self.flag("record-residuals"),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -123,6 +135,10 @@ COMMON OPTIONS (run/sweep/roofline):
                      each rank runs that operator, else cpu-layered
   --artifacts DIR    artifact directory            [artifacts]
   --seed S           RHS seed                      [0x5EED]
+  --rtol T           early-exit residual tolerance (default: none; run
+                     the fixed niter like Nekbone). Honored identically
+                     by serial and ranked runs (one shared solver)
+  --record-residuals record |r| every iteration
   --no-comm          skip gather-scatter (roofline methodology)
   --no-mask          skip the Dirichlet mask
   --cpu-threads T    threads for cpu-threaded (0 = all cores)
@@ -166,6 +182,19 @@ mod tests {
         assert_eq!(cfg.niter, 10);
         assert!(cfg.no_mask);
         assert_eq!(cfg.n, 10); // default
+        assert_eq!(cfg.rtol, None);
+        assert!(!cfg.record_residuals);
+    }
+
+    #[test]
+    fn solver_options_from_args() {
+        let a = args(&["run", "--rtol", "1e-9", "--record-residuals"]);
+        let cfg = a.run_config().unwrap();
+        assert_eq!(cfg.rtol, Some(1e-9));
+        assert!(cfg.record_residuals);
+        // Bad / non-positive tolerances are rejected at parse/validate.
+        assert!(args(&["run", "--rtol", "tiny"]).run_config().is_err());
+        assert!(args(&["run", "--rtol", "-1e-9"]).run_config().is_err());
     }
 
     #[test]

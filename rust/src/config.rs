@@ -27,6 +27,13 @@ pub struct RunConfig {
     pub cpu_threads: usize,
     /// Simulated MPI ranks (1 = single address space).
     pub ranks: usize,
+    /// Optional residual tolerance for early exit (`None` mirrors
+    /// Nekbone's fixed iteration count). Honored identically by the serial
+    /// and ranked paths — both run the same solver.
+    pub rtol: Option<f64>,
+    /// Record the residual norm every iteration (costs one glsc3 sweep per
+    /// iteration when `rtol` is not already paying for it).
+    pub record_residuals: bool,
 }
 
 impl Default for RunConfig {
@@ -42,6 +49,8 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             cpu_threads: 0,
             ranks: 1,
+            rtol: None,
+            record_residuals: false,
         }
     }
 }
@@ -75,6 +84,11 @@ impl RunConfig {
                 self.ranks, self.nelt
             )));
         }
+        if let Some(t) = self.rtol {
+            if t.is_nan() || t <= 0.0 {
+                return Err(Error::Config(format!("rtol must be positive, got {t}")));
+            }
+        }
         Ok(())
     }
 }
@@ -103,6 +117,9 @@ mod tests {
             RunConfig { chunk: 0, ..Default::default() },
             RunConfig { ranks: 0, ..Default::default() },
             RunConfig { ranks: 65, nelt: 64, ..Default::default() },
+            RunConfig { rtol: Some(0.0), ..Default::default() },
+            RunConfig { rtol: Some(-1e-8), ..Default::default() },
+            RunConfig { rtol: Some(f64::NAN), ..Default::default() },
         ] {
             assert!(cfg.validate().is_err(), "{cfg:?}");
         }

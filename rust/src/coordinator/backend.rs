@@ -1,51 +1,15 @@
-//! Backend selection: which implementation computes the local Ax, and
-//! which computes the CG vector algebra.
+//! Vector-backend selection for the CG algebra.
 //!
-//! [`Backend`] is a validated operator name — parsing is a lookup in the
-//! [`OperatorRegistry`](crate::operators::OperatorRegistry), not a `match`,
-//! so registered variants (including aliases like `xla-openacc` and
-//! `xla-fused`) resolve here without this module knowing about them.
+//! Operator ("backend") selection has no type of its own anymore: an
+//! operator is a **registry name**, validated by
+//! [`OperatorRegistry::resolve`](crate::operators::OperatorRegistry::resolve)
+//! and carried as the canonical `String` it returns. The legacy `Backend`
+//! wrapper (a parsed-name shim predating the registry) was folded into the
+//! registry path so the crate has exactly one dispatch surface — the CLI,
+//! the builder, the rank runtime, and the benches all resolve names
+//! directly.
 
 use crate::error::Result;
-use crate::operators::OperatorRegistry;
-
-/// A validated, canonical operator name. `label()` always round-trips
-/// through `parse` back to the same backend.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Backend {
-    name: String,
-    needs_artifacts: bool,
-}
-
-impl Backend {
-    /// Parse a CLI name against the built-in registry. Aliases resolve to
-    /// their canonical entry; unknown names error with the full list.
-    pub fn parse(s: &str) -> Result<Self> {
-        Self::parse_with(s, &OperatorRegistry::with_builtins())
-    }
-
-    /// Parse against a caller-supplied registry (custom operators).
-    pub fn parse_with(s: &str, registry: &OperatorRegistry) -> Result<Self> {
-        let spec = registry.resolve(s)?;
-        Ok(Backend { name: spec.name.clone(), needs_artifacts: spec.needs_artifacts })
-    }
-
-    /// Does this backend need the PJRT runtime + artifacts?
-    pub fn needs_artifacts(&self) -> bool {
-        self.needs_artifacts
-    }
-
-    /// Canonical registry name.
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Stable display name (used in bench tables). Identical to the
-    /// canonical registry name, so it is always re-parseable.
-    pub fn label(&self) -> String {
-        self.name.clone()
-    }
-}
 
 /// Where the CG vector algebra runs (experiment E6: the paper's
 /// "OpenACC for simple operations costs a few percent" ablation).
@@ -73,38 +37,40 @@ impl VectorBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::operators::OperatorRegistry;
 
     #[test]
-    fn parse_roundtrip() {
-        // Every canonical name labels as itself, and every label (canonical
-        // or produced from an alias) re-parses to an equal backend.
+    fn registry_is_the_backend_parser() {
+        // What Backend::parse used to guarantee, stated against the
+        // registry directly: canonical names resolve to themselves,
+        // aliases resolve to re-resolvable canonical names, unknown names
+        // error listing the options.
         let reg = OperatorRegistry::with_builtins();
         for name in reg.names() {
-            let b = Backend::parse(&name).unwrap();
-            assert_eq!(b.label(), name, "canonical name must round-trip");
-            assert_eq!(Backend::parse(&b.label()).unwrap(), b);
+            assert_eq!(reg.resolve(&name).unwrap().name, name);
         }
         for alias in ["xla-openacc", "xla-fused"] {
-            let b = Backend::parse(alias).unwrap();
-            assert_ne!(b.label(), alias, "alias must resolve to canonical");
-            assert_eq!(Backend::parse(&b.label()).unwrap(), b);
+            let canonical = reg.resolve(alias).unwrap().name.clone();
+            assert_ne!(canonical, alias, "alias must resolve to canonical");
+            assert_eq!(reg.resolve(&canonical).unwrap().name, canonical);
         }
-        // The historical asymmetry: "xla-fused" labels as the canonical
-        // "xla-fused-layered", which parses back to the same backend.
-        assert_eq!(Backend::parse("xla-fused").unwrap().label(), "xla-fused-layered");
-        assert!(Backend::parse("cuda").is_err());
+        // The historical asymmetry stays fixed: "xla-fused" resolves to
+        // the canonical "xla-fused-layered", which resolves to itself.
+        assert_eq!(reg.resolve("xla-fused").unwrap().name, "xla-fused-layered");
+        assert!(reg.resolve("cuda").is_err());
     }
 
     #[test]
-    fn artifact_need() {
-        assert!(!Backend::parse("cpu-layered").unwrap().needs_artifacts());
-        assert!(Backend::parse("xla-layered").unwrap().needs_artifacts());
-        assert!(Backend::parse("xla-fused").unwrap().needs_artifacts());
+    fn artifact_need_comes_from_the_spec() {
+        let reg = OperatorRegistry::with_builtins();
+        assert!(!reg.resolve("cpu-layered").unwrap().needs_artifacts);
+        assert!(reg.resolve("xla-layered").unwrap().needs_artifacts);
+        assert!(reg.resolve("xla-fused").unwrap().needs_artifacts);
     }
 
     #[test]
     fn unknown_backend_error_lists_options() {
-        let err = Backend::parse("cuda").unwrap_err().to_string();
+        let err = OperatorRegistry::with_builtins().resolve("cuda").unwrap_err().to_string();
         assert!(err.contains("cpu-layered"), "{err}");
         assert!(err.contains("xla-layered"), "{err}");
     }

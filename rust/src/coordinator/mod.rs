@@ -1,11 +1,14 @@
 //! Layer-3 coordinator: wires mesh, basis, geometry, gather–scatter, the
 //! CG solver, and the selected Ax operator (resolved by name from the
-//! operator registry) into the Nekbone application.
+//! operator registry) into the Nekbone application — plus the multi-RHS
+//! [`SolveSession`] serving layer on top.
 
 mod backend;
 mod pipeline;
 mod report;
+mod session;
 
-pub use backend::{Backend, VectorBackend};
+pub use backend::VectorBackend;
 pub use pipeline::{Nekbone, NekboneBuilder};
 pub use report::RunReport;
+pub use session::SolveSession;

@@ -2,7 +2,13 @@
 //!
 //! Built through [`NekboneBuilder`]: the operator is resolved by name from
 //! an [`OperatorRegistry`] and held as a `Box<dyn AxOperator>` — the
-//! application has no knowledge of which implementations exist.
+//! application has no knowledge of which implementations exist. Every
+//! solve — the default native path, the chunked-XLA vector path, and
+//! [`SolveSession`](crate::coordinator::SolveSession) solves — funnels
+//! through one private `solve_once` into the crate's single CG loop
+//! ([`cg_solve_with`]), with [`NullComm`] as the communicator and the
+//! application's [`GatherScatter`] (or [`NoExchange`] under `--no-comm`)
+//! as the domain exchange.
 
 use std::time::Instant;
 
@@ -15,8 +21,11 @@ use crate::gs::GatherScatter;
 use crate::mesh::Mesh;
 use crate::metrics::CostModel;
 use crate::operators::{AxOperator, OperatorCtx, OperatorRegistry};
-use crate::runtime::XlaRuntime;
-use crate::solver::{cg_solve, glsc3, mask_apply, AxApply, CgOptions, CgWorkspace};
+use crate::runtime::{VectorEngine, XlaRuntime};
+use crate::solver::{
+    add2s1, add2s2, cg_solve_with, glsc3, mask_apply, CgOptions, CgReport, CgWorkspace,
+    DomainExchange, NativeVectors, NoExchange, NullComm, TimedAx, VectorOps,
+};
 
 /// Everything needed to run Nekbone with one operator on one mesh.
 pub struct Nekbone {
@@ -123,31 +132,6 @@ impl NekboneBuilder {
     }
 }
 
-/// [`AxApply`] adapter that times each operator application and forwards
-/// the fused-pap hooks, so one [`cg_solve`] call serves fused and unfused
-/// operators alike.
-struct TimedAx<'a> {
-    op: &'a mut dyn AxOperator,
-    seconds: f64,
-}
-
-impl AxApply for TimedAx<'_> {
-    fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
-        let t0 = Instant::now();
-        self.op.apply(p, w)?;
-        self.seconds += t0.elapsed().as_secs_f64();
-        Ok(())
-    }
-
-    fn is_fused(&self) -> bool {
-        self.op.is_fused()
-    }
-
-    fn fused_pap(&self) -> Option<f64> {
-        self.op.last_pap()
-    }
-}
-
 impl Nekbone {
     /// Start building an application for this configuration. The default
     /// operator is `cpu-layered` (always available, no artifacts).
@@ -158,17 +142,6 @@ impl Nekbone {
             vector_backend: VectorBackend::default(),
             registry: None,
         }
-    }
-
-    /// Convenience: build with a parsed [`Backend`](crate::coordinator::Backend).
-    ///
-    /// Resolves against the **built-in** registry only; for a backend
-    /// validated against a custom registry
-    /// ([`Backend::parse_with`](crate::coordinator::Backend::parse_with)),
-    /// use the builder and pass the same registry via
-    /// [`NekboneBuilder::registry`].
-    pub fn new(cfg: RunConfig, backend: crate::coordinator::Backend) -> Result<Self> {
-        Self::builder(cfg).operator(backend.name()).build()
     }
 
     /// The mesh in use.
@@ -198,6 +171,46 @@ impl Nekbone {
         Ok(())
     }
 
+    /// Drive the crate's one CG loop against this application's operator,
+    /// exchange, and (reused) workspace, solving the staged RHS `f` (set
+    /// it with [`Nekbone::set_rhs`] — staging performs the dssum + mask
+    /// every RHS needs); the caller picks the vector backend. Returns the
+    /// solver report and the wall time spent inside the local operator.
+    /// Shared by [`Nekbone::run_into`] and
+    /// [`SolveSession`](crate::coordinator::SolveSession).
+    pub(crate) fn solve_once(
+        &mut self,
+        x: &mut [f64],
+        vectors: &mut dyn VectorOps,
+    ) -> Result<(CgReport, f64)> {
+        let Nekbone { cfg, op, gs, mask, c, f, ws, .. } = self;
+        let rhs: &[f64] = f;
+        let opts = CgOptions {
+            niter: cfg.niter,
+            rtol: cfg.rtol,
+            record_residuals: cfg.record_residuals,
+        };
+        let mut ax = TimedAx::new(op.as_mut());
+        let mut no_exchange = NoExchange;
+        let exchange: &mut dyn DomainExchange =
+            if cfg.no_comm { &mut no_exchange } else { gs };
+        let mask_opt = (!cfg.no_mask).then_some(mask.as_slice());
+        let rep = cg_solve_with(
+            &mut ax,
+            exchange,
+            &mut NullComm,
+            vectors,
+            mask_opt,
+            c,
+            rhs,
+            x,
+            &opts,
+            ws,
+            None,
+        )?;
+        Ok((rep, ax.seconds))
+    }
+
     /// Run the configured number of CG iterations; returns the report.
     /// `x_out`, when given, receives the solution field.
     pub fn run_into(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
@@ -209,7 +222,7 @@ impl Nekbone {
 
     /// The native-Rust vector-algebra CG (the default path), regardless of
     /// the configured vector backend. Fused operators take the same route:
-    /// [`cg_solve`] consults the operator's fused-pap hooks (via
+    /// the shared solver consults the operator's fused-pap hooks (via
     /// [`TimedAx`]) and skips its own pap sweep.
     fn run_rust_vectors(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
         let n = self.cfg.n;
@@ -217,29 +230,9 @@ impl Nekbone {
         let ndof = self.mesh.ndof_local();
         let mut x = vec![0.0; ndof];
 
-        let opts = CgOptions {
-            niter: self.cfg.niter,
-            rtol: None,
-            record_residuals: false,
-        };
-
-        let mut ax = TimedAx { op: self.op.as_mut(), seconds: 0.0 };
-        let gs_opt = if self.cfg.no_comm { None } else { Some(&mut self.gs) };
-        let mask_opt = if self.cfg.no_mask { None } else { Some(self.mask.as_slice()) };
-
         let sw = Instant::now();
-        let rep = cg_solve(
-            &mut ax,
-            gs_opt,
-            mask_opt,
-            &self.c,
-            &self.f,
-            &mut x,
-            &opts,
-            &mut self.ws,
-        )?;
+        let (rep, ax_seconds) = self.solve_once(&mut x, &mut NativeVectors)?;
         let seconds = sw.elapsed().as_secs_f64();
-        let ax_seconds = ax.seconds;
 
         if let Some(out) = x_out {
             out.copy_from_slice(&x);
@@ -280,7 +273,8 @@ impl Nekbone {
     }
 
     /// XLA vector path: chunked executables for glsc3 / add2s1 / add2s2,
-    /// sharing the operator's PJRT runtime.
+    /// sharing the operator's PJRT runtime — the same CG loop as every
+    /// other path, with [`XlaVectors`] in the vector-algebra slot.
     fn run_vector_xla(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
         let rt = self.op.xla_runtime().ok_or_else(|| {
             Error::Config("vector-backend xla requires an XLA Ax backend".into())
@@ -291,93 +285,109 @@ impl Nekbone {
             ));
         }
         let size = self.cfg.chunk * self.cfg.n.pow(3);
-        let glsc3_e = crate::runtime::VectorEngine::new(&rt, "glsc3", size)?;
-        let add2s1_e = crate::runtime::VectorEngine::new(&rt, "add2s1", size)?;
-        let add2s2_e = crate::runtime::VectorEngine::new(&rt, "add2s2", size)?;
-
-        let ndof = self.mesh.ndof_local();
+        let mut vectors = XlaVectors::new(rt, size)?;
+        let label = self.op.label();
         let (n, nelt) = (self.cfg.n, self.cfg.nelt);
-        let chunked_glsc3 = |rt: &XlaRuntime, a: &[f64], b: &[f64], c: &[f64]| -> Result<f64> {
-            let mut acc = 0.0;
-            let mut i = 0;
-            while i + size <= a.len() {
-                acc += glsc3_e.glsc3(rt, &a[i..i + size], &b[i..i + size], &c[i..i + size])?;
-                i += size;
-            }
-            if i < a.len() {
-                acc += glsc3(&a[i..], &b[i..], &c[i..]); // rust tail
-            }
-            Ok(acc)
-        };
-        let chunked_axpy = |rt: &XlaRuntime,
-                            e: &crate::runtime::VectorEngine,
-                            a: &mut [f64],
-                            b: &[f64],
-                            s: f64,
-                            s1: bool|
-         -> Result<()> {
-            let mut i = 0;
-            while i + size <= a.len() {
-                e.axpy(rt, &mut a[i..i + size], &b[i..i + size], s)?;
-                i += size;
-            }
-            if i < a.len() {
-                if s1 {
-                    crate::solver::add2s1(&mut a[i..], &b[i..], s);
-                } else {
-                    crate::solver::add2s2(&mut a[i..], &b[i..], s);
-                }
-            }
-            Ok(())
-        };
-
+        let ndof = self.mesh.ndof_local();
         let mut x = vec![0.0; ndof];
-        let mut r = self.f.clone();
-        mask_apply(&mut r, &self.mask);
-        let mut p = vec![0.0; ndof];
-        let mut w = vec![0.0; ndof];
-        let mut rtz1 = 1.0f64;
-        let mut ax_seconds = 0.0;
+
         let sw = Instant::now();
-        let mut iterations = 0;
-        for iter in 0..self.cfg.niter {
-            let rtz2 = rtz1;
-            rtz1 = chunked_glsc3(&rt, &r, &self.c, &r)?;
-            let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
-            chunked_axpy(&rt, &add2s1_e, &mut p, &r, beta, true)?;
-            let t0 = Instant::now();
-            self.op.apply(&p, &mut w)?;
-            ax_seconds += t0.elapsed().as_secs_f64();
-            if !self.cfg.no_comm {
-                self.gs.dssum(&mut w);
-            }
-            mask_apply(&mut w, &self.mask);
-            let pap = chunked_glsc3(&rt, &w, &self.c, &p)?;
-            if pap <= 0.0 || !pap.is_finite() {
-                return Err(Error::Numerical(format!("CG breakdown at iter {iter}: pap {pap}")));
-            }
-            let alpha = rtz1 / pap;
-            chunked_axpy(&rt, &add2s2_e, &mut x, &p, alpha, false)?;
-            chunked_axpy(&rt, &add2s2_e, &mut r, &w, -alpha, false)?;
-            iterations = iter + 1;
-        }
+        let (rep, ax_seconds) = self.solve_once(&mut x, &mut vectors)?;
         let seconds = sw.elapsed().as_secs_f64();
-        let final_residual = glsc3(&r, &self.c, &r).max(0.0).sqrt();
+
         if let Some(out) = x_out {
             out.copy_from_slice(&x);
         }
         let cm = CostModel::new(n, nelt);
         Ok(RunReport {
-            backend: format!("{}+vec-xla", self.op.label()),
+            backend: format!("{label}+vec-xla"),
             nelt,
             n,
-            iterations,
-            final_residual,
+            iterations: rep.iterations,
+            final_residual: rep.final_rnorm,
             seconds,
             ax_seconds,
-            flops: cm.flops_per_iter() * iterations as u64,
-            rnorms: vec![],
+            flops: cm.flops_per_iter() * rep.iterations as u64,
+            rnorms: rep.rnorms,
         })
+    }
+}
+
+/// [`VectorOps`] over chunked XLA executables (experiment E6): full chunks
+/// run through PJRT, the sub-chunk tail runs native. Plugged into the
+/// shared CG loop by [`Nekbone::run_vector_backend`].
+struct XlaVectors {
+    rt: std::rc::Rc<XlaRuntime>,
+    glsc3_e: VectorEngine,
+    add2s1_e: VectorEngine,
+    add2s2_e: VectorEngine,
+    /// Dofs per executable launch.
+    size: usize,
+}
+
+impl XlaVectors {
+    fn new(rt: std::rc::Rc<XlaRuntime>, size: usize) -> Result<Self> {
+        Ok(XlaVectors {
+            glsc3_e: VectorEngine::new(&rt, "glsc3", size)?,
+            add2s1_e: VectorEngine::new(&rt, "add2s1", size)?,
+            add2s2_e: VectorEngine::new(&rt, "add2s2", size)?,
+            rt,
+            size,
+        })
+    }
+
+    /// Chunked `axpy` through one of the engines, native tail.
+    fn chunked_axpy(
+        &self,
+        engine: &VectorEngine,
+        a: &mut [f64],
+        b: &[f64],
+        s: f64,
+        s1: bool,
+    ) -> Result<()> {
+        let size = self.size;
+        let mut i = 0;
+        while i + size <= a.len() {
+            engine.axpy(&self.rt, &mut a[i..i + size], &b[i..i + size], s)?;
+            i += size;
+        }
+        if i < a.len() {
+            if s1 {
+                add2s1(&mut a[i..], &b[i..], s);
+            } else {
+                add2s2(&mut a[i..], &b[i..], s);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl VectorOps for XlaVectors {
+    fn glsc3(&mut self, a: &[f64], b: &[f64], c: &[f64]) -> Result<f64> {
+        let size = self.size;
+        let mut acc = 0.0;
+        let mut i = 0;
+        while i + size <= a.len() {
+            acc += self.glsc3_e.glsc3(
+                &self.rt,
+                &a[i..i + size],
+                &b[i..i + size],
+                &c[i..i + size],
+            )?;
+            i += size;
+        }
+        if i < a.len() {
+            acc += glsc3(&a[i..], &b[i..], &c[i..]); // rust tail
+        }
+        Ok(acc)
+    }
+
+    fn add2s1(&mut self, a: &mut [f64], b: &[f64], c1: f64) -> Result<()> {
+        self.chunked_axpy(&self.add2s1_e, a, b, c1, true)
+    }
+
+    fn add2s2(&mut self, a: &mut [f64], b: &[f64], c2: f64) -> Result<()> {
+        self.chunked_axpy(&self.add2s2_e, a, b, c2, false)
     }
 }
 
@@ -439,6 +449,23 @@ mod tests {
             rep.final_residual,
             f_norm
         );
+    }
+
+    #[test]
+    fn run_honors_config_rtol_and_history() {
+        // The pipeline passes the config's solver options through to the
+        // shared solver: record_residuals fills the report history, rtol
+        // exits early.
+        let cfg = RunConfig { record_residuals: true, ..small_cfg() };
+        let mut app = app("cpu-layered", cfg);
+        let rep = app.run().unwrap();
+        assert_eq!(rep.rnorms.len(), rep.iterations);
+        let tol = (rep.rnorms[4] * rep.rnorms[5]).sqrt();
+        let tcfg = RunConfig { rtol: Some(tol), ..small_cfg() };
+        let mut tapp = app("cpu-layered", tcfg);
+        let trep = tapp.run().unwrap();
+        assert!(trep.iterations < 30, "rtol must exit early: {}", trep.iterations);
+        assert!(trep.final_residual <= tol);
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Solve sessions: serve many right-hand sides against one setup.
+//!
+//! Building a [`Nekbone`] application is the expensive part — mesh
+//! numbering, geometric factors, gather–scatter tables, operator setup
+//! (thread-pool spawn, artifact load/upload). A [`SolveSession`] borrows a
+//! built application and runs repeated solves against it with **zero
+//! per-solve allocation or re-setup**: the operator, the gather–scatter,
+//! the CG workspace, and the session's solution buffer are all created
+//! once and reused. This is the multi-RHS serving entry point — the
+//! "one setup, many requests" shape a production deployment needs.
+//!
+//! ```no_run
+//! use nekbone::config::RunConfig;
+//! use nekbone::coordinator::Nekbone;
+//!
+//! let cfg = RunConfig { nelt: 64, n: 10, niter: 100, ..RunConfig::default() };
+//! let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+//! let ndof = app.mesh().ndof_local();
+//! let mut session = app.session();
+//! let reports = session
+//!     .solve_batch(&[vec![1.0; ndof], vec![2.0; ndof]])
+//!     .unwrap();
+//! println!("batch of {} solves, last |r| = {:e}",
+//!          reports.len(), reports.last().unwrap().final_rnorm);
+//! ```
+
+use crate::coordinator::Nekbone;
+use crate::error::{Error, Result};
+use crate::solver::{CgReport, NativeVectors};
+
+/// A multi-RHS solve session over one built [`Nekbone`] application (see
+/// the module docs). Create with [`Nekbone::session`].
+///
+/// Each [`SolveSession::solve`] stages the given right-hand side through
+/// the application (dssum-consistent, masked — exactly like
+/// [`Nekbone::set_rhs`]) and runs the crate's one CG loop against the
+/// application's operator and reused workspace. Solver options
+/// (`niter`, `rtol`, `record_residuals`) come from the application's
+/// [`RunConfig`](crate::config::RunConfig). Sessions always run the
+/// native vector path.
+pub struct SolveSession<'a> {
+    app: &'a mut Nekbone,
+    /// Reused solution buffer (allocated once at session creation).
+    x: Vec<f64>,
+    solves: usize,
+}
+
+impl Nekbone {
+    /// Open a solve session: repeated [`SolveSession::solve`] /
+    /// [`SolveSession::solve_batch`] calls reuse this application's
+    /// operator state and CG workspace without allocating.
+    pub fn session(&mut self) -> SolveSession<'_> {
+        let ndof = self.mesh().ndof_local();
+        SolveSession { app: self, x: vec![0.0; ndof], solves: 0 }
+    }
+}
+
+impl SolveSession<'_> {
+    /// Solve `A x = rhs`; the solution is retained in
+    /// [`SolveSession::solution`] until the next solve. The rhs is staged
+    /// the way the application stages its built-in one (dssum + mask), so
+    /// a session solve of RHS `b` is identical to
+    /// `app.set_rhs(b); app.run()` — minus the per-call allocations.
+    pub fn solve(&mut self, rhs: &[f64]) -> Result<CgReport> {
+        self.app.set_rhs(rhs)?;
+        let (report, _ax_seconds) =
+            self.app.solve_once(&mut self.x, &mut NativeVectors)?;
+        self.solves += 1;
+        Ok(report)
+    }
+
+    /// [`SolveSession::solve`], additionally copying the solution into
+    /// `x_out`.
+    pub fn solve_into(&mut self, rhs: &[f64], x_out: &mut [f64]) -> Result<CgReport> {
+        let report = self.solve(rhs)?;
+        if x_out.len() != self.x.len() {
+            return Err(Error::Config(format!(
+                "solve_into: x_out has {} dofs, problem has {}",
+                x_out.len(),
+                self.x.len()
+            )));
+        }
+        x_out.copy_from_slice(&self.x);
+        Ok(report)
+    }
+
+    /// Solve a batch of right-hand sides in order, reusing all state
+    /// between entries; returns one report per entry. Equivalent to (and
+    /// tested against) N independent solves — a fused operator's
+    /// per-apply state cannot leak between entries because every solve
+    /// runs the full CG loop from a fresh `x = 0`.
+    pub fn solve_batch<R: AsRef<[f64]>>(&mut self, rhss: &[R]) -> Result<Vec<CgReport>> {
+        rhss.iter().map(|rhs| self.solve(rhs.as_ref())).collect()
+    }
+
+    /// The solution field of the most recent solve (zeros before the
+    /// first). The buffer is allocated once per session — its address is
+    /// stable across solves.
+    pub fn solution(&self) -> &[f64] {
+        &self.x
+    }
+
+    /// Number of solves completed in this session.
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// The underlying application's operator label.
+    pub fn operator_label(&self) -> String {
+        self.app.operator_label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn cfg() -> RunConfig {
+        RunConfig { nelt: 8, n: 4, niter: 20, ..Default::default() }
+    }
+
+    #[test]
+    fn session_solve_matches_set_rhs_run() {
+        let mut a = Nekbone::builder(cfg()).operator("cpu-layered").build().unwrap();
+        let ndof = a.mesh().ndof_local();
+        let rhs = crate::rng::Rng::new(11).normal_vec(ndof);
+
+        let mut b = Nekbone::builder(cfg()).operator("cpu-layered").build().unwrap();
+        b.set_rhs(&rhs).unwrap();
+        let mut x_run = vec![0.0; ndof];
+        let want = b.run_into(Some(&mut x_run)).unwrap();
+
+        let mut session = a.session();
+        let mut x_session = vec![0.0; ndof];
+        let rep = session.solve_into(&rhs, &mut x_session).unwrap();
+        assert_eq!(rep.iterations, want.iterations);
+        assert_eq!(rep.final_rnorm, want.final_residual);
+        crate::proputil::assert_allclose(&x_session, &x_run, 1e-15, 1e-15);
+        assert_eq!(session.solves(), 1);
+    }
+
+    #[test]
+    fn solution_buffer_is_stable_across_solves() {
+        // The no-allocation contract, probed by address: the session's
+        // solution buffer must never reallocate between solves.
+        let mut app = Nekbone::builder(cfg()).operator("cpu-layered").build().unwrap();
+        let ndof = app.mesh().ndof_local();
+        let rhs_a = crate::rng::Rng::new(1).normal_vec(ndof);
+        let rhs_b = crate::rng::Rng::new(2).normal_vec(ndof);
+        let mut session = app.session();
+        let ptr0 = session.solution().as_ptr();
+        session.solve(&rhs_a).unwrap();
+        assert_eq!(session.solution().as_ptr(), ptr0);
+        session.solve(&rhs_b).unwrap();
+        assert_eq!(session.solution().as_ptr(), ptr0);
+        assert_eq!(session.solves(), 2);
+    }
+
+    #[test]
+    fn session_rejects_mis_sized_inputs() {
+        let mut app = Nekbone::builder(cfg()).operator("cpu-layered").build().unwrap();
+        let ndof = app.mesh().ndof_local();
+        let mut session = app.session();
+        assert!(session.solve(&vec![0.0; ndof + 1]).is_err());
+        let rhs = vec![1.0; ndof];
+        let mut short = vec![0.0; ndof - 1];
+        assert!(session.solve_into(&rhs, &mut short).is_err());
+    }
+}

@@ -152,6 +152,22 @@ impl GatherScatter {
     }
 }
 
+/// The serial [`DomainExchange`](crate::solver::DomainExchange):
+/// `exchange` is [`GatherScatter::dssum`] and the exchange support is
+/// exactly [`GatherScatter::shared_dofs`]. This is what lets the one
+/// generic CG driver run single-address-space solves — the rank runtime
+/// plugs in its halo exchange behind the same trait.
+impl crate::solver::DomainExchange for GatherScatter {
+    fn exchange(&mut self, v: &mut [f64]) -> crate::error::Result<()> {
+        self.dssum(v);
+        Ok(())
+    }
+
+    fn shared_dofs(&self) -> &[u32] {
+        GatherScatter::shared_dofs(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -37,6 +37,33 @@
 //! println!("{:.2} GFlop/s, residual {:e}", report.gflops(), report.final_residual);
 //! ```
 //!
+//! Repeated solves against one setup (multi-RHS serving) go through a
+//! [`coordinator::SolveSession`] — the operator, gather–scatter tables,
+//! and CG workspace are built once and reused with zero per-solve
+//! allocation:
+//!
+//! ```no_run
+//! use nekbone::config::RunConfig;
+//! use nekbone::coordinator::Nekbone;
+//!
+//! let cfg = RunConfig { nelt: 64, n: 10, ..RunConfig::default() };
+//! let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+//! let ndof = app.mesh().ndof_local();
+//! let mut session = app.session();
+//! for seed in 0..16u64 {
+//!     let rhs = nekbone::rng::Rng::new(seed).normal_vec(ndof);
+//!     let report = session.solve(&rhs).unwrap();
+//!     println!("solve {}: |r| = {:e}", session.solves(), report.final_rnorm);
+//! }
+//! ```
+//!
+//! There is exactly **one CG loop** in the crate
+//! ([`solver::cg_solve_with`]); it is generic over a
+//! [`solver::Communicator`] (collectives) and a [`solver::DomainExchange`]
+//! (direct-stiffness assembly), so the serial pipeline, the `--no-comm`
+//! roofline mode, and the simulated-MPI rank runtime all run the same
+//! solver with different plumbing.
+//!
 //! The registry is open: implement [`operators::AxOperator`], register a
 //! constructor under a new name, and pass the registry to the builder —
 //! the CLI, the CG solver, the simulated-rank runtime, and the

@@ -6,7 +6,7 @@
 
 use nekbone::bench::Table;
 use nekbone::cli::{parse_elems, Args, USAGE};
-use nekbone::coordinator::{Backend, Nekbone, VectorBackend};
+use nekbone::coordinator::{Nekbone, VectorBackend};
 use nekbone::error::Result;
 use nekbone::operators::OperatorRegistry;
 use nekbone::rank::run_ranked;
@@ -42,8 +42,14 @@ fn dispatch(raw: &[String]) -> Result<()> {
     }
 }
 
-fn backend_of(args: &Args) -> Result<Backend> {
-    Backend::parse(args.get("backend").unwrap_or("xla-layered"))
+/// Resolve `--backend` to its canonical operator name through the
+/// registry — the one dispatch surface: aliases resolve, unknown names
+/// error listing every registered operator.
+fn operator_of(args: &Args) -> Result<String> {
+    Ok(OperatorRegistry::with_builtins()
+        .resolve(args.get("backend").unwrap_or("xla-layered"))?
+        .name
+        .clone())
 }
 
 /// Ranked run honoring an explicitly chosen `--backend`; without one the
@@ -52,14 +58,14 @@ fn backend_of(args: &Args) -> Result<Backend> {
 /// artifacts).
 fn ranked_report(args: &Args, cfg: &nekbone::config::RunConfig) -> Result<nekbone::coordinator::RunReport> {
     match args.get("backend") {
-        Some(name) => nekbone::rank::run_ranked_with(cfg, Backend::parse(name)?.name()),
+        Some(_) => nekbone::rank::run_ranked_with(cfg, &operator_of(args)?),
         None => run_ranked(cfg),
     }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = args.run_config()?;
-    let backend = backend_of(args)?;
+    let operator = operator_of(args)?;
     let vb = VectorBackend::parse(args.get("vector-backend").unwrap_or("rust"))?;
 
     if cfg.ranks > 1 {
@@ -68,7 +74,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         return Ok(());
     }
     let mut app = Nekbone::builder(cfg)
-        .operator(backend.name())
+        .operator(operator)
         .vector_backend(vb)
         .build()?;
     let report = app.run()?;
@@ -86,7 +92,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let base = args.run_config()?;
-    let backend = backend_of(args)?;
+    let operator = operator_of(args)?;
     let elems = parse_elems(args.get("elems").unwrap_or("64,128,256,512,1024"))?;
     let mut table = Table::new(&["backend", "nelt", "dof", "time(s)", "GFlop/s", "residual"]);
     for nelt in elems {
@@ -94,7 +100,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let report = if cfg.ranks > 1 {
             ranked_report(args, &cfg)?
         } else {
-            Nekbone::builder(cfg).operator(backend.name()).build()?.run()?
+            Nekbone::builder(cfg).operator(operator.as_str()).build()?.run()?
         };
         table.row(&[
             report.backend.clone(),
@@ -111,7 +117,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_roofline(args: &Args) -> Result<()> {
     let base = args.run_config()?;
-    let backend = backend_of(args)?;
+    let operator = operator_of(args)?;
     let elems = parse_elems(args.get("elems").unwrap_or("256,512,1024,2048,4096"))?;
     let mut table = Table::new(&[
         "nelt",
@@ -126,7 +132,7 @@ fn cmd_roofline(args: &Args) -> Result<()> {
         let cfg = nekbone::config::RunConfig { nelt, no_comm: true, ..base.clone() };
         let n = cfg.n;
         let (bw, roof) = roofline::roofline_for(n, nelt, 5);
-        let mut app = Nekbone::builder(cfg).operator(backend.name()).build()?;
+        let mut app = Nekbone::builder(cfg).operator(operator.as_str()).build()?;
         let report = app.run()?;
         let achieved = report.gflops();
         table.row(&[

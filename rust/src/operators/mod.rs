@@ -38,9 +38,9 @@
 //! An operator that returns `true` from [`AxOperator::is_fused`] promises
 //! to compute the CG reduction in the same pass as the operator itself
 //! (`cpu-layered-fused`, `cpu-threaded-fused`, `xla-fused-layered`), and
-//! the solvers ([`cg_solve`](crate::solver::cg_solve), the rank runtime)
-//! then **skip the separate full-length `glsc3(w, c, p)` sweep**. The
-//! promise, precisely:
+//! the one shared solver ([`cg_solve`](crate::solver::cg_solve) — serial
+//! and ranked alike) then **skips the separate full-length
+//! `glsc3(w, c, p)` sweep**. The promise, precisely:
 //!
 //! * After every successful `apply(u, w)`, [`AxOperator::last_pap`] is
 //!   `Some(Σ_i w_i · c_i · u_i)` over the operator's **local, pre-dssum**

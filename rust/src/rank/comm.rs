@@ -1,10 +1,72 @@
 //! Message passing between simulated ranks (the MPI substrate): std mpsc
-//! channels in a full mesh, with allreduce and pairwise exchange built on
-//! top. Every collective is tagged to keep lock-step iterations honest.
+//! channels in a full mesh, with deterministic allreduce and pairwise
+//! exchange built on top, plus [`ThreadComm`] — the adapter that gives
+//! these channels the [`Communicator`] face the generic CG solver
+//! dispatches through.
+//!
+//! ## Tag-space layout
+//!
+//! Every message carries a 64-bit tag so lock-step collectives stay
+//! honest even when packets arrive out of order:
+//!
+//! ```text
+//! bit  63      broadcast leg marker (reserved by the allreduces)
+//! bit  62      namespace: 0 = ThreadComm collectives, 1 = halo exchange
+//! collectives: bits 0..62 hold a per-communicator sequence number
+//! exchange:    bits 30..62 hold the exchange round,
+//!              bits 0..30 the shared plane's first global id + 1
+//! ```
+//!
+//! Collectives need no negotiated tags at all: every rank's [`ThreadComm`]
+//! counts its collectives, and since the solver is SPMD (all ranks issue
+//! the same collectives in the same order — see the
+//! [`Communicator`](crate::solver::Communicator) contract), the counters
+//! agree by construction and never repeat. Halo exchanges live in their
+//! own namespace keyed by (round, plane id), so a slow rank's round-`k`
+//! plane can never be consumed as round-`k+1` data.
+//! [`exchange_tag`] rejects unrepresentable rounds/ids with a `Config`
+//! error instead of corrupting the exchange.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::error::{Error, Result};
+use crate::solver::Communicator;
+
+/// High bit marks broadcast legs of an allreduce.
+const TAG_BCAST: u64 = 1 << 63;
+
+/// Namespace bit separating halo-exchange tags from collective tags.
+const TAG_NS_EXCHANGE: u64 = 1 << 62;
+
+/// Bits holding the shared plane's first global id + 1 in exchange tags.
+pub(crate) const TAG_PAIR_BITS: u32 = 30;
+
+/// Bits holding the exchange round in exchange tags.
+pub(crate) const TAG_ROUND_BITS: u32 = 32;
+
+/// Tag of one halo-plane exchange: both sides derive it from the exchange
+/// round and the plane's first global id, so the pair agrees without
+/// negotiation. Errors (rather than silently colliding) when the round or
+/// id exceeds its field.
+pub(crate) fn exchange_tag(round: u64, gid: usize) -> Result<u64> {
+    if round >= 1 << TAG_ROUND_BITS {
+        return Err(Error::Config(format!(
+            "halo exchange round {round} is unrepresentable in the tag space \
+             (max {})",
+            (1u64 << TAG_ROUND_BITS) - 1
+        )));
+    }
+    if gid as u64 + 1 >= 1 << TAG_PAIR_BITS {
+        return Err(Error::Config(format!(
+            "halo plane global id {gid} is unrepresentable in the tag space \
+             (max {})",
+            (1u64 << TAG_PAIR_BITS) - 2
+        )));
+    }
+    Ok(TAG_NS_EXCHANGE | (round << TAG_PAIR_BITS) | (gid as u64 + 1))
+}
 
 /// One message on the wire.
 #[derive(Debug)]
@@ -64,15 +126,21 @@ impl Comm {
         }
     }
 
-    /// Sum a scalar across all ranks (reduce to rank 0, broadcast back).
-    pub fn allreduce_sum(&mut self, value: f64, tag: u64) -> Result<f64> {
+    /// Fold a scalar across all ranks **in ascending rank order** (rank 0
+    /// folds its own value, then rank 1's, 2's, ... in sequence) and
+    /// broadcast the folded result back. The fold order is fixed and every
+    /// rank receives rank 0's accumulator verbatim, so the result is
+    /// deterministic run-to-run and **bitwise identical on every rank** —
+    /// the determinism the [`Communicator`](crate::solver::Communicator)
+    /// contract promises.
+    fn allreduce(&mut self, value: f64, tag: u64, fold: impl Fn(f64, f64) -> f64) -> Result<f64> {
         if self.size == 1 {
             return Ok(value);
         }
         if self.rank == 0 {
             let mut acc = value;
             for from in 1..self.size {
-                acc += self.recv(from, tag)?[0];
+                acc = fold(acc, self.recv(from, tag)?[0]);
             }
             for to in 1..self.size {
                 self.send(to, tag | TAG_BCAST, vec![acc])?;
@@ -84,6 +152,16 @@ impl Comm {
         }
     }
 
+    /// Deterministic rank-order sum of a scalar across all ranks.
+    pub fn allreduce_sum(&mut self, value: f64, tag: u64) -> Result<f64> {
+        self.allreduce(value, tag, |a, b| a + b)
+    }
+
+    /// Deterministic rank-order minimum of a scalar across all ranks.
+    pub fn allreduce_min(&mut self, value: f64, tag: u64) -> Result<f64> {
+        self.allreduce(value, tag, f64::min)
+    }
+
     /// Pairwise exchange with `peer`: send `mine`, receive theirs.
     pub fn sendrecv(&mut self, peer: usize, tag: u64, mine: Vec<f64>) -> Result<Vec<f64>> {
         self.send(peer, tag, mine)?;
@@ -91,8 +169,62 @@ impl Comm {
     }
 }
 
-/// High bit marks broadcast legs of an allreduce.
-const TAG_BCAST: u64 = 1 << 63;
+/// The [`Communicator`] adapter over a rank's channel [`Comm`]: collective
+/// tags are generated from a per-communicator sequence counter (see the
+/// module docs), so callers — the generic CG solver above all — never
+/// handle tags. Shares the underlying `Comm` with the rank's halo exchange
+/// through `Rc<RefCell<..>>`; the two tag namespaces are disjoint.
+pub struct ThreadComm {
+    comm: Rc<RefCell<Comm>>,
+    seq: u64,
+}
+
+impl ThreadComm {
+    /// Wrap a shared channel communicator.
+    pub fn new(comm: Rc<RefCell<Comm>>) -> Self {
+        ThreadComm { comm, seq: 0 }
+    }
+
+    fn next_tag(&mut self) -> Result<u64> {
+        if self.seq >= TAG_NS_EXCHANGE {
+            return Err(Error::Config(
+                "collective sequence number exhausted (2^62 collectives on one \
+                 communicator)"
+                    .into(),
+            ));
+        }
+        let tag = self.seq;
+        self.seq += 1;
+        Ok(tag)
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.comm.borrow().rank
+    }
+
+    fn size(&self) -> usize {
+        self.comm.borrow().size
+    }
+
+    fn allreduce_sum(&mut self, value: f64) -> Result<f64> {
+        let tag = self.next_tag()?;
+        self.comm.borrow_mut().allreduce_sum(value, tag)
+    }
+
+    fn allreduce_min(&mut self, value: f64) -> Result<f64> {
+        let tag = self.next_tag()?;
+        self.comm.borrow_mut().allreduce_min(value, tag)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        // An allreduce is a barrier: no rank can own the result before
+        // every rank has contributed.
+        let tag = self.next_tag()?;
+        self.comm.borrow_mut().allreduce_sum(0.0, tag).map(|_| ())
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -116,9 +248,42 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_is_rank_order_deterministic() {
+        // Values whose sum depends on association order: the collective
+        // must equal the explicit ascending-rank left fold, bitwise, on
+        // every rank — this is what lets the rank runtime assert exact
+        // (not approximate) cross-rank agreement.
+        let vals = [1.0e16, 3.7, -1.0e16, 0.1];
+        let want_sum = vals.iter().fold(0.0f64, |a, &b| a + b); // ((v0+v1)+v2)+v3
+        let want_min = vals.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+        assert_ne!(
+            want_sum.to_bits(),
+            (vals[3] + vals[2] + vals[1] + vals[0]).to_bits(),
+            "test values must be order-sensitive"
+        );
+        let comms = Comm::mesh(4);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let s = c.allreduce_sum(vals[c.rank], 5).unwrap();
+                    let m = c.allreduce_min(vals[c.rank], 6).unwrap();
+                    (s, m)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (s, m) = h.join().unwrap();
+            assert_eq!(s.to_bits(), want_sum.to_bits());
+            assert_eq!(m.to_bits(), want_min.to_bits());
+        }
+    }
+
+    #[test]
     fn allreduce_single_rank() {
         let mut c = Comm::mesh(1).pop().unwrap();
         assert_eq!(c.allreduce_sum(3.5, 9).unwrap(), 3.5);
+        assert_eq!(c.allreduce_min(3.5, 10).unwrap(), 3.5);
     }
 
     #[test]
@@ -169,5 +334,62 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), (3.0, 3.0));
         }
+    }
+
+    #[test]
+    fn thread_comm_collectives_without_explicit_tags() {
+        // The Communicator face: sequence-counted collectives, min, and
+        // barrier, all without the caller touching a tag.
+        let comms = Comm::mesh(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let mut tc = ThreadComm::new(Rc::new(RefCell::new(comm)));
+                    assert_eq!(tc.size(), 3);
+                    let rank = tc.rank();
+                    let a = tc.allreduce_sum(rank as f64).unwrap();
+                    tc.barrier().unwrap();
+                    let b = tc.allreduce_min(rank as f64 * -1.0).unwrap();
+                    let c = tc.allreduce_sum(1.0).unwrap();
+                    (a, b, c)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), (3.0, -2.0, 3.0));
+        }
+    }
+
+    #[test]
+    fn tag_namespaces_are_disjoint() {
+        // Collective sequence tags, exchange tags, and the broadcast bit
+        // can never collide.
+        let mut seen = std::collections::BTreeSet::new();
+        for seq in [0u64, 1, 2, 1 << 40, TAG_NS_EXCHANGE - 1] {
+            assert!(seen.insert(seq), "collective tag collision at {seq}");
+            assert_eq!(seq & TAG_NS_EXCHANGE, 0);
+        }
+        for round in [0u64, 1, 8191, 8192, (1 << TAG_ROUND_BITS) - 1] {
+            for gid in [0usize, 1, 4095, (1 << TAG_PAIR_BITS) - 2] {
+                let t = exchange_tag(round, gid).unwrap();
+                assert!(seen.insert(t), "exchange tag collision at round {round} gid {gid}");
+                assert_ne!(t & TAG_NS_EXCHANGE, 0);
+            }
+        }
+        for &t in &seen {
+            assert_eq!(t & TAG_BCAST, 0, "tag {t:#x} sets the broadcast bit");
+        }
+    }
+
+    #[test]
+    fn exchange_tag_capacity_is_config_error() {
+        assert!(exchange_tag((1 << TAG_ROUND_BITS) - 1, 7).is_ok());
+        assert!(matches!(exchange_tag(1 << TAG_ROUND_BITS, 7), Err(Error::Config(_))));
+        assert!(exchange_tag(0, (1 << TAG_PAIR_BITS) - 2).is_ok());
+        assert!(matches!(
+            exchange_tag(0, (1 << TAG_PAIR_BITS) - 1),
+            Err(Error::Config(_))
+        ));
     }
 }

@@ -8,6 +8,16 @@
 //! exactly the communication structure of the real code, with
 //! `std::sync::mpsc` standing in for MPI.
 //!
+//! There is **no CG code here**. Each rank wraps its channels in a
+//! [`ThreadComm`] (the [`Communicator`](crate::solver::Communicator)
+//! adapter) and its slab assembly in a `HaloExchange` (the distributed
+//! [`DomainExchange`](crate::solver::DomainExchange)), then calls the same
+//! [`cg_solve`] the serial pipeline uses — residual updates, the
+//! convergence floor, fused-pap accounting, and sweep counters all live in
+//! exactly one place (`solver/cg.rs`). Because every CG scalar is an
+//! order-deterministic allreduce, the per-rank [`CgReport`]s are bitwise
+//! identical; [`run_ranked_in`] asserts that exactly.
+//!
 //! The per-rank compute dispatches through a `Box<dyn AxOperator>` built by
 //! name from the [`OperatorRegistry`], so any registered operator (default:
 //! the paper's layered CPU schedule, the CPU/MPI baseline) runs inside the
@@ -15,8 +25,10 @@
 
 mod comm;
 
-pub use comm::{Comm, Packet};
+pub use comm::{Comm, Packet, ThreadComm};
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::Instant;
 
 use crate::basis::Basis;
@@ -28,69 +40,30 @@ use crate::gs::GatherScatter;
 use crate::mesh::Mesh;
 use crate::metrics::CostModel;
 use crate::operators::{OperatorCtx, OperatorRegistry};
-use crate::solver::{add2s1, add2s2, glsc3, mask_apply, PapCorrection};
+use crate::solver::{
+    cg_solve, mask_apply, CgOptions, CgReport, CgWorkspace, DomainExchange, NoExchange,
+    TimedAx,
+};
 
 /// The operator each rank runs when the caller does not pick one.
 pub const DEFAULT_RANK_OPERATOR: &str = "cpu-layered";
 
-// ---------------------------------------------------------------------------
-// Collective tags
-// ---------------------------------------------------------------------------
-//
-// Layout of the 64-bit tag space:
-//
-// ```text
-// bits  0..3   collective id within an iteration
-//              (0 = rtz1 allreduce, 1 = dssum halo, 2 = pap allreduce)
-// bits  3..32  halo pair id (shared plane's first global id + 1);
-//              zero for non-halo collectives
-// bits 32..63  iteration + 1 (zero only for TAG_FINAL)
-// bit  63      reserved by `Comm::allreduce_sum` for broadcast legs
-// ```
-//
-// The previous layout packed the iteration into the same bits as the halo
-// pair id, so `niter >= 8192` silently collided iteration tags with halo
-// tags in release builds (the overflow was only a `debug_assert`) and
-// ranks exchanged wrong plane data. Iterations now own their own high bit
-// range, and [`check_tag_capacity`] rejects genuinely unrepresentable
-// runs with a `Config` error instead of corrupting the exchange.
-
-const TAG_COLLECTIVE_BITS: u32 = 3;
-const TAG_PAIR_BITS: u32 = 29;
-const TAG_ITER_SHIFT: u32 = TAG_COLLECTIVE_BITS + TAG_PAIR_BITS;
-
-/// Tag of the single post-loop residual allreduce. Never produced by
-/// [`iter_tag`] / [`halo_pair_tag`]: their iteration field is always >= 1.
-const TAG_FINAL: u64 = 3;
-
-/// Tag of one per-iteration collective.
-fn iter_tag(iter: usize, collective: u64) -> u64 {
-    debug_assert!(collective < (1 << TAG_COLLECTIVE_BITS));
-    ((iter as u64 + 1) << TAG_ITER_SHIFT) | collective
-}
-
-/// Tag of one halo pair exchange within a dssum (both sides derive it from
-/// the plane's first global id, so the pair agrees without negotiation).
-fn halo_pair_tag(base: u64, gid: usize) -> u64 {
-    base | ((gid as u64 + 1) << TAG_COLLECTIVE_BITS)
-}
-
-/// Reject runs whose collective tags cannot be represented: the iteration
-/// field holds 31 bits (bit 63 stays clear for the broadcast marker), the
-/// halo pair field [`TAG_PAIR_BITS`] bits of global id.
+/// Reject runs whose halo-exchange tags cannot be represented (see the
+/// tag-space layout in [`comm`]): one exchange round per CG iteration, and
+/// plane ids drawn from the global dof numbering.
 fn check_tag_capacity(niter: usize, ndof_global: usize) -> Result<()> {
-    if niter as u64 >= 1u64 << 31 {
+    if niter as u64 >= 1u64 << comm::TAG_ROUND_BITS {
         return Err(Error::Config(format!(
-            "niter = {niter} is unrepresentable in the collective tag space \
+            "niter = {niter} is unrepresentable in the halo-exchange tag space \
              (max {})",
-            (1u64 << 31) - 1
+            (1u64 << comm::TAG_ROUND_BITS) - 1
         )));
     }
-    if ndof_global as u64 >= 1u64 << TAG_PAIR_BITS {
+    if ndof_global as u64 >= 1u64 << comm::TAG_PAIR_BITS {
         return Err(Error::Config(format!(
             "global dof count {ndof_global} is unrepresentable in the \
              halo-pair tag space (max {})",
-            (1u64 << TAG_PAIR_BITS) - 1
+            (1u64 << comm::TAG_PAIR_BITS) - 1
         )));
     }
     Ok(())
@@ -98,7 +71,6 @@ fn check_tag_capacity(niter: usize, ndof_global: usize) -> Result<()> {
 
 /// How one rank sees the mesh.
 struct RankSlab {
-    rank: usize,
     /// Global element range [e0, e1).
     e0: usize,
     e1: usize,
@@ -194,7 +166,6 @@ fn build_slabs(mesh: &Mesh, basis: &Basis, cfg: &RunConfig) -> Result<Vec<RankSl
         let hi_plane = if rank + 1 < ranks { plane(z1 * (n - 1)) } else { Vec::new() };
 
         slabs.push(RankSlab {
-            rank,
             e0,
             e1,
             gs,
@@ -209,63 +180,98 @@ fn build_slabs(mesh: &Mesh, basis: &Basis, cfg: &RunConfig) -> Result<Vec<RankSl
     Ok(slabs)
 }
 
-/// Distributed dssum: rank-local gather–scatter + halo exchange with the
-/// slab neighbors.
-fn dssum_ranked(
-    slab: &mut RankSlab,
-    comm: &mut Comm,
-    v: &mut [f64],
-    tag: u64,
-) -> Result<()> {
-    slab.gs.dssum(v);
-    // Exchange partial sums on the shared planes. Both sides enumerate the
-    // plane in ascending-gid order, so the vectors align; the pair tag is
-    // derived from the plane's first global id, identical on both sides.
-    if !slab.lo_plane.is_empty() {
-        let pair_tag = halo_pair_tag(tag, slab.lo_plane[0].0);
-        let mine: Vec<f64> = slab.lo_plane.iter().map(|(_, ls)| v[ls[0]]).collect();
-        let theirs = comm.sendrecv(slab.rank - 1, pair_tag, mine)?;
-        for ((_, ls), t) in slab.lo_plane.iter().zip(&theirs) {
-            let total = v[ls[0]] + t;
-            for &l in ls {
-                v[l] = total;
-            }
-        }
-    }
-    if !slab.hi_plane.is_empty() {
-        let pair_tag = halo_pair_tag(tag, slab.hi_plane[0].0);
-        let mine: Vec<f64> = slab.hi_plane.iter().map(|(_, ls)| v[ls[0]]).collect();
-        let theirs = comm.sendrecv(slab.rank + 1, pair_tag, mine)?;
-        for ((_, ls), t) in slab.hi_plane.iter().zip(&theirs) {
-            let total = v[ls[0]] + t;
-            for &l in ls {
-                v[l] = total;
-            }
-        }
-    }
-    Ok(())
+/// The distributed [`DomainExchange`]: rank-local gather–scatter + one
+/// pairwise halo exchange per slab neighbor. Both sides enumerate each
+/// shared plane in ascending-gid order, so the exchanged vectors align;
+/// the pair tag is derived from the exchange round and the plane's first
+/// global id, identical on both sides without negotiation.
+pub(crate) struct HaloExchange {
+    gs: GatherScatter,
+    lo_plane: Vec<(usize, Vec<usize>)>,
+    hi_plane: Vec<(usize, Vec<usize>)>,
+    comm: Rc<RefCell<Comm>>,
+    /// Exchange rounds completed (tags are keyed on this; the solver calls
+    /// one exchange per iteration on every rank, so the counters agree).
+    round: u64,
+    /// Union of the rank-local shared dofs and the halo-plane dofs —
+    /// everything `exchange` may change, i.e. the support of the fused-pap
+    /// correction.
+    shared: Vec<u32>,
 }
 
-/// What one rank reports back from its CG loop.
+impl HaloExchange {
+    fn new(
+        gs: GatherScatter,
+        lo_plane: Vec<(usize, Vec<usize>)>,
+        hi_plane: Vec<(usize, Vec<usize>)>,
+        comm: Rc<RefCell<Comm>>,
+    ) -> Self {
+        let mut shared: Vec<u32> = gs.shared_dofs().to_vec();
+        for (_, ls) in lo_plane.iter().chain(hi_plane.iter()) {
+            for &l in ls {
+                shared.push(l as u32);
+            }
+        }
+        shared.sort_unstable();
+        shared.dedup();
+        HaloExchange { gs, lo_plane, hi_plane, comm, round: 0, shared }
+    }
+
+    /// Exchange partial sums on one shared plane with `peer`.
+    fn exchange_plane(
+        comm: &mut Comm,
+        plane: &[(usize, Vec<usize>)],
+        peer: usize,
+        round: u64,
+        v: &mut [f64],
+    ) -> Result<()> {
+        if plane.is_empty() {
+            return Ok(());
+        }
+        let tag = comm::exchange_tag(round, plane[0].0)?;
+        let mine: Vec<f64> = plane.iter().map(|(_, ls)| v[ls[0]]).collect();
+        let theirs = comm.sendrecv(peer, tag, mine)?;
+        for ((_, ls), t) in plane.iter().zip(&theirs) {
+            let total = v[ls[0]] + t;
+            for &l in ls {
+                v[l] = total;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl DomainExchange for HaloExchange {
+    fn exchange(&mut self, v: &mut [f64]) -> Result<()> {
+        let round = self.round;
+        self.round += 1;
+        self.gs.dssum(v);
+        let mut comm = self.comm.borrow_mut();
+        let rank = comm.rank;
+        Self::exchange_plane(&mut comm, &self.lo_plane, rank.wrapping_sub(1), round, v)?;
+        Self::exchange_plane(&mut comm, &self.hi_plane, rank + 1, round, v)?;
+        Ok(())
+    }
+
+    fn shared_dofs(&self) -> &[u32] {
+        &self.shared
+    }
+}
+
+/// What one rank reports back: the shared solver's report (bitwise
+/// identical across ranks — every scalar in it is allreduced) plus this
+/// rank's wall time inside the local operator.
 struct RankOutcome {
-    /// Global residual norm (allreduced — must agree across ranks).
-    rnorm: f64,
-    /// Wall time inside the local operator.
+    report: CgReport,
     ax_seconds: f64,
-    /// Iterations executed (may undershoot `niter` on exact convergence).
-    iterations: usize,
 }
 
-/// SPMD CG over the slabs. Mirrors `solver::cg_solve` with allreduce in
-/// place of plain sums, `dssum_ranked` in place of serial dssum, and the
-/// rank-local operator built by name from the registry. Fused operators
-/// take the same shortcut as the serial solver: the rank's pap
-/// contribution is the operator's fused value plus a correction over the
-/// dofs the distributed dssum can change (rank-local shared dofs + halo
-/// planes), so the full-length `glsc3(w, c, p)` sweep is skipped.
+/// One rank's solve: build the operator from the registry, wrap the
+/// channels in a [`ThreadComm`] and the slab assembly in a
+/// [`HaloExchange`], and hand everything to the shared [`cg_solve`].
 fn rank_main(
-    mut slab: RankSlab,
-    mut comm: Comm,
+    slab: RankSlab,
+    comm: Comm,
     cfg: &RunConfig,
     operator: &str,
     registry: &OperatorRegistry,
@@ -289,93 +295,41 @@ fn rank_main(
     };
     let mut op = registry.build(operator, &ctx)?;
     // The operator cloned (or uploaded) what it needs from the slab's
-    // geometric factors; free the slab copy so the two don't coexist for
-    // the whole solve (mirrors the serial pipeline dropping `geom`).
-    slab.g = Vec::new();
+    // geometric factors; destructuring drops the slab copy so the two
+    // don't coexist for the whole solve (mirrors the serial pipeline
+    // dropping `geom`).
+    let RankSlab { gs, lo_plane, hi_plane, mask, c, f, .. } = slab;
 
-    // Fused hot path: dssum_ranked changes `w` only on the rank-local
-    // shared dofs and the halo planes, so the fused pap is patched over
-    // those dofs alone — the same [`PapCorrection`] the serial solver uses.
-    let fused = op.is_fused();
-    let mut correction = PapCorrection::new(if fused && !cfg.no_comm {
-        let mut s: Vec<u32> = slab.gs.shared_dofs().to_vec();
-        for (_, ls) in slab.lo_plane.iter().chain(slab.hi_plane.iter()) {
-            for &l in ls {
-                s.push(l as u32);
-            }
-        }
-        s.sort_unstable();
-        s.dedup();
-        s
-    } else {
-        Vec::new()
-    });
+    // The communicator and the halo exchange share the rank's channels;
+    // their tag namespaces are disjoint (see `comm`).
+    let comm = Rc::new(RefCell::new(comm));
+    let mut thread_comm = ThreadComm::new(Rc::clone(&comm));
+    let mut halo = HaloExchange::new(gs, lo_plane, hi_plane, comm);
+    let mut no_exchange = NoExchange;
+    let exchange: &mut dyn DomainExchange =
+        if cfg.no_comm { &mut no_exchange } else { &mut halo };
 
+    let opts = CgOptions {
+        niter: cfg.niter,
+        rtol: cfg.rtol,
+        record_residuals: cfg.record_residuals,
+    };
+    let mask_opt = (!cfg.no_mask).then_some(mask.as_slice());
+    let mut ax = TimedAx::new(op.as_mut());
     let mut x = vec![0.0; ndof];
-    let mut r = slab.f.clone();
-    mask_apply(&mut r, &slab.mask);
-    let mut p = vec![0.0; ndof];
-    let mut w = vec![0.0; ndof];
-    let mut rtz1 = 1.0f64;
-    let mut rtz_first: Option<f64> = None;
-    let mut ax_seconds = 0.0;
-    let mut iterations = cfg.niter;
-
-    for iter in 0..cfg.niter {
-        let rtz2 = rtz1;
-        rtz1 = comm.allreduce_sum(glsc3(&r, &slab.c, &r), iter_tag(iter, 0))?;
-        if !rtz1.is_finite() {
-            return Err(Error::Numerical(format!(
-                "ranked CG breakdown at iter {iter} on rank {}: rtz1 = {rtz1}",
-                slab.rank
-            )));
-        }
-        let first = *rtz_first.get_or_insert(rtz1.max(f64::MIN_POSITIVE));
-        if rtz1 <= 1e-30 * first {
-            // Exact convergence well inside the iteration budget (mirrors
-            // `cg_solve`): stop instead of dividing by ~0 and reporting a
-            // spurious pap breakdown. rtz1 is an allreduced value —
-            // bit-identical on every rank — so all ranks exit together.
-            iterations = iter;
-            break;
-        }
-        let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
-        add2s1(&mut p, &r, beta);
-
-        let t0 = Instant::now();
-        op.apply(&p, &mut w)?;
-        ax_seconds += t0.elapsed().as_secs_f64();
-        let pap_fused = if fused {
-            let local = op.last_pap().ok_or_else(|| {
-                Error::Numerical("fused operator did not produce a pap value".into())
-            })?;
-            correction.snapshot(&w);
-            Some(local)
-        } else {
-            None
-        };
-        if !cfg.no_comm {
-            dssum_ranked(&mut slab, &mut comm, &mut w, iter_tag(iter, 1))?;
-        }
-        mask_apply(&mut w, &slab.mask);
-
-        let pap_local = match pap_fused {
-            Some(local) => correction.patch(local, &w, &slab.c, &p),
-            None => glsc3(&w, &slab.c, &p),
-        };
-        let pap = comm.allreduce_sum(pap_local, iter_tag(iter, 2))?;
-        if pap <= 0.0 || !pap.is_finite() {
-            return Err(Error::Numerical(format!(
-                "ranked CG breakdown at iter {iter} on rank {}: pap = {pap}",
-                slab.rank
-            )));
-        }
-        let alpha = rtz1 / pap;
-        add2s2(&mut x, &p, alpha);
-        add2s2(&mut r, &w, -alpha);
-    }
-    let rr = comm.allreduce_sum(glsc3(&r, &slab.c, &r), TAG_FINAL)?;
-    Ok(RankOutcome { rnorm: rr.max(0.0).sqrt(), ax_seconds, iterations })
+    let mut ws = CgWorkspace::new(ndof);
+    let report = cg_solve(
+        &mut ax,
+        exchange,
+        &mut thread_comm,
+        mask_opt,
+        &c,
+        &f,
+        &mut x,
+        &opts,
+        &mut ws,
+    )?;
+    Ok(RankOutcome { report, ax_seconds: ax.seconds })
 }
 
 /// Run Nekbone across `cfg.ranks` simulated ranks with the default
@@ -427,25 +381,27 @@ pub fn run_ranked_in(
     for res in results {
         outcomes.push(res??);
     }
-    // Every rank's residual comes out of the same allreduce, so they must
-    // agree; verify instead of assuming, so a future halo/tag bug fails
-    // loudly here rather than silently reporting one rank's value.
-    let first = &outcomes[0];
-    let (final_residual, iterations) = (first.rnorm, first.iterations);
+    // Every scalar in a CgReport is an order-deterministic allreduce, so
+    // the per-rank reports must be **bitwise identical** — verify exactly
+    // (not to a tolerance), so a future halo/tag bug fails loudly here
+    // rather than silently reporting one rank's value.
+    let first = outcomes[0].report.clone();
     let mut ax_seconds: f64 = 0.0;
     for (rank, o) in outcomes.iter().enumerate() {
-        let denom = final_residual.abs().max(1e-30);
-        if (o.rnorm - final_residual).abs() / denom > 1e-12 {
+        let r = &o.report;
+        let identical = r.iterations == first.iterations
+            && r.final_rnorm.to_bits() == first.final_rnorm.to_bits()
+            && r.rtz1.to_bits() == first.rtz1.to_bits()
+            && r.glsc3_sweeps == first.glsc3_sweeps
+            && r.rnorms.len() == first.rnorms.len()
+            && r.rnorms.iter().zip(&first.rnorms).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !identical {
             return Err(Error::Rank(format!(
-                "rank {rank} disagrees on the final residual: {} vs {} \
-                 (halo exchange or collective-tag bug?)",
-                o.rnorm, final_residual
-            )));
-        }
-        if o.iterations != iterations {
-            return Err(Error::Rank(format!(
-                "rank {rank} executed {} iterations, rank 0 executed {iterations}",
-                o.iterations
+                "rank {rank} CG report diverged from rank 0: \
+                 {} iters |r| = {} vs {} iters |r| = {} \
+                 (all scalars are allreduced; reports must be bitwise \
+                 identical — halo exchange or collective-ordering bug?)",
+                r.iterations, r.final_rnorm, first.iterations, first.final_rnorm
             )));
         }
         ax_seconds = ax_seconds.max(o.ax_seconds);
@@ -455,12 +411,12 @@ pub fn run_ranked_in(
         backend: format!("ranked-{}-r{}", label, cfg.ranks),
         nelt: cfg.nelt,
         n: cfg.n,
-        iterations,
-        final_residual,
+        iterations: first.iterations,
+        final_residual: first.final_rnorm,
         seconds,
         ax_seconds,
-        flops: cm.flops_per_iter() * iterations as u64,
-        rnorms: vec![],
+        flops: cm.flops_per_iter() * first.iterations as u64,
+        rnorms: first.rnorms,
     })
 }
 
@@ -484,50 +440,30 @@ mod tests {
     }
 
     #[test]
-    fn tag_layout_has_no_collisions_at_old_boundary() {
-        // niter >= 8192 used to fold the iteration bits into the halo-pair
-        // bits; every tag kind must now be distinct across iterations
-        // around (and far past) that boundary.
-        let mut seen = std::collections::BTreeSet::new();
-        let iters = [0usize, 1, 8190, 8191, 8192, 8193, 1_000_000, (1 << 31) - 2];
-        let gids = [0usize, 1, 4095, (1 << TAG_PAIR_BITS) - 2];
-        for &iter in &iters {
-            for coll in 0..3u64 {
-                assert!(seen.insert(iter_tag(iter, coll)), "collective tag collision");
-            }
-            for &gid in &gids {
-                let t = halo_pair_tag(iter_tag(iter, 1), gid);
-                assert!(seen.insert(t), "halo tag collision at iter {iter} gid {gid}");
-            }
-        }
-        // None of them may collide with the final-residual tag or set the
-        // allreduce broadcast bit.
-        assert!(!seen.contains(&TAG_FINAL));
-        for &t in &seen {
-            assert_eq!(t & (1 << 63), 0, "tag {t:#x} sets the broadcast bit");
-        }
-    }
-
-    #[test]
     fn tag_capacity_limits_are_config_errors() {
-        check_tag_capacity(8192, 1000).unwrap();
-        check_tag_capacity((1 << 31) - 1, 1000).unwrap();
-        assert!(matches!(check_tag_capacity(1 << 31, 1000), Err(Error::Config(_))));
+        check_tag_capacity(100, 1000).unwrap();
+        check_tag_capacity((1u64 << 32) as usize - 1, 1000).unwrap();
         assert!(matches!(
-            check_tag_capacity(100, 1 << TAG_PAIR_BITS),
+            check_tag_capacity(1usize << 32, 1000),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            check_tag_capacity(100, 1usize << 30),
             Err(Error::Config(_))
         ));
         // And the runtime rejects such a run up front.
-        let cfg = RunConfig { nelt: 8, n: 3, niter: 1 << 31, ranks: 2, ..Default::default() };
+        let cfg =
+            RunConfig { nelt: 8, n: 3, niter: 1usize << 32, ranks: 2, ..Default::default() };
         let err = run_ranked(&cfg).unwrap_err().to_string();
         assert!(err.contains("tag space"), "{err}");
     }
 
     #[test]
-    fn halo_exchange_clean_at_high_iterations() {
-        // Drive the distributed dssum + the per-iteration collectives
-        // directly at iterations around the old 8192 boundary: partial
-        // sums must still route to the right collective.
+    fn halo_exchange_clean_across_rounds() {
+        // Drive the distributed exchange directly for many rounds
+        // (including round indices far past any realistic niter): partial
+        // sums must keep routing to the right round, and the exchange's
+        // shared-dof support must be exactly what it changes.
         let cfg = RunConfig { nelt: 8, n: 3, ranks: 2, ..Default::default() };
         let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
         let basis = Basis::new(cfg.n);
@@ -539,20 +475,28 @@ mod tests {
         gs_full.dssum(&mut want_full);
         let np = cfg.n * cfg.n * cfg.n;
         std::thread::scope(|scope| {
-            for (mut slab, mut comm) in slabs.into_iter().zip(comms) {
+            for (slab, comm) in slabs.into_iter().zip(comms) {
                 let want = want_full[slab.e0 * np..slab.e1 * np].to_vec();
                 scope.spawn(move || {
-                    for iter in [8190usize, 8191, 8192, 8193] {
-                        let s = comm.allreduce_sum(1.0, iter_tag(iter, 0)).unwrap();
-                        assert_eq!(s, 2.0);
+                    let RankSlab { gs, lo_plane, hi_plane, .. } = slab;
+                    let mut halo = HaloExchange::new(
+                        gs,
+                        lo_plane,
+                        hi_plane,
+                        Rc::new(RefCell::new(comm)),
+                    );
+                    let shared: std::collections::BTreeSet<usize> =
+                        halo.shared_dofs().iter().map(|&l| l as usize).collect();
+                    for round in 0..4 {
                         let mut v = vec![1.0; want.len()];
-                        dssum_ranked(&mut slab, &mut comm, &mut v, iter_tag(iter, 1))
-                            .unwrap();
-                        assert_eq!(v, want, "iter {iter}");
-                        let s = comm
-                            .allreduce_sum(iter as f64, iter_tag(iter, 2))
-                            .unwrap();
-                        assert_eq!(s, 2.0 * iter as f64);
+                        halo.exchange(&mut v).unwrap();
+                        assert_eq!(v, want, "round {round}");
+                        // The exchange changed nothing outside shared_dofs.
+                        for (l, &val) in v.iter().enumerate() {
+                            if !shared.contains(&l) {
+                                assert_eq!(val, 1.0, "dof {l} changed outside support");
+                            }
+                        }
                     }
                 });
             }
@@ -561,16 +505,14 @@ mod tests {
 
     #[test]
     fn ranked_niter_8192_matches_serial() {
-        // End-to-end run at the old tag-collision boundary (a release
-        // build with niter >= 8192 used to exchange wrong halo data). On
-        // this 864-dof system finite-precision CG typically stalls above
-        // the exact-convergence floor and runs the full 8192 iterations —
-        // straight through the old collision point — but whether or not
-        // the floor fires, ranked must match serial on the
-        // initial-residual scale (~10); corrupted halos would miss by many
-        // orders of magnitude. (Deterministic coverage of the boundary
-        // itself, independent of CG's convergence behavior, is in
-        // `halo_exchange_clean_at_high_iterations`.)
+        // End-to-end run at a large iteration budget (8192 once collided
+        // halo tags with iteration tags under the pre-unification layout).
+        // On this 864-dof system finite-precision CG typically stalls
+        // above the exact-convergence floor and runs the full budget; but
+        // whether or not the floor fires, ranked must match serial —
+        // corrupted halos would miss by many orders of magnitude.
+        // (Deterministic round coverage independent of CG's convergence
+        // behavior is in `halo_exchange_clean_across_rounds`.)
         let base = RunConfig { nelt: 8, n: 4, niter: 8192, ..Default::default() };
         let mut serial =
             Nekbone::builder(base.clone()).operator("cpu-layered").build().unwrap();
@@ -591,8 +533,8 @@ mod tests {
         // A system that converges exactly mid-budget (here: a zero RHS,
         // converged at iteration 0 — the degenerate endpoint serial
         // cg_solve already handles) used to abort the ranked path with a
-        // spurious "pap breakdown". The ported rtz floor must exit all
-        // ranks together instead.
+        // spurious "pap breakdown". The shared solver's rtz floor must
+        // exit all ranks together instead.
         let cfg = RunConfig { nelt: 8, n: 3, niter: 50, ranks: 2, ..Default::default() };
         let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
         let basis = Basis::new(cfg.n);
@@ -615,8 +557,11 @@ mod tests {
                     .join()
                     .unwrap()
                     .expect("exact convergence must early-exit, not break down");
-                assert_eq!(out.iterations, 0, "all ranks exit together at iteration 0");
-                assert_eq!(out.rnorm, 0.0);
+                assert_eq!(
+                    out.report.iterations, 0,
+                    "all ranks exit together at iteration 0"
+                );
+                assert_eq!(out.report.final_rnorm, 0.0);
             }
         });
         // Serial cg_solve agrees on the same degenerate system.
@@ -688,6 +633,55 @@ mod tests {
                 want.final_residual
             );
         }
+    }
+
+    #[test]
+    fn ranked_report_content_matches_serial() {
+        // The unification regression (satellite of the one-solver
+        // redesign): ranked runs must produce the same *report content* as
+        // serial ones — residual history recorded, rtol honored — because
+        // both paths run the same solver. Before, the ranked path returned
+        // `rnorms: vec![]` and ignored `record_residuals`/`rtol`.
+        let base = RunConfig {
+            nelt: 8,
+            n: 4,
+            niter: 25,
+            record_residuals: true,
+            ..Default::default()
+        };
+        let mut serial =
+            Nekbone::builder(base.clone()).operator("cpu-layered").build().unwrap();
+        let want = serial.run().unwrap();
+        let got = run_ranked(&RunConfig { ranks: 2, ..base.clone() }).unwrap();
+        assert_eq!(want.rnorms.len(), want.iterations, "serial records every iteration");
+        assert_eq!(
+            got.rnorms.len(),
+            got.iterations,
+            "ranked must record the same history serial does"
+        );
+        assert_eq!(got.iterations, want.iterations);
+        for (i, (a, b)) in got.rnorms.iter().zip(&want.rnorms).enumerate() {
+            let denom = b.abs().max(1e-30);
+            assert!(
+                (a - b).abs() / denom < 1e-9,
+                "iteration {i}: ranked rnorm {a} vs serial {b}"
+            );
+        }
+
+        // rtol early exit fires identically: pick a tolerance from the
+        // recorded history (between two consecutive residuals, away from
+        // either, so roundoff cannot flip the crossing iteration) and both
+        // paths must stop at the same iteration, under budget.
+        let k = want.rnorms.len() / 2;
+        let tol = (want.rnorms[k - 1] * want.rnorms[k]).sqrt(); // geometric midpoint
+        let tcfg = RunConfig { rtol: Some(tol), record_residuals: false, ..base };
+        let mut serial_t =
+            Nekbone::builder(tcfg.clone()).operator("cpu-layered").build().unwrap();
+        let want_t = serial_t.run().unwrap();
+        let got_t = run_ranked(&RunConfig { ranks: 2, ..tcfg }).unwrap();
+        assert!(want_t.iterations < 25, "tolerance must fire early: {}", want_t.iterations);
+        assert_eq!(got_t.iterations, want_t.iterations, "rtol honored identically");
+        assert!(got_t.final_residual <= tol);
     }
 
     #[test]

@@ -5,11 +5,11 @@
 //!
 //! ```text
 //! z = r                                   (solveM with M = I)
-//! rtz2 = rtz1;  rtz1 = glsc3(r, c, z)
+//! rtz2 = rtz1;  rtz1 = allreduce(glsc3(r, c, z))
 //! beta = rtz1 / rtz2   (0 on the first iteration)
 //! p = z + beta p                          (add2s1)
-//! w = mask(dssum(A_local p))              (the Ax of the paper)
-//! pap = glsc3(w, c, p)
+//! w = mask(exchange(A_local p))           (the Ax of the paper)
+//! pap = allreduce(glsc3(w, c, p))
 //! alpha = rtz1 / pap
 //! x = x + alpha p                         (add2s2)
 //! r = r - alpha w                         (add2s2)
@@ -17,20 +17,31 @@
 //!
 //! The weighted inner products use `c` = inverse multiplicity so every
 //! global dof counts once despite local duplication.
+//!
+//! This is the **only** CG loop in the crate. Serial solves drive it with
+//! [`NullComm`](crate::solver::NullComm) + a
+//! [`GatherScatter`](crate::gs::GatherScatter) exchange, `--no-comm`
+//! roofline runs with [`NoExchange`](crate::solver::NoExchange), and the
+//! simulated-MPI rank runtime with
+//! [`ThreadComm`](crate::rank::ThreadComm) + a halo exchange — same
+//! residual updates, same convergence floor, same fused-pap accounting,
+//! same sweep counters, everywhere.
+
+use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::gs::GatherScatter;
-use crate::solver::vector::{add2s1, add2s2, copy, glsc3, mask_apply, rzero};
+use crate::solver::vector::{copy, mask_apply, rzero, NativeVectors, VectorOps};
+use crate::solver::{Communicator, DomainExchange, PapCorrection};
 
-/// The local Ax hook: `w <- A_local(p)` (no dssum, no mask — the solver
-/// applies those). Implementations: CPU operators, the PJRT runtime, or the
-/// rank-distributed pipeline.
+/// The local Ax hook: `w <- A_local(p)` (no exchange, no mask — the solver
+/// applies those). Implementations: CPU operators, the PJRT runtime, or
+/// plain closures.
 ///
 /// Fused implementations (see the fused-operator contract in
 /// [`crate::operators`]) also report the reduction they computed in the
 /// same pass; the solver then skips its own full-length `glsc3(w, c, p)`
-/// sweep, replacing it with an O(surface) correction over the
-/// gather–scatter's shared dofs.
+/// sweep, replacing it with an O(surface) correction over the exchange's
+/// shared dofs.
 pub trait AxApply {
     fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()>;
 
@@ -39,8 +50,8 @@ pub trait AxApply {
         false
     }
 
-    /// The fused `pap` of the most recent `apply` (pre-dssum, pre-mask);
-    /// `None` for unfused implementations.
+    /// The fused `pap` of the most recent `apply` (pre-exchange,
+    /// pre-mask); `None` for unfused implementations.
     fn fused_pap(&self) -> Option<f64> {
         None
     }
@@ -52,45 +63,6 @@ where
 {
     fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
         self(p, w)
-    }
-}
-
-/// Turns a fused operator's **local** pap into the assembled
-/// `glsc3(dssum(w), c, p)` without a full sweep: [`Self::snapshot`] saves
-/// `w` on the dofs dssum can change right after the operator ran, and
-/// [`Self::patch`] adds `c·p·(w_post − w_pre)` over those dofs after
-/// dssum/mask. Exact because dssum only writes the given shared dofs and
-/// the mask only writes dofs where `p = 0` (every CG iterate is masked).
-/// Shared by [`cg_solve`] and the rank runtime so the two solvers cannot
-/// drift apart.
-pub(crate) struct PapCorrection {
-    /// Local dof indices dssum can change (serial: the gather–scatter's
-    /// shared dofs; ranked: those plus the halo planes).
-    shared: Vec<u32>,
-    w_pre: Vec<f64>,
-}
-
-impl PapCorrection {
-    pub(crate) fn new(shared: Vec<u32>) -> Self {
-        let w_pre = vec![0.0f64; shared.len()];
-        PapCorrection { shared, w_pre }
-    }
-
-    /// Record `w` on the shared dofs (call between the operator and dssum).
-    pub(crate) fn snapshot(&mut self, w: &[f64]) {
-        for (slot, &l) in self.w_pre.iter_mut().zip(&self.shared) {
-            *slot = w[l as usize];
-        }
-    }
-
-    /// The assembled pap: fused `local` plus the shared-dof correction
-    /// (call after dssum + mask).
-    pub(crate) fn patch(&self, mut local: f64, w: &[f64], c: &[f64], p: &[f64]) -> f64 {
-        for (&pre, &l) in self.w_pre.iter().zip(&self.shared) {
-            let l = l as usize;
-            local += c[l] * p[l] * (w[l] - pre);
-        }
-        local
     }
 }
 
@@ -112,6 +84,39 @@ impl AxApply for OperatorAx<'_> {
     }
 }
 
+/// [`AxApply`] adapter that times each operator application and forwards
+/// the fused-pap hooks. Shared by every consumer that reports `ax_seconds`
+/// (the application pipeline, the rank runtime), so one [`cg_solve`] call
+/// serves fused and unfused operators alike.
+pub struct TimedAx<'a> {
+    op: &'a mut dyn crate::operators::AxOperator,
+    /// Accumulated wall time inside `apply`.
+    pub seconds: f64,
+}
+
+impl<'a> TimedAx<'a> {
+    pub fn new(op: &'a mut dyn crate::operators::AxOperator) -> Self {
+        TimedAx { op, seconds: 0.0 }
+    }
+}
+
+impl AxApply for TimedAx<'_> {
+    fn apply(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
+        let t0 = Instant::now();
+        self.op.apply(p, w)?;
+        self.seconds += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn is_fused(&self) -> bool {
+        self.op.is_fused()
+    }
+
+    fn fused_pap(&self) -> Option<f64> {
+        self.op.last_pap()
+    }
+}
+
 /// Run [`cg_solve`] with a trait-based operator (anything built through
 /// the [`OperatorRegistry`](crate::operators::OperatorRegistry)): the
 /// operator's `apply` is the local Ax hook, and a fused operator's
@@ -119,7 +124,8 @@ impl AxApply for OperatorAx<'_> {
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve_op(
     op: &mut dyn crate::operators::AxOperator,
-    gs: Option<&mut GatherScatter>,
+    exchange: &mut dyn DomainExchange,
+    comm: &mut dyn Communicator,
     mask: Option<&[f64]>,
     c: &[f64],
     f: &[f64],
@@ -128,7 +134,7 @@ pub fn cg_solve_op(
     ws: &mut CgWorkspace,
 ) -> Result<CgReport> {
     let mut ax = OperatorAx(op);
-    cg_solve(&mut ax, gs, mask, c, f, x, opts, ws)
+    cg_solve(&mut ax, exchange, comm, mask, c, f, x, opts, ws)
 }
 
 /// Solver options.
@@ -152,30 +158,40 @@ impl Default for CgOptions {
 }
 
 /// Outcome of a CG run.
+///
+/// Every scalar here derives from allreduced values, so on a multi-rank
+/// communicator the report is **bitwise identical on every rank** — the
+/// rank runtime asserts this rather than assuming it.
 #[derive(Clone, Debug)]
 pub struct CgReport {
     /// Iterations actually executed.
     pub iterations: usize,
-    /// `sqrt(glsc3(r, c, r))` at exit.
+    /// `sqrt(allreduce(glsc3(r, c, r)))` at exit.
     pub final_rnorm: f64,
     /// Residual history (empty unless requested / tolerance set).
     pub rnorms: Vec<f64>,
     /// Final `rtz1` (the CG scalar, useful for regression tests).
     pub rtz1: f64,
-    /// Full-length `glsc3` sweeps the solver performed (one per iteration
-    /// for `rtz1`, one per iteration for `pap` **unless the operator is
-    /// fused**, plus one for the exit residual) — the accounting behind the
-    /// fused path's "one fewer sweep per iteration" win.
+    /// Full-length local `glsc3` sweeps the solver performed (one per
+    /// iteration for `rtz1`, one per iteration for `pap` **unless the
+    /// operator is fused**, plus one for the exit residual) — the
+    /// accounting behind the fused path's "one fewer sweep per iteration"
+    /// win.
     pub glsc3_sweeps: usize,
 }
 
-/// Workspace so repeated solves don't allocate (benchmarks call this in a
-/// loop).
+/// Workspace so repeated solves don't allocate (benchmarks and
+/// [`SolveSession`](crate::coordinator::SolveSession) call the solver in a
+/// loop against one workspace).
 pub struct CgWorkspace {
     r: Vec<f64>,
     z: Vec<f64>,
     p: Vec<f64>,
     w: Vec<f64>,
+    /// Cached fused-pap correction, reused across solves while the
+    /// exchange keeps reporting the same shared-dof support — repeated
+    /// (session) solves allocate nothing.
+    pap: Option<PapCorrection>,
 }
 
 impl CgWorkspace {
@@ -185,22 +201,33 @@ impl CgWorkspace {
             z: vec![0.0; ndof],
             p: vec![0.0; ndof],
             w: vec![0.0; ndof],
+            pap: None,
         }
+    }
+
+    /// The dof count this workspace was sized for.
+    pub fn ndof(&self) -> usize {
+        self.r.len()
     }
 }
 
-/// Solve `A x = f` with CG.
+/// Solve `A x = f` with CG (native vector algebra, no preconditioner).
 ///
 /// * `ax` — the local operator;
-/// * `gs` — gather–scatter applied to `w` after the local operator
-///   (`None` = the paper's `--no-comm` roofline mode);
+/// * `exchange` — domain assembly applied to `w` after the local operator
+///   ([`NoExchange`](crate::solver::NoExchange) = the paper's `--no-comm`
+///   roofline mode; a [`GatherScatter`](crate::gs::GatherScatter) = serial
+///   assembly; the rank runtime's halo exchange = distributed assembly);
+/// * `comm` — the collective layer ([`NullComm`](crate::solver::NullComm)
+///   for a single rank);
 /// * `mask` — Dirichlet mask applied to `f` and to `w`;
 /// * `c` — inner-product weights (inverse multiplicity);
 /// * `x` — output, overwritten with the solution.
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve(
     ax: &mut dyn AxApply,
-    mut gs: Option<&mut GatherScatter>,
+    exchange: &mut dyn DomainExchange,
+    comm: &mut dyn Communicator,
     mask: Option<&[f64]>,
     c: &[f64],
     f: &[f64],
@@ -208,7 +235,7 @@ pub fn cg_solve(
     opts: &CgOptions,
     ws: &mut CgWorkspace,
 ) -> Result<CgReport> {
-    cg_solve_pc(ax, gs.take(), mask, c, f, x, opts, ws, None)
+    cg_solve_with(ax, exchange, comm, &mut NativeVectors, mask, c, f, x, opts, ws, None)
 }
 
 /// [`cg_solve`] with an optional Jacobi preconditioner (the paper's
@@ -217,7 +244,30 @@ pub fn cg_solve(
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve_pc(
     ax: &mut dyn AxApply,
-    mut gs: Option<&mut GatherScatter>,
+    exchange: &mut dyn DomainExchange,
+    comm: &mut dyn Communicator,
+    mask: Option<&[f64]>,
+    c: &[f64],
+    f: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    ws: &mut CgWorkspace,
+    precond: Option<&crate::solver::Jacobi>,
+) -> Result<CgReport> {
+    cg_solve_with(ax, exchange, comm, &mut NativeVectors, mask, c, f, x, opts, ws, precond)
+}
+
+/// The one CG loop, fully general: local operator, domain exchange,
+/// communicator, vector-algebra backend, and optional preconditioner are
+/// all hooks. Everything else in the crate — [`cg_solve`],
+/// [`cg_solve_pc`], [`cg_solve_op`], the application pipeline's XLA
+/// vector path, and the rank runtime — is a thin wrapper around this.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_solve_with(
+    ax: &mut dyn AxApply,
+    exchange: &mut dyn DomainExchange,
+    comm: &mut dyn Communicator,
+    vectors: &mut dyn VectorOps,
     mask: Option<&[f64]>,
     c: &[f64],
     f: &[f64],
@@ -230,10 +280,34 @@ pub fn cg_solve_pc(
     if x.len() != ndof || c.len() != ndof {
         return Err(Error::Config("cg_solve: length mismatch".into()));
     }
+    if ws.ndof() != ndof {
+        return Err(Error::Config(format!(
+            "cg_solve: workspace sized for {} dofs, problem has {ndof}",
+            ws.ndof()
+        )));
+    }
     if opts.niter == 0 {
         return Err(Error::Config("cg_solve: niter must be > 0".into()));
     }
+    // Error context for breakdowns: which rank observed it (empty when the
+    // communicator is serial, so serial messages stay unchanged).
+    let rank_note =
+        if comm.size() > 1 { format!(" on rank {}", comm.rank()) } else { String::new() };
+
+    // Fused hot path: the operator computes the local `Σ w·c·p` inside its
+    // own pass; [`PapCorrection`] turns that into the assembled pap with an
+    // O(surface) patch over the exchange's shared dofs instead of a second
+    // full sweep. The correction is cached in the workspace and reused
+    // while the exchange's support is unchanged, so repeated solves
+    // against one workspace allocate nothing.
+    let fused = ax.is_fused();
+    if fused
+        && !ws.pap.as_ref().is_some_and(|prev| prev.covers(exchange.shared_dofs()))
+    {
+        ws.pap = Some(exchange.pap_correction());
+    }
     let (r, z, p, w) = (&mut ws.r, &mut ws.z, &mut ws.p, &mut ws.w);
+    let mut correction = if fused { ws.pap.as_mut() } else { None };
 
     rzero(x);
     copy(r, f);
@@ -241,15 +315,6 @@ pub fn cg_solve_pc(
         mask_apply(r, m);
     }
     rzero(p);
-
-    // Fused hot path: the operator computes the local `Σ w·c·p` inside its
-    // own pass; [`PapCorrection`] turns that into the assembled pap with an
-    // O(surface) patch instead of a second full sweep.
-    let fused = ax.is_fused();
-    let mut correction = PapCorrection::new(match (&gs, fused) {
-        (Some(g), true) => g.shared_dofs().to_vec(),
-        _ => Vec::new(),
-    });
 
     let mut rtz1 = 1.0f64;
     let mut rtz_first: Option<f64> = None;
@@ -265,15 +330,20 @@ pub fn cg_solve_pc(
             Some(m) => m.apply(r, z),
         }
         let rtz2 = rtz1;
-        rtz1 = glsc3(r, c, z);
+        let rtz_local = vectors.glsc3(r, c, z)?;
         glsc3_sweeps += 1;
+        rtz1 = comm.allreduce_sum(rtz_local)?;
         if !rtz1.is_finite() {
-            return Err(Error::Numerical(format!("CG breakdown at iter {iter}: rtz1 = {rtz1}")));
+            return Err(Error::Numerical(format!(
+                "CG breakdown at iter {iter}{rank_note}: rtz1 = {rtz1}"
+            )));
         }
         let first = *rtz_first.get_or_insert(rtz1.max(f64::MIN_POSITIVE));
         if rtz1 <= 1e-30 * first {
             // Exact convergence (possible on tiny systems well inside the
             // fixed iteration budget): stop instead of dividing by ~0.
+            // rtz1 is an allreduced value — bit-identical on every rank —
+            // so all ranks exit together.
             iterations = iter;
             let final_rnorm = rtz1.max(0.0).sqrt();
             return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps });
@@ -289,45 +359,45 @@ pub fn cg_solve_pc(
             }
         }
         let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
-        add2s1(p, z, beta);
+        vectors.add2s1(p, z, beta)?;
 
         ax.apply(p, w)?;
-        let pap_fused = if fused {
+        let pap_fused = if let Some(corr) = correction.as_deref_mut() {
             let local = ax.fused_pap().ok_or_else(|| {
                 Error::Numerical("fused operator did not produce a pap value".into())
             })?;
-            correction.snapshot(w);
+            corr.snapshot(w);
             Some(local)
         } else {
             None
         };
-        if let Some(gs) = gs.as_deref_mut() {
-            gs.dssum(w);
-        }
+        exchange.exchange(w)?;
         if let Some(m) = mask {
             mask_apply(w, m);
         }
 
-        let pap = match pap_fused {
-            Some(local) => correction.patch(local, w, c, p),
-            None => {
+        let pap_local = match (pap_fused, correction.as_deref()) {
+            (Some(local), Some(corr)) => corr.patch(local, w, c, p),
+            _ => {
                 glsc3_sweeps += 1;
-                glsc3(w, c, p)
+                vectors.glsc3(w, c, p)?
             }
         };
+        let pap = comm.allreduce_sum(pap_local)?;
         if pap <= 0.0 || !pap.is_finite() {
             return Err(Error::Numerical(format!(
-                "CG breakdown at iter {iter}: pap = {pap} (operator not SPD?)"
+                "CG breakdown at iter {iter}{rank_note}: pap = {pap} (operator not SPD?)"
             )));
         }
         let alpha = rtz1 / pap;
-        add2s2(x, p, alpha);
-        add2s2(r, w, -alpha);
+        vectors.add2s2(x, p, alpha)?;
+        vectors.add2s2(r, w, -alpha)?;
         iterations = iter + 1;
     }
 
-    let final_rnorm = glsc3(r, c, r).max(0.0).sqrt();
+    let rr_local = vectors.glsc3(r, c, r)?;
     glsc3_sweeps += 1;
+    let final_rnorm = comm.allreduce_sum(rr_local)?.max(0.0).sqrt();
     Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps })
 }
 
@@ -335,6 +405,7 @@ pub fn cg_solve_pc(
 mod tests {
     use super::*;
     use crate::proputil::Cases;
+    use crate::solver::{NoExchange, NullComm};
 
     /// Dense SPD matrix as an AxApply.
     struct Dense {
@@ -379,8 +450,18 @@ mod tests {
             let mut x = vec![0.0; n];
             let mut ws = CgWorkspace::new(n);
             let opts = CgOptions { niter: 200, rtol: Some(1e-12), record_residuals: true };
-            let rep =
-                cg_solve(&mut dense, None, None, &c, &f, &mut x, &opts, &mut ws).unwrap();
+            let rep = cg_solve(
+                &mut dense,
+                &mut NoExchange,
+                &mut NullComm,
+                None,
+                &c,
+                &f,
+                &mut x,
+                &opts,
+                &mut ws,
+            )
+            .unwrap();
             crate::proputil::assert_allclose(&x, &x_true, 1e-6, 1e-6);
             assert!(rep.final_rnorm <= 1e-10 * (1.0 + rep.rnorms[0]));
         });
@@ -398,7 +479,18 @@ mod tests {
         let mut x = vec![0.0; n];
         let mut ws = CgWorkspace::new(n);
         let opts = CgOptions { niter: 60, rtol: None, record_residuals: true };
-        let rep = cg_solve(&mut dense, None, None, &c, &f, &mut x, &opts, &mut ws).unwrap();
+        let rep = cg_solve(
+            &mut dense,
+            &mut NoExchange,
+            &mut NullComm,
+            None,
+            &c,
+            &f,
+            &mut x,
+            &opts,
+            &mut ws,
+        )
+        .unwrap();
         assert!(rep.rnorms.last().unwrap() < &(rep.rnorms[0] * 1e-6));
     }
 
@@ -414,7 +506,18 @@ mod tests {
         let mut x = vec![0.0; n];
         let mut ws = CgWorkspace::new(n);
         let opts = CgOptions { niter: 5, rtol: Some(1e-14), record_residuals: false };
-        cg_solve(&mut ident, None, None, &c, &f, &mut x, &opts, &mut ws).unwrap();
+        cg_solve(
+            &mut ident,
+            &mut NoExchange,
+            &mut NullComm,
+            None,
+            &c,
+            &f,
+            &mut x,
+            &opts,
+            &mut ws,
+        )
+        .unwrap();
         crate::proputil::assert_allclose(&x, &f, 1e-12, 1e-12);
     }
 
@@ -431,7 +534,18 @@ mod tests {
         let mut x = vec![0.0; n];
         let mut ws = CgWorkspace::new(n);
         let opts = CgOptions::default();
-        cg_solve(&mut dense, None, Some(&mask), &c, &f, &mut x, &opts, &mut ws).unwrap();
+        cg_solve(
+            &mut dense,
+            &mut NoExchange,
+            &mut NullComm,
+            Some(&mask),
+            &c,
+            &f,
+            &mut x,
+            &opts,
+            &mut ws,
+        )
+        .unwrap();
         assert_eq!(x[0], 0.0);
         assert_eq!(x[7], 0.0);
     }
@@ -448,7 +562,17 @@ mod tests {
         let c = vec![1.0; n];
         let mut x = vec![0.0; n];
         let mut ws = CgWorkspace::new(n);
-        let err = cg_solve(&mut neg, None, None, &c, &f, &mut x, &CgOptions::default(), &mut ws);
+        let err = cg_solve(
+            &mut neg,
+            &mut NoExchange,
+            &mut NullComm,
+            None,
+            &c,
+            &f,
+            &mut x,
+            &CgOptions::default(),
+            &mut ws,
+        );
         assert!(matches!(err, Err(Error::Numerical(_))));
     }
 
@@ -492,7 +616,8 @@ mod tests {
         let mut ws = CgWorkspace::new(ndof);
         let rep_op = cg_solve_op(
             op.as_mut(),
-            Some(&mut gs),
+            &mut gs,
+            &mut NullComm,
             Some(&mask),
             &cw,
             &f,
@@ -511,7 +636,8 @@ mod tests {
         let mut ws2 = CgWorkspace::new(ndof);
         let rep_cl = cg_solve(
             &mut ax,
-            Some(&mut gs2),
+            &mut gs2,
+            &mut NullComm,
             Some(&mask),
             &cw,
             &f,
@@ -527,8 +653,8 @@ mod tests {
     #[test]
     fn fused_operator_matches_unfused_trajectory_and_saves_sweeps() {
         // The fused path (operator-side pap + shared-dof correction) must
-        // reproduce the unfused trajectory through full dssum + mask, while
-        // performing exactly `niter` fewer full glsc3 sweeps.
+        // reproduce the unfused trajectory through full exchange + mask,
+        // while performing exactly `niter` fewer full glsc3 sweeps.
         use crate::operators::{OperatorCtx, OperatorRegistry};
         let n = 4;
         let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
@@ -563,7 +689,8 @@ mod tests {
             let mut ws = CgWorkspace::new(ndof);
             let rep = cg_solve_op(
                 op.as_mut(),
-                Some(&mut gs),
+                &mut gs,
+                &mut NullComm,
                 Some(&mask),
                 &cw,
                 &f,
@@ -599,10 +726,10 @@ mod tests {
     }
 
     #[test]
-    fn fused_without_gather_scatter_uses_pap_directly() {
-        // no-comm mode (the paper's roofline methodology): no dssum, so the
-        // fused value needs no correction at all, and the trajectory still
-        // matches the unfused one.
+    fn fused_without_exchange_uses_pap_directly() {
+        // no-comm mode (the paper's roofline methodology): NoExchange, so
+        // the fused value needs no correction at all, and the trajectory
+        // still matches the unfused one.
         use crate::operators::{OperatorCtx, OperatorRegistry};
         let n = 4;
         let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
@@ -631,7 +758,8 @@ mod tests {
             let mut ws = CgWorkspace::new(ndof);
             let rep = cg_solve_op(
                 op.as_mut(),
-                None,
+                &mut NoExchange,
+                &mut NullComm,
                 Some(&mask),
                 &cw,
                 &f,
@@ -650,18 +778,103 @@ mod tests {
     }
 
     #[test]
+    fn workspace_reuses_fused_correction_across_solves() {
+        // The session no-allocation contract at the solver level: repeated
+        // fused solves against one workspace must reuse the cached
+        // PapCorrection (stable support buffer), not rebuild it per solve.
+        use crate::operators::{OperatorCtx, OperatorRegistry};
+        let n = 4;
+        let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(23).normal_vec(ndof);
+        {
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            gs.dssum(&mut f);
+        }
+        crate::solver::mask_apply(&mut f, &mask);
+        let registry = OperatorRegistry::with_builtins();
+        let ctx = OperatorCtx {
+            n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d: &basis.d,
+            g: &geom.g,
+            c: &cw,
+        };
+        let mut op = registry.build("cpu-layered-fused", &ctx).unwrap();
+        let mut gs = crate::gs::GatherScatter::new(&mesh);
+        let mut x = vec![0.0; ndof];
+        let mut ws = CgWorkspace::new(ndof);
+        let opts = CgOptions { niter: 5, rtol: None, record_residuals: false };
+        let mut solve = |ws: &mut CgWorkspace, gs: &mut crate::gs::GatherScatter| {
+            cg_solve_op(
+                op.as_mut(),
+                gs,
+                &mut NullComm,
+                Some(&mask),
+                &cw,
+                &f,
+                &mut x,
+                &opts,
+                ws,
+            )
+            .unwrap();
+        };
+        solve(&mut ws, &mut gs);
+        let first = ws.pap.as_ref().expect("fused solve populates the cache");
+        assert!(first.covers(gs.shared_dofs()));
+        let ptr = first.support().as_ptr();
+        solve(&mut ws, &mut gs);
+        solve(&mut ws, &mut gs);
+        let after = ws.pap.as_ref().unwrap();
+        assert_eq!(
+            after.support().as_ptr(),
+            ptr,
+            "repeated fused solves must reuse the cached correction buffer"
+        );
+    }
+
+    #[test]
     fn zero_iterations_rejected() {
         let mut ident = Dense { n: 1, a: vec![1.0] };
         let mut ws = CgWorkspace::new(1);
         let opts = CgOptions { niter: 0, ..Default::default() };
         let err = cg_solve(
             &mut ident,
-            None,
+            &mut NoExchange,
+            &mut NullComm,
             None,
             &[1.0],
             &[1.0],
             &mut [0.0],
             &opts,
+            &mut ws,
+        );
+        assert!(matches!(err, Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn mis_sized_workspace_rejected() {
+        // The session/benchmark reuse contract: a workspace sized for a
+        // different problem is a Config error, not a panic mid-solve.
+        let mut ident = Dense { n: 2, a: vec![1.0, 0.0, 0.0, 1.0] };
+        let mut ws = CgWorkspace::new(3);
+        assert_eq!(ws.ndof(), 3);
+        let err = cg_solve(
+            &mut ident,
+            &mut NoExchange,
+            &mut NullComm,
+            None,
+            &[1.0, 1.0],
+            &[1.0, 1.0],
+            &mut [0.0, 0.0],
+            &CgOptions::default(),
             &mut ws,
         );
         assert!(matches!(err, Err(Error::Config(_))));

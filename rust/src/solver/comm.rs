@@ -1,0 +1,93 @@
+//! The communicator abstraction: the collective operations CG needs,
+//! behind one object-safe trait.
+//!
+//! The conjugate-gradient driver is one algorithm whether it runs on one
+//! rank or many — only two things differ: how global reductions are formed
+//! (here) and how the distributed field is assembled (the
+//! [`DomainExchange`](crate::solver::DomainExchange) trait). Abstracting
+//! both lets a single [`cg_solve`](crate::solver::cg_solve) serve the
+//! serial pipeline, the `--no-comm` roofline mode, and the simulated-MPI
+//! rank runtime, the way HipBone writes one solver over an MPI + gslib
+//! layer.
+//!
+//! ## Contract
+//!
+//! * Collectives are **bulk-synchronous and order-matched**: every rank of
+//!   the communicator must call the same sequence of collective operations
+//!   in the same order. The CG driver guarantees this structurally — every
+//!   branch it takes depends only on allreduced (rank-identical) values.
+//! * Results are **deterministic and rank-identical**: an allreduce folds
+//!   the per-rank contributions in ascending rank order and every rank
+//!   receives the bitwise-identical result. Cross-rank agreement on the CG
+//!   trajectory is therefore exact, not approximate — the rank runtime
+//!   asserts bitwise equality of the per-rank reports.
+//! * A size-1 communicator must be zero-cost: [`NullComm`] simply returns
+//!   its argument, so the serial solver pays nothing for the abstraction.
+
+use crate::error::Result;
+
+/// Collective communication between the ranks of one solve.
+///
+/// Implementations: [`NullComm`] (serial, zero-cost) and
+/// [`ThreadComm`](crate::rank::ThreadComm) (channel-backed simulated MPI).
+pub trait Communicator {
+    /// This rank's index in `0..size()`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the communicator.
+    fn size(&self) -> usize;
+
+    /// Global sum: contributions folded in ascending rank order; every
+    /// rank receives the bitwise-identical result.
+    fn allreduce_sum(&mut self, value: f64) -> Result<f64>;
+
+    /// Global minimum, with the same determinism guarantees as
+    /// [`Communicator::allreduce_sum`].
+    fn allreduce_min(&mut self, value: f64) -> Result<f64>;
+
+    /// All ranks reach the barrier before any returns from it.
+    fn barrier(&mut self) -> Result<()>;
+}
+
+/// The serial communicator: one rank, every collective is the identity.
+/// This is the zero-cost default for single-address-space and `--no-comm`
+/// runs — the compiler sees straight through it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullComm;
+
+impl Communicator for NullComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn size(&self) -> usize {
+        1
+    }
+
+    fn allreduce_sum(&mut self, value: f64) -> Result<f64> {
+        Ok(value)
+    }
+
+    fn allreduce_min(&mut self, value: f64) -> Result<f64> {
+        Ok(value)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_comm_is_identity() {
+        let mut c = NullComm;
+        assert_eq!(c.rank(), 0);
+        assert_eq!(c.size(), 1);
+        assert_eq!(c.allreduce_sum(2.5).unwrap(), 2.5);
+        assert_eq!(c.allreduce_min(-7.0).unwrap(), -7.0);
+        c.barrier().unwrap();
+    }
+}

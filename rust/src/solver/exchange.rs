@@ -1,0 +1,174 @@
+//! The domain-exchange abstraction: direct-stiffness assembly behind one
+//! object-safe trait, so the CG driver does not know whether "assemble"
+//! means a serial gather–scatter, a rank-local gather–scatter plus a halo
+//! exchange, or nothing at all (`--no-comm`).
+//!
+//! ## Contract
+//!
+//! * [`DomainExchange::exchange`] performs `v <- Q Q^T v` in place over the
+//!   caller's local dofs: every local copy of a (possibly globally) shared
+//!   point ends up holding the sum over **all** copies, including copies
+//!   owned by other ranks. Nekbone calls this `dssum`.
+//! * [`DomainExchange::shared_dofs`] lists exactly the local dof indices
+//!   `exchange` may change (dofs with multiplicity > 1, plus any halo dofs
+//!   shared with neighboring ranks). `exchange` must be the identity on
+//!   every index not listed — the fused Ax+pap solver path depends on this
+//!   to patch the operator-side reduction with an O(surface) correction
+//!   ([`PapCorrection`]) instead of a second full-vector sweep.
+//! * Distributed implementations may communicate inside `exchange`; like
+//!   the [`Communicator`](crate::solver::Communicator) collectives, calls
+//!   must then be order-matched across ranks (the CG driver guarantees
+//!   this: one exchange per iteration, on every rank).
+//!
+//! Implementations: [`GatherScatter`](crate::gs::GatherScatter) (serial),
+//! the rank runtime's halo exchange (`crate::rank`), and [`NoExchange`]
+//! (the paper's roofline mode, where communication is switched off).
+
+use crate::error::Result;
+
+/// Direct-stiffness summation over one rank's local dofs (see the module
+/// docs for the exact contract).
+pub trait DomainExchange {
+    /// Assemble `v` in place: every local copy of a shared global point
+    /// receives the sum over all copies (`v <- Q Q^T v`).
+    fn exchange(&mut self, v: &mut [f64]) -> Result<()>;
+
+    /// The local dof indices [`DomainExchange::exchange`] may change; it
+    /// must act as the identity everywhere else.
+    fn shared_dofs(&self) -> &[u32];
+
+    /// A [`PapCorrection`] sized for this exchange's support — what the
+    /// fused Ax+pap solver path snapshots/patches around each `exchange`.
+    fn pap_correction(&self) -> PapCorrection {
+        PapCorrection::new(self.shared_dofs().to_vec())
+    }
+}
+
+/// The `--no-comm` exchange: assembly switched off, exactly as the paper's
+/// roofline methodology measures the kernels ("without the communication
+/// activated"). `exchange` is a no-op and nothing is shared.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoExchange;
+
+impl DomainExchange for NoExchange {
+    fn exchange(&mut self, _v: &mut [f64]) -> Result<()> {
+        Ok(())
+    }
+
+    fn shared_dofs(&self) -> &[u32] {
+        &[]
+    }
+}
+
+/// Turns a fused operator's **local** pap into the assembled
+/// `glsc3(exchange(w), c, p)` without a full sweep: [`Self::snapshot`]
+/// saves `w` on the dofs the exchange can change right after the operator
+/// ran, and [`Self::patch`] adds `c·p·(w_post − w_pre)` over those dofs
+/// after exchange/mask. Exact because the exchange only writes its
+/// [`DomainExchange::shared_dofs`] and the mask only writes dofs where
+/// `p = 0` (every CG iterate is masked). Owned by the one CG driver
+/// ([`cg_solve`](crate::solver::cg_solve)), so serial and ranked solves
+/// cannot drift apart.
+pub struct PapCorrection {
+    /// Local dof indices the exchange can change.
+    shared: Vec<u32>,
+    w_pre: Vec<f64>,
+}
+
+impl PapCorrection {
+    pub fn new(shared: Vec<u32>) -> Self {
+        let w_pre = vec![0.0f64; shared.len()];
+        PapCorrection { shared, w_pre }
+    }
+
+    /// A correction over no dofs (nothing snapshotted, `patch` is the
+    /// identity on `local`) — for unfused solves and `--no-comm` runs.
+    pub fn empty() -> Self {
+        PapCorrection::new(Vec::new())
+    }
+
+    /// Does this correction cover exactly these shared dofs? The solver's
+    /// workspace caches its correction across solves and reuses it when
+    /// the exchange still reports the same support — an O(surface)
+    /// compare instead of a per-solve allocation.
+    pub fn covers(&self, shared: &[u32]) -> bool {
+        self.shared.as_slice() == shared
+    }
+
+    /// The shared dofs this correction patches over (its support).
+    pub fn support(&self) -> &[u32] {
+        &self.shared
+    }
+
+    /// Record `w` on the shared dofs (call between the operator and the
+    /// exchange).
+    pub fn snapshot(&mut self, w: &[f64]) {
+        for (slot, &l) in self.w_pre.iter_mut().zip(&self.shared) {
+            *slot = w[l as usize];
+        }
+    }
+
+    /// The assembled pap: fused `local` plus the shared-dof correction
+    /// (call after exchange + mask).
+    pub fn patch(&self, mut local: f64, w: &[f64], c: &[f64], p: &[f64]) -> f64 {
+        for (&pre, &l) in self.w_pre.iter().zip(&self.shared) {
+            let l = l as usize;
+            local += c[l] * p[l] * (w[l] - pre);
+        }
+        local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_exchange_is_identity() {
+        let mut ex = NoExchange;
+        let mut v = vec![1.0, 2.0, 3.0];
+        let orig = v.clone();
+        ex.exchange(&mut v).unwrap();
+        assert_eq!(v, orig);
+        assert!(ex.shared_dofs().is_empty());
+    }
+
+    #[test]
+    fn empty_correction_patch_is_identity() {
+        let c = PapCorrection::empty();
+        assert_eq!(c.patch(3.5, &[1.0], &[1.0], &[1.0]), 3.5);
+    }
+
+    #[test]
+    fn correction_accounts_for_exchanged_dofs() {
+        // local pap over w_pre, then dofs 1 and 3 change; patch must add
+        // c*p*(w_post - w_pre) over exactly those dofs.
+        let mut corr = PapCorrection::new(vec![1, 3]);
+        let w_pre = [1.0, 2.0, 3.0, 4.0];
+        let c = [0.5, 1.0, 2.0, 0.25];
+        let p = [1.0, -1.0, 2.0, 4.0];
+        let local: f64 = w_pre.iter().zip(&c).zip(&p).map(|((w, c), p)| w * c * p).sum();
+        corr.snapshot(&w_pre);
+        let w_post = [1.0, 5.0, 3.0, -2.0];
+        let want: f64 = w_post.iter().zip(&c).zip(&p).map(|((w, c), p)| w * c * p).sum();
+        let got = corr.patch(local, &w_post, &c, &p);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn gather_scatter_implements_exchange() {
+        // The serial GatherScatter is the serial DomainExchange: exchange
+        // is dssum, shared_dofs its multiplicity-over-1 support.
+        let mesh = crate::mesh::Mesh::new(2, 1, 1, 3).unwrap();
+        let mut gs = crate::gs::GatherScatter::new(&mesh);
+        let mut a: Vec<f64> = (0..mesh.ndof_local()).map(|i| i as f64 * 0.5).collect();
+        let mut b = a.clone();
+        gs.dssum(&mut a);
+        {
+            let ex: &mut dyn DomainExchange = &mut gs;
+            ex.exchange(&mut b).unwrap();
+        }
+        assert_eq!(a, b);
+        assert_eq!(DomainExchange::shared_dofs(&gs), gs.shared_dofs());
+    }
+}

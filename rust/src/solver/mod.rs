@@ -1,10 +1,49 @@
-//! Conjugate-gradient solver (Nekbone's `cg.f`) and its vector algebra.
+//! Conjugate-gradient solver (Nekbone's `cg.f`), its vector algebra, and
+//! the two abstractions that make **one** CG loop serve every execution
+//! mode: [`Communicator`] and [`DomainExchange`].
+//!
+//! ## The solve-side contracts
+//!
+//! The CG driver ([`cg_solve`] / [`cg_solve_with`]) is written against
+//! hooks, not implementations:
+//!
+//! * **[`Communicator`]** — the collective layer (`rank`, `size`,
+//!   `allreduce_sum`, `allreduce_min`, `barrier`). Every CG scalar (`rtz1`,
+//!   `pap`, the exit residual) passes through `allreduce_sum`, whose
+//!   contract is a **rank-order-deterministic fold delivering the bitwise
+//!   identical result to every rank**; all control flow in the solver
+//!   branches only on these rank-identical values, so ranks stay in lock
+//!   step and every rank's [`CgReport`] is bitwise identical.
+//!   Implementations: [`NullComm`] (serial, zero-cost) and
+//!   [`ThreadComm`](crate::rank::ThreadComm) (channels as simulated MPI).
+//! * **[`DomainExchange`]** — direct-stiffness assembly (`exchange` =
+//!   Nekbone's `dssum`, `shared_dofs` = the indices it may change,
+//!   `pap_correction` = the O(surface) patch the fused Ax+pap path uses in
+//!   place of a full `glsc3` sweep). Implementations:
+//!   [`GatherScatter`](crate::gs::GatherScatter) (serial assembly),
+//!   the rank runtime's halo exchange (rank-local assembly + neighbor
+//!   exchange), and [`NoExchange`] (the paper's `--no-comm` roofline mode).
+//! * **[`VectorOps`]** — where the full-vector algebra runs
+//!   ([`NativeVectors`] by default; the application pipeline provides a
+//!   chunked-XLA implementation for experiment E6).
+//!
+//! Any combination of the three drops into the same loop, which is the
+//! only place in the crate that updates residuals, applies the
+//! convergence floor, or accounts `glsc3` sweeps.
 
-mod vector;
 mod cg;
+mod comm;
+mod exchange;
 mod precond;
+mod vector;
 
-pub use cg::{cg_solve, cg_solve_op, cg_solve_pc, AxApply, CgOptions, CgReport, CgWorkspace};
-pub(crate) use cg::PapCorrection;
+pub use cg::{
+    cg_solve, cg_solve_op, cg_solve_pc, cg_solve_with, AxApply, CgOptions, CgReport,
+    CgWorkspace, TimedAx,
+};
+pub use comm::{Communicator, NullComm};
+pub use exchange::{DomainExchange, NoExchange, PapCorrection};
 pub use precond::Jacobi;
-pub use vector::{add2s1, add2s2, copy, glsc3, mask_apply, rzero};
+pub use vector::{
+    add2s1, add2s2, copy, glsc3, mask_apply, rzero, NativeVectors, VectorOps,
+};

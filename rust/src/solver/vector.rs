@@ -54,6 +54,48 @@ pub fn rzero(a: &mut [f64]) {
     a.fill(0.0);
 }
 
+/// Where the CG driver's full-vector algebra runs (experiment E6: the
+/// paper measures OpenACC-offloaded "simple operations" against native
+/// loops). The one generic solver
+/// ([`cg_solve_with`](crate::solver::cg_solve_with)) takes this as a hook,
+/// so the native path, the chunked-XLA path, and any future offload share
+/// the same CG loop instead of each carrying a hand-synchronized copy.
+///
+/// Implementations must compute exactly the reference semantics of the
+/// free functions ([`glsc3`], [`add2s1`], [`add2s2`]) — the solver's
+/// breakdown checks and sweep accounting assume it.
+pub trait VectorOps {
+    /// `sum_i a_i b_i c_i` over the **local** dofs (the solver allreduces).
+    fn glsc3(&mut self, a: &[f64], b: &[f64], c: &[f64]) -> crate::error::Result<f64>;
+
+    /// `a <- c1 * a + b`.
+    fn add2s1(&mut self, a: &mut [f64], b: &[f64], c1: f64) -> crate::error::Result<()>;
+
+    /// `a <- a + c2 * b`.
+    fn add2s2(&mut self, a: &mut [f64], b: &[f64], c2: f64) -> crate::error::Result<()>;
+}
+
+/// The native-Rust vector backend (the default): straight calls into the
+/// free functions above, infallible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeVectors;
+
+impl VectorOps for NativeVectors {
+    fn glsc3(&mut self, a: &[f64], b: &[f64], c: &[f64]) -> crate::error::Result<f64> {
+        Ok(glsc3(a, b, c))
+    }
+
+    fn add2s1(&mut self, a: &mut [f64], b: &[f64], c1: f64) -> crate::error::Result<()> {
+        add2s1(a, b, c1);
+        Ok(())
+    }
+
+    fn add2s2(&mut self, a: &mut [f64], b: &[f64], c2: f64) -> crate::error::Result<()> {
+        add2s2(a, b, c2);
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -257,6 +257,53 @@ fn runtime_registered_operator_runs_full_cg() {
 }
 
 #[test]
+fn session_solve_batch_matches_independent_solves() {
+    // Acceptance for the SolveSession API: a batch of right-hand sides
+    // through one session — operator state and CG workspace reused — must
+    // reproduce N fresh, independent applications exactly. Run with a
+    // fused operator so a stale `last_pap` leaking between batch entries
+    // would be caught (each entry must restart the trajectory from x = 0).
+    let run_cfg = cfg(27, 5, 18);
+    let mut app_session = app("cpu-threaded-fused", run_cfg.clone());
+    let ndof = app_session.mesh().ndof_local();
+    let rhss: Vec<Vec<f64>> = (0..3)
+        .map(|i| nekbone::rng::Rng::new(100 + i as u64).normal_vec(ndof))
+        .collect();
+
+    let mut session = app_session.session();
+    let reports = session.solve_batch(&rhss).unwrap();
+    assert_eq!(reports.len(), rhss.len());
+    assert_eq!(session.solves(), rhss.len());
+
+    for (i, (rhs, rep)) in rhss.iter().zip(&reports).enumerate() {
+        let mut fresh = app("cpu-threaded-fused", run_cfg.clone());
+        fresh.set_rhs(rhs).unwrap();
+        let want = fresh.run().unwrap();
+        assert_eq!(rep.iterations, want.iterations, "batch entry {i}");
+        assert_eq!(
+            rep.final_rnorm, want.final_residual,
+            "batch entry {i}: session trajectory must be identical to an \
+             independent solve (stale fused state between entries?)"
+        );
+        assert!(rep.final_rnorm.is_finite());
+    }
+    // Same sweep accounting for every entry: the fused path's
+    // one-sweep-per-iteration saving holds across the whole batch.
+    for r in &reports[1..] {
+        assert_eq!(r.glsc3_sweeps, reports[0].glsc3_sweeps);
+    }
+
+    // Per-entry solutions via solve_into agree with independent solves.
+    let mut x_session = vec![0.0; ndof];
+    let mut x_fresh = vec![0.0; ndof];
+    session.solve_into(&rhss[1], &mut x_session).unwrap();
+    let mut fresh = app("cpu-threaded-fused", run_cfg);
+    fresh.set_rhs(&rhss[1]).unwrap();
+    fresh.run_into(Some(&mut x_fresh)).unwrap();
+    nekbone::proputil::assert_allclose(&x_session, &x_fresh, 1e-15, 1e-15);
+}
+
+#[test]
 fn custom_registry_does_not_leak_into_builtins() {
     // Registration is per-registry: the builtin set never sees test names.
     let mut registry = OperatorRegistry::with_builtins();

@@ -225,7 +225,7 @@ fn fused_cg_reproduces_unfused_trajectory() {
     // A CG solve through cpu-layered-fused must walk the same iterate
     // trajectory as the unfused operator: same iteration count, solution
     // allclose — and save exactly niter full glsc3 sweeps along the way.
-    use nekbone::solver::{cg_solve_op, CgOptions, CgWorkspace};
+    use nekbone::solver::{cg_solve_op, CgOptions, CgWorkspace, NullComm};
     let n = 5;
     let mesh = Mesh::new(2, 2, 2, n).unwrap();
     let basis = Basis::new(n);
@@ -259,7 +259,8 @@ fn fused_cg_reproduces_unfused_trajectory() {
         let mut ws = CgWorkspace::new(ndof);
         let rep = cg_solve_op(
             op.as_mut(),
-            Some(&mut gs),
+            &mut gs,
+            &mut NullComm,
             Some(&mask),
             &cw,
             &f,
@@ -289,7 +290,7 @@ fn jacobi_pcg_converges_no_slower() {
     // The paper's future work (section VII): preconditioned CG. On the
     // masked SEM system Jacobi must reach a tolerance in no more
     // iterations than plain CG, with both converging to the same solution.
-    use nekbone::solver::{cg_solve_pc, CgOptions, CgWorkspace, Jacobi};
+    use nekbone::solver::{cg_solve_pc, CgOptions, CgWorkspace, Jacobi, NullComm};
     let n = 5;
     let mesh = Mesh::new(2, 2, 2, n).unwrap();
     let basis = Basis::new(n);
@@ -320,7 +321,8 @@ fn jacobi_pcg_converges_no_slower() {
         let opts = CgOptions { niter: 500, rtol: Some(1e-10), record_residuals: true };
         let rep = cg_solve_pc(
             &mut ax,
-            Some(&mut gs),
+            &mut gs,
+            &mut NullComm,
             Some(&mask),
             &cw,
             &f,

@@ -1,0 +1,201 @@
+//! SolveSession coverage: repeated solves reuse all state (no operator
+//! re-setup, no workspace churn), batches match independent solves, and
+//! the report content is stable across reuse.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Nekbone;
+use nekbone::operators::{ax_layered, AxOperator, OperatorCtx, OperatorRegistry};
+
+/// Test-only operator wrapping the layered kernel, counting `setup` and
+/// `apply` calls so tests can assert state reuse across a session.
+struct CountingOp {
+    setups: Arc<AtomicUsize>,
+    applies: Arc<AtomicUsize>,
+    st: Option<(usize, usize, Vec<f64>, Vec<f64>)>,
+}
+
+impl AxOperator for CountingOp {
+    fn label(&self) -> String {
+        "test-counting".into()
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> nekbone::Result<()> {
+        self.setups.fetch_add(1, Ordering::SeqCst);
+        self.st = Some((ctx.n, ctx.nelt, ctx.d.to_vec(), ctx.g.to_vec()));
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> nekbone::Result<()> {
+        self.applies.fetch_add(1, Ordering::SeqCst);
+        let (n, nelt, d, g) = self.st.as_ref().expect("setup ran");
+        ax_layered(*n, *nelt, u, d, g, w);
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        0
+    }
+}
+
+fn counting_app(cfg: RunConfig) -> (Nekbone, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let applies = Arc::new(AtomicUsize::new(0));
+    let (s, a) = (Arc::clone(&setups), Arc::clone(&applies));
+    let mut registry = OperatorRegistry::with_builtins();
+    registry
+        .register("test-counting", false, move || {
+            Box::new(CountingOp {
+                setups: Arc::clone(&s),
+                applies: Arc::clone(&a),
+                st: None,
+            })
+        })
+        .unwrap();
+    let app = Nekbone::builder(cfg)
+        .registry(registry)
+        .operator("test-counting")
+        .build()
+        .unwrap();
+    (app, setups, applies)
+}
+
+fn cfg() -> RunConfig {
+    RunConfig { nelt: 8, n: 4, niter: 12, ..Default::default() }
+}
+
+#[test]
+fn repeated_session_solves_do_not_rebuild_state() {
+    // The reuse contract: one operator setup for the whole session, one
+    // apply per CG iteration, nothing rebuilt between solves.
+    let (mut app, setups, applies) = counting_app(cfg());
+    assert_eq!(setups.load(Ordering::SeqCst), 1, "builder sets up exactly once");
+    let ndof = app.mesh().ndof_local();
+    let rhss: Vec<Vec<f64>> =
+        (0..3).map(|i| nekbone::rng::Rng::new(7 + i as u64).normal_vec(ndof)).collect();
+
+    let mut session = app.session();
+    let reports = session.solve_batch(&rhss).unwrap();
+    assert_eq!(reports.len(), 3);
+    assert_eq!(
+        setups.load(Ordering::SeqCst),
+        1,
+        "session solves must reuse the operator, not re-set it up"
+    );
+    let total_iters: usize = reports.iter().map(|r| r.iterations).sum();
+    assert_eq!(
+        applies.load(Ordering::SeqCst),
+        total_iters,
+        "exactly one operator application per CG iteration"
+    );
+    // Identical sweep accounting for every entry: the reused workspace
+    // changes nothing about the solver's work.
+    for r in &reports[1..] {
+        assert_eq!(r.glsc3_sweeps, reports[0].glsc3_sweeps);
+    }
+}
+
+#[test]
+fn repeated_identical_solves_are_identical() {
+    // Same rhs through one session twice: bitwise-identical report (the
+    // workspace carries no state between solves).
+    let (mut app, _setups, _applies) = counting_app(cfg());
+    let ndof = app.mesh().ndof_local();
+    let rhs = nekbone::rng::Rng::new(41).normal_vec(ndof);
+    let mut session = app.session();
+    let a = session.solve(&rhs).unwrap();
+    let first: Vec<f64> = session.solution().to_vec();
+    let b = session.solve(&rhs).unwrap();
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.final_rnorm.to_bits(), b.final_rnorm.to_bits());
+    assert_eq!(a.rtz1.to_bits(), b.rtz1.to_bits());
+    assert_eq!(a.glsc3_sweeps, b.glsc3_sweeps);
+    assert_eq!(first, session.solution());
+}
+
+#[test]
+fn batch_matches_independent_solves_unfused() {
+    // solve_batch == N independent fresh applications, entry by entry
+    // (the fused-operator variant of this is in e2e.rs).
+    let rhs_count = 3;
+    let (mut app, ..) = counting_app(cfg());
+    let ndof = app.mesh().ndof_local();
+    let rhss: Vec<Vec<f64>> = (0..rhs_count)
+        .map(|i| nekbone::rng::Rng::new(90 + i as u64).normal_vec(ndof))
+        .collect();
+    let mut session = app.session();
+    let reports = session.solve_batch(&rhss).unwrap();
+
+    for (i, (rhs, rep)) in rhss.iter().zip(&reports).enumerate() {
+        let (mut fresh, ..) = counting_app(cfg());
+        fresh.set_rhs(rhs).unwrap();
+        let want = fresh.run().unwrap();
+        assert_eq!(rep.iterations, want.iterations, "entry {i}");
+        assert_eq!(
+            rep.final_rnorm.to_bits(),
+            want.final_residual.to_bits(),
+            "entry {i}: {} vs {}",
+            rep.final_rnorm,
+            want.final_residual
+        );
+    }
+}
+
+#[test]
+fn fused_last_pap_not_stale_across_batch_entries() {
+    // Two very different right-hand sides through a fused-operator
+    // session: if the second entry consumed the first entry's fused pap
+    // (stale state), its trajectory would diverge from an independent
+    // solve. Uses the single-thread fused operator for bitwise
+    // comparability.
+    let base = cfg();
+    let mut app = Nekbone::builder(base.clone())
+        .operator("cpu-layered-fused")
+        .build()
+        .unwrap();
+    let ndof = app.mesh().ndof_local();
+    let rhs_a = nekbone::rng::Rng::new(5).normal_vec(ndof);
+    let rhs_b: Vec<f64> = nekbone::rng::Rng::new(6)
+        .normal_vec(ndof)
+        .iter()
+        .map(|v| v * 1e3)
+        .collect();
+
+    let mut session = app.session();
+    let reports = session.solve_batch(&[rhs_a, rhs_b.clone()]).unwrap();
+
+    let mut fresh = Nekbone::builder(base).operator("cpu-layered-fused").build().unwrap();
+    fresh.set_rhs(&rhs_b).unwrap();
+    let want = fresh.run().unwrap();
+    assert_eq!(reports[1].iterations, want.iterations);
+    assert_eq!(
+        reports[1].final_rnorm.to_bits(),
+        want.final_residual.to_bits(),
+        "second batch entry diverged: {} vs {} (stale fused pap?)",
+        reports[1].final_rnorm,
+        want.final_residual
+    );
+}
+
+#[test]
+fn session_honors_config_rtol() {
+    // Session solves run the same solver with the same options as
+    // Nekbone::run — including early exit.
+    let with_history = RunConfig { record_residuals: true, ..cfg() };
+    let mut app = Nekbone::builder(with_history).operator("cpu-layered").build().unwrap();
+    let ndof = app.mesh().ndof_local();
+    let rhs = nekbone::rng::Rng::new(77).normal_vec(ndof);
+    let mut session = app.session();
+    let rep = session.solve(&rhs).unwrap();
+    assert_eq!(rep.rnorms.len(), rep.iterations);
+    let tol = (rep.rnorms[4] * rep.rnorms[5]).sqrt();
+
+    let tol_cfg = RunConfig { rtol: Some(tol), ..cfg() };
+    let mut tapp = Nekbone::builder(tol_cfg).operator("cpu-layered").build().unwrap();
+    let mut tsession = tapp.session();
+    let trep = tsession.solve(&rhs).unwrap();
+    assert!(trep.iterations < 12, "rtol must exit early: {}", trep.iterations);
+    assert!(trep.final_rnorm <= tol);
+}
