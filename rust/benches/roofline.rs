@@ -1,0 +1,59 @@
+//! Measured-roofline bench: machine ceilings (STREAM-triad bandwidth +
+//! peak multiply-add rate), per-operator arithmetic intensity from the
+//! `flops()` / `bytes_moved()` hooks, and the `BENCH_roofline.json`
+//! trajectory artifact (schema `nekbone-roofline/1`, documented in
+//! `ROADMAP.md`).
+//!
+//! Run:   `cargo bench --bench roofline`
+//! Smoke: `cargo bench --bench roofline -- --quick`   (alias: --test)
+//! Out:   `cargo bench --bench roofline -- --out path.json`
+//!        (default: `<repo root>/BENCH_roofline.json`)
+//!
+//! The same measurement runs from the binary:
+//! `nekbone roofline --bench-json <path> [--quick]`.
+
+use nekbone::bench::roofline::{render_table, run, validate_json, write_json, RooflineConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Cargo passes `--bench` to harness-less bench binaries; ignore it.
+    let quick = args.iter().any(|a| a == "--quick" || a == "--test");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| format!("{}/../BENCH_roofline.json", env!("CARGO_MANIFEST_DIR")));
+
+    let cfg = RooflineConfig { quick, ..RooflineConfig::default() };
+    println!(
+        "# measured roofline: operators {:?} at n in {:?}{}",
+        cfg.operators,
+        cfg.degrees,
+        if quick { " (quick smoke scale)" } else { "" }
+    );
+    let report = run(&cfg).expect("roofline harness");
+    println!(
+        "# ceilings: {:.2} GB/s stream bandwidth, {:.2} GF/s peak multiply-add",
+        report.roofs.bandwidth_gbs, report.roofs.peak_gflops
+    );
+    print!("{}", render_table(&report));
+
+    // The paper's claim, restated on this substrate: specialization must
+    // not lose to the generic kernel at the paper's degree.
+    let gflops_of = |name: &str, n: usize| {
+        report.points.iter().find(|p| p.operator == name && p.degree == n).map(|p| p.gflops)
+    };
+    if let (Some(spec), Some(layered)) = (gflops_of("cpu-spec", 9), gflops_of("cpu-layered", 9))
+    {
+        println!(
+            "# n=9: cpu-spec {spec:.3} GF/s vs cpu-layered {layered:.3} GF/s ({:+.1}%)",
+            100.0 * (spec / layered - 1.0)
+        );
+    }
+
+    write_json(&report, &out).expect("write BENCH_roofline.json");
+    let text = std::fs::read_to_string(&out).expect("re-read emitted json");
+    validate_json(&text).expect("emitted json must be schema-valid");
+    println!("# wrote {out} ({} points, schema-valid)", report.points.len());
+}

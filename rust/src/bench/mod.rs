@@ -1,7 +1,11 @@
 //! Benchmark harness (criterion is unavailable offline, so the repo carries
 //! its own measurement core: warmup, repeated timed runs, median/MAD
 //! statistics, and aligned table printing shared by all paper-figure
-//! benches).
+//! benches). The measured-roofline harness — machine ceilings, per-operator
+//! arithmetic intensity, `BENCH_roofline.json` emission — lives in
+//! [`roofline`].
+
+pub mod roofline;
 
 use std::time::Instant;
 

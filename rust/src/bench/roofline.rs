@@ -1,0 +1,530 @@
+//! Measured-roofline harness: machine ceilings + per-operator placement,
+//! emitted as `BENCH_roofline.json`.
+//!
+//! The paper's central evidence (Fig. 4) is not "the kernel got faster"
+//! but "the kernel reaches 77–92% of what the *measured* machine allows".
+//! This module reproduces that methodology on the host:
+//!
+//! 1. **Bandwidth ceiling** — a STREAM-style triad (`a[i] = b[i] + s*c[i]`)
+//!    over buffers far larger than cache; 24 bytes move per element per
+//!    pass (two reads + one write).
+//! 2. **Compute ceiling** — register-resident multiply-add chains across
+//!    independent accumulators (2 flops each), no memory traffic.
+//! 3. **Operator placement** — each operator's arithmetic intensity is
+//!    `flops() / bytes_moved()` (both [`AxOperator`] hooks); its roof is
+//!    `min(peak, intensity * bandwidth)` and the achieved GFLOP/s are
+//!    reported as a percentage of that roof.
+//!
+//! The JSON schema (`nekbone-roofline/1`, documented in `ROADMAP.md`) is
+//! append-friendly: stable keys `operator`, `degree`, `elements`,
+//! `gflops`, `percent_of_roofline` per point, so successive PRs emit
+//! comparable trajectories. Run it via `cargo bench --bench roofline` or
+//! `nekbone roofline --bench-json <path>`.
+//!
+//! Relation to [`crate::roofline`]: that module implements the paper's
+//! *solve-level* emulation (every load/store of a CG iteration replaced
+//! by a copy of the same bytes, Eq. (2) intensity) and feeds the Fig. 4
+//! comparison; this one measures *kernel-level* machine ceilings and uses
+//! each operator's own traffic model. Keep ceiling-measurement fixes
+//! (timers, `black_box` discipline) in sync between the two.
+
+use crate::basis::Basis;
+use crate::bench::{Runner, Samples, Table};
+use crate::error::{Error, Result};
+use crate::geometry::GeomFactors;
+use crate::mesh::Mesh;
+use crate::metrics::Stopwatch;
+use crate::operators::{ax_flops, fused_ax_flops, AxOperator, OperatorCtx, OperatorRegistry};
+
+/// Schema identifier written into (and asserted on) every emitted file.
+pub const SCHEMA: &str = "nekbone-roofline/1";
+
+/// Measured machine ceilings.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineRoofs {
+    /// Sustained STREAM-triad bandwidth, GB/s.
+    pub bandwidth_gbs: f64,
+    /// Sustained register-resident multiply-add rate, GFLOP/s.
+    pub peak_gflops: f64,
+}
+
+/// STREAM-style triad bandwidth over `len` f64 elements per array:
+/// `a[i] = b[i] + s * c[i]`, counted as 24 bytes per element per pass
+/// (read `b`, read `c`, write `a`; write-allocate traffic is not
+/// counted, matching STREAM's own accounting).
+pub fn measure_stream_bandwidth(len: usize, reps: usize) -> f64 {
+    let len = len.max(1);
+    let reps = reps.max(1);
+    // black_box the inputs: with compile-time-known b/c/scalar the triad
+    // is provably a constant splat, and LLVM could drop both read streams
+    // (turning the measurement into a fill). Opaque values force real
+    // loads.
+    let scalar = std::hint::black_box(3.0f64);
+    let mut a = vec![0.0f64; len];
+    let b = std::hint::black_box(vec![1.0f64; len]);
+    let c = std::hint::black_box(vec![2.0f64; len]);
+    let triad = |a: &mut [f64], b: &[f64], c: &[f64]| {
+        for ((ai, bi), ci) in a.iter_mut().zip(b).zip(c) {
+            *ai = bi + scalar * ci;
+        }
+    };
+    // Warmup faults the pages in.
+    triad(&mut a, &b, &c);
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        triad(&mut a, &b, &c);
+        std::hint::black_box(&mut a);
+    }
+    let secs = sw.elapsed_s();
+    let bytes = (3 * 8 * len * reps) as f64;
+    bytes / secs / 1e9
+}
+
+/// Peak-FLOP ceiling: `LANES` independent multiply-add chains
+/// (`x = x * m + a`, 2 flops) that never touch memory. The iteration map
+/// has fixed point `a / (1 - m)`, so the accumulators stay bounded and
+/// finite for any rep count.
+///
+/// `LANES` must be large enough that, after vectorization, the number of
+/// independent vector chains covers multiply-add latency × issue ports
+/// (~4–5 cycles × 2 ports): with 32 scalar lanes an AVX2 target gets 8
+/// independent 4-wide chains, enough to keep both FMA pipes full. Too few
+/// chains measures *latency*, not throughput, and an optimized kernel
+/// could then "exceed" the roof.
+pub fn measure_peak_flops(reps: usize) -> f64 {
+    const LANES: usize = 32;
+    let reps = reps.max(1);
+    let m = std::hint::black_box(0.999_999_f64);
+    let a = std::hint::black_box(1.0e-6_f64);
+    let mut acc = [0.0f64; LANES];
+    for (l, slot) in acc.iter_mut().enumerate() {
+        *slot = 0.5 + l as f64 * 0.125;
+    }
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        for slot in acc.iter_mut() {
+            *slot = *slot * m + a;
+        }
+    }
+    let secs = sw.elapsed_s();
+    std::hint::black_box(acc);
+    (2 * LANES * reps) as f64 / secs / 1e9
+}
+
+/// Measure both ceilings. `quick` shrinks the working set and rep counts
+/// to smoke-test scale (CI); the quick bandwidth number may be
+/// cache-inflated and is not comparable to a full run.
+pub fn measure_machine(quick: bool) -> MachineRoofs {
+    let (len, bw_reps, flop_reps) =
+        if quick { (1 << 16, 3, 1_000_000) } else { (4 << 20, 10, 40_000_000) };
+    MachineRoofs {
+        bandwidth_gbs: measure_stream_bandwidth(len, bw_reps),
+        peak_gflops: measure_peak_flops(flop_reps),
+    }
+}
+
+/// One operator/degree point on the measured roofline.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    /// Canonical operator-registry name.
+    pub operator: String,
+    /// GLL points per dimension (`n` = polynomial degree + 1).
+    pub degree: usize,
+    /// Local element count of the measured problem.
+    pub elements: usize,
+    /// Achieved GFLOP/s (best sample; flops from the operator's own
+    /// [`flops`](crate::operators::AxOperator::flops) hook).
+    pub gflops: f64,
+    /// `100 * gflops / roof_gflops`.
+    pub percent_of_roofline: f64,
+    /// Arithmetic intensity, flop/byte (`flops() / bytes_moved()`).
+    pub intensity: f64,
+    /// The binding roof for this point: `min(peak, intensity * bw)`.
+    pub roof_gflops: f64,
+    /// Best per-apply seconds.
+    pub seconds: f64,
+}
+
+/// A full harness run: the machine ceilings plus every measured point.
+#[derive(Clone, Debug)]
+pub struct RooflineReport {
+    pub roofs: MachineRoofs,
+    pub points: Vec<RooflinePoint>,
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct RooflineConfig {
+    /// Operator-registry names to place on the roofline.
+    pub operators: Vec<String>,
+    /// Degrees (`n`, GLL points per dimension) to measure each at.
+    pub degrees: Vec<usize>,
+    /// Local element count of the measured problem (honored as given,
+    /// quick mode included).
+    pub elements: usize,
+    /// Worker threads for threaded operators (0 = all cores).
+    pub threads: usize,
+    /// Artifact directory for AOT-compiled (`xla-*`) operators.
+    pub artifacts_dir: String,
+    /// Smoke-test scale (CI): minimal apply reps/samples and shrunken
+    /// machine-ceiling measurements. Does not change the problem shape.
+    pub quick: bool,
+}
+
+impl Default for RooflineConfig {
+    /// The acceptance set: generic vs degree-specialized, unfused and
+    /// fused, at the paper's degree sweep.
+    fn default() -> Self {
+        RooflineConfig {
+            operators: vec![
+                "cpu-layered".into(),
+                "cpu-spec".into(),
+                "cpu-layered-fused".into(),
+                "cpu-spec-fused".into(),
+            ],
+            degrees: vec![5, 9, 11],
+            elements: 64,
+            threads: 0,
+            artifacts_dir: "artifacts".into(),
+            quick: false,
+        }
+    }
+}
+
+/// [`run_with`] against the built-in operator registry.
+pub fn run(cfg: &RooflineConfig) -> Result<RooflineReport> {
+    run_with(cfg, &OperatorRegistry::with_builtins())
+}
+
+/// Run the harness: measure the machine ceilings once, then time every
+/// (operator, degree) pair's `apply` and place it on the roofline. The
+/// registry is a parameter so runtime-registered operators (the
+/// registry's extension point) can be measured too.
+///
+/// Enforces the fused-flops contract for every operator it measures: a
+/// fused operator must report [`fused_ax_flops`] and an unfused one
+/// [`ax_flops`] — the count the paper's Eq. (1) assigns to the work the
+/// kernel actually performs — and errors (no panic) on a mismatch.
+pub fn run_with(cfg: &RooflineConfig, registry: &OperatorRegistry) -> Result<RooflineReport> {
+    // Fail fast on unknown operator names before spending seconds on the
+    // machine-ceiling measurements.
+    for name in &cfg.operators {
+        registry.resolve(name)?;
+    }
+    let roofs = measure_machine(cfg.quick);
+    let elements = cfg.elements;
+    // The strict Eq. (1) equality only binds names that belong to the
+    // built-in family; a runtime-registered operator may model its flops
+    // however it honestly can (it just can't report none at all).
+    let builtins = OperatorRegistry::with_builtins();
+    let mut points = Vec::new();
+    for &n in &cfg.degrees {
+        let mesh = Mesh::for_nelt(elements, n)?;
+        let basis = Basis::new(n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let c = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let u = crate::rng::Rng::new(0xBE2C).normal_vec(ndof);
+        let mut w = vec![0.0; ndof];
+        let ctx = OperatorCtx {
+            n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: cfg.threads,
+            artifacts_dir: &cfg.artifacts_dir,
+            d: &basis.d,
+            g: &geom.g,
+            c: &c,
+        };
+        for name in &cfg.operators {
+            let mut op = registry.build(name, &ctx)?;
+            let flops = op.flops();
+            if flops == 0 {
+                return Err(Error::Config(format!(
+                    "operator {name:?} reports no flops(); cannot place it on the \
+                     roofline"
+                )));
+            }
+            let want = if op.is_fused() {
+                fused_ax_flops(n, mesh.nelt())
+            } else {
+                ax_flops(n, mesh.nelt())
+            };
+            if builtins.contains(&op.label()) && flops != want {
+                return Err(Error::Config(format!(
+                    "operator {name:?}: flops() = {flops} but the Eq. (1) count for \
+                     its fusion class is {want}; fix the operator's flop model"
+                )));
+            }
+            let bytes = op.bytes_moved();
+            if bytes == 0 {
+                return Err(Error::Config(format!(
+                    "operator {name:?} reports no bytes_moved(); cannot place it on \
+                     the roofline"
+                )));
+            }
+            // Batch applies so one sample is long enough to time, then
+            // take the best sample (the standard roofline estimator: least
+            // interference, closest to the machine's capability).
+            let reps = if cfg.quick {
+                1
+            } else {
+                ((2e8 / flops as f64).ceil() as usize).clamp(1, 500)
+            };
+            let runner = if cfg.quick {
+                Runner { warmup: 1, samples: 2 }
+            } else {
+                Runner { warmup: 2, samples: 5 }
+            };
+            let samples: Samples = runner.run(|| {
+                for _ in 0..reps {
+                    op.apply(&u, &mut w).expect("roofline apply");
+                    std::hint::black_box(&mut w);
+                }
+            });
+            let seconds = samples.min() / reps as f64;
+            if seconds <= 0.0 {
+                // A zero-duration sample would serialize as a silent bogus
+                // trajectory point (inf → 0.0 in JSON); fail loudly instead.
+                return Err(Error::Numerical(format!(
+                    "operator {name:?} at n={n}: timed sample was 0s; raise reps"
+                )));
+            }
+            let gflops = flops as f64 / seconds / 1e9;
+            let intensity = flops as f64 / bytes as f64;
+            let roof = roofs.peak_gflops.min(intensity * roofs.bandwidth_gbs);
+            points.push(RooflinePoint {
+                operator: op.label(),
+                degree: n,
+                elements: mesh.nelt(),
+                gflops,
+                percent_of_roofline: 100.0 * gflops / roof,
+                intensity,
+                roof_gflops: roof,
+                seconds,
+            });
+        }
+    }
+    Ok(RooflineReport { roofs, points })
+}
+
+/// Render the report as the aligned table the benches print.
+pub fn render_table(report: &RooflineReport) -> String {
+    let mut table = Table::new(&[
+        "operator",
+        "n",
+        "elems",
+        "flop/byte",
+        "roof(GF/s)",
+        "achieved(GF/s)",
+        "% of roof",
+    ]);
+    for p in &report.points {
+        table.row(&[
+            p.operator.clone(),
+            p.degree.to_string(),
+            p.elements.to_string(),
+            format!("{:.3}", p.intensity),
+            format!("{:.3}", p.roof_gflops),
+            format!("{:.3}", p.gflops),
+            format!("{:.1}%", p.percent_of_roofline),
+        ]);
+    }
+    table.render()
+}
+
+/// A JSON number that is always valid JSON (non-finite values, which JSON
+/// cannot represent, become 0).
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9}")
+    } else {
+        "0.0".into()
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Serialize a report in the `nekbone-roofline/1` schema.
+pub fn to_json(report: &RooflineReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": {},\n", jstr(SCHEMA)));
+    out.push_str(&format!("  \"bandwidth_gbs\": {},\n", jnum(report.roofs.bandwidth_gbs)));
+    out.push_str(&format!("  \"peak_gflops\": {},\n", jnum(report.roofs.peak_gflops)));
+    out.push_str("  \"points\": [\n");
+    for (i, p) in report.points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"operator\": {}, \"degree\": {}, \"elements\": {}, \
+             \"gflops\": {}, \"percent_of_roofline\": {}, \
+             \"intensity_flop_per_byte\": {}, \"roof_gflops\": {}, \
+             \"seconds\": {}}}{}\n",
+            jstr(&p.operator),
+            p.degree,
+            p.elements,
+            jnum(p.gflops),
+            jnum(p.percent_of_roofline),
+            jnum(p.intensity),
+            jnum(p.roof_gflops),
+            jnum(p.seconds),
+            if i + 1 < report.points.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Validate a serialized report against the `nekbone-roofline/1` schema
+/// (used by the bench after writing, and by CI's smoke job).
+pub fn validate_json(text: &str) -> Result<()> {
+    let doc = crate::json::parse(text)?;
+    let bad = |msg: &str| Error::Config(format!("roofline json: {msg}"));
+    if doc.get("schema").and_then(|v| v.as_str()) != Some(SCHEMA) {
+        return Err(bad(&format!("\"schema\" must be {SCHEMA:?}")));
+    }
+    for key in ["bandwidth_gbs", "peak_gflops"] {
+        doc.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad(&format!("missing {key}")))?;
+    }
+    let points =
+        doc.get("points").and_then(|v| v.as_array()).ok_or_else(|| bad("missing points"))?;
+    if points.is_empty() {
+        return Err(bad("points must be non-empty"));
+    }
+    for p in points {
+        p.get("operator").and_then(|v| v.as_str()).ok_or_else(|| bad("point operator"))?;
+        p.get("degree").and_then(|v| v.as_usize()).ok_or_else(|| bad("point degree"))?;
+        p.get("elements").and_then(|v| v.as_usize()).ok_or_else(|| bad("point elements"))?;
+        p.get("gflops").and_then(|v| v.as_f64()).ok_or_else(|| bad("point gflops"))?;
+        p.get("percent_of_roofline")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| bad("point percent_of_roofline"))?;
+    }
+    Ok(())
+}
+
+/// Write a report to `path` (schema-validated round trip).
+pub fn write_json(report: &RooflineReport, path: &str) -> Result<()> {
+    let text = to_json(report);
+    validate_json(&text)?;
+    std::fs::write(path, &text).map_err(|source| Error::Io { path: path.to_string(), source })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> RooflineConfig {
+        RooflineConfig {
+            operators: vec![
+                "cpu-layered".into(),
+                "cpu-spec".into(),
+                "cpu-layered-fused".into(),
+                "cpu-spec-fused".into(),
+            ],
+            degrees: vec![3, 5],
+            elements: 2,
+            threads: 0,
+            artifacts_dir: "artifacts".into(),
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn ceilings_positive_and_sane() {
+        let roofs = measure_machine(true);
+        assert!(roofs.bandwidth_gbs > 0.01, "bw {}", roofs.bandwidth_gbs);
+        assert!(roofs.bandwidth_gbs < 100_000.0, "bw {}", roofs.bandwidth_gbs);
+        assert!(roofs.peak_gflops > 0.01, "peak {}", roofs.peak_gflops);
+        assert!(roofs.peak_gflops < 10_000.0, "peak {}", roofs.peak_gflops);
+    }
+
+    #[test]
+    fn harness_covers_every_operator_degree_pair() {
+        let cfg = quick_cfg();
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.points.len(), cfg.operators.len() * cfg.degrees.len());
+        for p in &report.points {
+            assert!(
+                p.gflops > 0.0 && p.gflops.is_finite(),
+                "{}: gflops {}",
+                p.operator,
+                p.gflops
+            );
+            assert!(p.roof_gflops > 0.0 && p.roof_gflops.is_finite());
+            assert!(p.percent_of_roofline > 0.0 && p.percent_of_roofline.is_finite());
+            assert!(p.intensity > 0.0 && p.intensity.is_finite());
+        }
+        // Fused points carry the extra c stream: higher intensity
+        // numerator and denominator, same degree ordering.
+        let by = |name: &str, n: usize| {
+            report
+                .points
+                .iter()
+                .find(|p| p.operator == name && p.degree == n)
+                .unwrap_or_else(|| panic!("missing point {name}/{n}"))
+                .clone()
+        };
+        for &n in &cfg.degrees {
+            let plain = by("cpu-layered", n);
+            let fused = by("cpu-layered-fused", n);
+            assert!(fused.intensity < plain.intensity * 1.2);
+        }
+        let table = render_table(&report);
+        assert!(table.contains("cpu-spec"));
+    }
+
+    #[test]
+    fn json_round_trips_schema() {
+        let report = run(&quick_cfg()).unwrap();
+        let text = to_json(&report);
+        validate_json(&text).unwrap();
+        let doc = crate::json::parse(&text).unwrap();
+        let points = doc.get("points").unwrap().as_array().unwrap();
+        assert_eq!(points.len(), report.points.len());
+        assert_eq!(
+            points[0].get("operator").unwrap().as_str().unwrap(),
+            report.points[0].operator
+        );
+        assert_eq!(
+            points[0].get("degree").unwrap().as_usize().unwrap(),
+            report.points[0].degree
+        );
+    }
+
+    #[test]
+    fn validation_rejects_missing_keys() {
+        assert!(validate_json("{}").is_err());
+        assert!(validate_json("not json").is_err());
+        let no_points = format!(
+            "{{\"schema\": \"{SCHEMA}\", \"bandwidth_gbs\": 1.0, \
+             \"peak_gflops\": 1.0, \"points\": []}}"
+        );
+        assert!(validate_json(&no_points).is_err());
+        let bad_point = format!(
+            "{{\"schema\": \"{SCHEMA}\", \"bandwidth_gbs\": 1.0, \
+             \"peak_gflops\": 1.0, \"points\": [{{\"operator\": \"x\"}}]}}"
+        );
+        assert!(validate_json(&bad_point).is_err());
+    }
+
+    #[test]
+    fn json_numbers_stay_finite() {
+        assert_eq!(jnum(f64::NAN), "0.0");
+        assert_eq!(jnum(f64::INFINITY), "0.0");
+        assert_eq!(jnum(1.5), "1.500000000");
+        assert_eq!(jstr("a\"b"), "\"a\\\"b\"");
+    }
+}

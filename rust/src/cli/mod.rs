@@ -121,13 +121,16 @@ COMMON OPTIONS (run/sweep/roofline):
   --niter N          CG iterations                 [100]
   --chunk N          elements per XLA launch       [64]
   --backend NAME     an operator-registry name     [xla-layered]
-                     built-ins: cpu-naive | cpu-layered | cpu-threaded |
-                     cpu-layered-fused | cpu-threaded-fused |
+                     built-ins: cpu-naive | cpu-layered | cpu-spec |
+                     cpu-threaded | cpu-layered-fused | cpu-spec-fused |
+                     cpu-threaded-fused |
                      xla-jnp (alias xla-openacc) | xla-original |
                      xla-shared | xla-layered | xla-layered-unroll2 |
                      xla-fused-layered (alias xla-fused)
                      -fused backends compute the CG pap reduction inside
                      Ax (one fewer full-vector sweep per iteration);
+                     cpu-spec* dispatch degree-specialized unrolled
+                     kernels (n = 2..=12, layered fallback outside);
                      cpu-threaded* run on a persistent worker pool
                      (`nekbone info` prints the live list)
   --vector-backend B rust | xla                    [rust]
@@ -143,6 +146,14 @@ COMMON OPTIONS (run/sweep/roofline):
   --no-mask          skip the Dirichlet mask
   --cpu-threads T    threads for cpu-threaded (0 = all cores)
   --elems LIST       sweep: comma-separated element counts
+  --bench-json PATH  roofline: run the measured kernel-roofline harness
+                     (STREAM bandwidth + peak-FLOP ceilings, operators
+                     placed by flops()/bytes_moved() intensity) and write
+                     BENCH_roofline.json-schema output to PATH. Honors
+                     --backend (one operator; default: cpu-layered,
+                     cpu-spec + fused twins), --n (one degree; default
+                     5,9,11), --nelt, --cpu-threads and --artifacts
+  --quick            roofline: smoke-test scale for --bench-json
 ";
 
 /// Parse `--elems 64,128,256`-style lists.

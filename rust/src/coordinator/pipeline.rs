@@ -47,13 +47,32 @@ pub struct Nekbone {
 /// Builder for [`Nekbone`]: pick the operator by registry name, optionally
 /// a custom registry and the vector-algebra backend, then `build()`.
 ///
-/// ```no_run
+/// The `cpu-*` operators need no artifacts, so this runs anywhere
+/// (`cargo test` executes it):
+///
+/// ```
 /// use nekbone::config::RunConfig;
 /// use nekbone::coordinator::Nekbone;
 ///
-/// let cfg = RunConfig { nelt: 64, n: 10, ..RunConfig::default() };
-/// let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+/// let cfg = RunConfig { nelt: 2, n: 3, niter: 5, ..RunConfig::default() };
+/// let mut app = Nekbone::builder(cfg)
+///     .operator("cpu-spec") // any operator-registry name; aliases resolve too
+///     .build()
+///     .unwrap();
 /// let report = app.run().unwrap();
+/// assert_eq!(report.backend, "cpu-spec");
+/// assert_eq!(report.iterations, 5);
+/// ```
+///
+/// An unknown operator name fails at `build()` with an error listing
+/// every registered name:
+///
+/// ```
+/// use nekbone::config::RunConfig;
+/// use nekbone::coordinator::Nekbone;
+///
+/// let err = Nekbone::builder(RunConfig::default()).operator("gpu-magic").build();
+/// assert!(err.err().unwrap().to_string().contains("cpu-layered"));
 /// ```
 pub struct NekboneBuilder {
     cfg: RunConfig,
@@ -87,6 +106,10 @@ impl NekboneBuilder {
     pub fn build(self) -> Result<Nekbone> {
         let cfg = self.cfg;
         cfg.validate()?;
+        let registry = self.registry.unwrap_or_else(OperatorRegistry::with_builtins);
+        // Fail fast on an unknown operator name, before the expensive
+        // mesh / gather-scatter / geometry construction below.
+        registry.resolve(&self.operator)?;
         let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
         let basis = Basis::new(cfg.n);
         let geom = GeomFactors::affine(&mesh, &basis);
@@ -101,7 +124,6 @@ impl NekboneBuilder {
         gs.dssum(&mut f);
         mask_apply(&mut f, &mask);
 
-        let registry = self.registry.unwrap_or_else(OperatorRegistry::with_builtins);
         let ctx = OperatorCtx {
             n: cfg.n,
             nelt: mesh.nelt(),
@@ -247,6 +269,7 @@ impl Nekbone {
             seconds,
             ax_seconds,
             flops: cm.flops_per_iter() * rep.iterations as u64,
+            fused: self.op.is_fused(),
             rnorms: rep.rnorms,
         })
     }
@@ -308,6 +331,7 @@ impl Nekbone {
             seconds,
             ax_seconds,
             flops: cm.flops_per_iter() * rep.iterations as u64,
+            fused: self.op.is_fused(),
             rnorms: rep.rnorms,
         })
     }
@@ -410,8 +434,10 @@ mod tests {
         for name in [
             "cpu-naive",
             "cpu-layered",
+            "cpu-spec",
             "cpu-threaded",
             "cpu-layered-fused",
+            "cpu-spec-fused",
             "cpu-threaded-fused",
         ] {
             let mut app = app(name, small_cfg());

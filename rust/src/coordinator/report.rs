@@ -19,6 +19,10 @@ pub struct RunReport {
     pub ax_seconds: f64,
     /// Flops by the paper's cost model: `iterations * D (12n + 34)`.
     pub flops: u64,
+    /// Did the operator fuse the pap reduction into Ax? Kernel-level
+    /// accounting ([`RunReport::ax_gflops`]) must then count the in-kernel
+    /// multiply-adds, matching the operator's own `flops()` hook.
+    pub fused: bool,
     /// Residual history if recorded.
     pub rnorms: Vec<f64>,
 }
@@ -29,10 +33,17 @@ impl RunReport {
         self.flops as f64 / self.seconds / 1e9
     }
 
-    /// GFlop/s attributing only the tensor-product flops to the Ax time
-    /// (kernel-level number, comparable to Świrydowicz et al.).
+    /// GFlop/s attributing only the in-kernel flops to the Ax time
+    /// (kernel-level number, comparable to Świrydowicz et al.). Fused
+    /// operators count the in-kernel pap reduction too — the same
+    /// per-apply count the operator's `flops()` hook reports.
     pub fn ax_gflops(&self) -> f64 {
-        let ax_flops = crate::operators::ax_flops(self.n, self.nelt) * self.iterations as u64;
+        let per_apply = if self.fused {
+            crate::operators::fused_ax_flops(self.n, self.nelt)
+        } else {
+            crate::operators::ax_flops(self.n, self.nelt)
+        };
+        let ax_flops = per_apply * self.iterations as u64;
         ax_flops as f64 / self.ax_seconds / 1e9
     }
 
@@ -70,6 +81,7 @@ mod tests {
             seconds: 2.0,
             ax_seconds: 1.5,
             flops: 64 * 1000 * 154 * 100,
+            fused: false,
             rnorms: vec![],
         }
     }
@@ -79,6 +91,18 @@ mod tests {
         let r = report();
         let want = (64_000.0 * 154.0 * 100.0) / 2.0 / 1e9;
         assert!((r.gflops() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_reports_count_in_kernel_pap_flops() {
+        let plain = report();
+        let fused = RunReport { fused: true, ..report() };
+        // Same shape and timing: the fused kernel did strictly more work
+        // per apply (the in-kernel pap multiply-adds), by exactly the
+        // 3-flops-per-point ratio.
+        let ratio = fused.ax_gflops() / plain.ax_gflops();
+        let want = (12.0 * 10.0 + 18.0) / (12.0 * 10.0 + 15.0);
+        assert!((ratio - want).abs() < 1e-12, "ratio {ratio} want {want}");
     }
 
     #[test]

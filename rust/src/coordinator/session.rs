@@ -49,6 +49,25 @@ impl Nekbone {
     /// Open a solve session: repeated [`SolveSession::solve`] /
     /// [`SolveSession::solve_batch`] calls reuse this application's
     /// operator state and CG workspace without allocating.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nekbone::config::RunConfig;
+    /// use nekbone::coordinator::Nekbone;
+    ///
+    /// let cfg = RunConfig { nelt: 2, n: 3, niter: 5, ..RunConfig::default() };
+    /// let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+    /// let ndof = app.mesh().ndof_local();
+    /// let mut session = app.session();
+    /// for seed in 0..3u64 {
+    ///     let rhs = nekbone::rng::Rng::new(seed).normal_vec(ndof);
+    ///     let report = session.solve(&rhs).unwrap();
+    ///     assert_eq!(report.iterations, 5);
+    /// }
+    /// assert_eq!(session.solves(), 3);
+    /// assert_eq!(session.solution().len(), ndof);
+    /// ```
     pub fn session(&mut self) -> SolveSession<'_> {
         let ndof = self.mesh().ndof_local();
         SolveSession { app: self, x: vec![0.0; ndof], solves: 0 }

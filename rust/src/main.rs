@@ -116,6 +116,42 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_roofline(args: &Args) -> Result<()> {
+    // `--bench-json PATH`: the measured kernel-roofline harness (the same
+    // measurement as `cargo bench --bench roofline`), instead of the
+    // solve-level Fig. 4 comparison below. Honors `--backend` (one
+    // operator instead of the default four), `--n` (one degree instead of
+    // 5/9/11), `--nelt`, and `--cpu-threads`; the other solve options
+    // don't apply to a kernel-level measurement.
+    if let Some(path) = args.get("bench-json") {
+        let mut cfg = nekbone::bench::roofline::RooflineConfig {
+            quick: args.flag("quick"),
+            ..Default::default()
+        };
+        if args.get("backend").is_some() {
+            cfg.operators = vec![operator_of(args)?];
+        }
+        if args.get("n").is_some() {
+            let n = args.get_usize("n", 0)?;
+            if n < 2 {
+                return Err(nekbone::error::Error::Config(format!("--n must be >= 2, got {n}")));
+            }
+            cfg.degrees = vec![n];
+        }
+        cfg.elements = args.get_usize("nelt", cfg.elements)?;
+        cfg.threads = args.get_usize("cpu-threads", cfg.threads)?;
+        if let Some(dir) = args.get("artifacts") {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        let report = nekbone::bench::roofline::run(&cfg)?;
+        println!(
+            "# ceilings: {:.2} GB/s stream bandwidth, {:.2} GF/s peak multiply-add",
+            report.roofs.bandwidth_gbs, report.roofs.peak_gflops
+        );
+        print!("{}", nekbone::bench::roofline::render_table(&report));
+        nekbone::bench::roofline::write_json(&report, path)?;
+        println!("# wrote {path} ({} points)", report.points.len());
+        return Ok(());
+    }
     let base = args.run_config()?;
     let operator = operator_of(args)?;
     let elems = parse_elems(args.get("elems").unwrap_or("256,512,1024,2048,4096"))?;

@@ -16,7 +16,7 @@
 
 use crate::error::{Error, Result};
 use crate::operators::layered::{ax_layered_element, LayeredScratch};
-use crate::operators::{ax_flops, AxOperator, OperatorCtx};
+use crate::operators::{ax_bytes_moved, fused_ax_flops, AxOperator, OperatorCtx};
 
 /// Layered local Ax with the pap reduction fused in: computes
 /// `w = A_local(u)` exactly as [`super::ax_layered`] (bit-identical output)
@@ -62,11 +62,19 @@ pub fn ax_layered_fused(
     pap
 }
 
-/// `cpu-layered-fused`: the layered schedule with the pap reduction fused
-/// in, one thread. `last_pap()` is `glsc3(w, c, u)` of the most recent
-/// apply, with `c` as captured at setup.
-#[derive(Default)]
-pub(crate) struct FusedLayeredOp {
+/// Unified fused single-thread CPU-kernel signature
+/// (`ax_layered_fused`, `ax_spec_fused`).
+pub(crate) type FusedCpuKernel =
+    fn(usize, usize, &[f64], &[f64], &[f64], &[f64], &mut [f64]) -> f64;
+
+/// A fused single-thread CPU schedule behind the operator trait:
+/// `cpu-layered-fused` (the generic layered kernel) and `cpu-spec-fused`
+/// (degree-specialized, falls back to layered out of range). `last_pap()`
+/// is `glsc3(w, c, u)` of the most recent apply, with `c` as captured at
+/// setup.
+pub(crate) struct FusedCpuOp {
+    label: &'static str,
+    kernel: FusedCpuKernel,
     st: Option<FusedState>,
     last_pap: Option<f64>,
 }
@@ -79,9 +87,15 @@ struct FusedState {
     c: Vec<f64>,
 }
 
-impl AxOperator for FusedLayeredOp {
+impl FusedCpuOp {
+    pub(crate) fn new(label: &'static str, kernel: FusedCpuKernel) -> Self {
+        FusedCpuOp { label, kernel, st: None, last_pap: None }
+    }
+}
+
+impl AxOperator for FusedCpuOp {
     fn label(&self) -> String {
-        "cpu-layered-fused".into()
+        self.label.into()
     }
 
     fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
@@ -99,16 +113,20 @@ impl AxOperator for FusedLayeredOp {
 
     fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
         let st = self.st.as_ref().ok_or_else(|| {
-            Error::Config("operator \"cpu-layered-fused\" used before setup".into())
+            Error::Config(format!("operator {:?} used before setup", self.label))
         })?;
         super::check_apply_shapes(st.n, st.nelt, u, w)?;
-        let pap = ax_layered_fused(st.n, st.nelt, u, &st.d, &st.g, &st.c, w);
+        let pap = (self.kernel)(st.n, st.nelt, u, &st.d, &st.g, &st.c, w);
         self.last_pap = Some(pap);
         Ok(())
     }
 
     fn flops(&self) -> u64 {
-        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+        self.st.as_ref().map_or(0, |s| fused_ax_flops(s.n, s.nelt))
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, true))
     }
 
     fn is_fused(&self) -> bool {

@@ -5,7 +5,8 @@
 //! kernel schedules (original, shared, layered, unrolled) measured against
 //! each other; this module makes that family open-ended. Three pieces:
 //!
-//! * the raw CPU kernels ([`ax_naive`], [`ax_layered`], [`ax_threaded`]) —
+//! * the raw CPU kernels ([`ax_naive`], [`ax_layered`], [`ax_threaded`],
+//!   and the degree-specialized [`ax_spec`] / [`ax_spec_fused`] family) —
 //!   the Fig. 3 CPU baseline and the parity oracle for the XLA artifacts;
 //! * the [`AxOperator`] trait — one `apply(u, w)` interface over every
 //!   implementation, CPU or AOT-compiled;
@@ -63,6 +64,7 @@ mod layered;
 mod naive;
 pub(crate) mod pool;
 pub mod registry;
+pub mod specialized;
 mod threaded;
 
 pub use fused::ax_layered_fused;
@@ -70,6 +72,7 @@ pub use layered::ax_layered;
 pub use naive::ax_naive;
 pub use pool::{resolve_threads, WorkerPool};
 pub use registry::{OperatorRegistry, OperatorSpec};
+pub use specialized::{ax_spec, ax_spec_fused, is_specialized, SPEC_MAX_N, SPEC_MIN_N};
 pub use threaded::ax_threaded;
 
 use std::rc::Rc;
@@ -77,13 +80,34 @@ use std::rc::Rc;
 use crate::error::Result;
 use crate::runtime::XlaRuntime;
 
-/// Floating-point operations of one local-Ax application, counted exactly
-/// as the paper's Eq. (1) does for the tensor part: `12 n + 15` flops per
-/// grid point (6n mul-add in each contraction stage + 15 for the geometric
-/// factors), times `nelt * n^3` points.
+/// Floating-point operations of one **unfused** local-Ax application,
+/// counted exactly as the paper's Eq. (1) does for the tensor part:
+/// `12 n + 15` flops per grid point (6n mul-add in each contraction stage
+/// + 15 for the geometric factors), times `nelt * n^3` points.
 pub fn ax_flops(n: usize, nelt: usize) -> u64 {
     let per_point = 12 * n as u64 + 15;
     per_point * (nelt as u64) * (n as u64).pow(3)
+}
+
+/// Floating-point operations of one **fused** Ax+pap application: the
+/// tensor part ([`ax_flops`]) plus the in-kernel reduction — `w·c·u` is
+/// 2 multiplies + 1 add per grid point. Fused operators must report this
+/// from [`AxOperator::flops`] (the roofline harness asserts it); counting
+/// only [`ax_flops`] would understate the work the kernel actually does.
+pub fn fused_ax_flops(n: usize, nelt: usize) -> u64 {
+    ax_flops(n, nelt) + 3 * (nelt as u64) * (n as u64).pow(3)
+}
+
+/// Minimum main-memory traffic of one local-Ax application in bytes,
+/// under stream accounting (each operand array is read or written once;
+/// `d` and the per-layer tiles are cache-resident): the kernel streams
+/// `u` (1 read), the six geometric-factor arrays (6 reads) and `w`
+/// (1 write) — 8 `f64` per grid point, 9 with the fused `c` read. This is
+/// the denominator of the operator's arithmetic intensity in the measured
+/// roofline ([`crate::bench::roofline`]).
+pub fn ax_bytes_moved(n: usize, nelt: usize, fused: bool) -> u64 {
+    let streams: u64 = if fused { 9 } else { 8 };
+    8 * streams * (nelt as u64) * (n as u64).pow(3)
 }
 
 /// Everything an operator needs to bind itself to one problem: the shape,
@@ -173,9 +197,19 @@ pub trait AxOperator {
     /// `w <- A_local(u)`. Both slices are `nelt * n^3` as given at setup.
     fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()>;
 
-    /// Flops of one `apply` by the paper's Eq. (1) tensor-part count
-    /// (0 before `setup`).
+    /// Flops of one `apply` (0 before `setup`): [`ax_flops`] for plain
+    /// operators, [`fused_ax_flops`] for fused ones — the in-kernel pap
+    /// multiply-adds are real work and must be counted.
     fn flops(&self) -> u64;
+
+    /// Minimum main-memory bytes one `apply` moves under stream accounting
+    /// (see [`ax_bytes_moved`]); 0 before `setup`, or when the
+    /// implementation does not model its traffic. The roofline harness
+    /// divides [`AxOperator::flops`] by this to place the operator on the
+    /// measured roofline.
+    fn bytes_moved(&self) -> u64 {
+        0
+    }
 
     /// Does `apply` also compute the CG `pap` reduction in the same pass
     /// (the fused hot path)? Fused operators make [`AxOperator::last_pap`]
@@ -291,8 +325,10 @@ mod tests {
         [
             "cpu-naive",
             "cpu-layered",
+            "cpu-spec",
             "cpu-threaded",
             "cpu-layered-fused",
+            "cpu-spec-fused",
             "cpu-threaded-fused",
         ]
         .iter()
@@ -344,11 +380,26 @@ mod tests {
 
     #[test]
     fn operator_flops_match_formula() {
+        // Fused operators do the pap multiply-adds inside the kernel, so
+        // their per-apply count is the fused formula, not the plain one.
         let (n, nelt) = (5, 3);
         let d = crate::basis::derivative_matrix(n);
         let g = vec![0.0; nelt * 6 * n * n * n];
         for op in cpu_operators(n, nelt, &d, &g) {
-            assert_eq!(op.flops(), ax_flops(n, nelt), "{}", op.label());
+            let want =
+                if op.is_fused() { fused_ax_flops(n, nelt) } else { ax_flops(n, nelt) };
+            assert_eq!(op.flops(), want, "{}", op.label());
+        }
+    }
+
+    #[test]
+    fn operator_bytes_match_stream_accounting() {
+        let (n, nelt) = (5, 3);
+        let d = crate::basis::derivative_matrix(n);
+        let g = vec![0.0; nelt * 6 * n * n * n];
+        for op in cpu_operators(n, nelt, &d, &g) {
+            let want = ax_bytes_moved(n, nelt, op.is_fused());
+            assert_eq!(op.bytes_moved(), want, "{}", op.label());
         }
     }
 
@@ -356,5 +407,10 @@ mod tests {
     fn flop_count_formula() {
         assert_eq!(ax_flops(10, 1), (120 + 15) * 1000);
         assert_eq!(ax_flops(2, 3), (24 + 15) * 3 * 8);
+        // Fused adds 3 flops (2 mul + 1 add) per grid point.
+        assert_eq!(fused_ax_flops(10, 1), (120 + 15 + 3) * 1000);
+        // Stream accounting: 8 f64 streams per point, 9 fused.
+        assert_eq!(ax_bytes_moved(10, 1, false), 8 * 8 * 1000);
+        assert_eq!(ax_bytes_moved(10, 1, true), 8 * 9 * 1000);
     }
 }

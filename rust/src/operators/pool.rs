@@ -17,9 +17,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
-use crate::operators::fused::ax_layered_fused;
-use crate::operators::layered::ax_layered;
-use crate::operators::{ax_flops, AxOperator, OperatorCtx};
+use crate::operators::specialized::{ax_spec, ax_spec_fused};
+use crate::operators::{ax_bytes_moved, ax_flops, fused_ax_flops, AxOperator, OperatorCtx};
 
 /// Raw slice bounds shipped to a worker. The pointers are only
 /// dereferenced between job receipt and the completion signal, while the
@@ -106,10 +105,15 @@ impl WorkerPool {
                     // workers.
                     let u = unsafe { std::slice::from_raw_parts(job.u, job.len) };
                     let w = unsafe { std::slice::from_raw_parts_mut(job.w, job.len) };
+                    // Degree-dispatched kernels: the monomorphized unrolled
+                    // instance when 2 <= n <= 12, the generic layered kernel
+                    // otherwise. Bit-identical either way (the specialized
+                    // family's tested contract), so pooled output is
+                    // independent of which instance ran.
                     let pap = if job.fused {
-                        ax_layered_fused(n, count, u, &d, &g, &c, w)
+                        ax_spec_fused(n, count, u, &d, &g, &c, w)
                     } else {
-                        ax_layered(n, count, u, &d, &g, w);
+                        ax_spec(n, count, u, &d, &g, w);
                         0.0
                     };
                     if done_tx.send(pap).is_err() {
@@ -271,7 +275,17 @@ impl AxOperator for PooledOp {
     }
 
     fn flops(&self) -> u64 {
-        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+        self.st.as_ref().map_or(0, |s| {
+            if self.fused {
+                fused_ax_flops(s.n, s.nelt)
+            } else {
+                ax_flops(s.n, s.nelt)
+            }
+        })
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, self.fused))
     }
 
     fn is_fused(&self) -> bool {

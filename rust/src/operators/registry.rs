@@ -14,9 +14,12 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::error::{Error, Result};
-use crate::operators::fused::FusedLayeredOp;
+use crate::operators::fused::FusedCpuOp;
 use crate::operators::pool::PooledOp;
-use crate::operators::{ax_flops, ax_layered, ax_naive, AxOperator, OperatorCtx};
+use crate::operators::{
+    ax_bytes_moved, ax_flops, ax_layered, ax_naive, ax_spec, fused_ax_flops, AxOperator,
+    OperatorCtx,
+};
 use crate::runtime::{AxEngine, CgIterEngine, Manifest, XlaRuntime};
 
 /// Constructor for a blank (un-setup) operator.
@@ -36,6 +39,18 @@ impl OperatorSpec {
     /// Construct a blank operator (call `setup` before `apply`).
     pub fn create(&self) -> Box<dyn AxOperator> {
         (self.ctor)()
+    }
+}
+
+// Hand-rolled: the constructor is a closure, so `derive(Debug)` cannot
+// apply; tests (and callers) still want `unwrap_err` & friends on
+// `Result<&OperatorSpec, _>`.
+impl std::fmt::Debug for OperatorSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OperatorSpec")
+            .field("name", &self.name)
+            .field("needs_artifacts", &self.needs_artifacts)
+            .finish_non_exhaustive()
     }
 }
 
@@ -59,9 +74,9 @@ impl OperatorRegistry {
         OperatorRegistry { specs: BTreeMap::new(), aliases: BTreeMap::new() }
     }
 
-    /// The built-in operator family: the CPU schedules (plain, fused, and
-    /// worker-pool threaded), the paper's five AOT kernel variants, and the
-    /// fused Ax+pap hot paths.
+    /// The built-in operator family: the CPU schedules (plain,
+    /// degree-specialized, fused, and worker-pool threaded), the paper's
+    /// five AOT kernel variants, and the fused Ax+pap hot paths.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         let must = |res: Result<()>| res.expect("builtin registration cannot clash");
@@ -69,10 +84,16 @@ impl OperatorRegistry {
         must(r.register("cpu-layered", false, || {
             Box::new(CpuOp::new("cpu-layered", kernel_layered))
         }));
+        must(r.register("cpu-spec", false, || Box::new(CpuOp::new("cpu-spec", kernel_spec))));
         must(r.register("cpu-threaded", false, || {
             Box::new(PooledOp::new("cpu-threaded", false))
         }));
-        must(r.register("cpu-layered-fused", false, || Box::<FusedLayeredOp>::default()));
+        must(r.register("cpu-layered-fused", false, || {
+            Box::new(FusedCpuOp::new("cpu-layered-fused", crate::operators::ax_layered_fused))
+        }));
+        must(r.register("cpu-spec-fused", false, || {
+            Box::new(FusedCpuOp::new("cpu-spec-fused", crate::operators::ax_spec_fused))
+        }));
         must(r.register("cpu-threaded-fused", false, || {
             Box::new(PooledOp::new("cpu-threaded-fused", true))
         }));
@@ -124,6 +145,21 @@ impl OperatorRegistry {
 
     /// Resolve a name (canonical or alias) to its spec. The error for an
     /// unknown name lists every registered name.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nekbone::operators::OperatorRegistry;
+    ///
+    /// let registry = OperatorRegistry::with_builtins();
+    /// // Canonical names resolve to themselves …
+    /// assert_eq!(registry.resolve("cpu-layered").unwrap().name, "cpu-layered");
+    /// // … aliases resolve to their canonical entry …
+    /// assert_eq!(registry.resolve("xla-fused").unwrap().name, "xla-fused-layered");
+    /// // … and an unknown name errors, listing everything registered.
+    /// let err = registry.resolve("gpu-magic").err().unwrap().to_string();
+    /// assert!(err.contains("cpu-spec"));
+    /// ```
     pub fn resolve(&self, name: &str) -> Result<&OperatorSpec> {
         let canonical = self.aliases.get(name).map(String::as_str).unwrap_or(name);
         self.specs.get(canonical).ok_or_else(|| {
@@ -205,12 +241,17 @@ fn kernel_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mu
     ax_layered(n, nelt, u, d, g, w);
 }
 
+fn kernel_spec(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
+    ax_spec(n, nelt, u, d, g, w);
+}
+
 /// A single-thread CPU schedule behind the operator trait: `cpu-naive`
 /// (Listing-1 structure, full-size intermediates), `cpu-layered` (the
-/// paper's schedule). The threaded variants (`cpu-threaded`,
+/// paper's schedule), `cpu-spec` (degree-specialized unrolled kernels,
+/// layered fallback out of range). The threaded variants (`cpu-threaded`,
 /// `cpu-threaded-fused`) live in [`crate::operators::pool`] on a
-/// persistent worker pool; the fused single-thread variant
-/// (`cpu-layered-fused`) in [`crate::operators::fused`].
+/// persistent worker pool; the fused single-thread variants
+/// (`cpu-layered-fused`, `cpu-spec-fused`) in [`crate::operators::fused`].
 struct CpuOp {
     label: &'static str,
     kernel: CpuKernel,
@@ -242,6 +283,10 @@ impl AxOperator for CpuOp {
 
     fn flops(&self) -> u64 {
         self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, false))
     }
 }
 
@@ -296,6 +341,10 @@ impl AxOperator for XlaAxOp {
 
     fn flops(&self) -> u64 {
         self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, false))
     }
 
     fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
@@ -367,7 +416,14 @@ impl AxOperator for XlaFusedOp {
     }
 
     fn flops(&self) -> u64 {
-        self.st.as_ref().map_or(0, |s| ax_flops(s.n, s.nelt))
+        // The fused executable computes the pap reduction in-kernel: count
+        // it (see `fused_ax_flops`), or the roofline would credit the
+        // fused path with free flops.
+        self.st.as_ref().map_or(0, |s| fused_ax_flops(s.n, s.nelt))
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, true))
     }
 
     fn is_fused(&self) -> bool {
@@ -407,8 +463,10 @@ mod tests {
         for name in [
             "cpu-naive",
             "cpu-layered",
+            "cpu-spec",
             "cpu-threaded",
             "cpu-layered-fused",
+            "cpu-spec-fused",
             "cpu-threaded-fused",
             "xla-jnp",
             "xla-original",
@@ -532,7 +590,7 @@ mod tests {
         let mut want = vec![0.0; nelt * np];
         ax_layered(n, nelt, &u, &d, &g, &mut want);
         let want_pap = crate::solver::glsc3(&want, &c, &u);
-        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+        for name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
             let mut op = r.build(name, &ctx).unwrap();
             assert!(op.is_fused(), "{name} must declare itself fused");
             assert_eq!(op.last_pap(), None, "{name}: no pap before first apply");
@@ -551,7 +609,7 @@ mod tests {
         let n = 3;
         let d = crate::basis::derivative_matrix(n);
         let g = vec![0.0; 6 * n * n * n];
-        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+        for name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
             let err = r.build(name, &tiny_ctx(n, 1, &d, &g)).unwrap_err().to_string();
             assert!(err.contains("weights"), "{name}: {err}");
         }
@@ -570,7 +628,7 @@ mod tests {
         let r = OperatorRegistry::with_builtins();
         let mut want = vec![0.0; nelt * n * n * n];
         ax_layered(n, nelt, &u, &d, &g, &mut want);
-        for name in ["cpu-naive", "cpu-layered", "cpu-threaded"] {
+        for name in ["cpu-naive", "cpu-layered", "cpu-spec", "cpu-threaded"] {
             let mut op = r.build(name, &tiny_ctx(n, nelt, &d, &g)).unwrap();
             let mut w = vec![0.0; nelt * n * n * n];
             op.apply(&u, &mut w).unwrap();

@@ -1,0 +1,300 @@
+//! Degree-specialized tensor-product kernels: the paper's headline
+//! optimization (section IV, "r3" / unrolled versions), on CPU.
+//!
+//! The layered schedule ([`super::ax_layered`]) runs one kernel for every
+//! polynomial degree, so all inner contraction loops have runtime trip
+//! counts and every tile lives behind a `Vec` indirection. The paper's
+//! fastest kernels instead *specialize per degree*: the CUDA templates are
+//! instantiated once per `N`, the `i`/`j`/`k` loops fully unroll, and the
+//! per-layer line buffers become registers (Świrydowicz et al.,
+//! arXiv:1711.00903 measure exactly this unrolling as what closes the gap
+//! for small tensor contractions; HipBone, arXiv:2202.12477, ships the
+//! same per-degree kernel selection at run time).
+//!
+//! Rust's analog of the CUDA template is a const-generic function:
+//! `ax_element_spec` is monomorphized for every `N` in
+//! [`SPEC_MIN_N`]`..=`[`SPEC_MAX_N`], with the per-layer tiles held in
+//! `[[f64; N]; N]` arrays so the compiler can unroll the length-`N`
+//! contractions and keep lines of `d` and `u` in registers. A degree
+//! table ([`ax_spec`], [`ax_spec_fused`]) dispatches a runtime `n` to its
+//! monomorphized instance and **falls back to the generic layered kernel**
+//! for out-of-range degrees — `cpu-spec` never errors on an exotic `n`,
+//! it just stops being special.
+//!
+//! Determinism contract: every floating-point operation happens in exactly
+//! the order of the layered kernel's `ax_layered_element`, so the specialized
+//! kernels are **bit-identical** to the layered ones (asserted by tests,
+//! relied on by the worker pool, which dispatches through this table for
+//! `cpu-threaded` / `cpu-threaded-fused` too).
+
+use crate::operators::fused::ax_layered_fused;
+use crate::operators::layered::ax_layered;
+
+/// Smallest `n` with a monomorphized kernel.
+pub const SPEC_MIN_N: usize = 2;
+
+/// Largest `n` with a monomorphized kernel (the paper's degree sweep tops
+/// out at degree 11, i.e. `n = 12`).
+pub const SPEC_MAX_N: usize = 12;
+
+/// Does `n` have a degree-specialized kernel instance, or will the
+/// dispatch table fall back to the generic layered kernel?
+pub fn is_specialized(n: usize) -> bool {
+    (SPEC_MIN_N..=SPEC_MAX_N).contains(&n)
+}
+
+/// One element of the degree-specialized schedule: `we = A_local u_e`,
+/// structurally identical to `ax_layered_element` but with compile-time
+/// trip counts and stack tiles. Keep the floating-point operation order in
+/// lockstep with the layered kernel — bit-identical output is a tested
+/// contract, not an accident.
+fn ax_element_spec<const N: usize>(d: &[f64], ue: &[f64], ge: &[f64], we: &mut [f64]) {
+    let nn = N * N;
+    let np = nn * N;
+    let mut wr = [[0.0f64; N]; N];
+    let mut ws = [[0.0f64; N]; N];
+    let mut wt = [[0.0f64; N]; N];
+    let mut ur = [[0.0f64; N]; N];
+    let mut us = [[0.0f64; N]; N];
+    let mut ut = [[0.0f64; N]; N];
+    we.fill(0.0);
+
+    for k in 0..N {
+        let uk = &ue[k * nn..(k + 1) * nn]; // the staged layer
+        // stage 1: r and s derivatives from the layer tile.
+        for j in 0..N {
+            for i in 0..N {
+                let mut accr = 0.0;
+                let mut accs = 0.0;
+                for l in 0..N {
+                    accr += d[i * N + l] * uk[j * N + l];
+                    accs += d[j * N + l] * uk[l * N + i];
+                }
+                wr[j][i] = accr;
+                ws[j][i] = accs;
+            }
+        }
+        // t derivative from the register column u(i,j,:).
+        for j in 0..N {
+            for i in 0..N {
+                let mut acc = 0.0;
+                for l in 0..N {
+                    acc += d[k * N + l] * ue[l * nn + j * N + i];
+                }
+                wt[j][i] = acc;
+            }
+        }
+        // geometric factors, loaded per layer
+        let gbase = k * nn;
+        for j in 0..N {
+            for i in 0..N {
+                let p = gbase + j * N + i;
+                let g11 = ge[p];
+                let g12 = ge[np + p];
+                let g13 = ge[2 * np + p];
+                let g22 = ge[3 * np + p];
+                let g23 = ge[4 * np + p];
+                let g33 = ge[5 * np + p];
+                ur[j][i] = g11 * wr[j][i] + g12 * ws[j][i] + g13 * wt[j][i];
+                us[j][i] = g12 * wr[j][i] + g22 * ws[j][i] + g23 * wt[j][i];
+                ut[j][i] = g13 * wr[j][i] + g23 * ws[j][i] + g33 * wt[j][i];
+            }
+        }
+        // stage 2, r/s parts land in layer k
+        for j in 0..N {
+            for i in 0..N {
+                let mut acc = 0.0;
+                for l in 0..N {
+                    acc += d[l * N + i] * ur[j][l];
+                    acc += d[l * N + j] * us[l][i];
+                }
+                we[k * nn + j * N + i] += acc;
+            }
+        }
+        // stage 2, t part scatters into all layers m with weight d[k,m]
+        // (the `if` guard is part of the bit-identical contract: skipping a
+        // zero weight is not the same as adding ±0.0).
+        for m in 0..N {
+            let dkm = d[k * N + m];
+            if dkm != 0.0 {
+                for j in 0..N {
+                    for i in 0..N {
+                        we[m * nn + j * N + i] += dkm * ut[j][i];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Whole-mesh driver for one monomorphized degree.
+fn ax_spec_mesh<const N: usize>(nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
+    let np = N * N * N;
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        let ge = &g[e * 6 * np..(e + 1) * 6 * np];
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_element_spec::<N>(d, ue, ge, we);
+    }
+}
+
+/// Whole-mesh fused driver for one monomorphized degree: the pap
+/// reduction streams per element in linear dof order, exactly like
+/// [`ax_layered_fused`].
+fn ax_spec_fused_mesh<const N: usize>(
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f64],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    let np = N * N * N;
+    let mut pap = 0.0;
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        let ge = &g[e * 6 * np..(e + 1) * 6 * np];
+        let ce = &c[e * np..(e + 1) * np];
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_element_spec::<N>(d, ue, ge, we);
+        let mut pap_e = 0.0;
+        for ((wi, ci), ui) in we.iter().zip(ce).zip(ue) {
+            pap_e += wi * ci * ui;
+        }
+        pap += pap_e;
+    }
+    pap
+}
+
+fn check_shapes(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &[f64]) {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(w.len(), nelt * np);
+}
+
+/// Degree-dispatched local Poisson operator: the monomorphized kernel for
+/// `n` in [`SPEC_MIN_N`]`..=`[`SPEC_MAX_N`], the generic layered kernel
+/// otherwise. Signature and layout as [`super::ax_layered`]; output is
+/// bit-identical to it at every degree.
+pub fn ax_spec(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
+    check_shapes(n, nelt, u, d, g, w);
+    match n {
+        2 => ax_spec_mesh::<2>(nelt, u, d, g, w),
+        3 => ax_spec_mesh::<3>(nelt, u, d, g, w),
+        4 => ax_spec_mesh::<4>(nelt, u, d, g, w),
+        5 => ax_spec_mesh::<5>(nelt, u, d, g, w),
+        6 => ax_spec_mesh::<6>(nelt, u, d, g, w),
+        7 => ax_spec_mesh::<7>(nelt, u, d, g, w),
+        8 => ax_spec_mesh::<8>(nelt, u, d, g, w),
+        9 => ax_spec_mesh::<9>(nelt, u, d, g, w),
+        10 => ax_spec_mesh::<10>(nelt, u, d, g, w),
+        11 => ax_spec_mesh::<11>(nelt, u, d, g, w),
+        12 => ax_spec_mesh::<12>(nelt, u, d, g, w),
+        _ => ax_layered(n, nelt, u, d, g, w),
+    }
+}
+
+/// Degree-dispatched fused Ax+pap: computes `w = A_local(u)` exactly as
+/// [`ax_spec`] and returns `pap = Σ_i w_i c_i u_i` over the local dofs
+/// (same contract, and bit-identical result, as
+/// [`super::ax_layered_fused`]). Falls back to the generic fused layered
+/// kernel for out-of-range degrees.
+pub fn ax_spec_fused(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f64],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    check_shapes(n, nelt, u, d, g, w);
+    assert_eq!(c.len(), nelt * n * n * n);
+    match n {
+        2 => ax_spec_fused_mesh::<2>(nelt, u, d, g, c, w),
+        3 => ax_spec_fused_mesh::<3>(nelt, u, d, g, c, w),
+        4 => ax_spec_fused_mesh::<4>(nelt, u, d, g, c, w),
+        5 => ax_spec_fused_mesh::<5>(nelt, u, d, g, c, w),
+        6 => ax_spec_fused_mesh::<6>(nelt, u, d, g, c, w),
+        7 => ax_spec_fused_mesh::<7>(nelt, u, d, g, c, w),
+        8 => ax_spec_fused_mesh::<8>(nelt, u, d, g, c, w),
+        9 => ax_spec_fused_mesh::<9>(nelt, u, d, g, c, w),
+        10 => ax_spec_fused_mesh::<10>(nelt, u, d, g, c, w),
+        11 => ax_spec_fused_mesh::<11>(nelt, u, d, g, c, w),
+        12 => ax_spec_fused_mesh::<12>(nelt, u, d, g, c, w),
+        _ => ax_layered_fused(n, nelt, u, d, g, c, w),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::Cases;
+
+    fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut cases = Cases::new(seed);
+        let np = n * n * n;
+        let u = cases.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = cases.vec_normal(nelt * 6 * np);
+        let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+        (u, d, g, c)
+    }
+
+    #[test]
+    fn bit_identical_to_layered_at_every_specialized_degree() {
+        for n in SPEC_MIN_N..=SPEC_MAX_N {
+            let nelt = 3;
+            let (u, d, g, _c) = inputs(0x51 + n as u64, n, nelt);
+            let np = n * n * n;
+            let mut want = vec![0.0; nelt * np];
+            ax_layered(n, nelt, &u, &d, &g, &mut want);
+            let mut got = vec![123.0; nelt * np]; // poisoned
+            ax_spec(n, nelt, &u, &d, &g, &mut got);
+            assert_eq!(got, want, "n={n}: spec kernel must be bit-identical to layered");
+        }
+    }
+
+    #[test]
+    fn fused_spec_bit_identical_to_fused_layered() {
+        for n in SPEC_MIN_N..=SPEC_MAX_N {
+            let nelt = 2;
+            let (u, d, g, c) = inputs(0x52 + n as u64, n, nelt);
+            let np = n * n * n;
+            let mut w_l = vec![0.0; nelt * np];
+            let pap_l = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut w_l);
+            let mut w_s = vec![123.0; nelt * np];
+            let pap_s = ax_spec_fused(n, nelt, &u, &d, &g, &c, &mut w_s);
+            assert_eq!(w_s, w_l, "n={n}");
+            assert_eq!(pap_s.to_bits(), pap_l.to_bits(), "n={n}: {pap_s} vs {pap_l}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_degree_falls_back() {
+        let n = SPEC_MAX_N + 1;
+        assert!(!is_specialized(n));
+        let nelt = 1;
+        let (u, d, g, c) = inputs(0x53, n, nelt);
+        let np = n * n * n;
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        let mut got = vec![0.0; nelt * np];
+        ax_spec(n, nelt, &u, &d, &g, &mut got);
+        assert_eq!(got, want, "fallback must be the layered kernel");
+        let mut w = vec![0.0; nelt * np];
+        let pap = ax_spec_fused(n, nelt, &u, &d, &g, &c, &mut w);
+        let want_pap = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut got);
+        assert_eq!(pap.to_bits(), want_pap.to_bits());
+    }
+
+    #[test]
+    fn specialization_range() {
+        assert!(!is_specialized(1));
+        assert!(is_specialized(SPEC_MIN_N));
+        assert!(is_specialized(SPEC_MAX_N));
+        assert!(!is_specialized(SPEC_MAX_N + 1));
+    }
+}

@@ -407,6 +407,9 @@ pub fn run_ranked_in(
         ax_seconds = ax_seconds.max(o.ax_seconds);
     }
     let cm = CostModel::new(cfg.n, cfg.nelt);
+    // Fusedness is a static property of the operator type: a blank
+    // (un-setup) instance answers it without building a rank's state.
+    let fused = registry.create(&label).map(|op| op.is_fused()).unwrap_or(false);
     Ok(RunReport {
         backend: format!("ranked-{}-r{}", label, cfg.ranks),
         nelt: cfg.nelt,
@@ -416,6 +419,7 @@ pub fn run_ranked_in(
         seconds,
         ax_seconds,
         flops: cm.flops_per_iter() * first.iterations as u64,
+        fused,
         rnorms: first.rnorms,
     })
 }

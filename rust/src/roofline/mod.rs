@@ -6,6 +6,12 @@
 //! `P = I(n) * BW(size)`. We do the same with `memcpy` over buffers sized to
 //! the problem: 24 D reads + 6 D writes per iteration, copied (each copy is
 //! a read + a write, hence the paper's doubling).
+//!
+//! The *kernel-level* measured-roofline harness (STREAM-triad + peak
+//! multiply-add ceilings, per-operator `flops()/bytes_moved()` intensity,
+//! `BENCH_roofline.json` emission) lives in [`crate::bench::roofline`];
+//! this module stays the solve-level, Eq. (2) methodology of Fig. 4. Keep
+//! ceiling-measurement fixes in sync between the two.
 
 use crate::metrics::{CostModel, Measurement};
 use crate::metrics::Stopwatch;

@@ -703,7 +703,7 @@ mod tests {
         };
 
         let (rep_u, x_u) = solve("cpu-layered");
-        for fused_name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+        for fused_name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
             let (rep_f, x_f) = solve(fused_name);
             assert_eq!(rep_f.iterations, rep_u.iterations, "{fused_name}");
             assert_eq!(

@@ -1,0 +1,84 @@
+//! Doc-link check: every relative markdown link in the repo's curated
+//! docs must resolve to an existing file or directory. CI runs the same
+//! check as a standalone job; this test keeps it enforced by plain
+//! `cargo test` too.
+
+use std::path::{Path, PathBuf};
+
+/// Extract `](target)` link targets from markdown text (inline links
+/// only — that is the only style these docs use).
+fn link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b']' && bytes[i + 1] == b'(' {
+            if let Some(end) = text[i + 2..].find(')') {
+                out.push(text[i + 2..i + 2 + end].to_string());
+                i += 2 + end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn is_external(target: &str) -> bool {
+    target.starts_with("http://")
+        || target.starts_with("https://")
+        || target.starts_with("mailto:")
+        || target.starts_with('#')
+}
+
+#[test]
+fn markdown_links_resolve() {
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let files = ["docs/ARCHITECTURE.md", "rust/README.md", "ROADMAP.md"];
+    let mut checked = 0;
+    for rel in files {
+        let path = repo.join(rel);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+        let dir = path.parent().unwrap_or(Path::new("."));
+        for target in link_targets(&text) {
+            if is_external(&target) || target.is_empty() {
+                continue;
+            }
+            // Strip an in-file anchor (`file.md#section`).
+            let file_part = target.split('#').next().unwrap();
+            if file_part.is_empty() {
+                continue;
+            }
+            let resolved = dir.join(file_part);
+            assert!(
+                resolved.exists(),
+                "{rel}: broken link {target:?} (resolved to {})",
+                resolved.display()
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 10, "expected the docs to contain relative links, found {checked}");
+}
+
+#[test]
+fn architecture_doc_is_linked_from_readme() {
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    assert!(repo.join("docs/ARCHITECTURE.md").exists());
+    let readme = std::fs::read_to_string(repo.join("rust/README.md")).unwrap();
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md"),
+        "rust/README.md must link the architecture doc"
+    );
+}
+
+#[test]
+fn link_extraction_handles_edge_cases() {
+    let text = "a [x](one.md) b [y](https://e.com) c [z](dir/two.md#sec) trailing ](";
+    let links = link_targets(text);
+    assert_eq!(links, vec!["one.md", "https://e.com", "dir/two.md#sec"]);
+    assert!(is_external("https://e.com"));
+    assert!(is_external("#anchor"));
+    assert!(!is_external("one.md"));
+}

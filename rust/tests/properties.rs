@@ -209,7 +209,7 @@ fn fused_pap_matches_unfused_glsc3_across_shapes() {
         let mut w_ref = vec![0.0; nelt * np];
         ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
         let want_pap = glsc3(&w_ref, &c, &u);
-        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+        for name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
             let mut op = registry.build(name, &ctx).unwrap();
             let mut w = vec![0.0; nelt * np];
             op.apply(&u, &mut w).unwrap();
@@ -341,4 +341,89 @@ fn jacobi_pcg_converges_no_slower() {
         "Jacobi PCG took {iters_pcg} vs plain {iters_plain}"
     );
     assert_allclose(&x_pcg, &x_plain, 1e-6, 1e-8);
+}
+
+#[test]
+fn spec_operators_match_layered_across_all_degrees() {
+    // The degree-specialized kernels (`cpu-spec`, `cpu-spec-fused`) must
+    // reproduce the generic layered schedule at every monomorphized degree
+    // (n = 2..=12) on random meshes — bit-identical output and pap, which
+    // is the contract the worker pool's degree dispatch relies on.
+    let registry = OperatorRegistry::with_builtins();
+    for n in 2..=12usize {
+        assert!(nekbone::operators::is_specialized(n));
+        let mut cases = Cases::new(0x57EC + n as u64);
+        let nelt = cases.size(1, 4);
+        let np = n * n * n;
+        let u = cases.vec_normal(nelt * np);
+        let d = nekbone::basis::derivative_matrix(n);
+        let g = cases.vec_normal(nelt * 6 * np);
+        let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+        let ctx = OperatorCtx {
+            n,
+            nelt,
+            chunk: nelt,
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d: &d,
+            g: &g,
+            c: &c,
+        };
+        let mut w_ref = vec![0.0; nelt * np];
+        registry.build("cpu-layered", &ctx).unwrap().apply(&u, &mut w_ref).unwrap();
+        let mut spec = registry.build("cpu-spec", &ctx).unwrap();
+        let mut w = vec![123.0; nelt * np]; // poisoned
+        spec.apply(&u, &mut w).unwrap();
+        assert_eq!(w, w_ref, "n={n}: cpu-spec must be bit-identical to cpu-layered");
+
+        let mut lf = registry.build("cpu-layered-fused", &ctx).unwrap();
+        let mut w_lf = vec![0.0; nelt * np];
+        lf.apply(&u, &mut w_lf).unwrap();
+        let mut sf = registry.build("cpu-spec-fused", &ctx).unwrap();
+        let mut w_sf = vec![123.0; nelt * np];
+        sf.apply(&u, &mut w_sf).unwrap();
+        assert_eq!(w_sf, w_lf, "n={n}: fused spec w");
+        let (pap_s, pap_l) = (sf.last_pap().unwrap(), lf.last_pap().unwrap());
+        assert_eq!(pap_s.to_bits(), pap_l.to_bits(), "n={n}: {pap_s} vs {pap_l}");
+    }
+}
+
+#[test]
+fn spec_out_of_range_degree_falls_back_instead_of_erroring() {
+    // n = 13 has no monomorphized kernel instance: the cpu-spec operators
+    // must still build and apply (falling back to the layered kernel, as
+    // documented), not error out.
+    let n = 13;
+    assert!(!nekbone::operators::is_specialized(n));
+    let registry = OperatorRegistry::with_builtins();
+    let mut cases = Cases::new(0xFB13);
+    let nelt = 2;
+    let np = n * n * n;
+    let u = cases.vec_normal(nelt * np);
+    let d = nekbone::basis::derivative_matrix(n);
+    let g = cases.vec_normal(nelt * 6 * np);
+    let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+    let ctx = OperatorCtx {
+        n,
+        nelt,
+        chunk: nelt,
+        threads: 0,
+        artifacts_dir: "artifacts",
+        d: &d,
+        g: &g,
+        c: &c,
+    };
+    let mut w_ref = vec![0.0; nelt * np];
+    ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
+    let mut spec = registry.build("cpu-spec", &ctx).expect("out-of-range n must still build");
+    let mut w = vec![0.0; nelt * np];
+    spec.apply(&u, &mut w).expect("out-of-range n must still apply");
+    assert_eq!(w, w_ref, "fallback must be the layered kernel");
+
+    let mut sf = registry.build("cpu-spec-fused", &ctx).expect("fused fallback builds");
+    let mut w_sf = vec![0.0; nelt * np];
+    sf.apply(&u, &mut w_sf).unwrap();
+    assert_eq!(w_sf, w_ref);
+    let want_pap = glsc3(&w_ref, &c, &u);
+    assert_allclose(&[sf.last_pap().unwrap()], &[want_pap], 1e-11, 1e-11);
 }
