@@ -51,6 +51,15 @@ fn main() {
             100.0 * (spec / layered - 1.0)
         );
     }
+    // The explicit-SIMD rung on top of specialization: vector kernels vs
+    // the autovectorized unrolled ones, and which dispatch arm ran.
+    if let (Some(simd), Some(spec)) = (gflops_of("cpu-simd", 9), gflops_of("cpu-spec", 9)) {
+        println!(
+            "# n=9: cpu-simd ({} arm) {simd:.3} GF/s vs cpu-spec {spec:.3} GF/s ({:+.1}%)",
+            nekbone::operators::simd_arm(),
+            100.0 * (simd / spec - 1.0)
+        );
+    }
 
     write_json(&report, &out).expect("write BENCH_roofline.json");
     let text = std::fs::read_to_string(&out).expect("re-read emitted json");

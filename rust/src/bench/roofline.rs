@@ -80,35 +80,70 @@ pub fn measure_stream_bandwidth(len: usize, reps: usize) -> f64 {
     bytes / secs / 1e9
 }
 
-/// Peak-FLOP ceiling: `LANES` independent multiply-add chains
-/// (`x = x * m + a`, 2 flops) that never touch memory. The iteration map
-/// has fixed point `a / (1 - m)`, so the accumulators stay bounded and
-/// finite for any rep count.
+/// Scalar lanes of the peak-FLOP measurement.
 ///
-/// `LANES` must be large enough that, after vectorization, the number of
+/// Must be large enough that, after vectorization, the number of
 /// independent vector chains covers multiply-add latency × issue ports
 /// (~4–5 cycles × 2 ports): with 32 scalar lanes an AVX2 target gets 8
 /// independent 4-wide chains, enough to keep both FMA pipes full. Too few
 /// chains measures *latency*, not throughput, and an optimized kernel
 /// could then "exceed" the roof.
+const PEAK_LANES: usize = 32;
+
+/// FMA-contracted multiply-add chains, compiled with the same
+/// `target_feature` set as the explicit-SIMD operators: the ceiling the
+/// `cpu-simd*` kernels are held to must itself be measured with fused
+/// multiply-adds, or a kernel issuing real `vfmadd` could exceed a
+/// mul-then-add "peak" (reporting > 100% of roofline).
+///
+/// # Safety
+///
+/// Caller must have verified AVX2+FMA support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn madd_chains_fma(acc: &mut [f64; PEAK_LANES], m: f64, a: f64, reps: usize) {
+    for _ in 0..reps {
+        for slot in acc.iter_mut() {
+            *slot = slot.mul_add(m, a);
+        }
+    }
+}
+
+/// Peak-FLOP ceiling: `PEAK_LANES` (32) independent multiply-add chains
+/// (`x = x * m + a`, 2 flops) that never touch memory. The iteration map
+/// has fixed point `a / (1 - m)`, so the accumulators stay bounded and
+/// finite for any rep count.
+///
+/// Dispatches exactly like the operators it bounds
+/// ([`crate::operators::simd_arm`]): hosts where the `cpu-simd*` kernels
+/// run fused multiply-adds get an FMA-contracted ceiling, everywhere else
+/// the portable mul-then-add chain is the honest peak.
 pub fn measure_peak_flops(reps: usize) -> f64 {
-    const LANES: usize = 32;
     let reps = reps.max(1);
     let m = std::hint::black_box(0.999_999_f64);
     let a = std::hint::black_box(1.0e-6_f64);
-    let mut acc = [0.0f64; LANES];
+    let mut acc = [0.0f64; PEAK_LANES];
     for (l, slot) in acc.iter_mut().enumerate() {
         *slot = 0.5 + l as f64 * 0.125;
     }
+    let fma = crate::operators::simd_arm() == crate::operators::SimdArm::Avx2;
     let sw = Stopwatch::start();
-    for _ in 0..reps {
-        for slot in acc.iter_mut() {
-            *slot = *slot * m + a;
+    if fma {
+        // SAFETY: `simd_arm()` just verified AVX2+FMA support at runtime.
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            madd_chains_fma(&mut acc, m, a, reps);
+        };
+    } else {
+        for _ in 0..reps {
+            for slot in acc.iter_mut() {
+                *slot = *slot * m + a;
+            }
         }
     }
     let secs = sw.elapsed_s();
     std::hint::black_box(acc);
-    (2 * LANES * reps) as f64 / secs / 1e9
+    (2 * PEAK_LANES * reps) as f64 / secs / 1e9
 }
 
 /// Measure both ceilings. `quick` shrinks the working set and rep counts
@@ -172,15 +207,17 @@ pub struct RooflineConfig {
 }
 
 impl Default for RooflineConfig {
-    /// The acceptance set: generic vs degree-specialized, unfused and
-    /// fused, at the paper's degree sweep.
+    /// The acceptance set: generic vs degree-specialized vs explicit-SIMD,
+    /// unfused and fused, at the paper's degree sweep.
     fn default() -> Self {
         RooflineConfig {
             operators: vec![
                 "cpu-layered".into(),
                 "cpu-spec".into(),
+                "cpu-simd".into(),
                 "cpu-layered-fused".into(),
                 "cpu-spec-fused".into(),
+                "cpu-simd-fused".into(),
             ],
             degrees: vec![5, 9, 11],
             elements: 64,
@@ -431,8 +468,10 @@ mod tests {
             operators: vec![
                 "cpu-layered".into(),
                 "cpu-spec".into(),
+                "cpu-simd".into(),
                 "cpu-layered-fused".into(),
                 "cpu-spec-fused".into(),
+                "cpu-simd-fused".into(),
             ],
             degrees: vec![3, 5],
             elements: 2,

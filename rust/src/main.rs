@@ -1,11 +1,12 @@
 //! `nekbone` — the launcher binary.
 //!
-//! See `nekbone help` (or [`nekbone::cli::USAGE`]) for the interface.
-//! Backends are resolved by name through the operator registry; `nekbone
-//! info` lists everything registered.
+//! See `nekbone help` (or [`nekbone::cli::usage`]) for the interface.
+//! Backends are resolved by name through the operator registry (the
+//! `--backend` help list is generated from it); `nekbone info` lists
+//! everything registered.
 
 use nekbone::bench::Table;
-use nekbone::cli::{parse_elems, Args, USAGE};
+use nekbone::cli::{parse_elems, usage, Args};
 use nekbone::coordinator::{Nekbone, VectorBackend};
 use nekbone::error::Result;
 use nekbone::operators::OperatorRegistry;
@@ -26,7 +27,7 @@ fn main() {
 
 fn dispatch(raw: &[String]) -> Result<()> {
     if raw.is_empty() || raw[0] == "help" || raw[0] == "--help" {
-        print!("{USAGE}");
+        print!("{}", usage());
         return Ok(());
     }
     let args = Args::parse(raw)?;
@@ -36,7 +37,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "roofline" => cmd_roofline(&args),
         "info" => cmd_info(&args),
         other => {
-            eprint!("unknown subcommand {other:?}\n\n{USAGE}");
+            eprint!("unknown subcommand {other:?}\n\n{}", usage());
             std::process::exit(2);
         }
     }

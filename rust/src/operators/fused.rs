@@ -63,15 +63,16 @@ pub fn ax_layered_fused(
 }
 
 /// Unified fused single-thread CPU-kernel signature
-/// (`ax_layered_fused`, `ax_spec_fused`).
+/// (`ax_layered_fused`, `ax_spec_fused`, `ax_simd_fused`).
 pub(crate) type FusedCpuKernel =
     fn(usize, usize, &[f64], &[f64], &[f64], &[f64], &mut [f64]) -> f64;
 
 /// A fused single-thread CPU schedule behind the operator trait:
-/// `cpu-layered-fused` (the generic layered kernel) and `cpu-spec-fused`
-/// (degree-specialized, falls back to layered out of range). `last_pap()`
-/// is `glsc3(w, c, u)` of the most recent apply, with `c` as captured at
-/// setup.
+/// `cpu-layered-fused` (the generic layered kernel), `cpu-spec-fused`
+/// (degree-specialized, falls back to layered out of range), and
+/// `cpu-simd-fused` (explicit AVX2+FMA with runtime dispatch and a scalar
+/// fallback). `last_pap()` is `glsc3(w, c, u)` of the most recent apply,
+/// with `c` as captured at setup.
 pub(crate) struct FusedCpuOp {
     label: &'static str,
     kernel: FusedCpuKernel,

@@ -6,8 +6,10 @@
 //! each other; this module makes that family open-ended. Three pieces:
 //!
 //! * the raw CPU kernels ([`ax_naive`], [`ax_layered`], [`ax_threaded`],
-//!   and the degree-specialized [`ax_spec`] / [`ax_spec_fused`] family) —
-//!   the Fig. 3 CPU baseline and the parity oracle for the XLA artifacts;
+//!   the degree-specialized [`ax_spec`] / [`ax_spec_fused`] family, and the
+//!   explicit-SIMD [`ax_simd`] / [`ax_simd_fused`] family with runtime
+//!   AVX2+FMA dispatch) — the Fig. 3 CPU baseline and the parity oracle
+//!   for the XLA artifacts;
 //! * the [`AxOperator`] trait — one `apply(u, w)` interface over every
 //!   implementation, CPU or AOT-compiled;
 //! * the [`registry::OperatorRegistry`] — string names → constructors, so
@@ -64,6 +66,7 @@ mod layered;
 mod naive;
 pub(crate) mod pool;
 pub mod registry;
+pub mod simd;
 pub mod specialized;
 mod threaded;
 
@@ -72,6 +75,9 @@ pub use layered::ax_layered;
 pub use naive::ax_naive;
 pub use pool::{resolve_threads, WorkerPool};
 pub use registry::{OperatorRegistry, OperatorSpec};
+pub use simd::{
+    ax_simd, ax_simd_fused, ax_simd_fused_with_arm, ax_simd_with_arm, simd_arm, SimdArm,
+};
 pub use specialized::{ax_spec, ax_spec_fused, is_specialized, SPEC_MAX_N, SPEC_MIN_N};
 pub use threaded::ax_threaded;
 
@@ -301,7 +307,8 @@ mod tests {
 
     /// Build every registered CPU operator (fused ones included — their
     /// `w` output must match Listing 1 exactly like the unfused ones) for
-    /// the given inputs.
+    /// the given inputs. Enumerated from the registry, not a name list, so
+    /// a newly registered artifact-free operator is covered automatically.
     fn cpu_operators(
         n: usize,
         nelt: usize,
@@ -322,18 +329,14 @@ mod tests {
             g,
             c: &c,
         };
-        [
-            "cpu-naive",
-            "cpu-layered",
-            "cpu-spec",
-            "cpu-threaded",
-            "cpu-layered-fused",
-            "cpu-spec-fused",
-            "cpu-threaded-fused",
-        ]
-        .iter()
-        .map(|name| reg.build(name, &ctx).expect("cpu operator setup"))
-        .collect()
+        let ops: Vec<Box<dyn AxOperator>> = reg
+            .names()
+            .iter()
+            .filter(|name| !reg.resolve(name).unwrap().needs_artifacts)
+            .map(|name| reg.build(name, &ctx).expect("cpu operator setup"))
+            .collect();
+        assert!(ops.len() >= 9, "registry lost CPU operators ({} left)", ops.len());
+        ops
     }
 
     #[test]

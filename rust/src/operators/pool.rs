@@ -17,7 +17,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
-use crate::operators::specialized::{ax_spec, ax_spec_fused};
+use crate::operators::simd::{ax_simd, ax_simd_fused};
 use crate::operators::{ax_bytes_moved, ax_flops, fused_ax_flops, AxOperator, OperatorCtx};
 
 /// Raw slice bounds shipped to a worker. The pointers are only
@@ -105,15 +105,17 @@ impl WorkerPool {
                     // workers.
                     let u = unsafe { std::slice::from_raw_parts(job.u, job.len) };
                     let w = unsafe { std::slice::from_raw_parts_mut(job.w, job.len) };
-                    // Degree-dispatched kernels: the monomorphized unrolled
-                    // instance when 2 <= n <= 12, the generic layered kernel
-                    // otherwise. Bit-identical either way (the specialized
-                    // family's tested contract), so pooled output is
-                    // independent of which instance ran.
+                    // Explicit-SIMD dispatch (the AVX2+FMA arm when the
+                    // host supports it, the degree-specialized scalar
+                    // family otherwise), so `cpu-threaded*` picks the
+                    // vector kernels up automatically. Both arms are
+                    // deterministic and every worker takes the same arm,
+                    // so pooled output is bit-identical to a single-thread
+                    // `ax_simd` over the same mesh.
                     let pap = if job.fused {
-                        ax_spec_fused(n, count, u, &d, &g, &c, w)
+                        ax_simd_fused(n, count, u, &d, &g, &c, w)
                     } else {
-                        ax_spec(n, count, u, &d, &g, w);
+                        ax_simd(n, count, u, &d, &g, w);
                         0.0
                     };
                     if done_tx.send(pap).is_err() {
@@ -213,9 +215,10 @@ impl Drop for WorkerPool {
     }
 }
 
-/// `cpu-threaded` / `cpu-threaded-fused`: the layered schedule across a
-/// persistent [`WorkerPool`]. Workers spawn once at `setup` and are reused
-/// by every `apply` (no per-apply thread creation).
+/// `cpu-threaded` / `cpu-threaded-fused`: the explicit-SIMD kernel family
+/// ([`ax_simd`], scalar fallback included) across a persistent
+/// [`WorkerPool`]. Workers spawn once at `setup` and are reused by every
+/// `apply` (no per-apply thread creation).
 pub(crate) struct PooledOp {
     label: &'static str,
     fused: bool,
@@ -300,7 +303,7 @@ impl AxOperator for PooledOp {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::operators::{ax_layered, ax_threaded};
+    use crate::operators::ax_threaded;
     use crate::proputil::Cases;
 
     fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
@@ -348,9 +351,7 @@ mod tests {
         let (u, d, g, c) = inputs(13, n, nelt);
         let np = n * n * n;
         let mut want_w = vec![0.0; nelt * np];
-        let want_pap = crate::operators::fused::ax_layered_fused(
-            n, nelt, &u, &d, &g, &c, &mut want_w,
-        );
+        let want_pap = ax_simd_fused(n, nelt, &u, &d, &g, &c, &mut want_w);
         for nworkers in [1, 2, 3, 6] {
             let pool = WorkerPool::spawn(n, nelt, nworkers, &d, &g, &c);
             let mut w = vec![0.0; nelt * np];
@@ -385,7 +386,7 @@ mod tests {
         .unwrap();
         assert_eq!(op.nworkers(), 2, "workers spawn at setup");
         let mut want = vec![0.0; nelt * np];
-        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        ax_simd(n, nelt, &u, &d, &g, &mut want);
         for _ in 0..5 {
             let mut w = vec![0.0; nelt * np];
             op.apply(&u, &mut w).unwrap();
@@ -433,7 +434,7 @@ mod tests {
         let mut got = vec![0.0; nelt * np];
         pool.run(&u, &mut got, false).unwrap();
         let mut want = vec![0.0; nelt * np];
-        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        ax_simd(n, nelt, &u, &d, &g, &mut want);
         assert_eq!(got, want);
     }
 }

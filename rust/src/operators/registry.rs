@@ -17,7 +17,7 @@ use crate::error::{Error, Result};
 use crate::operators::fused::FusedCpuOp;
 use crate::operators::pool::PooledOp;
 use crate::operators::{
-    ax_bytes_moved, ax_flops, ax_layered, ax_naive, ax_spec, fused_ax_flops, AxOperator,
+    ax_bytes_moved, ax_flops, ax_layered, ax_naive, ax_simd, ax_spec, fused_ax_flops, AxOperator,
     OperatorCtx,
 };
 use crate::runtime::{AxEngine, CgIterEngine, Manifest, XlaRuntime};
@@ -75,8 +75,9 @@ impl OperatorRegistry {
     }
 
     /// The built-in operator family: the CPU schedules (plain,
-    /// degree-specialized, fused, and worker-pool threaded), the paper's
-    /// five AOT kernel variants, and the fused Ax+pap hot paths.
+    /// degree-specialized, explicit-SIMD, fused, and worker-pool
+    /// threaded), the paper's five AOT kernel variants, and the fused
+    /// Ax+pap hot paths.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         let must = |res: Result<()>| res.expect("builtin registration cannot clash");
@@ -85,6 +86,7 @@ impl OperatorRegistry {
             Box::new(CpuOp::new("cpu-layered", kernel_layered))
         }));
         must(r.register("cpu-spec", false, || Box::new(CpuOp::new("cpu-spec", kernel_spec))));
+        must(r.register("cpu-simd", false, || Box::new(CpuOp::new("cpu-simd", kernel_simd))));
         must(r.register("cpu-threaded", false, || {
             Box::new(PooledOp::new("cpu-threaded", false))
         }));
@@ -93,6 +95,9 @@ impl OperatorRegistry {
         }));
         must(r.register("cpu-spec-fused", false, || {
             Box::new(FusedCpuOp::new("cpu-spec-fused", crate::operators::ax_spec_fused))
+        }));
+        must(r.register("cpu-simd-fused", false, || {
+            Box::new(FusedCpuOp::new("cpu-simd-fused", crate::operators::ax_simd_fused))
         }));
         must(r.register("cpu-threaded-fused", false, || {
             Box::new(PooledOp::new("cpu-threaded-fused", true))
@@ -199,6 +204,18 @@ impl OperatorRegistry {
         all.sort();
         all
     }
+
+    /// The aliases registered for a canonical name, sorted (empty when the
+    /// name has none, or is not a canonical name at all). The CLI help is
+    /// generated from this plus [`OperatorRegistry::names`], so a new
+    /// registration can never be missing from `--backend`'s list.
+    pub fn aliases_of(&self, canonical: &str) -> Vec<String> {
+        self.aliases
+            .iter()
+            .filter(|(_, target)| target.as_str() == canonical)
+            .map(|(alias, _)| alias.clone())
+            .collect()
+    }
 }
 
 /// Canonical registry name of an XLA kernel variant
@@ -245,13 +262,19 @@ fn kernel_spec(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [
     ax_spec(n, nelt, u, d, g, w);
 }
 
+fn kernel_simd(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
+    ax_simd(n, nelt, u, d, g, w);
+}
+
 /// A single-thread CPU schedule behind the operator trait: `cpu-naive`
 /// (Listing-1 structure, full-size intermediates), `cpu-layered` (the
 /// paper's schedule), `cpu-spec` (degree-specialized unrolled kernels,
-/// layered fallback out of range). The threaded variants (`cpu-threaded`,
-/// `cpu-threaded-fused`) live in [`crate::operators::pool`] on a
-/// persistent worker pool; the fused single-thread variants
-/// (`cpu-layered-fused`, `cpu-spec-fused`) in [`crate::operators::fused`].
+/// layered fallback out of range), `cpu-simd` (explicit AVX2+FMA kernels,
+/// runtime-dispatched with a scalar fallback). The threaded variants
+/// (`cpu-threaded`, `cpu-threaded-fused`) live in
+/// [`crate::operators::pool`] on a persistent worker pool; the fused
+/// single-thread variants (`cpu-layered-fused`, `cpu-spec-fused`,
+/// `cpu-simd-fused`) in [`crate::operators::fused`].
 struct CpuOp {
     label: &'static str,
     kernel: CpuKernel,
@@ -457,6 +480,22 @@ mod tests {
         }
     }
 
+    /// Artifact-free canonical names of one fusion class — derived from
+    /// the registry, never hand-listed, so a new CPU registration is
+    /// covered by these suites without a list edit.
+    fn cpu_names(r: &OperatorRegistry, fused: bool) -> Vec<String> {
+        let names: Vec<String> = r
+            .names()
+            .into_iter()
+            .filter(|name| {
+                let spec = r.resolve(name).unwrap();
+                !spec.needs_artifacts && spec.create().is_fused() == fused
+            })
+            .collect();
+        assert!(names.len() >= 4, "registry lost CPU operators (fused={fused}): {names:?}");
+        names
+    }
+
     #[test]
     fn builtins_present() {
         let r = OperatorRegistry::with_builtins();
@@ -464,9 +503,11 @@ mod tests {
             "cpu-naive",
             "cpu-layered",
             "cpu-spec",
+            "cpu-simd",
             "cpu-threaded",
             "cpu-layered-fused",
             "cpu-spec-fused",
+            "cpu-simd-fused",
             "cpu-threaded-fused",
             "xla-jnp",
             "xla-original",
@@ -590,7 +631,7 @@ mod tests {
         let mut want = vec![0.0; nelt * np];
         ax_layered(n, nelt, &u, &d, &g, &mut want);
         let want_pap = crate::solver::glsc3(&want, &c, &u);
-        for name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
+        for name in &cpu_names(&r, true) {
             let mut op = r.build(name, &ctx).unwrap();
             assert!(op.is_fused(), "{name} must declare itself fused");
             assert_eq!(op.last_pap(), None, "{name}: no pap before first apply");
@@ -598,8 +639,11 @@ mod tests {
             op.apply(&u, &mut w).unwrap();
             assert_allclose(&w, &want, 1e-11, 1e-11);
             let pap = op.last_pap().expect("fused apply must produce pap");
-            let denom = want_pap.abs().max(1e-30);
-            assert!((pap - want_pap).abs() / denom < 1e-12, "{name}: {pap} vs {want_pap}");
+            // Term-scaled tolerance (see `assert_pap_close`): the
+            // simd-dispatched operators differ from the layered want by
+            // FMA rounding, and a cancelling signed sum must not blow up
+            // a plain relative check.
+            crate::proputil::assert_pap_close(pap, want_pap, &w, &c, &u, 1e-12, name);
         }
     }
 
@@ -609,7 +653,7 @@ mod tests {
         let n = 3;
         let d = crate::basis::derivative_matrix(n);
         let g = vec![0.0; 6 * n * n * n];
-        for name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
+        for name in &cpu_names(&r, true) {
             let err = r.build(name, &tiny_ctx(n, 1, &d, &g)).unwrap_err().to_string();
             assert!(err.contains("weights"), "{name}: {err}");
         }
@@ -628,7 +672,7 @@ mod tests {
         let r = OperatorRegistry::with_builtins();
         let mut want = vec![0.0; nelt * n * n * n];
         ax_layered(n, nelt, &u, &d, &g, &mut want);
-        for name in ["cpu-naive", "cpu-layered", "cpu-spec", "cpu-threaded"] {
+        for name in &cpu_names(&r, false) {
             let mut op = r.build(name, &tiny_ctx(n, nelt, &d, &g)).unwrap();
             let mut w = vec![0.0; nelt * n * n * n];
             op.apply(&u, &mut w).unwrap();

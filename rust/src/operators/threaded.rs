@@ -1,20 +1,22 @@
-//! Multi-threaded CPU Ax: the layered schedule parallelized over elements
-//! with scoped std threads — the analog of the paper's 28-core CPU baseline
-//! (Fig. 3, "one node with 28 cores and MPI for parallelization").
+//! Multi-threaded CPU Ax: the explicit-SIMD kernel family parallelized
+//! over elements with scoped std threads — the analog of the paper's
+//! 28-core CPU baseline (Fig. 3, "one node with 28 cores and MPI for
+//! parallelization").
 //!
 //! This is the **one-shot** entry point: it spawns and joins its threads on
 //! every call, which is fine for a single application but wasteful inside a
 //! solver loop (~100 applies per solve). The registered `cpu-threaded` /
 //! `cpu-threaded-fused` operators instead run on a persistent
 //! [`super::pool::WorkerPool`] spawned once at operator `setup`; both use
-//! the same contiguous element split, so their outputs are bit-identical to
+//! the same contiguous element split **and** the same per-element kernel
+//! dispatch ([`super::ax_simd`]), so their outputs are bit-identical to
 //! this function's.
 
-use super::layered::ax_layered;
 use super::pool::{element_counts, resolve_threads};
+use super::simd::ax_simd;
 
-/// Layered Ax over `nthreads` workers (`0` = one per available core).
-/// Elements are split into contiguous ranges (the same
+/// Explicit-SIMD Ax over `nthreads` workers (`0` = one per available
+/// core). Elements are split into contiguous ranges (the same
 /// [`element_counts`] split the worker pool uses, so the two paths are
 /// bit-identical); each worker owns a disjoint slice of `w`, so no
 /// synchronization is needed beyond the join.
@@ -33,7 +35,7 @@ pub fn ax_threaded(
     let nthreads = resolve_threads(nthreads, nelt);
 
     if nthreads <= 1 || nelt == 0 {
-        ax_layered(n, nelt, u, d, g, w);
+        ax_simd(n, nelt, u, d, g, w);
         return;
     }
 
@@ -46,7 +48,7 @@ pub fn ax_threaded(
             let u_mine = &u[start * np..(start + count) * np];
             let g_mine = &g[start * 6 * np..(start + count) * 6 * np];
             scope.spawn(move || {
-                ax_layered(n, count, u_mine, d, g_mine, w_mine);
+                ax_simd(n, count, u_mine, d, g_mine, w_mine);
             });
             start += count;
         }
@@ -59,7 +61,7 @@ mod tests {
     use crate::proputil::{assert_allclose, Cases};
 
     #[test]
-    fn matches_layered_any_thread_count() {
+    fn matches_single_thread_any_thread_count() {
         let mut c = Cases::new(7);
         let (n, nelt) = (5, 7); // odd counts exercise the remainder split
         let np = n * n * n;
@@ -67,7 +69,7 @@ mod tests {
         let d = crate::basis::derivative_matrix(n);
         let g = c.vec_normal(nelt * 6 * np);
         let mut want = vec![0.0; nelt * np];
-        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        ax_simd(n, nelt, &u, &d, &g, &mut want);
         for nthreads in [1, 2, 3, 7, 16] {
             let mut got = vec![0.0; nelt * np];
             ax_threaded(n, nelt, &u, &d, &g, &mut got, nthreads);
@@ -86,7 +88,7 @@ mod tests {
         let mut a = vec![0.0; nelt * np];
         let mut b = vec![0.0; nelt * np];
         ax_threaded(n, nelt, &u, &d, &g, &mut a, 64);
-        ax_layered(n, nelt, &u, &d, &g, &mut b);
+        ax_simd(n, nelt, &u, &d, &g, &mut b);
         assert_eq!(a, b);
     }
 }

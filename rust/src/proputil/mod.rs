@@ -96,6 +96,30 @@ pub fn forall<F: FnMut(&mut Cases)>(seed: u64, cases: usize, mut prop: F) {
     }
 }
 
+/// Assert a fused-pap value matches a reference `glsc3(w, c, u)` within
+/// `tol` scaled by the reduction's absolute-term sum `Σ |w_i c_i u_i|`.
+/// Scaling by the unsigned sum keeps the check meaningful when the signed
+/// reduction cancels toward zero (a plain relative check would then
+/// reject legitimate roundoff), while staying tight enough to catch a
+/// real defect. Shared by every fused-operator suite so the tolerance
+/// convention lives in one place.
+#[track_caller]
+pub fn assert_pap_close(
+    pap: f64,
+    want: f64,
+    w: &[f64],
+    c: &[f64],
+    u: &[f64],
+    tol: f64,
+    what: &str,
+) {
+    let scale: f64 = w.iter().zip(c).zip(u).map(|((wi, ci), ui)| (wi * ci * ui).abs()).sum();
+    assert!(
+        (pap - want).abs() <= tol * scale.max(1e-300),
+        "{what}: pap {pap} vs {want} (tol {tol:e}, term scale {scale:e})"
+    );
+}
+
 /// Assert two slices are element-wise close.
 #[track_caller]
 pub fn assert_allclose(got: &[f64], want: &[f64], rtol: f64, atol: f64) {

@@ -703,7 +703,18 @@ mod tests {
         };
 
         let (rep_u, x_u) = solve("cpu-layered");
-        for fused_name in ["cpu-layered-fused", "cpu-spec-fused", "cpu-threaded-fused"] {
+        // Every artifact-free fused operator, enumerated from the registry
+        // so a new registration is held to the sweep-saving contract too.
+        let fused_names: Vec<String> = registry
+            .names()
+            .into_iter()
+            .filter(|name| {
+                let spec = registry.resolve(name).unwrap();
+                !spec.needs_artifacts && spec.create().is_fused()
+            })
+            .collect();
+        assert!(fused_names.len() >= 4, "registry lost fused CPU operators: {fused_names:?}");
+        for fused_name in &fused_names {
             let (rep_f, x_f) = solve(fused_name);
             assert_eq!(rep_f.iterations, rep_u.iterations, "{fused_name}");
             assert_eq!(

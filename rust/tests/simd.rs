@@ -1,0 +1,170 @@
+//! Deterministic randomized sweep of the explicit-SIMD family
+//! (`cpu-simd`, `cpu-simd-fused`, and the simd-dispatched `cpu-threaded*`)
+//! against the layered family, across every monomorphized degree, thread
+//! count, and element count — plus the forced-fallback paths.
+//!
+//! Accuracy contract under test: on the scalar dispatch arm the SIMD
+//! entry points are **bit-identical** to the layered/spec family; on the
+//! AVX2 arm only FMA rounding may differ, bounded by a 1e-13 relative
+//! band scaled with the field magnitude. Everything is seeded through
+//! `rng::Rng`, so a failure reproduces exactly.
+
+use nekbone::operators::{
+    ax_layered, ax_layered_fused, ax_simd, ax_simd_fused, ax_simd_fused_with_arm,
+    ax_simd_with_arm, simd_arm, OperatorCtx, OperatorRegistry, SimdArm,
+};
+use nekbone::proputil::assert_pap_close;
+use nekbone::rng::Rng;
+use nekbone::solver::glsc3;
+
+fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let np = n * n * n;
+    let u = rng.normal_vec(nelt * np);
+    let d = nekbone::basis::derivative_matrix(n);
+    let g = rng.normal_vec(nelt * 6 * np);
+    let c: Vec<f64> = (0..nelt * np).map(|_| rng.range(0.1, 1.0)).collect();
+    (u, d, g, c)
+}
+
+fn ctx<'a>(
+    n: usize,
+    nelt: usize,
+    threads: usize,
+    d: &'a [f64],
+    g: &'a [f64],
+    c: &'a [f64],
+) -> OperatorCtx<'a> {
+    OperatorCtx { n, nelt, chunk: nelt, threads, artifacts_dir: "artifacts", d, g, c }
+}
+
+/// Scalar arm: bitwise. AVX2 arm: within the FMA band — per point
+/// `1e-13 * (|want| + max|want|)`, the magnitude-scaled absolute term
+/// keeping cancellation points honest.
+fn assert_family_close(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    match simd_arm() {
+        SimdArm::Scalar => {
+            assert_eq!(got, want, "{what}: scalar arm must be bit-identical");
+        }
+        SimdArm::Avx2 => {
+            let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+            for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+                let tol = 1e-13 * (w.abs() + scale);
+                assert!(
+                    (g - w).abs() <= tol,
+                    "{what}: mismatch at {idx}: got {g}, want {w} (tol {tol:e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_family_sweep_against_layered() {
+    // N = 2..=12 (every monomorphized degree) × element counts × thread
+    // counts: the registered simd operators and the simd-dispatched
+    // threaded operators against the layered reference.
+    let registry = OperatorRegistry::with_builtins();
+    for n in 2..=12usize {
+        for &nelt in &[1usize, 3, 5] {
+            for &threads in &[1usize, 2, 3] {
+                let seed = 0x51D0_0000 + (n as u64) * 64 + (nelt as u64) * 8 + threads as u64;
+                let (u, d, g, c) = inputs(seed, n, nelt);
+                let np = n * n * n;
+                let what = format!("n={n} nelt={nelt} threads={threads}");
+
+                let mut w_ref = vec![0.0; nelt * np];
+                ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
+                // Single-thread simd reference for the bitwise pool checks.
+                let mut w_simd = vec![0.0; nelt * np];
+                ax_simd(n, nelt, &u, &d, &g, &mut w_simd);
+                assert_family_close(&w_simd, &w_ref, &what);
+
+                let cx = ctx(n, nelt, threads, &d, &g, &c);
+                for name in ["cpu-simd", "cpu-threaded"] {
+                    let mut op = registry.build(name, &cx).unwrap();
+                    let mut w = vec![123.0; nelt * np]; // poisoned
+                    op.apply(&u, &mut w).unwrap();
+                    // Same kernel family, disjoint element ranges: every
+                    // dispatch shape must be bit-identical to the
+                    // single-thread simd apply.
+                    assert_eq!(w, w_simd, "{name} {what}: w must match single-thread simd");
+                }
+                for name in ["cpu-simd-fused", "cpu-threaded-fused"] {
+                    let mut op = registry.build(name, &cx).unwrap();
+                    let mut w = vec![123.0; nelt * np];
+                    op.apply(&u, &mut w).unwrap();
+                    assert_eq!(w, w_simd, "{name} {what}: fused w must match unfused simd");
+                    let pap = op.last_pap().expect("fused apply must produce pap");
+                    let want = glsc3(&w, &c, &u);
+                    assert_pap_close(pap, want, &w, &c, &u, 1e-12, &format!("{name} {what}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_kernel_on_any_host_is_bit_identical_to_layered() {
+    // The fallback-path test: force the scalar arm — on a SIMD-capable
+    // host this bypasses the AVX2 dispatch — and require bit-identity
+    // with the layered family at every monomorphized degree and one
+    // fallback degree (n = 13, beyond the specialized table).
+    for n in (2..=13usize).chain([16]) {
+        let nelt = 2;
+        let (u, d, g, c) = inputs(0xFA11 + n as u64, n, nelt);
+        let np = n * n * n;
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        let mut got = vec![123.0; nelt * np];
+        ax_simd_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g, &mut got);
+        assert_eq!(got, want, "n={n}: forced scalar arm must equal layered bitwise");
+
+        let mut w_l = vec![0.0; nelt * np];
+        let pap_l = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut w_l);
+        let mut w_s = vec![123.0; nelt * np];
+        let pap_s = ax_simd_fused_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g, &c, &mut w_s);
+        assert_eq!(w_s, w_l, "n={n}: forced scalar fused w");
+        assert_eq!(pap_s.to_bits(), pap_l.to_bits(), "n={n}: forced scalar fused pap");
+    }
+}
+
+#[test]
+fn dispatch_arms_are_deterministic_and_degrade_safely() {
+    let (n, nelt) = (9, 3);
+    let (u, d, g, c) = inputs(0xDE7, n, nelt);
+    let np = n * n * n;
+    // Run-to-run determinism of whatever arm this host dispatches.
+    let mut w1 = vec![0.0; nelt * np];
+    let mut w2 = vec![0.0; nelt * np];
+    let p1 = ax_simd_fused(n, nelt, &u, &d, &g, &c, &mut w1);
+    let p2 = ax_simd_fused(n, nelt, &u, &d, &g, &c, &mut w2);
+    assert_eq!(w1, w2, "dispatched arm must be deterministic");
+    assert_eq!(p1.to_bits(), p2.to_bits());
+    // Requesting AVX2 explicitly equals the dispatcher's own choice: on an
+    // AVX2 host both run the vector kernel; on a scalar host the request
+    // must degrade to the scalar arm instead of faulting.
+    let mut w3 = vec![0.0; nelt * np];
+    ax_simd_with_arm(SimdArm::Avx2, n, nelt, &u, &d, &g, &mut w3);
+    match simd_arm() {
+        SimdArm::Avx2 => assert_eq!(w3, w1, "avx2 request on an avx2 host"),
+        SimdArm::Scalar => {
+            let mut w_l = vec![0.0; nelt * np];
+            ax_layered(n, nelt, &u, &d, &g, &mut w_l);
+            assert_eq!(w3, w_l, "avx2 request on a scalar host must degrade to scalar");
+        }
+    }
+}
+
+#[test]
+fn simd_operators_resolve_and_advertise_no_artifacts() {
+    let registry = OperatorRegistry::with_builtins();
+    for name in ["cpu-simd", "cpu-simd-fused"] {
+        let spec = registry.resolve(name).unwrap();
+        assert_eq!(spec.name, name);
+        assert!(!spec.needs_artifacts, "{name} must run offline");
+    }
+    assert!(registry.create("cpu-simd-fused").unwrap().is_fused());
+    assert!(!registry.create("cpu-simd").unwrap().is_fused());
+}
