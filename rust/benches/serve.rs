@@ -1,0 +1,83 @@
+//! Serve-layer bench: boot an in-process server on a loopback port, drive
+//! it with the built-in load generator, and emit the `BENCH_serve.json`
+//! trajectory artifact (schema `nekbone-serve/1`, documented in
+//! `ROADMAP.md` next to `nekbone-roofline/1`).
+//!
+//! Run:   `cargo bench --bench serve`
+//! Smoke: `cargo bench --bench serve -- --quick`   (alias: --test)
+//! Out:   `cargo bench --bench serve -- --out path.json`
+//!        (default: `<repo root>/BENCH_serve.json`)
+//!
+//! The same measurement runs against an external server from the binary:
+//! `nekbone serve --addr ... &` then
+//! `nekbone loadgen --addr ... --bench-json <path>`.
+
+use std::sync::atomic::Ordering;
+
+use nekbone::cli::Args;
+use nekbone::serve::{
+    render_summary, run_loadgen, validate_json, write_json, LoadgenConfig, ServeConfig, Server,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Cargo passes `--bench` to harness-less bench binaries; ignore it.
+    let quick = args.iter().any(|a| a == "--quick" || a == "--test");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| format!("{}/../BENCH_serve.json", env!("CARGO_MANIFEST_DIR")));
+
+    // Server on an OS-assigned loopback port, in its own thread.
+    let serve_argv: Vec<String> =
+        ["serve", "--addr", "127.0.0.1:0"].iter().map(|s| s.to_string()).collect();
+    let scfg = ServeConfig::from_args(&Args::parse(&serve_argv).expect("serve args"))
+        .expect("serve config");
+    let server = Server::bind(&scfg).expect("bind loopback server");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let stop = server.stop_flag();
+    let server_thread = std::thread::spawn(move || server.run().expect("server run"));
+
+    // Loadgen config through the same front door as the CLI.
+    let mut argv: Vec<String> =
+        ["loadgen", "--addr", &addr].iter().map(|s| s.to_string()).collect();
+    if quick {
+        argv.push("--quick".into());
+    } else {
+        // Bench scale: enough traffic to exercise batching and caching
+        // without turning the suite into a stress test.
+        for tok in ["--clients", "4", "--requests", "12", "--n", "4", "--nelt", "4"] {
+            argv.push(tok.into());
+        }
+    }
+    let lcfg = LoadgenConfig::from_args(&Args::parse(&argv).expect("loadgen args"))
+        .expect("loadgen config");
+    println!(
+        "# serve bench: {} clients x {} requests over {} ({}){}",
+        lcfg.clients,
+        lcfg.requests,
+        addr,
+        lcfg.operator,
+        if quick { " (quick smoke scale)" } else { "" }
+    );
+
+    let report = run_loadgen(&lcfg).expect("loadgen run");
+    print!("{}", render_summary(&report));
+    assert_eq!(report.errors, 0, "serve bench saw failed requests");
+
+    // Wind the server down and make sure it actually drains.
+    stop.store(true, Ordering::SeqCst);
+    let serve_report = server_thread.join().expect("server thread");
+    println!("# server drained after {} connections", serve_report.connections);
+
+    write_json(&report, &out).expect("write BENCH_serve.json");
+    let text = std::fs::read_to_string(&out).expect("re-read emitted json");
+    validate_json(&text).expect("emitted json must be schema-valid");
+    println!(
+        "# wrote {out} ({} solves, {:.1} solves/s, schema-valid)",
+        report.ok,
+        report.throughput_rps()
+    );
+}

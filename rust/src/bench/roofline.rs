@@ -228,9 +228,9 @@ impl Default for RooflineConfig {
     }
 }
 
-/// [`run_with`] against the built-in operator registry.
+/// [`run_with`] against the process-wide shared operator registry.
 pub fn run(cfg: &RooflineConfig) -> Result<RooflineReport> {
-    run_with(cfg, &OperatorRegistry::with_builtins())
+    run_with(cfg, crate::operators::registry())
 }
 
 /// Run the harness: measure the machine ceilings once, then time every
@@ -253,7 +253,7 @@ pub fn run_with(cfg: &RooflineConfig, registry: &OperatorRegistry) -> Result<Roo
     // The strict Eq. (1) equality only binds names that belong to the
     // built-in family; a runtime-registered operator may model its flops
     // however it honestly can (it just can't report none at all).
-    let builtins = OperatorRegistry::with_builtins();
+    let builtins = crate::operators::registry();
     let mut points = Vec::new();
     for &n in &cfg.degrees {
         let mesh = Mesh::for_nelt(elements, n)?;

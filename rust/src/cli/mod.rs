@@ -114,6 +114,8 @@ SUBCOMMANDS:
   run        run one Nekbone solve and print the report
   sweep      run a backend over a sweep of element counts (paper Figs. 2-3)
   roofline   measured-roofline comparison (paper Fig. 4)
+  serve      serve solves over TCP (newline-delimited JSON protocol)
+  loadgen    drive a running server; report in nekbone-serve/1 JSON
   info       list registered operators + manifest + platform information
   help       this text
 
@@ -163,11 +165,11 @@ const USAGE_TAIL: &str = "\
 
 /// The generated `--backend` block: every canonical operator name with
 /// its aliases inline, wrapped to the help text's option column. Built
-/// from [`OperatorRegistry::with_builtins`], so the list is correct by
-/// construction — registering an operator updates the help, and no sync
-/// test has to police a hand-maintained copy.
+/// from the process-wide [`crate::operators::registry`], so the list is
+/// correct by construction — registering a builtin updates the help, and
+/// no sync test has to police a hand-maintained copy.
 fn backend_help_lines() -> String {
-    let registry = OperatorRegistry::with_builtins();
+    let registry = crate::operators::registry();
     let entries: Vec<String> = registry
         .names()
         .iter()
@@ -202,11 +204,35 @@ fn backend_help_lines() -> String {
     out
 }
 
+/// Render one serve-layer option table from its [`crate::serve::OptSpec`]
+/// rows — the same rows `ServeConfig::from_args` / `LoadgenConfig::from_args`
+/// read their defaults from, so help and parser cannot drift.
+fn opt_lines(opts: &[crate::serve::OptSpec]) -> String {
+    let mut out = String::new();
+    for o in opts {
+        let head = if o.metavar.is_empty() {
+            format!("  --{}", o.key)
+        } else {
+            format!("  --{} {}", o.key, o.metavar)
+        };
+        let dflt =
+            if o.default.is_empty() { String::new() } else { format!(" [{}]", o.default) };
+        out.push_str(&format!("{head:<21}{}{dflt}\n", o.help));
+    }
+    out
+}
+
 /// Top-level usage text. The `--backend` operator list is generated from
-/// [`OperatorRegistry::with_builtins`] at call time, so the help can
-/// never drift from what actually resolves.
+/// the process-wide operator registry and the serve/loadgen sections from
+/// their `OptSpec` tables at call time, so the help can never drift from
+/// what actually resolves or parses.
 pub fn usage() -> String {
-    format!("{USAGE_HEAD}{}{USAGE_TAIL}", backend_help_lines())
+    format!(
+        "{USAGE_HEAD}{}{USAGE_TAIL}\nSERVE OPTIONS (serve):\n{}\nLOADGEN OPTIONS (loadgen):\n{}",
+        backend_help_lines(),
+        opt_lines(crate::serve::SERVE_OPTS),
+        opt_lines(crate::serve::LOADGEN_OPTS),
+    )
 }
 
 /// Parse `--elems 64,128,256`-style lists.
@@ -292,6 +318,20 @@ mod tests {
         assert!(text.contains("(alias xla-fused)"), "aliases must render inline:\n{text}");
         for line in text.lines() {
             assert!(line.len() <= 80, "usage line too wide: {line:?}");
+        }
+    }
+
+    #[test]
+    fn usage_lists_every_serve_option_from_its_spec_table() {
+        let text = usage();
+        for (sub, opts) in
+            [("serve", crate::serve::SERVE_OPTS), ("loadgen", crate::serve::LOADGEN_OPTS)]
+        {
+            assert!(text.contains(&format!("\n  {sub} ")), "SUBCOMMANDS must list {sub}");
+            for o in opts {
+                assert!(text.contains(&format!("--{}", o.key)), "usage lost --{}", o.key);
+                assert!(text.contains(o.help), "usage lost the help for --{}", o.key);
+            }
         }
     }
 

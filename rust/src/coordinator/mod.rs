@@ -11,4 +11,4 @@ mod session;
 pub use backend::VectorBackend;
 pub use pipeline::{Nekbone, NekboneBuilder};
 pub use report::RunReport;
-pub use session::SolveSession;
+pub use session::{OwnedSession, SolveSession};

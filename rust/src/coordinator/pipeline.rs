@@ -28,13 +28,32 @@ use crate::solver::{
 };
 
 /// Everything needed to run Nekbone with one operator on one mesh.
+///
+/// Internally split into build-time state (the mesh numbering and basis
+/// tables, kept for inspection and re-setup) and the serve-time
+/// [`SolveState`] (what a solve actually touches). A serving process that
+/// only needs to answer solves converts with [`Nekbone::into_session`],
+/// dropping the build-time half.
 pub struct Nekbone {
     pub cfg: RunConfig,
-    /// The local Ax, dispatched purely through the trait object.
-    op: Box<dyn AxOperator>,
     vector_backend: VectorBackend,
     mesh: Mesh,
     basis: Basis,
+    state: SolveState,
+}
+
+/// The serve-time half of an application: exactly what one CG solve
+/// touches — the operator, the gather–scatter assembly, the boundary
+/// mask, the inverse-multiplicity weights, the staged RHS, and the
+/// reusable CG workspace. Split out of [`Nekbone`] so a long-lived
+/// serving process can cache many of these (one per warmed mesh) without
+/// also holding every mesh's build-time numbering and basis tables, and
+/// so an owned session ([`crate::coordinator::OwnedSession`]) can cross
+/// into a shard worker: `SolveState` is `Send` end to end (the operator
+/// trait requires it, `GatherScatter` and the vectors are plain data).
+pub(crate) struct SolveState {
+    /// The local Ax, dispatched purely through the trait object.
+    op: Box<dyn AxOperator>,
     gs: GatherScatter,
     mask: Vec<f64>,
     /// Inverse multiplicity (Nekbone's `c`).
@@ -42,6 +61,68 @@ pub struct Nekbone {
     /// Right-hand side (dssum-consistent, masked).
     f: Vec<f64>,
     ws: CgWorkspace,
+}
+
+impl SolveState {
+    /// Local dofs this state solves over.
+    pub(crate) fn ndof(&self) -> usize {
+        self.f.len()
+    }
+
+    /// The operator's display label (canonical registry name).
+    pub(crate) fn label(&self) -> String {
+        self.op.label()
+    }
+
+    /// Stage a right-hand side: copy, make dssum-consistent, mask. The
+    /// caller has already length-checked `f` (each owner fronts this with
+    /// its own `Error::Config` naming its boundary).
+    pub(crate) fn stage_rhs(&mut self, f: &[f64]) {
+        debug_assert_eq!(f.len(), self.f.len());
+        self.f.copy_from_slice(f);
+        self.gs.dssum(&mut self.f);
+        mask_apply(&mut self.f, &self.mask);
+    }
+
+    /// Drive the crate's one CG loop against this state's operator,
+    /// exchange, and (reused) workspace, solving the staged RHS. Returns
+    /// the solver report and the wall time spent inside the local
+    /// operator. Every solve path — [`Nekbone::run_into`], the borrowing
+    /// [`crate::coordinator::SolveSession`], and the serve layer's owned
+    /// sessions — funnels through here.
+    pub(crate) fn solve(
+        &mut self,
+        cfg: &RunConfig,
+        x: &mut [f64],
+        vectors: &mut dyn VectorOps,
+    ) -> Result<(CgReport, f64)> {
+        let SolveState { op, gs, mask, c, f, ws } = self;
+        let rhs: &[f64] = f;
+        let opts = CgOptions {
+            niter: cfg.niter,
+            rtol: cfg.rtol,
+            record_residuals: cfg.record_residuals,
+        };
+        let mut ax = TimedAx::new(op.as_mut());
+        let mut no_exchange = NoExchange;
+        let exchange: &mut dyn DomainExchange =
+            if cfg.no_comm { &mut no_exchange } else { gs };
+        let mask_opt = (!cfg.no_mask).then_some(mask.as_slice());
+        let rep = cg_solve_with(
+            &mut ax,
+            exchange,
+            &mut NullComm,
+            vectors,
+            mask_opt,
+            c,
+            rhs,
+            x,
+            &opts,
+            ws,
+            None,
+        )?;
+        Ok((rep, ax.seconds))
+    }
 }
 
 /// Builder for [`Nekbone`]: pick the operator by registry name, optionally
@@ -106,7 +187,12 @@ impl NekboneBuilder {
     pub fn build(self) -> Result<Nekbone> {
         let cfg = self.cfg;
         cfg.validate()?;
-        let registry = self.registry.unwrap_or_else(OperatorRegistry::with_builtins);
+        // A supplied registry wins; otherwise every build shares the
+        // process-wide instance (built once, not per call site).
+        let registry: &OperatorRegistry = match &self.registry {
+            Some(r) => r,
+            None => crate::operators::registry(),
+        };
         // Fail fast on an unknown operator name, before the expensive
         // mesh / gather-scatter / geometry construction below.
         registry.resolve(&self.operator)?;
@@ -141,15 +227,10 @@ impl NekboneBuilder {
         let ndof = mesh.ndof_local();
         Ok(Nekbone {
             cfg,
-            op,
             vector_backend: self.vector_backend,
             mesh,
             basis,
-            gs,
-            mask,
-            c,
-            f,
-            ws: CgWorkspace::new(ndof),
+            state: SolveState { op, gs, mask, c, f, ws: CgWorkspace::new(ndof) },
         })
     }
 }
@@ -178,7 +259,7 @@ impl Nekbone {
 
     /// The operator's display label (canonical registry name).
     pub fn operator_label(&self) -> String {
-        self.op.label()
+        self.state.label()
     }
 
     /// Replace the right-hand side (e.g. a manufactured solution's load).
@@ -187,50 +268,31 @@ impl Nekbone {
         if f.len() != self.mesh.ndof_local() {
             return Err(Error::Config("set_rhs: length mismatch".into()));
         }
-        self.f.copy_from_slice(f);
-        self.gs.dssum(&mut self.f);
-        mask_apply(&mut self.f, &self.mask);
+        self.state.stage_rhs(f);
         Ok(())
     }
 
-    /// Drive the crate's one CG loop against this application's operator,
-    /// exchange, and (reused) workspace, solving the staged RHS `f` (set
-    /// it with [`Nekbone::set_rhs`] — staging performs the dssum + mask
-    /// every RHS needs); the caller picks the vector backend. Returns the
-    /// solver report and the wall time spent inside the local operator.
-    /// Shared by [`Nekbone::run_into`] and
-    /// [`SolveSession`](crate::coordinator::SolveSession).
+    /// Drive the crate's one CG loop, solving the staged RHS `f` (set it
+    /// with [`Nekbone::set_rhs`] — staging performs the dssum + mask every
+    /// RHS needs); the caller picks the vector backend. Returns the solver
+    /// report and the wall time spent inside the local operator. Shared by
+    /// [`Nekbone::run_into`] and
+    /// [`SolveSession`](crate::coordinator::SolveSession); delegates to
+    /// [`SolveState::solve`].
     pub(crate) fn solve_once(
         &mut self,
         x: &mut [f64],
         vectors: &mut dyn VectorOps,
     ) -> Result<(CgReport, f64)> {
-        let Nekbone { cfg, op, gs, mask, c, f, ws, .. } = self;
-        let rhs: &[f64] = f;
-        let opts = CgOptions {
-            niter: cfg.niter,
-            rtol: cfg.rtol,
-            record_residuals: cfg.record_residuals,
-        };
-        let mut ax = TimedAx::new(op.as_mut());
-        let mut no_exchange = NoExchange;
-        let exchange: &mut dyn DomainExchange =
-            if cfg.no_comm { &mut no_exchange } else { gs };
-        let mask_opt = (!cfg.no_mask).then_some(mask.as_slice());
-        let rep = cg_solve_with(
-            &mut ax,
-            exchange,
-            &mut NullComm,
-            vectors,
-            mask_opt,
-            c,
-            rhs,
-            x,
-            &opts,
-            ws,
-            None,
-        )?;
-        Ok((rep, ax.seconds))
+        self.state.solve(&self.cfg, x, vectors)
+    }
+
+    /// Split off the serve-time state as an owned, `Send` session,
+    /// dropping the build-time mesh numbering and basis tables. This is
+    /// the serve layer's cache entry: dozens of warmed meshes can be held
+    /// per shard at the cost of their solve state alone.
+    pub fn into_session(self) -> crate::coordinator::OwnedSession {
+        crate::coordinator::OwnedSession::from_parts(self.cfg, self.state)
     }
 
     /// Run the configured number of CG iterations; returns the report.
@@ -261,7 +323,7 @@ impl Nekbone {
         }
         let cm = CostModel::new(n, nelt);
         Ok(RunReport {
-            backend: self.op.label(),
+            backend: self.state.op.label(),
             nelt,
             n,
             iterations: rep.iterations,
@@ -269,7 +331,7 @@ impl Nekbone {
             seconds,
             ax_seconds,
             flops: cm.flops_per_iter() * rep.iterations as u64,
-            fused: self.op.is_fused(),
+            fused: self.state.op.is_fused(),
             rnorms: rep.rnorms,
         })
     }
@@ -282,7 +344,7 @@ impl Nekbone {
     /// Apply the local operator once (used by parity tests and
     /// kernel-level benches; no dssum, no mask).
     pub fn apply_ax_once(&mut self, p: &[f64], w: &mut [f64]) -> Result<()> {
-        self.op.apply(p, w)
+        self.state.op.apply(p, w)
     }
 
     /// Run CG with the vector algebra on the given backend for this run
@@ -299,17 +361,17 @@ impl Nekbone {
     /// sharing the operator's PJRT runtime — the same CG loop as every
     /// other path, with [`XlaVectors`] in the vector-algebra slot.
     fn run_vector_xla(&mut self, x_out: Option<&mut [f64]>) -> Result<RunReport> {
-        let rt = self.op.xla_runtime().ok_or_else(|| {
+        let rt = self.state.op.xla_runtime().ok_or_else(|| {
             Error::Config("vector-backend xla requires an XLA Ax backend".into())
         })?;
-        if self.op.is_fused() {
+        if self.state.op.is_fused() {
             return Err(Error::Config(
                 "vector-backend xla requires a (non-fused) XLA Ax backend".into(),
             ));
         }
         let size = self.cfg.chunk * self.cfg.n.pow(3);
         let mut vectors = XlaVectors::new(rt, size)?;
-        let label = self.op.label();
+        let label = self.state.op.label();
         let (n, nelt) = (self.cfg.n, self.cfg.nelt);
         let ndof = self.mesh.ndof_local();
         let mut x = vec![0.0; ndof];
@@ -331,7 +393,7 @@ impl Nekbone {
             seconds,
             ax_seconds,
             flops: cm.flops_per_iter() * rep.iterations as u64,
-            fused: self.op.is_fused(),
+            fused: self.state.op.is_fused(),
             rnorms: rep.rnorms,
         })
     }
@@ -341,7 +403,7 @@ impl Nekbone {
 /// run through PJRT, the sub-chunk tail runs native. Plugged into the
 /// shared CG loop by [`Nekbone::run_vector_backend`].
 struct XlaVectors {
-    rt: std::rc::Rc<XlaRuntime>,
+    rt: std::sync::Arc<XlaRuntime>,
     glsc3_e: VectorEngine,
     add2s1_e: VectorEngine,
     add2s2_e: VectorEngine,
@@ -350,7 +412,7 @@ struct XlaVectors {
 }
 
 impl XlaVectors {
-    fn new(rt: std::rc::Rc<XlaRuntime>, size: usize) -> Result<Self> {
+    fn new(rt: std::sync::Arc<XlaRuntime>, size: usize) -> Result<Self> {
         Ok(XlaVectors {
             glsc3_e: VectorEngine::new(&rt, "glsc3", size)?,
             add2s1_e: VectorEngine::new(&rt, "add2s1", size)?,
@@ -469,7 +531,7 @@ mod tests {
         let rep = app.run().unwrap();
         // The first residual equals |masked f|_c; after 50 iterations on a
         // 512-dof system CG should be well converged.
-        let f_norm = glsc3(&app.f, &app.c, &app.f).sqrt();
+        let f_norm = glsc3(&app.state.f, &app.state.c, &app.state.f).sqrt();
         assert!(
             rep.final_residual < 1e-6 * f_norm,
             "residual {} vs f {}",

@@ -24,9 +24,32 @@
 //!          reports.len(), reports.last().unwrap().final_rnorm);
 //! ```
 
+use super::pipeline::SolveState;
+use crate::config::RunConfig;
 use crate::coordinator::Nekbone;
 use crate::error::{Error, Result};
 use crate::solver::{CgReport, NativeVectors};
+
+/// The session-boundary shape check shared by both session types: a
+/// `Config` error that names both dof counts, so a network client (or a
+/// batch caller) learns what it sent and what the mesh wanted.
+fn check_rhs_len(got: usize, want: usize) -> Result<()> {
+    if got != want {
+        return Err(Error::Config(format!(
+            "session solve: rhs has {got} dofs, this session solves {want}"
+        )));
+    }
+    Ok(())
+}
+
+/// Prefix a batch entry's error with its index (batch callers otherwise
+/// cannot tell which RHS was rejected).
+fn tag_batch_entry(i: usize, e: Error) -> Error {
+    match e {
+        Error::Config(msg) => Error::Config(format!("batch entry {i}: {msg}")),
+        other => other,
+    }
+}
 
 /// A multi-RHS solve session over one built [`Nekbone`] application (see
 /// the module docs). Create with [`Nekbone::session`].
@@ -81,6 +104,7 @@ impl SolveSession<'_> {
     /// a session solve of RHS `b` is identical to
     /// `app.set_rhs(b); app.run()` — minus the per-call allocations.
     pub fn solve(&mut self, rhs: &[f64]) -> Result<CgReport> {
+        check_rhs_len(rhs.len(), self.x.len())?;
         self.app.set_rhs(rhs)?;
         let (report, _ax_seconds) =
             self.app.solve_once(&mut self.x, &mut NativeVectors)?;
@@ -104,12 +128,17 @@ impl SolveSession<'_> {
     }
 
     /// Solve a batch of right-hand sides in order, reusing all state
-    /// between entries; returns one report per entry. Equivalent to (and
-    /// tested against) N independent solves — a fused operator's
-    /// per-apply state cannot leak between entries because every solve
-    /// runs the full CG loop from a fresh `x = 0`.
+    /// between entries; returns one [`CgReport`] per entry (iterations,
+    /// final rnorm — everything a serving protocol echoes back per RHS).
+    /// Equivalent to (and tested against) N independent solves — a fused
+    /// operator's per-apply state cannot leak between entries because
+    /// every solve runs the full CG loop from a fresh `x = 0`. A
+    /// mis-sized entry fails with a `Config` error naming its index.
     pub fn solve_batch<R: AsRef<[f64]>>(&mut self, rhss: &[R]) -> Result<Vec<CgReport>> {
-        rhss.iter().map(|rhs| self.solve(rhs.as_ref())).collect()
+        rhss.iter()
+            .enumerate()
+            .map(|(i, rhs)| self.solve(rhs.as_ref()).map_err(|e| tag_batch_entry(i, e)))
+            .collect()
     }
 
     /// The solution field of the most recent solve (zeros before the
@@ -127,6 +156,110 @@ impl SolveSession<'_> {
     /// The underlying application's operator label.
     pub fn operator_label(&self) -> String {
         self.app.operator_label()
+    }
+}
+
+/// An owning, `Send` solve session: the serve-time half of a built
+/// [`Nekbone`] (its [`SolveState`]) plus the session buffers, with the
+/// build-time mesh numbering and basis tables dropped. Create with
+/// [`Nekbone::into_session`].
+///
+/// This is the session shape a serving process caches and moves between
+/// threads: build the application wherever convenient (an acceptor
+/// thread, a warm-up pass), convert, and hand the session to the shard
+/// worker that owns its mesh. Semantics are identical to the borrowing
+/// [`SolveSession`] — same staging, same single CG loop, same
+/// zero-per-solve-allocation contract — and the conformance suite holds
+/// the two bitwise-equal.
+///
+/// ```
+/// use nekbone::config::RunConfig;
+/// use nekbone::coordinator::Nekbone;
+///
+/// let cfg = RunConfig { nelt: 2, n: 3, niter: 5, ..RunConfig::default() };
+/// let app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+/// let mut session = app.into_session(); // mesh/basis tables dropped here
+/// let rhs = vec![1.0; session.ndof()];
+/// let report = session.solve(&rhs).unwrap();
+/// assert_eq!(report.iterations, 5);
+/// ```
+pub struct OwnedSession {
+    cfg: RunConfig,
+    state: SolveState,
+    /// Reused solution buffer (allocated once at session creation).
+    x: Vec<f64>,
+    solves: usize,
+}
+
+impl OwnedSession {
+    /// Assemble from a split application (see [`Nekbone::into_session`]).
+    pub(crate) fn from_parts(cfg: RunConfig, state: SolveState) -> Self {
+        let ndof = state.ndof();
+        OwnedSession { cfg, state, x: vec![0.0; ndof], solves: 0 }
+    }
+
+    /// Local dofs this session solves over (`nelt * n^3`).
+    pub fn ndof(&self) -> usize {
+        self.state.ndof()
+    }
+
+    /// The configuration the session was built with (solver options,
+    /// problem shape).
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Solve `A x = rhs`; the solution is retained in
+    /// [`OwnedSession::solution`] until the next solve. Identical staging
+    /// and solve path to [`SolveSession::solve`].
+    pub fn solve(&mut self, rhs: &[f64]) -> Result<CgReport> {
+        check_rhs_len(rhs.len(), self.x.len())?;
+        self.state.stage_rhs(rhs);
+        let (report, _ax_seconds) =
+            self.state.solve(&self.cfg, &mut self.x, &mut NativeVectors)?;
+        self.solves += 1;
+        Ok(report)
+    }
+
+    /// [`OwnedSession::solve`], additionally copying the solution into
+    /// `x_out`.
+    pub fn solve_into(&mut self, rhs: &[f64], x_out: &mut [f64]) -> Result<CgReport> {
+        let report = self.solve(rhs)?;
+        if x_out.len() != self.x.len() {
+            return Err(Error::Config(format!(
+                "solve_into: x_out has {} dofs, problem has {}",
+                x_out.len(),
+                self.x.len()
+            )));
+        }
+        x_out.copy_from_slice(&self.x);
+        Ok(report)
+    }
+
+    /// Solve a batch of right-hand sides in order; one report per entry,
+    /// mis-sized entries rejected with their index (see
+    /// [`SolveSession::solve_batch`]).
+    pub fn solve_batch<R: AsRef<[f64]>>(&mut self, rhss: &[R]) -> Result<Vec<CgReport>> {
+        rhss.iter()
+            .enumerate()
+            .map(|(i, rhs)| self.solve(rhs.as_ref()).map_err(|e| tag_batch_entry(i, e)))
+            .collect()
+    }
+
+    /// The solution field of the most recent solve (zeros before the
+    /// first); address-stable across solves.
+    pub fn solution(&self) -> &[f64] {
+        &self.x
+    }
+
+    /// Number of solves completed in this session.
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// The operator's display label (canonical registry name).
+    pub fn operator_label(&self) -> String {
+        self.state.label()
     }
 }
 
@@ -185,5 +318,81 @@ mod tests {
         let rhs = vec![1.0; ndof];
         let mut short = vec![0.0; ndof - 1];
         assert!(session.solve_into(&rhs, &mut short).is_err());
+    }
+
+    #[test]
+    fn mis_sized_rhs_is_config_error_naming_both_counts() {
+        // The session boundary is what a network protocol fronts: the
+        // rejection must be an `Error::Config` telling the client what it
+        // sent and what the mesh wanted — for both session types.
+        let mut app = Nekbone::builder(cfg()).operator("cpu-layered").build().unwrap();
+        let ndof = app.mesh().ndof_local();
+        let mut session = app.session();
+        let err = session.solve(&vec![0.0; 7]).unwrap_err();
+        match &err {
+            Error::Config(msg) => {
+                assert!(msg.contains('7') && msg.contains(&ndof.to_string()), "{msg}")
+            }
+            other => panic!("want Config, got {other:?}"),
+        }
+        drop(session);
+
+        let mut owned = app.into_session();
+        let err = owned.solve(&vec![0.0; 7]).unwrap_err();
+        assert!(matches!(&err, Error::Config(m)
+            if m.contains('7') && m.contains(&ndof.to_string())), "{err}");
+
+        // Batch rejection names the offending entry.
+        let good = vec![1.0; ndof];
+        let err =
+            owned.solve_batch(&[good.as_slice(), &[0.0; 3], good.as_slice()]).unwrap_err();
+        assert!(matches!(&err, Error::Config(m) if m.contains("batch entry 1")), "{err}");
+    }
+
+    #[test]
+    fn owned_session_matches_borrowing_session() {
+        // `into_session` drops the build-time half; the solves it serves
+        // must stay bitwise-identical to the borrowing session's.
+        let mut a = Nekbone::builder(cfg()).operator("cpu-spec").build().unwrap();
+        let b = Nekbone::builder(cfg()).operator("cpu-spec").build().unwrap();
+        let ndof = a.mesh().ndof_local();
+        let mut owned = b.into_session();
+        assert_eq!(owned.ndof(), ndof);
+        assert_eq!(owned.operator_label(), "cpu-spec");
+        let mut session = a.session();
+        for seed in [3u64, 4, 5] {
+            let rhs = crate::rng::Rng::new(seed).normal_vec(ndof);
+            let want = session.solve(&rhs).unwrap();
+            let got = owned.solve(&rhs).unwrap();
+            assert_eq!(got.iterations, want.iterations);
+            assert_eq!(got.final_rnorm.to_bits(), want.final_rnorm.to_bits());
+            assert_eq!(owned.solution(), session.solution());
+        }
+        assert_eq!(owned.solves(), 3);
+    }
+
+    #[test]
+    fn owned_session_crosses_threads() {
+        // The serve hand-off shape: build on this thread, solve on
+        // another, answers unchanged.
+        fn assert_send<T: Send>() {}
+        assert_send::<OwnedSession>();
+        assert_send::<Nekbone>();
+
+        let mut a = Nekbone::builder(cfg()).operator("cpu-layered").build().unwrap();
+        let ndof = a.mesh().ndof_local();
+        let rhs = crate::rng::Rng::new(9).normal_vec(ndof);
+        let want = a.session().solve(&rhs).unwrap();
+        let mut owned = a.into_session();
+        let rhs2 = rhs.clone();
+        let (got, x) = std::thread::spawn(move || {
+            let rep = owned.solve(&rhs2).unwrap();
+            (rep, owned.solution().to_vec())
+        })
+        .join()
+        .unwrap();
+        assert_eq!(got.iterations, want.iterations);
+        assert_eq!(got.final_rnorm.to_bits(), want.final_rnorm.to_bits());
+        assert_eq!(x.len(), ndof);
     }
 }

@@ -1,10 +1,18 @@
-//! Minimal JSON parser for the artifact manifest.
+//! Minimal JSON parser + serializer.
 //!
-//! The offline crate set has no `serde_json`, and the manifest
-//! (`artifacts/manifest.json`) is the only JSON the runtime consumes, so we
-//! carry a small recursive-descent parser: objects, arrays, strings (with
-//! escapes), numbers, booleans, null. It is strict enough for our producer
-//! (Python's `json.dump`) and rejects trailing garbage.
+//! The offline crate set has no `serde_json`; the artifact manifest
+//! (`artifacts/manifest.json`) and the serve layer's wire protocol are the
+//! only JSON the crate consumes, so we carry a small recursive-descent
+//! parser — objects, arrays, strings (with escapes), numbers, booleans,
+//! null — strict enough for our producers (Python's `json.dump`, our own
+//! [`Value::dump`]) and rejecting trailing garbage, plus the matching
+//! single-line serializer.
+//!
+//! Serialize→parse round-trips **bitwise** for finite numbers: `dump`
+//! prints `f64` with Rust's shortest-round-trip `Display`, and `parse`
+//! reads numbers back with `str::parse::<f64>` — the serve layer's
+//! conformance suite relies on this to compare served solution vectors
+//! against serial solves bit for bit.
 
 use std::collections::BTreeMap;
 
@@ -63,6 +71,72 @@ impl Value {
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.as_object().and_then(|o| o.get(key))
     }
+
+    /// Serialize to a single line (no trailing newline) that [`parse`]
+    /// reads back to an equal `Value` — bitwise-equal for finite numbers
+    /// (shortest-round-trip `Display` out, `str::parse::<f64>` back in).
+    /// JSON has no NaN/Infinity; non-finite numbers serialize as `null`
+    /// (the protocol never produces them from a successful solve).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Number(x) if !x.is_finite() => out.push_str("null"),
+            Value::Number(x) => {
+                use std::fmt::Write;
+                write!(out, "{x}").expect("write to String cannot fail");
+            }
+            Value::String(s) => write_json_string(s, out),
+            Value::Array(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_into(out);
+                }
+                out.push(']');
+            }
+            Value::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Escape and quote a string for JSON output.
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write;
+                write!(out, "\\u{:04x}", c as u32).expect("write to String cannot fail");
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse a complete JSON document.
@@ -343,6 +417,48 @@ mod tests {
         assert_eq!(n.as_usize(), Some(3));
         assert_eq!(parse("-1").unwrap().as_u64(), None);
         assert_eq!(parse("1.5").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn dump_round_trips() {
+        for doc in [
+            "null",
+            "true",
+            "[1,2.5,-3]",
+            r#"{"a":[1,{"b":"c"}],"d":null,"e":false}"#,
+            r#""quote \" backslash \\ newline \n tab \t""#,
+        ] {
+            let v = parse(doc).unwrap();
+            assert_eq!(parse(&v.dump()).unwrap(), v, "{doc}");
+        }
+        // Control characters survive via \u escapes.
+        let v = Value::String("bell\u{7}end".into());
+        assert_eq!(parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_numbers_round_trip_bitwise() {
+        // The serve conformance suite compares echoed solution vectors
+        // bit for bit; shortest-round-trip Display guarantees it.
+        for x in [0.1 + 0.2, 1.0 / 3.0, -0.0, 1e-300, 6.02214076e23, f64::MIN_POSITIVE] {
+            let dumped = Value::Number(x).dump();
+            match parse(&dumped).unwrap() {
+                Value::Number(y) => assert_eq!(y.to_bits(), x.to_bits(), "{dumped}"),
+                other => panic!("{other:?}"),
+            }
+        }
+        // Non-finite numbers have no JSON spelling: they emit null.
+        assert_eq!(Value::Number(f64::NAN).dump(), "null");
+        assert_eq!(Value::Number(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn dump_is_single_line_with_sorted_keys() {
+        let v = parse(r#"{"zeta": 1, "alpha": [true, "x"]}"#).unwrap();
+        let dumped = v.dump();
+        assert!(!dumped.contains('\n'));
+        // BTreeMap ordering makes output deterministic (alpha before zeta).
+        assert_eq!(dumped, r#"{"alpha":[true,"x"],"zeta":1}"#);
     }
 
     #[test]

@@ -57,6 +57,11 @@
 //! }
 //! ```
 //!
+//! The same sessions can be served over the network: `nekbone serve`
+//! exposes a newline-delimited-JSON TCP endpoint backed by a session pool
+//! sharded across meshes and operators (see [`serve`]), and `nekbone
+//! loadgen` drives it for smoke tests and the `nekbone-serve/1` benchmark.
+//!
 //! There is exactly **one CG loop** in the crate
 //! ([`solver::cg_solve_with`]); it is generic over a
 //! [`solver::Communicator`] (collectives) and a [`solver::DomainExchange`]
@@ -111,5 +116,6 @@ pub mod bench;
 pub mod proputil;
 pub mod config;
 pub mod cli;
+pub mod serve;
 
 pub use error::{Error, Result};

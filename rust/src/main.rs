@@ -9,10 +9,11 @@ use nekbone::bench::Table;
 use nekbone::cli::{parse_elems, usage, Args};
 use nekbone::coordinator::{Nekbone, VectorBackend};
 use nekbone::error::Result;
-use nekbone::operators::OperatorRegistry;
+use nekbone::operators::registry;
 use nekbone::rank::run_ranked;
 use nekbone::roofline;
 use nekbone::runtime::Manifest;
+use nekbone::serve;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +36,8 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
         "roofline" => cmd_roofline(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(&args),
         other => {
             eprint!("unknown subcommand {other:?}\n\n{}", usage());
@@ -47,10 +50,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
 /// registry — the one dispatch surface: aliases resolve, unknown names
 /// error listing every registered operator.
 fn operator_of(args: &Args) -> Result<String> {
-    Ok(OperatorRegistry::with_builtins()
-        .resolve(args.get("backend").unwrap_or("xla-layered"))?
-        .name
-        .clone())
+    Ok(registry().resolve(args.get("backend").unwrap_or("xla-layered"))?.name.clone())
 }
 
 /// Ranked run honoring an explicitly chosen `--backend`; without one the
@@ -185,10 +185,51 @@ fn cmd_roofline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve::ServeConfig::from_args(args)?;
+    let server = serve::Server::bind(&cfg)?;
+    serve::install_sigint_handler();
+    println!(
+        "nekbone serve: listening on {} ({} shards, queue {}, batch {}, niter {})",
+        server.local_addr()?,
+        cfg.shards,
+        cfg.queue,
+        cfg.batch,
+        cfg.niter
+    );
+    println!("  protocol: newline-delimited JSON; Ctrl-C or {{\"op\":\"shutdown\"}} drains");
+    let report = server.run()?;
+    println!("nekbone serve: drained after {} connections", report.connections);
+    for s in &report.shards {
+        println!(
+            "  shard {}: {} reqs, {} batches, cache {}/{} hit/miss, peak depth {}",
+            s.shard, s.requests, s.batches, s.cache_hits, s.cache_misses, s.max_depth
+        );
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = serve::LoadgenConfig::from_args(args)?;
+    let report = serve::run_loadgen(&cfg)?;
+    print!("{}", serve::render_summary(&report));
+    if let Some(path) = &cfg.bench_json {
+        serve::write_json(&report, path)?;
+        println!("# wrote {path} (schema nekbone-serve/1)");
+    }
+    if report.errors > 0 {
+        return Err(nekbone::error::Error::Config(format!(
+            "loadgen: {} request(s) failed",
+            report.errors
+        )));
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     println!("nekbone-rs (reproduction of Karp et al. 2020)");
-    let registry = OperatorRegistry::with_builtins();
+    let registry = registry();
     println!("registered operators:");
     for name in registry.known_names() {
         let spec = registry.resolve(&name)?;

@@ -74,14 +74,14 @@ pub use fused::ax_layered_fused;
 pub use layered::ax_layered;
 pub use naive::ax_naive;
 pub use pool::{resolve_threads, WorkerPool};
-pub use registry::{OperatorRegistry, OperatorSpec};
+pub use registry::{registry, OperatorRegistry, OperatorSpec};
 pub use simd::{
     ax_simd, ax_simd_fused, ax_simd_fused_with_arm, ax_simd_with_arm, simd_arm, SimdArm,
 };
 pub use specialized::{ax_spec, ax_spec_fused, is_specialized, SPEC_MAX_N, SPEC_MIN_N};
 pub use threaded::ax_threaded;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::error::Result;
 use crate::runtime::XlaRuntime;
@@ -191,7 +191,14 @@ pub(crate) fn check_apply_shapes(n: usize, nelt: usize, u: &[f64], w: &[f64]) ->
 /// benches all hold a `Box<dyn AxOperator>` built by name through the
 /// [`OperatorRegistry`], so adding an implementation never touches a
 /// dispatch site.
-pub trait AxOperator {
+///
+/// `Send` is a supertrait: the serve layer builds operators on an
+/// acceptor thread and hands the owning session to a shard worker, so
+/// every implementation must be movable across threads. Operators that
+/// keep worker pools satisfy this by holding only channel endpoints and
+/// join handles (see [`pool::WorkerPool`]); the XLA operators share their
+/// runtime through `Arc`.
+pub trait AxOperator: Send {
     /// Stable display name; for registered operators this is the canonical
     /// registry name, so it parses back to the same operator.
     fn label(&self) -> String;
@@ -232,7 +239,7 @@ pub trait AxOperator {
 
     /// The PJRT runtime backing this operator, when there is one (lets the
     /// vector-algebra offload share the operator's client and buffers).
-    fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
+    fn xla_runtime(&self) -> Option<Arc<XlaRuntime>> {
         None
     }
 }

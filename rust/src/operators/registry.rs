@@ -11,7 +11,7 @@
 //! to the canonical entry at parse time.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::operators::fused::FusedCpuOp;
@@ -21,6 +21,22 @@ use crate::operators::{
     OperatorCtx,
 };
 use crate::runtime::{AxEngine, CgIterEngine, Manifest, XlaRuntime};
+
+/// The process-wide shared registry: the built-in operator family,
+/// constructed once (first call) and shared by every lookup site — the
+/// CLI, the benches, and the serve layer all resolve through this one
+/// instance, so the alias tables are built once per process, not per
+/// call. Callers that need *extra* registrations (tests, downstream
+/// crates) still construct their own [`OperatorRegistry`] and pass it to
+/// the application builder; this accessor is the default everyone else
+/// shares.
+///
+/// `&'static` is sound because [`OperatorRegistry`] is `Sync` (its
+/// constructors are `Send + Sync` closures and lookup never mutates).
+pub fn registry() -> &'static OperatorRegistry {
+    static INSTANCE: OnceLock<OperatorRegistry> = OnceLock::new();
+    INSTANCE.get_or_init(OperatorRegistry::with_builtins)
+}
 
 /// Constructor for a blank (un-setup) operator.
 pub type OperatorCtor = Box<dyn Fn() -> Box<dyn AxOperator> + Send + Sync>;
@@ -318,7 +334,7 @@ impl AxOperator for CpuOp {
 // ---------------------------------------------------------------------------
 
 struct XlaAxState {
-    rt: Rc<XlaRuntime>,
+    rt: Arc<XlaRuntime>,
     engine: AxEngine,
     n: usize,
     nelt: usize,
@@ -349,7 +365,7 @@ impl AxOperator for XlaAxOp {
         // native runtime is unavailable.
         let manifest = Manifest::load(ctx.artifacts_dir)?;
         manifest.find_ax(self.variant, ctx.n, ctx.chunk)?;
-        let rt = Rc::new(XlaRuntime::with_manifest(manifest)?);
+        let rt = Arc::new(XlaRuntime::with_manifest(manifest)?);
         let engine =
             AxEngine::new(&rt, self.variant, ctx.n, ctx.chunk, ctx.nelt, ctx.d, ctx.g)?;
         self.st = Some(XlaAxState { rt, engine, n: ctx.n, nelt: ctx.nelt });
@@ -370,13 +386,13 @@ impl AxOperator for XlaAxOp {
         self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, false))
     }
 
-    fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
-        self.st.as_ref().map(|s| Rc::clone(&s.rt))
+    fn xla_runtime(&self) -> Option<Arc<XlaRuntime>> {
+        self.st.as_ref().map(|s| Arc::clone(&s.rt))
     }
 }
 
 struct XlaFusedState {
-    rt: Rc<XlaRuntime>,
+    rt: Arc<XlaRuntime>,
     engine: CgIterEngine,
     n: usize,
     nelt: usize,
@@ -414,7 +430,7 @@ impl AxOperator for XlaFusedOp {
         crate::operators::check_setup_shapes(ctx, true)?;
         let manifest = Manifest::load(ctx.artifacts_dir)?;
         manifest.find(&format!("cg_iter_{}_n{}_e{}", self.variant, ctx.n, ctx.chunk))?;
-        let rt = Rc::new(XlaRuntime::with_manifest(manifest)?);
+        let rt = Arc::new(XlaRuntime::with_manifest(manifest)?);
         let engine = CgIterEngine::new(
             &rt,
             self.variant,
@@ -457,8 +473,8 @@ impl AxOperator for XlaFusedOp {
         self.last_pap
     }
 
-    fn xla_runtime(&self) -> Option<Rc<XlaRuntime>> {
-        self.st.as_ref().map(|s| Rc::clone(&s.rt))
+    fn xla_runtime(&self) -> Option<Arc<XlaRuntime>> {
+        self.st.as_ref().map(|s| Arc::clone(&s.rt))
     }
 }
 
@@ -494,6 +510,50 @@ mod tests {
             .collect();
         assert!(names.len() >= 4, "registry lost CPU operators (fused={fused}): {names:?}");
         names
+    }
+
+    #[test]
+    fn shared_registry_is_one_instance() {
+        // `registry()` hands every call site the same process-wide table.
+        let a: *const OperatorRegistry = registry();
+        let b: *const OperatorRegistry = registry();
+        assert_eq!(a, b);
+        assert!(registry().contains("cpu-layered"));
+        assert_eq!(registry().names(), OperatorRegistry::with_builtins().names());
+    }
+
+    #[test]
+    fn operators_and_registry_cross_threads() {
+        fn assert_send<T: Send + ?Sized>() {}
+        fn assert_sync<T: Sync + ?Sized>() {}
+        // The serve layer's two hand-off shapes: moving an owned operator
+        // to a shard worker, and sharing the registry across acceptors.
+        assert_send::<Box<dyn AxOperator>>();
+        assert_send::<OperatorRegistry>();
+        assert_sync::<OperatorRegistry>();
+
+        // And a built operator really works after the move: set up on this
+        // thread, apply on another.
+        let n = 4;
+        let nelt = 2;
+        let d = crate::basis::derivative_matrix(n);
+        let mut rng = crate::rng::Rng::new(11);
+        let u = rng.normal_vec(nelt * n * n * n);
+        let g = rng.normal_vec(nelt * 6 * n * n * n);
+        let mut want = vec![0.0; nelt * n * n * n];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        for name in ["cpu-layered", "cpu-threaded"] {
+            let mut op = registry().build(name, &tiny_ctx(n, nelt, &d, &g)).unwrap();
+            let u = u.clone();
+            let got = std::thread::spawn(move || {
+                let mut w = vec![0.0; u.len()];
+                op.apply(&u, &mut w).unwrap();
+                w
+            })
+            .join()
+            .unwrap();
+            assert_allclose(&got, &want, 1e-11, 1e-11);
+        }
     }
 
     #[test]

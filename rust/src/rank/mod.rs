@@ -342,7 +342,7 @@ pub fn run_ranked(cfg: &RunConfig) -> Result<RunReport> {
 /// operator built by registry name from the built-in registry; returns the
 /// report (the global residual, wall time of the slowest rank path).
 pub fn run_ranked_with(cfg: &RunConfig, operator: &str) -> Result<RunReport> {
-    run_ranked_in(cfg, operator, &OperatorRegistry::with_builtins())
+    run_ranked_in(cfg, operator, crate::operators::registry())
 }
 
 /// [`run_ranked_with`] against a caller-supplied registry, so

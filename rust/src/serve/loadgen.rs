@@ -1,0 +1,478 @@
+//! The built-in load generator: `nekbone loadgen` drives a running server
+//! with concurrent clients over real TCP and reports latency/throughput in
+//! the schema-stable `nekbone-serve/1` JSON (the serve-side twin of the
+//! roofline bench's `nekbone-roofline/1`).
+//!
+//! The request mix cycles three distinct meshes per operator so the run
+//! exercises shard routing and session caching, not just one warm key.
+//! Request payloads are deterministic (seeded per client/request), so two
+//! runs against the same server issue identical solves.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::json::{parse, Value};
+use crate::rng::Rng;
+
+use super::pool::ShardSnapshot;
+use super::protocol::ERR_OVERLOADED;
+use super::{spec_default, spec_usize, LOADGEN_OPTS};
+
+/// Schema tag written into every report.
+pub const SCHEMA: &str = "nekbone-serve/1";
+
+/// `nekbone loadgen` configuration; defaults come from [`LOADGEN_OPTS`].
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub clients: usize,
+    /// Solve requests per client.
+    pub requests: usize,
+    /// Operator every request names.
+    pub operator: String,
+    /// Base GLL points per dimension (the mesh mix varies around this).
+    pub n: usize,
+    /// Base element count.
+    pub nelt: usize,
+    pub niter: usize,
+    /// Where to write the `nekbone-serve/1` report (`None`: stdout only).
+    pub bench_json: Option<String>,
+    /// Send a `shutdown` request after the run (CI smoke uses this).
+    pub shutdown: bool,
+}
+
+impl LoadgenConfig {
+    pub fn from_args(args: &Args) -> Result<LoadgenConfig> {
+        let quick = args.flag("quick");
+        // `--quick` shrinks every knob the user did not set explicitly.
+        let pick = |key: &str, quick_val: usize| -> Result<usize> {
+            if quick && args.get(key).is_none() {
+                Ok(quick_val)
+            } else {
+                spec_usize(args, LOADGEN_OPTS, key)
+            }
+        };
+        let cfg = LoadgenConfig {
+            addr: args.get("addr").unwrap_or(spec_default(LOADGEN_OPTS, "addr")).to_string(),
+            clients: pick("clients", 2)?,
+            requests: pick("requests", 4)?,
+            operator: args
+                .get("backend")
+                .unwrap_or(spec_default(LOADGEN_OPTS, "backend"))
+                .to_string(),
+            n: pick("n", 3)?,
+            nelt: pick("nelt", 2)?,
+            niter: pick("niter", 8)?,
+            bench_json: args.get("bench-json").filter(|s| !s.is_empty()).map(str::to_string),
+            shutdown: args.flag("shutdown"),
+        };
+        for (what, v) in [
+            ("clients", cfg.clients),
+            ("requests", cfg.requests),
+            ("n", cfg.n),
+            ("nelt", cfg.nelt),
+            ("niter", cfg.niter),
+        ] {
+            if v == 0 {
+                return Err(Error::Config(format!("loadgen: --{what} must be positive")));
+            }
+        }
+        if cfg.n < 2 {
+            return Err(Error::Config("loadgen: --n must be at least 2".into()));
+        }
+        Ok(cfg)
+    }
+
+    /// The mesh mix a run cycles through: three distinct shard keys off
+    /// the base `(n, nelt)`, so routing and caching both get exercised.
+    pub fn meshes(&self) -> [(usize, usize); 3] {
+        [(self.n, self.nelt), (self.n + 1, self.nelt), (self.n, self.nelt * 2)]
+    }
+}
+
+/// What one run measured.
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub ok: usize,
+    pub overloaded: usize,
+    pub errors: usize,
+    pub seconds: f64,
+    /// Per-request round-trip latencies, milliseconds, unsorted.
+    pub latencies_ms: Vec<f64>,
+    /// Server-reported queue capacity (from `info`; 0 if unavailable).
+    pub queue_capacity: usize,
+    /// Server-reported per-shard statistics (empty if `info` failed).
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl LoadgenReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.ok as f64 / self.seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// `p` in 0..=100 over unsorted samples (nearest-rank on a sorted copy).
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct ClientTally {
+    ok: usize,
+    overloaded: usize,
+    errors: usize,
+    latencies_ms: Vec<f64>,
+}
+
+/// One NDJSON exchange: write the line, read one response line back.
+fn exchange(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> Result<Value> {
+    writeln!(writer, "{line}")
+        .and_then(|()| writer.flush())
+        .map_err(|e| Error::Config(format!("loadgen: send failed: {e}")))?;
+    let mut resp = String::new();
+    let bytes = reader
+        .read_line(&mut resp)
+        .map_err(|e| Error::Config(format!("loadgen: recv failed: {e}")))?;
+    if bytes == 0 {
+        return Err(Error::Config("loadgen: server closed the connection".into()));
+    }
+    parse(resp.trim())
+}
+
+fn connect(addr: &str) -> Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Config(format!("loadgen: cannot connect to {addr}: {e}")))?;
+    let reader = BufReader::new(
+        stream.try_clone().map_err(|e| Error::Config(format!("loadgen: clone: {e}")))?,
+    );
+    Ok((stream, reader))
+}
+
+fn solve_line(id: u64, operator: &str, n: usize, nelt: usize, niter: usize, rhs: &[f64]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Value::String("solve".into()));
+    m.insert("id".to_string(), Value::Number(id as f64));
+    m.insert("operator".to_string(), Value::String(operator.to_string()));
+    m.insert("n".to_string(), Value::Number(n as f64));
+    m.insert("nelt".to_string(), Value::Number(nelt as f64));
+    m.insert("niter".to_string(), Value::Number(niter as f64));
+    m.insert("rhs".to_string(), Value::Array(rhs.iter().map(|&x| Value::Number(x)).collect()));
+    Value::Object(m).dump()
+}
+
+fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientTally> {
+    let (mut writer, mut reader) = connect(&cfg.addr)?;
+    let meshes = cfg.meshes();
+    let mut tally =
+        ClientTally { ok: 0, overloaded: 0, errors: 0, latencies_ms: Vec::with_capacity(cfg.requests) };
+    for req in 0..cfg.requests {
+        let (n, nelt) = meshes[(client + req) % meshes.len()];
+        let rhs = Rng::new(0xC11E_4700 + (client * 1000 + req) as u64).normal_vec(nelt * n * n * n);
+        let id = (client * cfg.requests + req) as u64 + 1;
+        let line = solve_line(id, &cfg.operator, n, nelt, cfg.niter, &rhs);
+        let t0 = Instant::now();
+        let resp = exchange(&mut writer, &mut reader, &line)?;
+        tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        match resp.get("ok") {
+            Some(Value::Bool(true)) => tally.ok += 1,
+            _ => {
+                if resp.get("error").and_then(Value::as_str) == Some(ERR_OVERLOADED) {
+                    tally.overloaded += 1;
+                } else {
+                    tally.errors += 1;
+                }
+            }
+        }
+    }
+    Ok(tally)
+}
+
+/// Drive the server at `cfg.addr`: `clients` threads x `requests` solves,
+/// then one control connection for `info` (and `shutdown` if asked).
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for client in 0..cfg.clients {
+        let cfg = cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("nekbone-loadgen-{client}"))
+                .spawn(move || run_client(&cfg, client))
+                .map_err(|e| Error::Config(format!("loadgen: spawn client: {e}")))?,
+        );
+    }
+    let mut report = LoadgenReport {
+        clients: cfg.clients,
+        requests_per_client: cfg.requests,
+        ok: 0,
+        overloaded: 0,
+        errors: 0,
+        seconds: 0.0,
+        latencies_ms: Vec::new(),
+        queue_capacity: 0,
+        shards: Vec::new(),
+    };
+    let mut first_err: Option<Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(t)) => {
+                report.ok += t.ok;
+                report.overloaded += t.overloaded;
+                report.errors += t.errors;
+                report.latencies_ms.extend(t.latencies_ms);
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err =
+                    first_err.or(Some(Error::Config("loadgen: client thread panicked".into())))
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    report.seconds = t0.elapsed().as_secs_f64();
+
+    // Control connection: final statistics, then (optionally) shutdown.
+    let (mut writer, mut reader) = connect(&cfg.addr)?;
+    let info = exchange(&mut writer, &mut reader, r#"{"op":"info","id":9001}"#)?;
+    report.queue_capacity =
+        info.get("queue_capacity").and_then(Value::as_usize).unwrap_or(0);
+    if let Some(rows) = info.get("shard_stats").and_then(Value::as_array) {
+        report.shards = rows.iter().filter_map(ShardSnapshot::from_value).collect();
+    }
+    if cfg.shutdown {
+        let ack = exchange(&mut writer, &mut reader, r#"{"op":"shutdown","id":9002}"#)?;
+        if ack.get("draining") != Some(&Value::Bool(true)) {
+            return Err(Error::Config("loadgen: shutdown was not acknowledged".into()));
+        }
+    }
+    Ok(report)
+}
+
+/// Serialize a report in the `nekbone-serve/1` schema.
+pub fn to_json(report: &LoadgenReport) -> String {
+    let mut m = BTreeMap::new();
+    let mut put = |k: &str, v: Value| {
+        m.insert(k.to_string(), v);
+    };
+    put("schema", Value::String(SCHEMA.into()));
+    put("clients", Value::Number(report.clients as f64));
+    put("requests", Value::Number((report.clients * report.requests_per_client) as f64));
+    put("ok", Value::Number(report.ok as f64));
+    put("overloaded", Value::Number(report.overloaded as f64));
+    put("errors", Value::Number(report.errors as f64));
+    put("seconds", Value::Number(report.seconds));
+    put("throughput_rps", Value::Number(report.throughput_rps()));
+    let mut lat = BTreeMap::new();
+    let mean = if report.latencies_ms.is_empty() {
+        0.0
+    } else {
+        report.latencies_ms.iter().sum::<f64>() / report.latencies_ms.len() as f64
+    };
+    lat.insert("p50".to_string(), Value::Number(percentile(&report.latencies_ms, 50.0)));
+    lat.insert("p99".to_string(), Value::Number(percentile(&report.latencies_ms, 99.0)));
+    lat.insert("mean".to_string(), Value::Number(mean));
+    lat.insert(
+        "max".to_string(),
+        Value::Number(report.latencies_ms.iter().cloned().fold(0.0, f64::max)),
+    );
+    put("latency_ms", Value::Object(lat));
+    let mut q = BTreeMap::new();
+    q.insert("capacity".to_string(), Value::Number(report.queue_capacity as f64));
+    q.insert(
+        "max_depth".to_string(),
+        Value::Number(report.shards.iter().map(|s| s.max_depth).max().unwrap_or(0) as f64),
+    );
+    put("queue", Value::Object(q));
+    put("shards", Value::Array(report.shards.iter().map(ShardSnapshot::to_value).collect()));
+    let mut text = Value::Object(m).dump();
+    text.push('\n');
+    text
+}
+
+/// Validate serialized text against the `nekbone-serve/1` schema (the
+/// loadgen validates its own output before writing; CI smoke re-checks).
+pub fn validate_json(text: &str) -> Result<()> {
+    let doc = parse(text)?;
+    let bad = |msg: &str| Error::Config(format!("serve json: {msg}"));
+    if doc.get("schema").and_then(Value::as_str) != Some(SCHEMA) {
+        return Err(bad(&format!("\"schema\" must be {SCHEMA:?}")));
+    }
+    for key in ["clients", "requests", "ok", "overloaded", "errors"] {
+        doc.get(key).and_then(Value::as_usize).ok_or_else(|| bad(&format!("missing {key}")))?;
+    }
+    for key in ["seconds", "throughput_rps"] {
+        doc.get(key).and_then(Value::as_f64).ok_or_else(|| bad(&format!("missing {key}")))?;
+    }
+    let lat = doc.get("latency_ms").ok_or_else(|| bad("missing latency_ms"))?;
+    for key in ["p50", "p99", "mean", "max"] {
+        lat.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| bad(&format!("missing latency_ms.{key}")))?;
+    }
+    let q = doc.get("queue").ok_or_else(|| bad("missing queue"))?;
+    for key in ["capacity", "max_depth"] {
+        q.get(key).and_then(Value::as_usize).ok_or_else(|| bad(&format!("missing queue.{key}")))?;
+    }
+    let shards =
+        doc.get("shards").and_then(Value::as_array).ok_or_else(|| bad("missing shards"))?;
+    for row in shards {
+        ShardSnapshot::from_value(row).ok_or_else(|| bad("malformed shard row"))?;
+    }
+    let total = doc.get("requests").and_then(Value::as_usize).unwrap_or(0);
+    let accounted = ["ok", "overloaded", "errors"]
+        .iter()
+        .map(|k| doc.get(k).and_then(Value::as_usize).unwrap_or(0))
+        .sum::<usize>();
+    if accounted != total {
+        return Err(bad(&format!("ok+overloaded+errors = {accounted}, requests = {total}")));
+    }
+    Ok(())
+}
+
+/// Write a report to `path` (schema-validated round trip).
+pub fn write_json(report: &LoadgenReport, path: &str) -> Result<()> {
+    let text = to_json(report);
+    validate_json(&text)?;
+    std::fs::write(path, &text).map_err(|source| Error::Io { path: path.to_string(), source })
+}
+
+/// Human-readable one-screen summary for the CLI.
+pub fn render_summary(report: &LoadgenReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "loadgen: {} clients x {} requests in {:.3}s  ({:.1} solves/s)\n",
+        report.clients,
+        report.requests_per_client,
+        report.seconds,
+        report.throughput_rps()
+    ));
+    out.push_str(&format!(
+        "  ok {}  overloaded {}  errors {}\n",
+        report.ok, report.overloaded, report.errors
+    ));
+    out.push_str(&format!(
+        "  latency ms: p50 {:.3}  p99 {:.3}  max {:.3}\n",
+        percentile(&report.latencies_ms, 50.0),
+        percentile(&report.latencies_ms, 99.0),
+        report.latencies_ms.iter().cloned().fold(0.0, f64::max)
+    ));
+    for s in &report.shards {
+        out.push_str(&format!(
+            "  shard {}: {} reqs, {} batches, cache {}/{} hit/miss, {} keys, peak depth {}\n",
+            s.shard, s.requests, s.batches, s.cache_hits, s.cache_misses, s.keys, s.max_depth
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> LoadgenReport {
+        LoadgenReport {
+            clients: 2,
+            requests_per_client: 4,
+            ok: 7,
+            overloaded: 1,
+            errors: 0,
+            seconds: 0.25,
+            latencies_ms: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+            queue_capacity: 64,
+            shards: vec![ShardSnapshot {
+                shard: 0,
+                requests: 8,
+                batches: 3,
+                cache_hits: 5,
+                cache_misses: 3,
+                keys: 3,
+                overloaded: 1,
+                max_depth: 4,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips_and_validates() {
+        let text = to_json(&sample_report());
+        validate_json(&text).unwrap();
+        let doc = parse(&text).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(doc.get("requests").unwrap().as_usize(), Some(8));
+        assert_eq!(doc.get("ok").unwrap().as_usize(), Some(7));
+        let row = &doc.get("shards").unwrap().as_array().unwrap()[0];
+        assert_eq!(row.get("cache_misses").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn validation_rejects_drifted_schemas() {
+        let good = to_json(&sample_report());
+        // Tampering with any required field must fail validation.
+        for (from, to) in [
+            (r#""schema":"nekbone-serve/1""#, r#""schema":"nekbone-serve/2""#),
+            (r#""p99":"#, r#""p98":"#),
+            (r#""capacity":"#, r#""cap":"#),
+            (r#""ok":7"#, r#""ok":5"#), // breaks the ok+overloaded+errors sum
+        ] {
+            let bad = good.replace(from, to);
+            assert_ne!(bad, good, "tamper pattern {from:?} did not apply");
+            assert!(validate_json(&bad).is_err(), "tamper {from:?} -> {to:?} passed");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_mentions_the_headline_numbers() {
+        let s = render_summary(&sample_report());
+        assert!(s.contains("2 clients x 4 requests"));
+        assert!(s.contains("ok 7"));
+        assert!(s.contains("shard 0"));
+    }
+
+    #[test]
+    fn mesh_mix_has_three_distinct_keys() {
+        let cfg = LoadgenConfig {
+            addr: String::new(),
+            clients: 1,
+            requests: 1,
+            operator: "cpu-layered".into(),
+            n: 4,
+            nelt: 8,
+            niter: 10,
+            bench_json: None,
+            shutdown: false,
+        };
+        let m = cfg.meshes();
+        assert_ne!(m[0], m[1]);
+        assert_ne!(m[0], m[2]);
+        assert_ne!(m[1], m[2]);
+    }
+}

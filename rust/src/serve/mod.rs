@@ -1,0 +1,245 @@
+//! Solver-as-a-service: a std-only TCP front-end over sharded
+//! [`OwnedSession`](crate::coordinator::OwnedSession) pools.
+//!
+//! The paper's kernel exists to be driven hard — thousands of small
+//! tensor-product solves per second — and this layer is the "one setup,
+//! many requests" deployment shape on top of the substrate PRs 1–5 built:
+//! registry-dispatched operators, one generic CG, zero-per-solve-allocation
+//! sessions. Per repo convention it is dependency-free: the wire format is
+//! newline-delimited JSON over the crate's own [`crate::json`] machinery,
+//! the network layer is `std::net`, and concurrency is `std::thread` +
+//! `std::sync::mpsc`.
+//!
+//! ## Request lifecycle
+//!
+//! ```text
+//! client ──line──▶ acceptor thread (one per connection)
+//!                    │ parse + validate (operator name, rhs length)
+//!                    ▼
+//!                 SessionPool::submit ── hash(operator,n,nelt,niter) ──▶ shard s
+//!                    │                                                    │
+//!                    │ try_send on a bounded queue                        ▼
+//!                    │   full  → {"error":"overloaded"}        shard worker thread
+//!                    │   stopped → {"error":"shutting_down"}     │ get-or-build
+//!                    ▼                                           │ OwnedSession
+//!                 blocks on a per-request reply channel ◀─reply──┘ solve
+//!                    │
+//! client ◀──line── response: {"id",…,"iterations","rnorm","x",…}
+//! ```
+//!
+//! ## Contracts
+//!
+//! * **Shard routing**: a request's `(operator, n, nelt, niter)` key hashes
+//!   to one shard; the shard worker owns every session for its keys, so a
+//!   given mesh is only ever solved by one thread and answers are
+//!   bitwise-identical to a serial
+//!   [`SolveSession`](crate::coordinator::SolveSession) solve (the
+//!   conformance suite in `tests/serve.rs` asserts this across
+//!   interleaved clients).
+//! * **Backpressure**: each shard's queue is a bounded
+//!   `mpsc::sync_channel`; when it is full the submit fails *immediately*
+//!   with an explicit `overloaded` response. Memory is bounded by
+//!   `shards * queue * max_request_size` — the pool never buffers
+//!   unboundedly.
+//! * **Lifecycle**: one `AtomicBool` stop flag. A `shutdown` request (or
+//!   SIGINT on the CLI) flips it: new solves are refused with
+//!   `shutting_down`, queued solves drain to completion (dropping the
+//!   queue senders lets each worker finish its backlog before `recv`
+//!   disconnects), workers and connection handlers join, and the server
+//!   returns its final per-shard statistics.
+//!
+//! The protocol and usage are documented in `rust/README.md`; the
+//! `nekbone-serve/1` bench schema next to `nekbone-roofline/1` in
+//! `ROADMAP.md`.
+
+mod loadgen;
+mod pool;
+pub mod protocol;
+mod server;
+
+pub use loadgen::{
+    render_summary, run as run_loadgen, validate_json, write_json, LoadgenConfig,
+    LoadgenReport,
+};
+pub use pool::{PoolConfig, SessionPool, ShardSnapshot, Submit};
+pub use server::{install_sigint_handler, ServeConfig, ServeReport, Server};
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+
+/// One CLI option of a serve-layer subcommand: the single source of truth
+/// for both the generated help text ([`crate::cli::usage`] renders these
+/// tables) and the parsed defaults ([`ServeConfig::from_args`] /
+/// [`LoadgenConfig::from_args`] read defaults from the same rows via
+/// `spec_default`) — there is no hand-synced `USAGE` string to drift.
+pub struct OptSpec {
+    /// `--key`.
+    pub key: &'static str,
+    /// Metavar for valued options (`""` for boolean flags).
+    pub metavar: &'static str,
+    /// Default value as it parses (`""` for flags; flags default to off).
+    pub default: &'static str,
+    /// One-line help.
+    pub help: &'static str,
+}
+
+/// `nekbone serve` options.
+pub const SERVE_OPTS: &[OptSpec] = &[
+    OptSpec {
+        key: "addr",
+        metavar: "HOST:PORT",
+        default: "127.0.0.1:5571",
+        help: "listen address (port 0 picks a free port)",
+    },
+    OptSpec {
+        key: "shards",
+        metavar: "K",
+        default: "4",
+        help: "session-pool shards (worker threads)",
+    },
+    OptSpec {
+        key: "queue",
+        metavar: "N",
+        default: "64",
+        help: "bounded per-shard queue; full => overloaded",
+    },
+    OptSpec {
+        key: "batch",
+        metavar: "N",
+        default: "8",
+        help: "max requests a worker drains per wakeup",
+    },
+    OptSpec {
+        key: "niter",
+        metavar: "N",
+        default: "20",
+        help: "CG iterations when a request names none",
+    },
+];
+
+/// `nekbone loadgen` options.
+pub const LOADGEN_OPTS: &[OptSpec] = &[
+    OptSpec {
+        key: "addr",
+        metavar: "HOST:PORT",
+        default: "127.0.0.1:5571",
+        help: "server address to drive",
+    },
+    OptSpec { key: "clients", metavar: "C", default: "4", help: "concurrent client threads" },
+    OptSpec { key: "requests", metavar: "R", default: "16", help: "solve requests per client" },
+    OptSpec {
+        key: "backend",
+        metavar: "NAME",
+        default: "cpu-layered",
+        help: "operator the requests name (registry name)",
+    },
+    OptSpec { key: "n", metavar: "N", default: "4", help: "base GLL points per dim" },
+    OptSpec { key: "nelt", metavar: "N", default: "8", help: "base element count" },
+    OptSpec { key: "niter", metavar: "N", default: "20", help: "CG iterations per solve" },
+    OptSpec {
+        key: "bench-json",
+        metavar: "PATH",
+        default: "",
+        help: "write a nekbone-serve/1 BENCH_serve.json",
+    },
+    OptSpec { key: "quick", metavar: "", default: "", help: "smoke scale (2 clients x 4)" },
+    OptSpec {
+        key: "shutdown",
+        metavar: "",
+        default: "",
+        help: "send a shutdown request when done",
+    },
+];
+
+/// Default of `key` in an option table. Panics when the key is not in the
+/// table — a config field reading an option that the help does not list
+/// is a bug, caught by every test that touches `from_args`.
+pub(crate) fn spec_default(opts: &[OptSpec], key: &str) -> &'static str {
+    opts.iter()
+        .find(|o| o.key == key)
+        .unwrap_or_else(|| panic!("option --{key} missing from its OptSpec table"))
+        .default
+}
+
+/// `--key` as usize, defaulting from the spec table.
+pub(crate) fn spec_usize(args: &Args, opts: &[OptSpec], key: &str) -> Result<usize> {
+    let dflt = spec_default(opts, key)
+        .parse::<usize>()
+        .map_err(|_| Error::Config(format!("spec default for --{key} is not an integer")))?;
+    args.get_usize(key, dflt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn configs_default_from_the_spec_tables() {
+        // `from_args` on a bare subcommand must reproduce exactly the
+        // defaults the help text advertises — same rows, one source.
+        let s = ServeConfig::from_args(&args(&["serve"])).unwrap();
+        assert_eq!(s.addr, spec_default(SERVE_OPTS, "addr"));
+        assert_eq!(s.shards.to_string(), spec_default(SERVE_OPTS, "shards"));
+        assert_eq!(s.queue.to_string(), spec_default(SERVE_OPTS, "queue"));
+        assert_eq!(s.batch.to_string(), spec_default(SERVE_OPTS, "batch"));
+        assert_eq!(s.niter.to_string(), spec_default(SERVE_OPTS, "niter"));
+
+        let l = LoadgenConfig::from_args(&args(&["loadgen"])).unwrap();
+        assert_eq!(l.addr, spec_default(LOADGEN_OPTS, "addr"));
+        assert_eq!(l.clients.to_string(), spec_default(LOADGEN_OPTS, "clients"));
+        assert_eq!(l.requests.to_string(), spec_default(LOADGEN_OPTS, "requests"));
+        assert_eq!(l.operator, spec_default(LOADGEN_OPTS, "backend"));
+        assert_eq!(l.n.to_string(), spec_default(LOADGEN_OPTS, "n"));
+        assert_eq!(l.nelt.to_string(), spec_default(LOADGEN_OPTS, "nelt"));
+        assert_eq!(l.bench_json, None);
+        assert!(!l.shutdown);
+    }
+
+    #[test]
+    fn quick_flag_shrinks_the_load() {
+        let l = LoadgenConfig::from_args(&args(&["loadgen", "--quick"])).unwrap();
+        let full = LoadgenConfig::from_args(&args(&["loadgen"])).unwrap();
+        assert!(l.clients < full.clients || l.requests < full.requests);
+        assert!(l.n <= full.n && l.nelt <= full.nelt);
+        // Explicit options still win over the quick scale.
+        let l = LoadgenConfig::from_args(&args(&["loadgen", "--quick", "--clients", "7"]))
+            .unwrap();
+        assert_eq!(l.clients, 7);
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let s = ServeConfig::from_args(&args(&[
+            "serve",
+            "--addr",
+            "0.0.0.0:9000",
+            "--shards=2",
+            "--queue",
+            "5",
+        ]))
+        .unwrap();
+        assert_eq!(s.addr, "0.0.0.0:9000");
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.queue, 5);
+        assert!(ServeConfig::from_args(&args(&["serve", "--shards", "0"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["serve", "--queue", "zero"])).is_err());
+    }
+
+    #[test]
+    fn every_spec_key_is_unique_and_help_fits() {
+        for opts in [SERVE_OPTS, LOADGEN_OPTS] {
+            for (i, o) in opts.iter().enumerate() {
+                assert!(
+                    !opts[..i].iter().any(|p| p.key == o.key),
+                    "duplicate option --{}",
+                    o.key
+                );
+                assert!(!o.help.is_empty());
+            }
+        }
+    }
+}

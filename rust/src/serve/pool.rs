@@ -1,0 +1,484 @@
+//! The sharded session pool: bounded per-shard queues in front of worker
+//! threads that own [`OwnedSession`] caches.
+//!
+//! Routing is by [`ShardKey`] hash, so every mesh/operator combination is
+//! served by exactly one worker — sessions are never shared between
+//! threads, never locked, and a key's solves are totally ordered (the
+//! bitwise-reproducibility contract). Backpressure is structural: each
+//! shard's queue is an `mpsc::sync_channel` of fixed capacity and
+//! [`SessionPool::submit`] uses `try_send`, so a full shard answers
+//! `overloaded` immediately instead of buffering without bound.
+//!
+//! Shutdown is drain-by-drop: [`SessionPool::begin_shutdown`] flips the
+//! stop flag (new submits refused), and [`SessionPool::shutdown`] then
+//! drops the queue senders — each worker's `recv` keeps yielding the jobs
+//! already accepted until the channel disconnects, so nothing accepted is
+//! ever lost — and joins the workers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::RunConfig;
+use crate::coordinator::{Nekbone, OwnedSession};
+use crate::error::Error;
+use crate::json::Value;
+
+use super::protocol::ShardKey;
+
+/// Pool shape: how many shards, how deep each queue, how greedily a
+/// worker drains.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Worker threads (and hash buckets).
+    pub shards: usize,
+    /// Bounded queue capacity per shard.
+    pub queue: usize,
+    /// Max jobs a worker drains per wakeup (micro-batch size).
+    pub batch: usize,
+}
+
+/// One queued solve job; the reply channel closes the loop back to the
+/// submitting connection handler.
+struct Job {
+    id: u64,
+    key: ShardKey,
+    rhs: Vec<f64>,
+    reply: mpsc::Sender<SolveReply>,
+}
+
+/// What a worker sends back for one job.
+pub struct SolveReply {
+    pub id: u64,
+    pub shard: usize,
+    /// The canonical operator label, iterations, final rnorm, solution.
+    pub outcome: Result<SolveOk, Error>,
+}
+
+/// The successful-solve payload.
+pub struct SolveOk {
+    pub operator: String,
+    pub iterations: usize,
+    pub rnorm: f64,
+    pub x: Vec<f64>,
+}
+
+/// Outcome of a submit attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Submit {
+    /// Queued on this shard; a [`SolveReply`] will arrive on the job's
+    /// reply channel.
+    Accepted { shard: usize },
+    /// The shard's bounded queue is full — explicit backpressure.
+    Overloaded { shard: usize },
+    /// The pool is draining; no new work is accepted.
+    ShuttingDown,
+}
+
+/// Live per-shard counters (atomics — updated by submitters and the
+/// shard worker, read by `info` snapshots at any time).
+#[derive(Default)]
+struct ShardStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    overloaded: AtomicU64,
+    depth: AtomicUsize,
+    max_depth: AtomicUsize,
+}
+
+impl ShardStats {
+    fn enqueued(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_depth.fetch_max(d, Ordering::Relaxed);
+    }
+
+    fn dequeued(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of one shard's statistics (the `info` response
+/// and `BENCH_serve.json` shard rows).
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    /// Requests accepted onto this shard's queue.
+    pub requests: u64,
+    /// Worker wakeups (each drains 1..=batch jobs).
+    pub batches: u64,
+    /// Solves served by an already-warm session.
+    pub cache_hits: u64,
+    /// Solves that had to build (warm up) a session first.
+    pub cache_misses: u64,
+    /// Distinct sessions cached (no eviction: equals `cache_misses`).
+    pub keys: u64,
+    /// Submits refused with `overloaded`.
+    pub overloaded: u64,
+    /// High-water queue depth.
+    pub max_depth: u64,
+}
+
+impl ShardSnapshot {
+    /// As a JSON object (the `info` response and the bench report embed
+    /// these rows verbatim).
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: u64| {
+            m.insert(k.to_string(), Value::Number(v as f64));
+        };
+        put("shard", self.shard as u64);
+        put("requests", self.requests);
+        put("batches", self.batches);
+        put("cache_hits", self.cache_hits);
+        put("cache_misses", self.cache_misses);
+        put("keys", self.keys);
+        put("overloaded", self.overloaded);
+        put("max_depth", self.max_depth);
+        Value::Object(m)
+    }
+
+    /// Parse back from the `info` response (the loadgen side).
+    pub fn from_value(v: &Value) -> Option<ShardSnapshot> {
+        let g = |k: &str| v.get(k).and_then(Value::as_u64);
+        Some(ShardSnapshot {
+            shard: g("shard")? as usize,
+            requests: g("requests")?,
+            batches: g("batches")?,
+            cache_hits: g("cache_hits")?,
+            cache_misses: g("cache_misses")?,
+            keys: g("keys")?,
+            overloaded: g("overloaded")?,
+            max_depth: g("max_depth")?,
+        })
+    }
+}
+
+/// The pool itself. Shared as `Arc<SessionPool>` between the acceptor and
+/// every connection handler; all methods take `&self`.
+pub struct SessionPool {
+    cfg: PoolConfig,
+    stop: Arc<AtomicBool>,
+    /// Senders live behind a mutex so `shutdown` can take (drop) them;
+    /// `submit`'s `try_send` never blocks while holding the lock.
+    senders: Mutex<Vec<SyncSender<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    stats: Vec<Arc<ShardStats>>,
+}
+
+impl SessionPool {
+    /// Spawn the shard workers and open their queues.
+    pub fn new(cfg: PoolConfig) -> SessionPool {
+        let shards = cfg.shards.max(1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut senders = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        let mut stats = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue.max(1));
+            let st = Arc::new(ShardStats::default());
+            let wst = Arc::clone(&st);
+            let batch = cfg.batch.max(1);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("nekbone-shard-{shard}"))
+                    .spawn(move || shard_worker(shard, rx, wst, batch))
+                    .expect("spawn shard worker"),
+            );
+            senders.push(tx);
+            stats.push(st);
+        }
+        SessionPool {
+            cfg,
+            stop,
+            senders: Mutex::new(senders),
+            workers: Mutex::new(workers),
+            stats,
+        }
+    }
+
+    /// The configured per-shard queue capacity.
+    pub fn queue_capacity(&self) -> usize {
+        self.cfg.queue.max(1)
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.cfg.shards.max(1)
+    }
+
+    /// Route and enqueue one solve; never blocks. The reply arrives on
+    /// `reply` unless the return value says otherwise.
+    pub fn submit(
+        &self,
+        id: u64,
+        key: ShardKey,
+        rhs: Vec<f64>,
+        reply: mpsc::Sender<SolveReply>,
+    ) -> Submit {
+        if self.stop.load(Ordering::SeqCst) {
+            return Submit::ShuttingDown;
+        }
+        let shard = key.shard(self.shards());
+        let guard = self.senders.lock().expect("pool senders poisoned");
+        let Some(tx) = guard.get(shard) else {
+            return Submit::ShuttingDown; // shutdown already took the senders
+        };
+        match tx.try_send(Job { id, key, rhs, reply }) {
+            Ok(()) => {
+                self.stats[shard].enqueued();
+                Submit::Accepted { shard }
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats[shard].overloaded.fetch_add(1, Ordering::Relaxed);
+                Submit::Overloaded { shard }
+            }
+            Err(TrySendError::Disconnected(_)) => Submit::ShuttingDown,
+        }
+    }
+
+    /// Refuse new submits from now on; already-queued jobs still drain.
+    pub fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain and stop: refuse new submits, drop the queues' senders (each
+    /// worker finishes its accepted backlog, then exits), and join the
+    /// workers. Idempotent.
+    pub fn shutdown(&self) {
+        self.begin_shutdown();
+        drop(std::mem::take(&mut *self.senders.lock().expect("pool senders poisoned")));
+        let workers = std::mem::take(&mut *self.workers.lock().expect("pool workers poisoned"));
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+
+    /// Point-in-time statistics for every shard.
+    pub fn snapshot(&self) -> Vec<ShardSnapshot> {
+        self.stats
+            .iter()
+            .enumerate()
+            .map(|(shard, s)| ShardSnapshot {
+                shard,
+                requests: s.requests.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                cache_hits: s.cache_hits.load(Ordering::Relaxed),
+                cache_misses: s.cache_misses.load(Ordering::Relaxed),
+                keys: s.cache_misses.load(Ordering::Relaxed),
+                overloaded: s.overloaded.load(Ordering::Relaxed),
+                max_depth: s.max_depth.load(Ordering::Relaxed) as u64,
+            })
+            .collect()
+    }
+}
+
+impl Drop for SessionPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Build the session a key describes: a full application build (mesh,
+/// geometry, gather–scatter, operator warm-up), then drop the build-time
+/// half. This is the first-touch cost a warm cache amortizes away.
+fn build_session(key: &ShardKey) -> Result<OwnedSession, Error> {
+    let cfg = RunConfig {
+        nelt: key.nelt,
+        n: key.n,
+        niter: key.niter,
+        chunk: key.nelt.max(1),
+        ..RunConfig::default()
+    };
+    Ok(Nekbone::builder(cfg).operator(key.operator.as_str()).build()?.into_session())
+}
+
+/// One shard's serving loop: micro-batch the queue, get-or-build the
+/// session for each key, solve, reply. Exits when the queue disconnects
+/// with its backlog fully served.
+fn shard_worker(shard: usize, rx: Receiver<Job>, stats: Arc<ShardStats>, batch_max: usize) {
+    let mut sessions: BTreeMap<ShardKey, OwnedSession> = BTreeMap::new();
+    while let Ok(first) = rx.recv() {
+        // Drain up to batch_max jobs in one wakeup: consecutive requests
+        // against warm sessions amortize the channel wakeup, and the
+        // batch counter exposes how much batching the load actually got.
+        let mut batch = vec![first];
+        while batch.len() < batch_max {
+            match rx.try_recv() {
+                Ok(job) => batch.push(job),
+                Err(_) => break,
+            }
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        for job in batch {
+            stats.dequeued();
+            let outcome = serve_one(&mut sessions, &stats, &job.key, &job.rhs);
+            // A dropped receiver (client hung up mid-solve) is fine; the
+            // work is already done and nothing waits on the error.
+            let _ = job.reply.send(SolveReply { id: job.id, shard, outcome });
+        }
+    }
+}
+
+fn serve_one(
+    sessions: &mut BTreeMap<ShardKey, OwnedSession>,
+    stats: &ShardStats,
+    key: &ShardKey,
+    rhs: &[f64],
+) -> Result<SolveOk, Error> {
+    if !sessions.contains_key(key) {
+        stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let session = build_session(key)?;
+        sessions.insert(key.clone(), session);
+    } else {
+        stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+    let session = sessions.get_mut(key).expect("session just ensured");
+    let report = session.solve(rhs)?;
+    Ok(SolveOk {
+        operator: session.operator_label(),
+        iterations: report.iterations,
+        rnorm: report.final_rnorm,
+        x: session.solution().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Nekbone;
+
+    fn key(op: &str, n: usize, nelt: usize) -> ShardKey {
+        ShardKey { operator: op.into(), n, nelt, niter: 10 }
+    }
+
+    fn rhs_for(k: &ShardKey, seed: u64) -> Vec<f64> {
+        crate::rng::Rng::new(seed).normal_vec(k.ndof())
+    }
+
+    /// The serial oracle: an independent session, same key, same rhs.
+    fn serial_solve(k: &ShardKey, rhs: &[f64]) -> (usize, f64, Vec<f64>) {
+        let cfg = RunConfig {
+            nelt: k.nelt,
+            n: k.n,
+            niter: k.niter,
+            chunk: k.nelt.max(1),
+            ..RunConfig::default()
+        };
+        let mut s = Nekbone::builder(cfg)
+            .operator(k.operator.as_str())
+            .build()
+            .unwrap()
+            .into_session();
+        let rep = s.solve(rhs).unwrap();
+        (rep.iterations, rep.final_rnorm, s.solution().to_vec())
+    }
+
+    fn submit_ok(pool: &SessionPool, id: u64, k: &ShardKey, rhs: Vec<f64>) -> mpsc::Receiver<SolveReply> {
+        let (tx, rx) = mpsc::channel();
+        match pool.submit(id, k.clone(), rhs, tx) {
+            Submit::Accepted { .. } => rx,
+            other => panic!("submit refused: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_answers_match_serial_sessions_bitwise() {
+        let pool = SessionPool::new(PoolConfig { shards: 2, queue: 8, batch: 4 });
+        let keys = [key("cpu-layered", 3, 2), key("cpu-spec", 4, 2), key("cpu-layered", 4, 4)];
+        for (i, k) in keys.iter().enumerate() {
+            for seed in 0..3u64 {
+                let rhs = rhs_for(k, seed);
+                let rx = submit_ok(&pool, (i * 10) as u64 + seed, k, rhs.clone());
+                let reply = rx.recv().unwrap();
+                let ok = reply.outcome.expect("solve must succeed");
+                let (want_iters, want_rnorm, want_x) = serial_solve(k, &rhs);
+                assert_eq!(ok.iterations, want_iters);
+                assert_eq!(ok.rnorm.to_bits(), want_rnorm.to_bits(), "{}", k.label());
+                assert_eq!(ok.x.len(), want_x.len());
+                for (a, b) in ok.x.iter().zip(want_x.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", k.label());
+                }
+            }
+        }
+        let snaps = pool.snapshot();
+        let hits: u64 = snaps.iter().map(|s| s.cache_hits).sum();
+        let misses: u64 = snaps.iter().map(|s| s.cache_misses).sum();
+        assert_eq!(misses, 3, "one warm-up per distinct key");
+        assert_eq!(hits, 6, "repeat solves must hit the cache");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn full_queue_overloads_instead_of_buffering() {
+        // One shard, capacity 1, and a worker wedged on a real solve: the
+        // queue fills and subsequent submits must refuse immediately.
+        let pool = SessionPool::new(PoolConfig { shards: 1, queue: 1, batch: 1 });
+        let k = key("cpu-layered", 5, 8);
+        let first = submit_ok(&pool, 0, &k, rhs_for(&k, 0));
+        // Fill the queue behind the in-flight job; depending on worker
+        // timing the first slot may or may not have been drained yet, so
+        // push until Overloaded appears — bounded by capacity + 1 tries.
+        let mut saw_overload = false;
+        let mut receivers = vec![first];
+        for i in 0..8 {
+            let (tx, rx) = mpsc::channel();
+            match pool.submit(i + 1, k.clone(), rhs_for(&k, i), tx) {
+                Submit::Accepted { .. } => receivers.push(rx),
+                Submit::Overloaded { .. } => {
+                    saw_overload = true;
+                    break;
+                }
+                Submit::ShuttingDown => panic!("pool is not shutting down"),
+            }
+        }
+        assert!(saw_overload, "a capacity-1 queue must overload under a burst");
+        assert!(pool.snapshot()[0].overloaded >= 1);
+        // Everything accepted still completes.
+        for rx in receivers {
+            assert!(rx.recv().unwrap().outcome.is_ok());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_and_refuses_new() {
+        let pool = SessionPool::new(PoolConfig { shards: 1, queue: 16, batch: 4 });
+        let k = key("cpu-layered", 3, 2);
+        let receivers: Vec<_> =
+            (0..6).map(|i| submit_ok(&pool, i, &k, rhs_for(&k, i))).collect();
+        pool.begin_shutdown();
+        // New work is refused the moment shutdown begins …
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(pool.submit(99, k.clone(), rhs_for(&k, 9), tx), Submit::ShuttingDown);
+        // … but every accepted job still gets a real answer.
+        pool.shutdown();
+        for rx in receivers {
+            let reply = rx.recv().expect("accepted job lost in shutdown");
+            assert!(reply.outcome.is_ok());
+        }
+    }
+
+    #[test]
+    fn bad_keys_fail_the_job_not_the_worker() {
+        let pool = SessionPool::new(PoolConfig { shards: 1, queue: 4, batch: 2 });
+        // Unknown operator: builder error, reported on the reply channel.
+        let bad = key("gpu-magic", 3, 2);
+        let rx = submit_ok(&pool, 1, &bad, vec![0.0; bad.ndof()]);
+        assert!(rx.recv().unwrap().outcome.is_err());
+        // Mis-sized rhs: session-boundary Config error.
+        let good = key("cpu-layered", 3, 2);
+        let rx = submit_ok(&pool, 2, &good, vec![0.0; 5]);
+        let err = rx.recv().unwrap().outcome.err().unwrap();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // The worker survives both: a well-formed job still solves.
+        let rhs = rhs_for(&good, 1);
+        let rx = submit_ok(&pool, 3, &good, rhs);
+        assert!(rx.recv().unwrap().outcome.is_ok());
+        pool.shutdown();
+    }
+}

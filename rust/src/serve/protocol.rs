@@ -1,0 +1,325 @@
+//! The serve wire protocol: newline-delimited JSON, one request or
+//! response object per line, over the crate's own [`crate::json`].
+//!
+//! Requests (`"id"` is echoed back verbatim; it defaults to 0):
+//!
+//! ```text
+//! {"op":"ping","id":1}
+//! {"op":"info","id":2}
+//! {"op":"solve","id":3,"operator":"cpu-layered","n":4,"nelt":8,
+//!  "rhs":[...nelt*n^3 numbers...],"niter":20}
+//! {"op":"shutdown","id":4}
+//! ```
+//!
+//! Responses always carry `"id"` and `"ok"`. A successful solve echoes the
+//! per-RHS [`CgReport`] essentials plus the solution vector; `dump`'s
+//! shortest-round-trip number formatting makes the echoed `x` parse back
+//! bitwise-identical to the solver's output. Failures carry a stable
+//! `"error"` kind from the [`ERR_BAD_REQUEST`]-family constants and a
+//! human `"detail"`.
+
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+
+use crate::error::{Error, Result};
+use crate::json::{parse, Value};
+use crate::solver::CgReport;
+
+use super::pool::ShardSnapshot;
+
+/// Request refused because the line was not a well-formed request.
+pub const ERR_BAD_REQUEST: &str = "bad_request";
+/// Request refused because the target shard's bounded queue is full.
+pub const ERR_OVERLOADED: &str = "overloaded";
+/// Request refused because the server is draining for shutdown.
+pub const ERR_SHUTTING_DOWN: &str = "shutting_down";
+/// Request accepted but the solve itself failed.
+pub const ERR_SOLVE_FAILED: &str = "solve_failed";
+
+/// What a solve request names: the session-cache key. Everything that
+/// changes the built state is in here — two requests with equal keys hit
+/// the same cached [`OwnedSession`](crate::coordinator::OwnedSession),
+/// and the key hash picks the owning shard.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShardKey {
+    /// Operator registry name (canonical or alias).
+    pub operator: String,
+    /// GLL points per dimension.
+    pub n: usize,
+    /// Element count.
+    pub nelt: usize,
+    /// CG iterations per solve.
+    pub niter: usize,
+}
+
+impl ShardKey {
+    /// Local dofs a solve over this key moves (`nelt * n^3`).
+    pub fn ndof(&self) -> usize {
+        self.nelt * self.n * self.n * self.n
+    }
+
+    /// The shard this key routes to. Deterministic for the life of the
+    /// process (same-key requests always reach the same worker — the
+    /// bitwise-reproducibility contract depends on it).
+    pub fn shard(&self, nshards: usize) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() % nshards.max(1) as u64) as usize
+    }
+
+    /// Display form, `operator/n/nelt/niter`.
+    pub fn label(&self) -> String {
+        format!("{}/n{}/e{}/i{}", self.operator, self.n, self.nelt, self.niter)
+    }
+}
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping { id: u64 },
+    Info { id: u64 },
+    Solve { id: u64, key: ShardKey, rhs: Vec<f64> },
+    Shutdown { id: u64 },
+}
+
+impl Request {
+    /// The request's echo id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Ping { id }
+            | Request::Info { id }
+            | Request::Solve { id, .. }
+            | Request::Shutdown { id } => *id,
+        }
+    }
+}
+
+fn want_usize(v: &Value, field: &str) -> Result<usize> {
+    v.get(field)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| Error::Config(format!("solve request: {field} must be an integer")))
+}
+
+/// Parse one request line. `default_niter` fills a solve request that
+/// names no `niter` (the server's configured default).
+pub fn parse_request(line: &str, default_niter: usize) -> Result<Request> {
+    let v = parse(line.trim())?;
+    let id = v.get("id").and_then(Value::as_u64).unwrap_or(0);
+    let op = v
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or_else(|| Error::Config("request needs a string \"op\" field".into()))?;
+    match op {
+        "ping" => Ok(Request::Ping { id }),
+        "info" => Ok(Request::Info { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        "solve" => {
+            let operator = v
+                .get("operator")
+                .and_then(Value::as_str)
+                .ok_or_else(|| {
+                    Error::Config("solve request: operator must be a string".into())
+                })?
+                .to_string();
+            let n = want_usize(&v, "n")?;
+            let nelt = want_usize(&v, "nelt")?;
+            let niter = match v.get("niter") {
+                None => default_niter,
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    Error::Config("solve request: niter must be an integer".into())
+                })?,
+            };
+            let rhs_v = v
+                .get("rhs")
+                .and_then(Value::as_array)
+                .ok_or_else(|| Error::Config("solve request: rhs must be an array".into()))?;
+            let mut rhs = Vec::with_capacity(rhs_v.len());
+            for (i, x) in rhs_v.iter().enumerate() {
+                rhs.push(x.as_f64().ok_or_else(|| {
+                    Error::Config(format!("solve request: rhs[{i}] is not a number"))
+                })?);
+            }
+            Ok(Request::Solve { id, key: ShardKey { operator, n, nelt, niter }, rhs })
+        }
+        other => Err(Error::Config(format!(
+            "unknown op {other:?}; expected ping, info, solve, or shutdown"
+        ))),
+    }
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Object(m)
+}
+
+fn num(x: f64) -> Value {
+    Value::Number(x)
+}
+
+/// `{"id":N,"ok":true,"pong":true}`.
+pub fn resp_pong(id: u64) -> String {
+    obj(vec![("id", num(id as f64)), ("ok", Value::Bool(true)), ("pong", Value::Bool(true))])
+        .dump()
+}
+
+/// Shutdown acknowledgement: the server drains and exits after this.
+pub fn resp_shutdown(id: u64) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("ok", Value::Bool(true)),
+        ("draining", Value::Bool(true)),
+    ])
+    .dump()
+}
+
+/// Successful solve: the per-RHS report essentials + the solution field.
+pub fn resp_solve_ok(
+    id: u64,
+    operator: &str,
+    shard: usize,
+    report: &CgReport,
+    x: &[f64],
+) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("ok", Value::Bool(true)),
+        ("operator", Value::String(operator.to_string())),
+        ("shard", num(shard as f64)),
+        ("iterations", num(report.iterations as f64)),
+        ("rnorm", num(report.final_rnorm)),
+        ("x", Value::Array(x.iter().map(|&v| Value::Number(v)).collect())),
+    ])
+    .dump()
+}
+
+/// Any refusal/failure: stable `error` kind + human `detail`.
+pub fn resp_error(id: u64, kind: &str, detail: &str) -> String {
+    obj(vec![
+        ("id", num(id as f64)),
+        ("ok", Value::Bool(false)),
+        ("error", Value::String(kind.to_string())),
+        ("detail", Value::String(detail.to_string())),
+    ])
+    .dump()
+}
+
+/// `info` response: registered operators + live pool statistics.
+pub fn resp_info(
+    id: u64,
+    operators: &[String],
+    queue_capacity: usize,
+    shards: &[ShardSnapshot],
+) -> String {
+    let shard_vals: Vec<Value> = shards.iter().map(ShardSnapshot::to_value).collect();
+    obj(vec![
+        ("id", num(id as f64)),
+        ("ok", Value::Bool(true)),
+        (
+            "operators",
+            Value::Array(operators.iter().map(|s| Value::String(s.clone())).collect()),
+        ),
+        ("shards", num(shards.len() as f64)),
+        ("queue_capacity", num(queue_capacity as f64)),
+        ("shard_stats", Value::Array(shard_vals)),
+    ])
+    .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_requests() {
+        assert_eq!(parse_request(r#"{"op":"ping","id":1}"#, 9).unwrap(), Request::Ping {
+            id: 1
+        });
+        assert_eq!(parse_request(r#"{"op":"info"}"#, 9).unwrap(), Request::Info { id: 0 });
+        assert_eq!(
+            parse_request(r#"{"op":"shutdown","id":4}"#, 9).unwrap(),
+            Request::Shutdown { id: 4 }
+        );
+        let r = parse_request(
+            r#"{"op":"solve","id":3,"operator":"cpu-spec","n":2,"nelt":1,"rhs":[1,2,3,4,5,6,7,8]}"#,
+            9,
+        )
+        .unwrap();
+        match r {
+            Request::Solve { id, key, rhs } => {
+                assert_eq!(id, 3);
+                assert_eq!(key, ShardKey {
+                    operator: "cpu-spec".into(),
+                    n: 2,
+                    nelt: 1,
+                    niter: 9
+                });
+                assert_eq!(key.ndof(), 8);
+                assert_eq!(rhs, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for bad in [
+            "not json",
+            r#"{"id":1}"#,
+            r#"{"op":"warp","id":1}"#,
+            r#"{"op":"solve","operator":"cpu-spec","n":2,"nelt":1}"#,
+            r#"{"op":"solve","operator":"cpu-spec","n":2,"nelt":1,"rhs":["x"]}"#,
+            r#"{"op":"solve","operator":7,"n":2,"nelt":1,"rhs":[]}"#,
+            r#"{"op":"solve","operator":"cpu-spec","n":2.5,"nelt":1,"rhs":[]}"#,
+        ] {
+            assert!(parse_request(bad, 9).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn shard_routing_is_deterministic_and_in_range() {
+        let key = |op: &str, n: usize| ShardKey {
+            operator: op.into(),
+            n,
+            nelt: 8,
+            niter: 20,
+        };
+        for nshards in [1, 2, 4, 7] {
+            for k in [key("cpu-layered", 4), key("cpu-spec", 4), key("cpu-layered", 5)] {
+                let s = k.shard(nshards);
+                assert!(s < nshards);
+                assert_eq!(s, k.shard(nshards), "routing must be stable");
+            }
+        }
+    }
+
+    #[test]
+    fn responses_parse_back() {
+        let rep = CgReport {
+            iterations: 7,
+            final_rnorm: 1.5e-9,
+            rnorms: vec![],
+            rtz1: 0.0,
+            glsc3_sweeps: 0,
+        };
+        let x = [0.1 + 0.2, -0.0, 3.25];
+        let line = resp_solve_ok(3, "cpu-spec", 2, &rep, &x);
+        let v = crate::json::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("iterations").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("shard").unwrap().as_usize(), Some(2));
+        let got: Vec<f64> =
+            v.get("x").unwrap().as_array().unwrap().iter().map(|e| e.as_f64().unwrap()).collect();
+        // Bitwise round-trip: the conformance suite compares served
+        // solutions against serial solves exactly.
+        for (a, b) in got.iter().zip(x.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        let e = crate::json::parse(&resp_error(9, ERR_OVERLOADED, "queue full")).unwrap();
+        assert_eq!(e.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(e.get("error").unwrap().as_str(), Some(ERR_OVERLOADED));
+    }
+}

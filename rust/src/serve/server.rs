@@ -1,0 +1,405 @@
+//! The TCP front-end: accept loop, per-connection line handlers, and the
+//! stop-flag lifecycle tying SIGINT / `shutdown` requests to a graceful
+//! pool drain.
+//!
+//! Everything is `std`: a non-blocking `TcpListener` polled by the accept
+//! loop, one `std::thread` per connection reading newline-delimited JSON
+//! with a short read timeout (so handlers notice the stop flag between
+//! lines), and a shared [`SessionPool`] doing the actual solves.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::operators::registry;
+use crate::solver::CgReport;
+
+use super::pool::{PoolConfig, SessionPool, ShardSnapshot, Submit};
+use super::protocol::{
+    parse_request, resp_error, resp_info, resp_pong, resp_shutdown, resp_solve_ok, Request,
+    ERR_BAD_REQUEST, ERR_OVERLOADED, ERR_SHUTTING_DOWN, ERR_SOLVE_FAILED,
+};
+use super::{spec_default, spec_usize, SERVE_OPTS};
+
+/// How often idle handlers and the accept loop re-check the stop flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// `nekbone serve` configuration; defaults come from [`SERVE_OPTS`] so the
+/// help text and the parser cannot drift apart.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub shards: usize,
+    pub queue: usize,
+    pub batch: usize,
+    /// CG iterations for solve requests that name no `niter`.
+    pub niter: usize,
+}
+
+impl ServeConfig {
+    pub fn from_args(args: &Args) -> Result<ServeConfig> {
+        let cfg = ServeConfig {
+            addr: args.get("addr").unwrap_or(spec_default(SERVE_OPTS, "addr")).to_string(),
+            shards: spec_usize(args, SERVE_OPTS, "shards")?,
+            queue: spec_usize(args, SERVE_OPTS, "queue")?,
+            batch: spec_usize(args, SERVE_OPTS, "batch")?,
+            niter: spec_usize(args, SERVE_OPTS, "niter")?,
+        };
+        for (what, v) in
+            [("shards", cfg.shards), ("queue", cfg.queue), ("batch", cfg.batch), ("niter", cfg.niter)]
+        {
+            if v == 0 {
+                return Err(Error::Config(format!("serve: --{what} must be positive")));
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// What a finished server reports: connection count plus the pool's final
+/// per-shard statistics (the CLI prints these; the bench embeds them).
+pub struct ServeReport {
+    pub connections: usize,
+    pub shards: Vec<ShardSnapshot>,
+}
+
+/// A bound-but-not-yet-running server. Splitting bind from run lets the
+/// in-process tests and the bench learn the OS-assigned port (addr `:0`)
+/// and grab the stop flag before the accept loop starts.
+pub struct Server {
+    listener: TcpListener,
+    pool: Arc<SessionPool>,
+    stop: Arc<AtomicBool>,
+    niter: usize,
+}
+
+impl Server {
+    /// Bind the listen socket and spawn the shard workers.
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .map_err(|e| Error::Config(format!("serve: cannot bind {}: {e}", cfg.addr)))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Config(format!("serve: set_nonblocking: {e}")))?;
+        let pool = Arc::new(SessionPool::new(PoolConfig {
+            shards: cfg.shards,
+            queue: cfg.queue,
+            batch: cfg.batch,
+        }));
+        Ok(Server { listener, pool, stop: Arc::new(AtomicBool::new(false)), niter: cfg.niter })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().map_err(|e| Error::Config(format!("serve: local_addr: {e}")))
+    }
+
+    /// The stop flag; storing `true` makes the accept loop wind down.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept until the stop flag flips (a `shutdown` request, SIGINT via
+    /// [`install_sigint_handler`], or a test holding [`Server::stop_flag`]),
+    /// then drain: stop accepting, join every connection handler, drain
+    /// and join the pool, and report final statistics.
+    pub fn run(self) -> Result<ServeReport> {
+        if sigint_seen() {
+            self.stop.store(true, Ordering::SeqCst);
+        }
+        let mut handlers = Vec::new();
+        let mut connections = 0usize;
+        while !self.stop.load(Ordering::SeqCst) && !sigint_seen() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    connections += 1;
+                    let pool = Arc::clone(&self.pool);
+                    let stop = Arc::clone(&self.stop);
+                    let niter = self.niter;
+                    handlers.push(
+                        std::thread::Builder::new()
+                            .name(format!("nekbone-conn-{connections}"))
+                            .spawn(move || handle_connection(stream, pool, stop, niter))
+                            .map_err(|e| Error::Config(format!("serve: spawn handler: {e}")))?,
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+                Err(e) => return Err(Error::Config(format!("serve: accept: {e}"))),
+            }
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        self.pool.begin_shutdown(); // refuse new solves while handlers wind down
+        drop(self.listener);
+        for h in handlers {
+            let _ = h.join();
+        }
+        self.pool.shutdown(); // drain accepted backlog, join workers
+        Ok(ServeReport { connections, shards: self.pool.snapshot() })
+    }
+}
+
+/// One connection: read lines until EOF, a fatal error, or shutdown.
+fn handle_connection(
+    stream: TcpStream,
+    pool: Arc<SessionPool>,
+    stop: Arc<AtomicBool>,
+    default_niter: usize,
+) {
+    // The read timeout bounds how long a quiet connection can keep the
+    // server from noticing the stop flag.
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        // On WouldBlock `read_line` may have consumed a partial line into
+        // `line`; keep accumulating — only clear after a complete line.
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                let stop_after = {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        false
+                    } else {
+                        match respond(trimmed, &pool, &stop, default_niter) {
+                            Some(resp) => {
+                                if writeln!(writer, "{resp}").is_err() {
+                                    return;
+                                }
+                                let _ = writer.flush();
+                                stop.load(Ordering::SeqCst)
+                            }
+                            None => return,
+                        }
+                    }
+                };
+                line.clear();
+                if stop_after {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if stop.load(Ordering::SeqCst) || sigint_seen() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Turn one request line into one response line (`None` only when the
+/// connection should drop without an answer — never happens today, but
+/// the shape keeps the caller honest about the possibility).
+fn respond(
+    line: &str,
+    pool: &SessionPool,
+    stop: &AtomicBool,
+    default_niter: usize,
+) -> Option<String> {
+    let req = match parse_request(line, default_niter) {
+        Ok(r) => r,
+        Err(e) => return Some(resp_error(0, ERR_BAD_REQUEST, &e.to_string())),
+    };
+    let id = req.id();
+    Some(match req {
+        Request::Ping { .. } => resp_pong(id),
+        Request::Info { .. } => {
+            resp_info(id, &registry().names(), pool.queue_capacity(), &pool.snapshot())
+        }
+        Request::Shutdown { .. } => {
+            stop.store(true, Ordering::SeqCst);
+            pool.begin_shutdown();
+            resp_shutdown(id)
+        }
+        Request::Solve { key, rhs, .. } => {
+            if !registry().contains(&key.operator) {
+                return Some(resp_error(
+                    id,
+                    ERR_BAD_REQUEST,
+                    &format!("unknown operator {:?}; ask `info` for the list", key.operator),
+                ));
+            }
+            if rhs.len() != key.ndof() {
+                return Some(resp_error(
+                    id,
+                    ERR_BAD_REQUEST,
+                    &format!(
+                        "rhs has {} entries, {} solves {} dofs",
+                        rhs.len(),
+                        key.label(),
+                        key.ndof()
+                    ),
+                ));
+            }
+            let (tx, rx) = mpsc::channel();
+            match pool.submit(id, key, rhs, tx) {
+                Submit::Accepted { .. } => match rx.recv() {
+                    Ok(reply) => match reply.outcome {
+                        Ok(ok) => {
+                            let report = CgReport {
+                                iterations: ok.iterations,
+                                final_rnorm: ok.rnorm,
+                                rnorms: Vec::new(),
+                                rtz1: 0.0,
+                                glsc3_sweeps: 0,
+                            };
+                            resp_solve_ok(id, &ok.operator, reply.shard, &report, &ok.x)
+                        }
+                        Err(e) => {
+                            let kind = match e {
+                                Error::Config(_) => ERR_BAD_REQUEST,
+                                _ => ERR_SOLVE_FAILED,
+                            };
+                            resp_error(id, kind, &e.to_string())
+                        }
+                    },
+                    Err(_) => resp_error(id, ERR_SOLVE_FAILED, "worker dropped the request"),
+                },
+                Submit::Overloaded { shard } => resp_error(
+                    id,
+                    ERR_OVERLOADED,
+                    &format!("shard {shard} queue is full; retry later"),
+                ),
+                Submit::ShuttingDown => {
+                    resp_error(id, ERR_SHUTTING_DOWN, "server is draining; no new solves")
+                }
+            }
+        }
+    })
+}
+
+// --- SIGINT ---------------------------------------------------------------
+//
+// std exposes no signal API, and the no-new-dependencies rule rules out the
+// usual crates, so the CLI installs a classic `signal(2)` handler that only
+// flips an atomic — the accept loop and idle handlers poll it. Installed by
+// `nekbone serve` alone; library users and tests drive the stop flag
+// directly.
+
+static SIGINT: AtomicBool = AtomicBool::new(false);
+
+fn sigint_seen() -> bool {
+    SIGINT.load(Ordering::SeqCst)
+}
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_signum: i32) {
+    SIGINT.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT to a graceful drain (unix only; a no-op elsewhere).
+#[cfg(unix)]
+pub fn install_sigint_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT_NUM: i32 = 2;
+    unsafe {
+        signal(SIGINT_NUM, on_sigint as usize);
+    }
+}
+
+/// Route SIGINT to a graceful drain (unix only; a no-op elsewhere).
+#[cfg(not(unix))]
+pub fn install_sigint_handler() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> SessionPool {
+        SessionPool::new(PoolConfig { shards: 1, queue: 4, batch: 2 })
+    }
+
+    #[test]
+    fn respond_covers_the_refusal_paths() {
+        let p = pool();
+        let stop = AtomicBool::new(false);
+        // Garbage line => bad_request with id 0.
+        let r = respond("not json", &p, &stop, 9).unwrap();
+        let v = crate::json::parse(&r).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some(ERR_BAD_REQUEST));
+        // Unknown operator is refused before touching the pool.
+        let r = respond(
+            r#"{"op":"solve","id":5,"operator":"nope","n":2,"nelt":1,"rhs":[0,0,0,0,0,0,0,0]}"#,
+            &p,
+            &stop,
+            9,
+        )
+        .unwrap();
+        let v = crate::json::parse(&r).unwrap();
+        assert_eq!(v.get("id").unwrap().as_u64(), Some(5));
+        assert_eq!(v.get("error").unwrap().as_str(), Some(ERR_BAD_REQUEST));
+        // Mis-sized rhs likewise.
+        let r = respond(
+            r#"{"op":"solve","id":6,"operator":"cpu-layered","n":2,"nelt":1,"rhs":[1,2]}"#,
+            &p,
+            &stop,
+            9,
+        )
+        .unwrap();
+        let v = crate::json::parse(&r).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some(ERR_BAD_REQUEST));
+        p.shutdown();
+    }
+
+    #[test]
+    fn respond_solves_and_shuts_down() {
+        let p = pool();
+        let stop = AtomicBool::new(false);
+        let r = respond(r#"{"op":"ping","id":1}"#, &p, &stop, 9).unwrap();
+        assert_eq!(crate::json::parse(&r).unwrap().get("pong"), Some(&crate::json::Value::Bool(true)));
+
+        let rhs: Vec<String> = (0..54).map(|i| format!("{}", (i % 7) as f64 - 3.0)).collect();
+        let line = format!(
+            r#"{{"op":"solve","id":2,"operator":"cpu-layered","n":3,"nelt":2,"niter":8,"rhs":[{}]}}"#,
+            rhs.join(",")
+        );
+        let r = respond(&line, &p, &stop, 9).unwrap();
+        let v = crate::json::parse(&r).unwrap();
+        assert_eq!(v.get("ok"), Some(&crate::json::Value::Bool(true)), "{r}");
+        assert_eq!(v.get("x").unwrap().as_array().unwrap().len(), 54);
+
+        // `info` reflects the warm session.
+        let r = respond(r#"{"op":"info","id":3}"#, &p, &stop, 9).unwrap();
+        let v = crate::json::parse(&r).unwrap();
+        let stats = v.get("shard_stats").unwrap().as_array().unwrap();
+        let misses: u64 =
+            stats.iter().map(|s| s.get("cache_misses").unwrap().as_u64().unwrap()).sum();
+        assert_eq!(misses, 1);
+
+        // Shutdown flips the stop flag and begins the pool drain.
+        let r = respond(r#"{"op":"shutdown","id":4}"#, &p, &stop, 9).unwrap();
+        assert!(stop.load(Ordering::SeqCst));
+        assert_eq!(
+            crate::json::parse(&r).unwrap().get("draining"),
+            Some(&crate::json::Value::Bool(true))
+        );
+        // And further solves are refused.
+        let r = respond(&line, &p, &stop, 9).unwrap();
+        let v = crate::json::parse(&r).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some(ERR_SHUTTING_DOWN));
+        p.shutdown();
+    }
+
+    #[test]
+    fn from_args_validates() {
+        let args = |v: &[&str]| {
+            crate::cli::Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        };
+        assert!(ServeConfig::from_args(&args(&["serve", "--batch", "0"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["serve", "--niter", "0"])).is_err());
+        let s = ServeConfig::from_args(&args(&["serve", "--addr", "127.0.0.1:0"])).unwrap();
+        assert_eq!(s.addr, "127.0.0.1:0");
+    }
+}

@@ -1,0 +1,248 @@
+//! End-to-end serve-layer suite over real loopback TCP: concurrent-client
+//! conformance against serial [`SolveSession`] solves (bitwise), explicit
+//! backpressure under a saturated shard queue, and the graceful-drain
+//! lifecycle.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use nekbone::cli::Args;
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Nekbone;
+use nekbone::json::{parse, Value};
+use nekbone::rng::Rng;
+use nekbone::serve::{ServeConfig, ServeReport, Server};
+
+/// Boot a server on an OS-assigned loopback port with extra `serve` CLI
+/// options; returns (address, stop flag, join handle).
+fn start_server(extra: &[&str]) -> (String, Arc<AtomicBool>, JoinHandle<ServeReport>) {
+    let mut argv = vec!["serve".to_string(), "--addr".to_string(), "127.0.0.1:0".to_string()];
+    argv.extend(extra.iter().map(|s| s.to_string()));
+    let cfg = ServeConfig::from_args(&Args::parse(&argv).unwrap()).unwrap();
+    let server = Server::bind(&cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_flag();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, stop, handle)
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { writer: stream, reader }
+    }
+
+    fn exchange(&mut self, line: &str) -> Value {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        assert!(self.reader.read_line(&mut resp).unwrap() > 0, "server closed early");
+        parse(resp.trim()).unwrap()
+    }
+}
+
+fn solve_line(id: u64, op: &str, n: usize, nelt: usize, niter: usize, rhs: &[f64]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Value::String("solve".into()));
+    m.insert("id".to_string(), Value::Number(id as f64));
+    m.insert("operator".to_string(), Value::String(op.to_string()));
+    m.insert("n".to_string(), Value::Number(n as f64));
+    m.insert("nelt".to_string(), Value::Number(nelt as f64));
+    m.insert("niter".to_string(), Value::Number(niter as f64));
+    m.insert("rhs".to_string(), Value::Array(rhs.iter().map(|&x| Value::Number(x)).collect()));
+    Value::Object(m).dump()
+}
+
+/// The serve pool's exact build recipe for a request key — the oracle must
+/// construct the identical application state.
+fn oracle_config(n: usize, nelt: usize, niter: usize) -> RunConfig {
+    RunConfig { nelt, n, niter, chunk: nelt.max(1), ..RunConfig::default() }
+}
+
+#[test]
+fn interleaved_clients_match_serial_sessions_bitwise() {
+    // >= 3 distinct (operator, mesh) keys, each solved for several seeds.
+    let keys: [(&str, usize, usize); 3] =
+        [("cpu-layered", 3, 2), ("cpu-spec", 4, 2), ("cpu-layered", 4, 4)];
+    let niter = 8;
+    let seeds: [u64; 3] = [11, 12, 13];
+
+    // Serial oracle first: a borrowing SolveSession per key, repeated
+    // solves in seed order — the serving path must reproduce every bit.
+    let mut expected: BTreeMap<(usize, u64), (f64, Vec<u64>)> = BTreeMap::new();
+    for (ki, &(op, n, nelt)) in keys.iter().enumerate() {
+        let mut app =
+            Nekbone::builder(oracle_config(n, nelt, niter)).operator(op).build().unwrap();
+        let ndof = app.mesh().ndof_local();
+        let mut session = app.session();
+        for &seed in &seeds {
+            let rhs = Rng::new(seed).normal_vec(ndof);
+            let report = session.solve(&rhs).unwrap();
+            let xbits = session.solution().iter().map(|x| x.to_bits()).collect();
+            expected.insert((ki, seed), (report.final_rnorm, xbits));
+        }
+    }
+    let expected = Arc::new(expected);
+
+    let (addr, stop, server) = start_server(&["--shards", "2", "--queue", "16"]);
+    // >= 4 client threads, each interleaving all keys and seeds, so
+    // different meshes' requests overlap arbitrarily on the wire. Every
+    // client must see identical (serial-quality) answers.
+    let mut clients = Vec::new();
+    for c in 0..4u64 {
+        let addr = addr.clone();
+        let expected = Arc::clone(&expected);
+        clients.push(std::thread::spawn(move || {
+            let mut conn = Client::connect(&addr);
+            for round in 0..seeds.len() {
+                for (ki, &(op, n, nelt)) in keys.iter().enumerate() {
+                    // Stagger the order per client so key traffic truly
+                    // interleaves instead of marching in lockstep.
+                    let seed = seeds[(round + c as usize + ki) % seeds.len()];
+                    let rhs = Rng::new(seed).normal_vec(nelt * n * n * n);
+                    let id = c * 1000 + (ki * 10 + round) as u64;
+                    let v = conn.exchange(&solve_line(id, op, n, nelt, niter, &rhs));
+                    assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{op} n{n} e{nelt}");
+                    assert_eq!(v.get("id").unwrap().as_u64(), Some(id));
+                    assert_eq!(v.get("operator").unwrap().as_str(), Some(op));
+                    let (want_rnorm, want_bits) = &expected[&(ki, seed)];
+                    let rnorm = v.get("rnorm").unwrap().as_f64().unwrap();
+                    assert_eq!(rnorm.to_bits(), want_rnorm.to_bits(), "{op} n{n} e{nelt}");
+                    let x = v.get("x").unwrap().as_array().unwrap();
+                    assert_eq!(x.len(), want_bits.len());
+                    for (got, want) in x.iter().zip(want_bits.iter()) {
+                        assert_eq!(got.as_f64().unwrap().to_bits(), *want);
+                    }
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    let report = server.join().unwrap();
+    assert_eq!(report.connections, 4);
+    // Sessions were cached per key: exactly one warm-up per distinct key.
+    let misses: u64 = report.shards.iter().map(|s| s.cache_misses).sum();
+    let hits: u64 = report.shards.iter().map(|s| s.cache_hits).sum();
+    assert_eq!(misses, keys.len() as u64);
+    assert_eq!(hits + misses, (4 * keys.len() * seeds.len()) as u64);
+}
+
+#[test]
+fn saturated_shard_answers_overloaded_not_buffering() {
+    // One shard with a one-slot queue and deliberately heavy solves: a
+    // burst from 6 concurrent clients cannot all fit, and the ones that
+    // don't must be told so immediately — never queued without bound.
+    let (addr, stop, server) =
+        start_server(&["--shards", "1", "--queue", "1", "--batch", "1"]);
+    let (op, n, nelt, niter) = ("cpu-layered", 6, 4, 300);
+    let mut conns: Vec<Client> = (0..6).map(|_| Client::connect(&addr)).collect();
+    let results: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = conns
+            .iter_mut()
+            .enumerate()
+            .map(|(i, conn)| {
+                scope.spawn(move || {
+                    let rhs = Rng::new(i as u64).normal_vec(nelt * n * n * n);
+                    let v = conn.exchange(&solve_line(i as u64, op, n, nelt, niter, &rhs));
+                    match v.get("ok") {
+                        Some(Value::Bool(true)) => "ok".to_string(),
+                        _ => v.get("error").unwrap().as_str().unwrap().to_string(),
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let ok = results.iter().filter(|r| *r == "ok").count();
+    let overloaded = results.iter().filter(|r| *r == "overloaded").count();
+    assert!(ok >= 1, "at least the head of the burst solves: {results:?}");
+    assert!(overloaded >= 1, "a full one-slot queue must refuse: {results:?}");
+    assert_eq!(ok + overloaded, 6, "only ok/overloaded are acceptable: {results:?}");
+
+    stop.store(true, Ordering::SeqCst);
+    let report = server.join().unwrap();
+    assert!(report.shards[0].overloaded >= overloaded as u64);
+    // The depth gauge may transiently count the job a worker has popped
+    // but not yet marked served, so the bound is capacity + 1.
+    assert!(report.shards[0].max_depth <= 2, "queue depth must respect its bound");
+}
+
+#[test]
+fn shutdown_request_drains_and_refuses_new_work() {
+    let (addr, _stop, server) = start_server(&["--shards", "1", "--queue", "8"]);
+    let (op, n, nelt, niter) = ("cpu-layered", 3, 2, 6);
+    let rhs = Rng::new(7).normal_vec(nelt * n * n * n);
+
+    // A working connection, answered before the drain begins.
+    let mut worker = Client::connect(&addr);
+    let v = worker.exchange(&solve_line(1, op, n, nelt, niter, &rhs));
+    assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+
+    // A second connection asks the server to shut down…
+    let mut controller = Client::connect(&addr);
+    let ack = controller.exchange(r#"{"op":"shutdown","id":2}"#);
+    assert_eq!(ack.get("draining"), Some(&Value::Bool(true)));
+
+    // …after which the still-open first connection is refused new work:
+    // either an explicit shutting_down error, or — if its idle handler
+    // noticed the stop flag first — a prompt close. Never a hang, never a
+    // silently accepted solve.
+    let _ = writeln!(worker.writer, "{}", solve_line(3, op, n, nelt, niter, &rhs));
+    let _ = worker.writer.flush();
+    let mut resp = String::new();
+    let nread = worker.reader.read_line(&mut resp).unwrap_or(0);
+    if nread > 0 {
+        let v = parse(resp.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "{resp}");
+        assert_eq!(v.get("error").unwrap().as_str(), Some("shutting_down"));
+    }
+
+    // And the server itself exits cleanly, reporting both connections.
+    let report = server.join().unwrap();
+    assert_eq!(report.connections, 2);
+    assert_eq!(report.shards.iter().map(|s| s.requests).sum::<u64>(), 1);
+}
+
+#[test]
+fn protocol_misuse_gets_structured_errors_and_the_connection_survives() {
+    let (addr, stop, server) = start_server(&[]);
+    let mut conn = Client::connect(&addr);
+
+    let v = conn.exchange("this is not json");
+    assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    assert_eq!(v.get("error").unwrap().as_str(), Some("bad_request"));
+
+    let v = conn.exchange(r#"{"op":"solve","id":8,"operator":"no-such","n":3,"nelt":2,"rhs":[]}"#);
+    assert_eq!(v.get("error").unwrap().as_str(), Some("bad_request"));
+    assert!(v.get("detail").unwrap().as_str().unwrap().contains("no-such"));
+
+    // Mis-sized rhs names both counts (the session-boundary contract,
+    // surfaced through the wire).
+    let v = conn.exchange(r#"{"op":"solve","id":9,"operator":"cpu-layered","n":3,"nelt":2,"rhs":[1,2]}"#);
+    assert_eq!(v.get("error").unwrap().as_str(), Some("bad_request"));
+    let detail = v.get("detail").unwrap().as_str().unwrap().to_string();
+    assert!(detail.contains('2') && detail.contains("54"), "{detail}");
+
+    // The same connection still works after every refusal.
+    let v = conn.exchange(r#"{"op":"ping","id":10}"#);
+    assert_eq!(v.get("pong"), Some(&Value::Bool(true)));
+    let v = conn.exchange(r#"{"op":"info","id":11}"#);
+    assert!(v.get("operators").unwrap().as_array().unwrap().len() >= 10);
+
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap();
+}
