@@ -208,7 +208,8 @@ pub struct RooflineConfig {
 
 impl Default for RooflineConfig {
     /// The acceptance set: generic vs degree-specialized vs explicit-SIMD,
-    /// unfused and fused, at the paper's degree sweep.
+    /// unfused and fused, f64 and reduced-storage f32 twins, at the
+    /// paper's degree sweep.
     fn default() -> Self {
         RooflineConfig {
             operators: vec![
@@ -218,6 +219,12 @@ impl Default for RooflineConfig {
                 "cpu-layered-fused".into(),
                 "cpu-spec-fused".into(),
                 "cpu-simd-fused".into(),
+                "cpu-layered-f32".into(),
+                "cpu-spec-f32".into(),
+                "cpu-simd-f32".into(),
+                "cpu-layered-fused-f32".into(),
+                "cpu-spec-fused-f32".into(),
+                "cpu-simd-fused-f32".into(),
             ],
             degrees: vec![5, 9, 11],
             elements: 64,
@@ -465,19 +472,10 @@ mod tests {
 
     fn quick_cfg() -> RooflineConfig {
         RooflineConfig {
-            operators: vec![
-                "cpu-layered".into(),
-                "cpu-spec".into(),
-                "cpu-simd".into(),
-                "cpu-layered-fused".into(),
-                "cpu-spec-fused".into(),
-                "cpu-simd-fused".into(),
-            ],
             degrees: vec![3, 5],
             elements: 2,
-            threads: 0,
-            artifacts_dir: "artifacts".into(),
             quick: true,
+            ..RooflineConfig::default()
         }
     }
 
@@ -523,6 +521,47 @@ mod tests {
         }
         let table = render_table(&report);
         assert!(table.contains("cpu-spec"));
+    }
+
+    #[test]
+    fn f32_points_sit_higher_on_the_roofline_than_their_f64_siblings() {
+        // Reduced storage halves six of the eight per-point streams with
+        // an unchanged flop count, so each f32 point's arithmetic
+        // intensity must exceed its f64 sibling's by exactly the stream
+        // ratio: 64/40 unfused, 72/48 fused.
+        let report = run(&quick_cfg()).unwrap();
+        let by = |name: &str, n: usize| {
+            report
+                .points
+                .iter()
+                .find(|p| p.operator == name && p.degree == n)
+                .unwrap_or_else(|| panic!("missing point {name}/{n}"))
+                .clone()
+        };
+        for &n in &[3usize, 5] {
+            for (f32_name, f64_name, ratio) in [
+                ("cpu-layered-f32", "cpu-layered", 64.0 / 40.0),
+                ("cpu-spec-f32", "cpu-spec", 64.0 / 40.0),
+                ("cpu-simd-f32", "cpu-simd", 64.0 / 40.0),
+                ("cpu-layered-fused-f32", "cpu-layered-fused", 72.0 / 48.0),
+                ("cpu-spec-fused-f32", "cpu-spec-fused", 72.0 / 48.0),
+                ("cpu-simd-fused-f32", "cpu-simd-fused", 72.0 / 48.0),
+            ] {
+                let a = by(f32_name, n);
+                let b = by(f64_name, n);
+                assert!(
+                    a.intensity > b.intensity,
+                    "{f32_name}/{n}: {} must exceed {f64_name}'s {}",
+                    a.intensity,
+                    b.intensity
+                );
+                let got = a.intensity / b.intensity;
+                assert!(
+                    (got - ratio).abs() < 1e-9,
+                    "{f32_name}/{n}: intensity ratio {got} vs stream ratio {ratio}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -97,6 +97,8 @@ impl Args {
             ranks: self.get_usize("ranks", dflt.ranks)?,
             rtol: self.get_f64_opt("rtol")?,
             record_residuals: self.flag("record-residuals"),
+            precond: self.get("precond").unwrap_or(&dflt.precond).to_string(),
+            cheb_order: self.get_usize("cheb-order", dflt.cheb_order)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -148,6 +150,9 @@ const USAGE_TAIL: &str = "\
                      the fixed niter like Nekbone). Honored identically
                      by serial and ranked runs (one shared solver)
   --record-residuals record |r| every iteration
+  --precond P        none | jacobi | cheb          [none]
+  --cheb-order K     Chebyshev polynomial order for --precond cheb [4]
+                     (each CG iteration costs K-1 extra Ax sweeps)
   --no-comm          skip gather-scatter (roofline methodology)
   --no-mask          skip the Dirichlet mask
   --cpu-threads T    threads for cpu-threaded (0 = all cores)
@@ -157,8 +162,9 @@ const USAGE_TAIL: &str = "\
                      placed by flops()/bytes_moved() intensity) and write
                      BENCH_roofline.json-schema output to PATH. Honors
                      --backend (one operator; default: cpu-layered,
-                     cpu-spec, cpu-simd + fused twins), --n (one degree;
-                     default 5,9,11), --nelt, --cpu-threads and
+                     cpu-spec, cpu-simd, their fused twins and the
+                     reduced-storage -f32 twins of all six), --n (one
+                     degree; default 5,9,11), --nelt, --cpu-threads and
                      --artifacts
   --quick            roofline: smoke-test scale for --bench-json
 ";
@@ -285,6 +291,21 @@ mod tests {
         // Bad / non-positive tolerances are rejected at parse/validate.
         assert!(args(&["run", "--rtol", "tiny"]).run_config().is_err());
         assert!(args(&["run", "--rtol", "-1e-9"]).run_config().is_err());
+    }
+
+    #[test]
+    fn precond_options_from_args() {
+        let a = args(&["run", "--precond", "cheb", "--cheb-order", "6"]);
+        let cfg = a.run_config().unwrap();
+        assert_eq!(cfg.precond, "cheb");
+        assert_eq!(cfg.cheb_order, 6);
+        let d = args(&["run"]).run_config().unwrap();
+        assert_eq!(d.precond, "none");
+        assert_eq!(d.cheb_order, 4);
+        assert!(args(&["run", "--precond", "ilu"]).run_config().is_err());
+        assert!(args(&["run", "--precond", "cheb", "--cheb-order", "0"])
+            .run_config()
+            .is_err());
     }
 
     #[test]

@@ -34,6 +34,13 @@ pub struct RunConfig {
     /// Record the residual norm every iteration (costs one glsc3 sweep per
     /// iteration when `rtol` is not already paying for it).
     pub record_residuals: bool,
+    /// Preconditioner: `"none"` (Nekbone's unpreconditioned CG),
+    /// `"jacobi"` (assembled diagonal), or `"cheb"`
+    /// (Chebyshev-accelerated Jacobi).
+    pub precond: String,
+    /// Chebyshev polynomial order (only read when `precond == "cheb"`;
+    /// each CG iteration then costs `cheb_order - 1` extra Ax sweeps).
+    pub cheb_order: usize,
 }
 
 impl Default for RunConfig {
@@ -51,6 +58,8 @@ impl Default for RunConfig {
             ranks: 1,
             rtol: None,
             record_residuals: false,
+            precond: "none".into(),
+            cheb_order: 4,
         }
     }
 }
@@ -89,6 +98,17 @@ impl RunConfig {
                 return Err(Error::Config(format!("rtol must be positive, got {t}")));
             }
         }
+        match self.precond.as_str() {
+            "none" | "jacobi" | "cheb" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "precond must be none|jacobi|cheb, got {other:?}"
+                )));
+            }
+        }
+        if self.precond == "cheb" && self.cheb_order == 0 {
+            return Err(Error::Config("cheb-order must be >= 1".into()));
+        }
         Ok(())
     }
 }
@@ -120,6 +140,8 @@ mod tests {
             RunConfig { rtol: Some(0.0), ..Default::default() },
             RunConfig { rtol: Some(-1e-8), ..Default::default() },
             RunConfig { rtol: Some(f64::NAN), ..Default::default() },
+            RunConfig { precond: "ilu".into(), ..Default::default() },
+            RunConfig { precond: "cheb".into(), cheb_order: 0, ..Default::default() },
         ] {
             assert!(cfg.validate().is_err(), "{cfg:?}");
         }

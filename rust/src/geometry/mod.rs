@@ -25,6 +25,10 @@ use crate::basis::Basis;
 use crate::error::{Error, Result};
 use crate::mesh::Mesh;
 
+mod store;
+
+pub use store::{widen_into, GeomScalar, GeomStore, Precision};
+
 /// Geometric factors for every element, layout `[e][m][k][j][i]`, `m < 6`.
 #[derive(Clone, Debug)]
 pub struct GeomFactors {

@@ -1,0 +1,220 @@
+//! Storage precision for geometric factors — the mixed-precision seam.
+//!
+//! The Ax sweep is bandwidth-bound (the paper measures 77–92% of the
+//! roofline), and six of its eight per-point streams are geometric
+//! factors. HipBone (arXiv 2202.12477) showed that storing those factors
+//! in f32 while keeping **all arithmetic and accumulation in f64** moves
+//! the roofline itself: per grid point the unfused sweep drops from
+//! 64 to 40 bytes (72 → 48 fused), raising arithmetic intensity by 8/5
+//! (9/6 fused) at identical flop counts.
+//!
+//! This module is the one place that knows which widths exist:
+//!
+//! * [`GeomScalar`] — the sealed compile-time face. Kernels and operator
+//!   shells are generic over it; `f64` is the identity instantiation
+//!   (same codegen as before the refactor), `f32` converts once at
+//!   operator `setup` and is widened back per element inside the kernels.
+//! * [`Precision`] / [`GeomStore`] — the runtime face, for layers that
+//!   pick a width from a name (the worker pool, the registry).
+//!
+//! Accumulation precision is **not** negotiable here by design: every
+//! kernel computes in f64 regardless of the stored width, so the only
+//! error introduced is the one f32 rounding of each factor at setup.
+//! The conformance tier for this family (`ReducedStorage`) bounds
+//! exactly that.
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// A scalar type geometric factors may be *stored* in. Sealed: the
+/// conformance tiers and the stream accounting enumerate exactly these.
+pub trait GeomScalar: sealed::Sealed + Copy + Send + Sync + 'static {
+    /// Bytes each stored factor occupies (the stream-accounting input).
+    const STORED_BYTES: u64;
+    /// The runtime tag for this width.
+    const PRECISION: Precision;
+    /// Round a setup-time f64 factor to the stored width.
+    fn from_f64(x: f64) -> Self;
+    /// Widen a stored factor back to f64 for kernel arithmetic.
+    fn widen(self) -> f64;
+    /// Convert a full factor slice at setup (one-time cost).
+    fn convert(g: &[f64]) -> Vec<Self> {
+        g.iter().map(|&x| Self::from_f64(x)).collect()
+    }
+}
+
+impl GeomScalar for f64 {
+    const STORED_BYTES: u64 = 8;
+    const PRECISION: Precision = Precision::F64;
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self
+    }
+    fn convert(g: &[f64]) -> Vec<f64> {
+        g.to_vec()
+    }
+}
+
+impl GeomScalar for f32 {
+    const STORED_BYTES: u64 = 4;
+    const PRECISION: Precision = Precision::F32;
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self as f64
+    }
+}
+
+/// Widen one element's stored factors into an f64 scratch tile. For
+/// `S = f64` this is a plain copy (and the f64 operators skip it
+/// entirely); for `S = f32` it is the per-element widening step the
+/// mixed-precision kernels run before the unchanged f64 arithmetic.
+#[inline]
+pub fn widen_into<S: GeomScalar>(src: &[S], dst: &mut [f64]) {
+    assert_eq!(src.len(), dst.len(), "widen_into: length mismatch");
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = s.widen();
+    }
+}
+
+/// Runtime tag for a stored-factor width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// 8-byte factors — the historical default, bit-identical path.
+    F64,
+    /// 4-byte factors, f64 accumulation (HipBone-style mixed precision).
+    F32,
+}
+
+impl Precision {
+    /// Bytes per stored factor.
+    pub fn stored_bytes(self) -> u64 {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Precision::F64 => write!(f, "f64"),
+            Precision::F32 => write!(f, "f32"),
+        }
+    }
+}
+
+/// Owned geometric-factor storage at a runtime-chosen width. The layers
+/// that cannot be generic (the worker pool's per-worker slices, anything
+/// resolved by registry name) hold one of these.
+#[derive(Clone, Debug)]
+pub enum GeomStore {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+}
+
+impl GeomStore {
+    /// Convert setup-time f64 factors into the requested storage width —
+    /// the *single* narrowing point of the whole pipeline.
+    pub fn from_f64(g: &[f64], precision: Precision) -> Self {
+        match precision {
+            Precision::F64 => GeomStore::F64(g.to_vec()),
+            Precision::F32 => GeomStore::F32(g.iter().map(|&x| x as f32).collect()),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            GeomStore::F64(_) => Precision::F64,
+            GeomStore::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Bytes per stored factor (stream-accounting input).
+    pub fn stored_bytes(&self) -> u64 {
+        self.precision().stored_bytes()
+    }
+
+    /// Number of stored factors.
+    pub fn len(&self) -> usize {
+        match self {
+            GeomStore::F64(v) => v.len(),
+            GeomStore::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip_is_identity() {
+        let g = [1.0, -2.5, 1e300, -1e-300, 0.0];
+        let v = <f64 as GeomScalar>::convert(&g);
+        for (a, b) in g.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut wide = vec![0.0; g.len()];
+        widen_into(&v, &mut wide);
+        for (a, b) in g.iter().zip(&wide) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_narrowing_is_one_rounding() {
+        let g = [1.0 + 1e-10, std::f64::consts::PI, -0.1];
+        let v = <f32 as GeomScalar>::convert(&g);
+        let mut wide = vec![0.0; g.len()];
+        widen_into(&v, &mut wide);
+        for (orig, w) in g.iter().zip(&wide) {
+            // One rounding to 24-bit mantissa: relative error <= 2^-24.
+            assert!(
+                (orig - w).abs() <= orig.abs() * 6.0e-8,
+                "widened {w} too far from {orig}"
+            );
+            // And widening is exact (f32 -> f64 is lossless).
+            assert_eq!(*w, (*orig as f32) as f64);
+        }
+    }
+
+    #[test]
+    fn store_tags_and_bytes() {
+        let g = [1.0, 2.0, 3.0];
+        let s64 = GeomStore::from_f64(&g, Precision::F64);
+        let s32 = GeomStore::from_f64(&g, Precision::F32);
+        assert_eq!(s64.precision(), Precision::F64);
+        assert_eq!(s32.precision(), Precision::F32);
+        assert_eq!(s64.stored_bytes(), 8);
+        assert_eq!(s32.stored_bytes(), 4);
+        assert_eq!(s64.len(), 3);
+        assert_eq!(s32.len(), 3);
+        assert!(!s32.is_empty());
+        assert_eq!(Precision::F64.to_string(), "f64");
+        assert_eq!(Precision::F32.to_string(), "f32");
+    }
+
+    #[test]
+    fn scalar_consts_match_runtime_tags() {
+        assert_eq!(<f64 as GeomScalar>::STORED_BYTES, Precision::F64.stored_bytes());
+        assert_eq!(<f32 as GeomScalar>::STORED_BYTES, Precision::F32.stored_bytes());
+        assert_eq!(<f64 as GeomScalar>::PRECISION, Precision::F64);
+        assert_eq!(<f32 as GeomScalar>::PRECISION, Precision::F32);
+    }
+}

@@ -15,8 +15,9 @@
 //! sums in element-range order for the same reason.
 
 use crate::error::{Error, Result};
+use crate::geometry::{widen_into, GeomScalar};
 use crate::operators::layered::{ax_layered_element, LayeredScratch};
-use crate::operators::{ax_bytes_moved, fused_ax_flops, AxOperator, OperatorCtx};
+use crate::operators::{ax_bytes_moved_stored, fused_ax_flops, AxOperator, OperatorCtx};
 
 /// Layered local Ax with the pap reduction fused in: computes
 /// `w = A_local(u)` exactly as [`super::ax_layered`] (bit-identical output)
@@ -62,39 +63,81 @@ pub fn ax_layered_fused(
     pap
 }
 
-/// Unified fused single-thread CPU-kernel signature
-/// (`ax_layered_fused`, `ax_spec_fused`, `ax_simd_fused`).
-pub(crate) type FusedCpuKernel =
-    fn(usize, usize, &[f64], &[f64], &[f64], &[f64], &mut [f64]) -> f64;
+/// Fused layered Ax+pap over geometric factors stored at width `S`: each
+/// element's factors widen into one L1-resident f64 tile, then the
+/// unchanged f64 element kernel and the linear-dof-order pap reduction
+/// run exactly as [`ax_layered_fused`] (the `::<f64>` instantiation is
+/// bit-identical to it).
+pub fn ax_layered_fused_store<S: GeomScalar>(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[S],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(c.len(), nelt * np);
+    assert_eq!(w.len(), nelt * np);
+
+    let mut scratch = LayeredScratch::new(n);
+    let mut ge64 = vec![0.0f64; 6 * np];
+    let mut pap = 0.0;
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        widen_into(&g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+        let ce = &c[e * np..(e + 1) * np];
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_layered_element(n, d, ue, &ge64, we, &mut scratch);
+        let mut pap_e = 0.0;
+        for ((wi, ci), ui) in we.iter().zip(ce).zip(ue) {
+            pap_e += wi * ci * ui;
+        }
+        pap += pap_e;
+    }
+    pap
+}
+
+/// Unified fused single-thread CPU-kernel signature over stored factor
+/// width `S` (`ax_layered_fused`, `ax_spec_fused`, `ax_simd_fused` at
+/// `S = f64`; their `*_store::<f32>` / `_f32` twins at `S = f32`).
+pub(crate) type FusedCpuKernel<S> =
+    fn(usize, usize, &[f64], &[f64], &[S], &[f64], &mut [f64]) -> f64;
 
 /// A fused single-thread CPU schedule behind the operator trait:
 /// `cpu-layered-fused` (the generic layered kernel), `cpu-spec-fused`
 /// (degree-specialized, falls back to layered out of range), and
 /// `cpu-simd-fused` (explicit AVX2+FMA with runtime dispatch and a scalar
-/// fallback). `last_pap()` is `glsc3(w, c, u)` of the most recent apply,
-/// with `c` as captured at setup.
-pub(crate) struct FusedCpuOp {
+/// fallback) — plus their `-f32` twins, which store the geometric factors
+/// at 4 bytes (converted once at setup) and accumulate in f64.
+/// `last_pap()` is `glsc3(w, c, u)` of the most recent apply, with `c` as
+/// captured at setup.
+pub(crate) struct FusedCpuOp<S: GeomScalar> {
     label: &'static str,
-    kernel: FusedCpuKernel,
-    st: Option<FusedState>,
+    kernel: FusedCpuKernel<S>,
+    st: Option<FusedState<S>>,
     last_pap: Option<f64>,
 }
 
-struct FusedState {
+struct FusedState<S> {
     n: usize,
     nelt: usize,
     d: Vec<f64>,
-    g: Vec<f64>,
+    g: Vec<S>,
     c: Vec<f64>,
 }
 
-impl FusedCpuOp {
-    pub(crate) fn new(label: &'static str, kernel: FusedCpuKernel) -> Self {
+impl<S: GeomScalar> FusedCpuOp<S> {
+    pub(crate) fn new(label: &'static str, kernel: FusedCpuKernel<S>) -> Self {
         FusedCpuOp { label, kernel, st: None, last_pap: None }
     }
 }
 
-impl AxOperator for FusedCpuOp {
+impl<S: GeomScalar> AxOperator for FusedCpuOp<S> {
     fn label(&self) -> String {
         self.label.into()
     }
@@ -105,7 +148,7 @@ impl AxOperator for FusedCpuOp {
             n: ctx.n,
             nelt: ctx.nelt,
             d: ctx.d.to_vec(),
-            g: ctx.g.to_vec(),
+            g: S::convert(ctx.g),
             c: ctx.c.to_vec(),
         });
         self.last_pap = None;
@@ -127,7 +170,7 @@ impl AxOperator for FusedCpuOp {
     }
 
     fn bytes_moved(&self) -> u64 {
-        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, true))
+        self.st.as_ref().map_or(0, |s| ax_bytes_moved_stored(s.n, s.nelt, true, S::STORED_BYTES))
     }
 
     fn is_fused(&self) -> bool {
@@ -181,6 +224,23 @@ mod tests {
             let want = glsc3(&w, &c, &u);
             assert_allclose(&[pap], &[want], 1e-11, 1e-11);
         }
+    }
+
+    #[test]
+    fn fused_store_f64_is_bit_identical() {
+        let mut cases = Cases::new(0xF3);
+        let (n, nelt) = (6, 3);
+        let np = n * n * n;
+        let u = cases.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = cases.vec_normal(nelt * 6 * np);
+        let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
+        let mut w_f = vec![0.0; nelt * np];
+        let pap_f = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut w_f);
+        let mut w_s = vec![123.0; nelt * np];
+        let pap_s = ax_layered_fused_store::<f64>(n, nelt, &u, &d, &g, &c, &mut w_s);
+        assert_eq!(w_s, w_f);
+        assert_eq!(pap_s.to_bits(), pap_f.to_bits());
     }
 
     #[test]

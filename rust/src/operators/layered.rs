@@ -6,6 +6,8 @@
 //! per-element accumulator — the same dataflow as the CUDA kernel and the
 //! Pallas kernel (`ax_layered.py`), with no full-size intermediates.
 
+use crate::geometry::{widen_into, GeomScalar};
+
 /// Per-layer tiles of the layered schedule (the CUDA kernel's
 /// shared-memory arrays), allocated once and reused across elements so the
 /// per-element routine stays alloc-free.
@@ -128,6 +130,38 @@ pub fn ax_layered(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mu
     }
 }
 
+/// Layered schedule over geometric factors *stored* at width `S`
+/// (mixed-precision seam; see [`crate::geometry::GeomScalar`]). Each
+/// element's `6 n^3` factors are widened into one reusable f64 tile —
+/// L1-resident, so the memory traffic stays at the stored width — and the
+/// arithmetic then runs the unchanged f64 [`ax_layered_element`], giving
+/// the exact per-point operation order of the f64 path by construction.
+/// `ax_layered_store::<f64>` is bit-identical to [`ax_layered`] (widening
+/// an f64 is the identity).
+pub fn ax_layered_store<S: GeomScalar>(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[S],
+    w: &mut [f64],
+) {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(w.len(), nelt * np);
+
+    let mut scratch = LayeredScratch::new(n);
+    let mut ge64 = vec![0.0f64; 6 * np];
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        widen_into(&g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_layered_element(n, d, ue, &ge64, we, &mut scratch);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +181,41 @@ mod tests {
         let mut got = vec![0.0; nelt * np];
         ax_layered(n, nelt, &u, &d, &g, &mut got);
         assert_allclose(&got, &want, 1e-11, 1e-11);
+    }
+
+    #[test]
+    fn store_f64_is_bit_identical_to_plain_layered() {
+        let mut c = Cases::new(44);
+        let (n, nelt) = (6, 3);
+        let np = n * n * n;
+        let u = c.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * np);
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        let mut got = vec![123.0; nelt * np];
+        ax_layered_store::<f64>(n, nelt, &u, &d, &g, &mut got);
+        assert_eq!(got, want, "f64 store must be the identity instantiation");
+    }
+
+    #[test]
+    fn store_f32_matches_f64_within_reduced_band() {
+        let mut c = Cases::new(45);
+        let (n, nelt) = (8, 2);
+        let np = n * n * n;
+        let u = c.vec_normal(nelt * np);
+        let d = crate::basis::derivative_matrix(n);
+        let g = c.vec_normal(nelt * 6 * np);
+        let g32: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g, &mut want);
+        let mut got = vec![0.0; nelt * np];
+        ax_layered_store::<f32>(n, nelt, &u, &d, &g32, &mut got);
+        let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+        for (idx, (a, b)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-5 * (b.abs() + scale);
+            assert!((a - b).abs() <= tol, "point {idx}: {a} vs {b} (tol {tol:e})");
+        }
     }
 
     #[test]

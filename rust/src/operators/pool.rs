@@ -17,8 +17,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
-use crate::operators::simd::{ax_simd, ax_simd_fused};
-use crate::operators::{ax_bytes_moved, ax_flops, fused_ax_flops, AxOperator, OperatorCtx};
+use crate::geometry::{GeomStore, Precision};
+use crate::operators::simd::{ax_simd, ax_simd_f32, ax_simd_fused, ax_simd_fused_f32};
+use crate::operators::{
+    ax_bytes_moved_stored, ax_flops, fused_ax_flops, AxOperator, OperatorCtx,
+};
 
 /// Raw slice bounds shipped to a worker. The pointers are only
 /// dereferenced between job receipt and the completion signal, while the
@@ -73,10 +76,9 @@ pub(crate) fn element_counts(nelt: usize, nworkers: usize) -> Vec<usize> {
 }
 
 impl WorkerPool {
-    /// Spawn `nworkers` workers for an `nelt`-element problem. Each worker
-    /// clones only its own element range of `g` (and `c`, when present), so
-    /// the pool's total copy is the same size as a single-threaded
-    /// operator's. Pass an empty `c` for pools that will never run fused.
+    /// Spawn `nworkers` workers for an `nelt`-element problem with f64
+    /// factor storage (the historical entry point; see
+    /// [`WorkerPool::spawn_stored`]).
     pub fn spawn(
         n: usize,
         nelt: usize,
@@ -84,6 +86,24 @@ impl WorkerPool {
         d: &[f64],
         g: &[f64],
         c: &[f64],
+    ) -> Self {
+        Self::spawn_stored(n, nelt, nworkers, d, g, c, Precision::F64)
+    }
+
+    /// Spawn `nworkers` workers holding their geometric factors at the
+    /// requested storage width (narrowed once here, the pool's single
+    /// conversion point). Each worker clones only its own element range of
+    /// `g` (and `c`, when present), so the pool's total copy is the same
+    /// size as a single-threaded operator's. Pass an empty `c` for pools
+    /// that will never run fused.
+    pub fn spawn_stored(
+        n: usize,
+        nelt: usize,
+        nworkers: usize,
+        d: &[f64],
+        g: &[f64],
+        c: &[f64],
+        precision: Precision,
     ) -> Self {
         let np = n * n * n;
         let has_weights = !c.is_empty();
@@ -95,7 +115,7 @@ impl WorkerPool {
             let (job_tx, job_rx) = channel::<Job>();
             let (done_tx, done_rx) = channel::<f64>();
             let d = d.to_vec();
-            let g = g[e0 * 6 * np..(e0 + count) * 6 * np].to_vec();
+            let g = GeomStore::from_f64(&g[e0 * 6 * np..(e0 + count) * 6 * np], precision);
             let c = if c.is_empty() { Vec::new() } else { c[e0 * np..(e0 + count) * np].to_vec() };
             let handle = std::thread::spawn(move || {
                 while let Ok(job) = job_rx.recv() {
@@ -107,16 +127,25 @@ impl WorkerPool {
                     let w = unsafe { std::slice::from_raw_parts_mut(job.w, job.len) };
                     // Explicit-SIMD dispatch (the AVX2+FMA arm when the
                     // host supports it, the degree-specialized scalar
-                    // family otherwise), so `cpu-threaded*` picks the
-                    // vector kernels up automatically. Both arms are
-                    // deterministic and every worker takes the same arm,
-                    // so pooled output is bit-identical to a single-thread
-                    // `ax_simd` over the same mesh.
-                    let pap = if job.fused {
-                        ax_simd_fused(n, count, u, &d, &g, &c, w)
-                    } else {
-                        ax_simd(n, count, u, &d, &g, w);
-                        0.0
+                    // family otherwise), at the worker's stored factor
+                    // width, so `cpu-threaded*` picks the vector kernels
+                    // up automatically. Both arms are deterministic and
+                    // every worker takes the same arm, so pooled output is
+                    // bit-identical to a single-thread `ax_simd` (or
+                    // `ax_simd_f32`) over the same mesh.
+                    let pap = match (&g, job.fused) {
+                        (GeomStore::F64(g), true) => ax_simd_fused(n, count, u, &d, g, &c, w),
+                        (GeomStore::F32(g), true) => {
+                            ax_simd_fused_f32(n, count, u, &d, g, &c, w)
+                        }
+                        (GeomStore::F64(g), false) => {
+                            ax_simd(n, count, u, &d, g, w);
+                            0.0
+                        }
+                        (GeomStore::F32(g), false) => {
+                            ax_simd_f32(n, count, u, &d, g, w);
+                            0.0
+                        }
                     };
                     if done_tx.send(pap).is_err() {
                         break; // pool dropped mid-job
@@ -215,13 +244,15 @@ impl Drop for WorkerPool {
     }
 }
 
-/// `cpu-threaded` / `cpu-threaded-fused`: the explicit-SIMD kernel family
-/// ([`ax_simd`], scalar fallback included) across a persistent
-/// [`WorkerPool`]. Workers spawn once at `setup` and are reused by every
-/// `apply` (no per-apply thread creation).
+/// `cpu-threaded` / `cpu-threaded-fused` and their `-f32` twins: the
+/// explicit-SIMD kernel family ([`ax_simd`] / [`ax_simd_f32`], scalar
+/// fallback included) across a persistent [`WorkerPool`] holding factors
+/// at the operator's storage width. Workers spawn once at `setup` and are
+/// reused by every `apply` (no per-apply thread creation).
 pub(crate) struct PooledOp {
     label: &'static str,
     fused: bool,
+    precision: Precision,
     st: Option<PooledState>,
     last_pap: Option<f64>,
 }
@@ -233,8 +264,8 @@ struct PooledState {
 }
 
 impl PooledOp {
-    pub(crate) fn new(label: &'static str, fused: bool) -> Self {
-        PooledOp { label, fused, st: None, last_pap: None }
+    pub(crate) fn new(label: &'static str, fused: bool, precision: Precision) -> Self {
+        PooledOp { label, fused, precision, st: None, last_pap: None }
     }
 
     /// The live worker count (0 before setup) — test hook for the
@@ -258,7 +289,15 @@ impl AxOperator for PooledOp {
         self.st = Some(PooledState {
             n: ctx.n,
             nelt: ctx.nelt,
-            pool: WorkerPool::spawn(ctx.n, ctx.nelt, nworkers, ctx.d, ctx.g, c),
+            pool: WorkerPool::spawn_stored(
+                ctx.n,
+                ctx.nelt,
+                nworkers,
+                ctx.d,
+                ctx.g,
+                c,
+                self.precision,
+            ),
         });
         self.last_pap = None;
         Ok(())
@@ -288,7 +327,9 @@ impl AxOperator for PooledOp {
     }
 
     fn bytes_moved(&self) -> u64 {
-        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, self.fused))
+        self.st.as_ref().map_or(0, |s| {
+            ax_bytes_moved_stored(s.n, s.nelt, self.fused, self.precision.stored_bytes())
+        })
     }
 
     fn is_fused(&self) -> bool {
@@ -371,7 +412,7 @@ mod tests {
         let (n, nelt) = (3, 4);
         let (u, d, g, c) = inputs(14, n, nelt);
         let np = n * n * n;
-        let mut op = PooledOp::new("cpu-threaded", false);
+        let mut op = PooledOp::new("cpu-threaded", false, Precision::F64);
         assert_eq!(op.nworkers(), 0, "no workers before setup");
         op.setup(&OperatorCtx {
             n,
@@ -392,6 +433,36 @@ mod tests {
             op.apply(&u, &mut w).unwrap();
             assert_eq!(w, want);
             assert_eq!(op.nworkers(), 2, "applies reuse the same workers");
+        }
+    }
+
+    #[test]
+    fn f32_pool_matches_single_thread_f32_bit_identical() {
+        // The pooled f32 path must be the single-thread `ax_simd_f32` cut
+        // into ranges — same per-worker narrowing as the whole-mesh
+        // narrowing (element-aligned ranges, pointwise conversion), so
+        // output is bitwise equal for any worker count, and the fused pap
+        // partials reduce in element-range order.
+        let (n, nelt) = (4, 7);
+        let (u, d, g, c) = inputs(18, n, nelt);
+        let np = n * n * n;
+        let g32: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+        let mut want_w = vec![0.0; nelt * np];
+        ax_simd_f32(n, nelt, &u, &d, &g32, &mut want_w);
+        let mut want_fused = vec![0.0; nelt * np];
+        let want_pap = ax_simd_fused_f32(n, nelt, &u, &d, &g32, &c, &mut want_fused);
+        for nworkers in [1, 2, 3, 7] {
+            let pool = WorkerPool::spawn_stored(n, nelt, nworkers, &d, &g, &c, Precision::F32);
+            let mut w = vec![0.0; nelt * np];
+            pool.run(&u, &mut w, false).unwrap();
+            assert_eq!(w, want_w, "unfused, nworkers={nworkers}");
+            let pap = pool.run(&u, &mut w, true).unwrap();
+            assert_eq!(w, want_fused, "fused, nworkers={nworkers}");
+            let denom = want_pap.abs().max(1e-30);
+            assert!(
+                (pap - want_pap).abs() / denom < 1e-12,
+                "nworkers={nworkers}: {pap} vs {want_pap}"
+            );
         }
     }
 

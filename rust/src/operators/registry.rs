@@ -14,13 +14,54 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
+use crate::geometry::{GeomScalar, Precision};
 use crate::operators::fused::FusedCpuOp;
 use crate::operators::pool::PooledOp;
 use crate::operators::{
-    ax_bytes_moved, ax_flops, ax_layered, ax_naive, ax_simd, ax_spec, fused_ax_flops, AxOperator,
-    OperatorCtx,
+    ax_bytes_moved, ax_bytes_moved_stored, ax_flops, ax_layered, ax_layered_store, ax_naive,
+    ax_simd, ax_simd_f32, ax_spec, ax_spec_store, fused_ax_flops, AxOperator, OperatorCtx,
 };
 use crate::runtime::{AxEngine, CgIterEngine, Manifest, XlaRuntime};
+
+/// The numerical-accuracy contract an operator declares against the f64
+/// reference family, checked operator-by-operator by the conformance suite
+/// (`tests/conformance.rs`). Tiers are ordered strict → loose.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PrecisionTier {
+    /// Bit-identical to the layered f64 reference schedule
+    /// ([`crate::operators::ax_layered`]): same per-point operation order,
+    /// same rounding, compared with `==` on every dof. The scalar ladder
+    /// (`cpu-layered`, `cpu-spec`, and their fused twins) lives here.
+    Exact,
+    /// Same f64 arithmetic up to instruction-level reassociation and FMA
+    /// contraction (the AVX2 arm, threaded reductions, XLA codegen):
+    /// `1e-11`-band agreement with the reference, the repo's historical
+    /// conformance tolerance.
+    FmaBand,
+    /// Geometric factors *stored* in f32 (one rounding per factor at
+    /// setup), all arithmetic still f64: agreement within the
+    /// cancellation-robust band `1e-5 * (|ref| + max|ref|)`. Only the
+    /// `-f32` operator family may declare this tier — the conformance
+    /// suite enforces the naming contract both ways.
+    ReducedStorage,
+}
+
+impl PrecisionTier {
+    /// Stable lower-case name (used in conformance reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PrecisionTier::Exact => "exact",
+            PrecisionTier::FmaBand => "fma-band",
+            PrecisionTier::ReducedStorage => "reduced-storage",
+        }
+    }
+}
+
+impl std::fmt::Display for PrecisionTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// The process-wide shared registry: the built-in operator family,
 /// constructed once (first call) and shared by every lookup site — the
@@ -41,13 +82,15 @@ pub fn registry() -> &'static OperatorRegistry {
 /// Constructor for a blank (un-setup) operator.
 pub type OperatorCtor = Box<dyn Fn() -> Box<dyn AxOperator> + Send + Sync>;
 
-/// One registered operator: canonical name, artifact requirement, and the
-/// constructor.
+/// One registered operator: canonical name, artifact requirement, declared
+/// precision tier, and the constructor.
 pub struct OperatorSpec {
     /// Canonical registry name (also the operator's label).
     pub name: String,
     /// Does the operator load AOT artifacts / the PJRT runtime?
     pub needs_artifacts: bool,
+    /// Accuracy contract vs the f64 reference (see [`PrecisionTier`]).
+    pub tier: PrecisionTier,
     ctor: OperatorCtor,
 }
 
@@ -66,6 +109,7 @@ impl std::fmt::Debug for OperatorSpec {
         f.debug_struct("OperatorSpec")
             .field("name", &self.name)
             .field("needs_artifacts", &self.needs_artifacts)
+            .field("tier", &self.tier)
             .finish_non_exhaustive()
     }
 }
@@ -92,49 +136,112 @@ impl OperatorRegistry {
 
     /// The built-in operator family: the CPU schedules (plain,
     /// degree-specialized, explicit-SIMD, fused, and worker-pool
-    /// threaded), the paper's five AOT kernel variants, and the fused
-    /// Ax+pap hot paths.
+    /// threaded), their `-f32` reduced-storage twins, the paper's five AOT
+    /// kernel variants, and the fused Ax+pap hot paths.
     pub fn with_builtins() -> Self {
+        use PrecisionTier::{Exact, FmaBand, ReducedStorage};
         let mut r = Self::empty();
         let must = |res: Result<()>| res.expect("builtin registration cannot clash");
-        must(r.register("cpu-naive", false, || Box::new(CpuOp::new("cpu-naive", kernel_naive))));
-        must(r.register("cpu-layered", false, || {
+        must(r.register_tiered("cpu-naive", false, FmaBand, || {
+            Box::new(CpuOp::new("cpu-naive", kernel_naive))
+        }));
+        must(r.register_tiered("cpu-layered", false, Exact, || {
             Box::new(CpuOp::new("cpu-layered", kernel_layered))
         }));
-        must(r.register("cpu-spec", false, || Box::new(CpuOp::new("cpu-spec", kernel_spec))));
-        must(r.register("cpu-simd", false, || Box::new(CpuOp::new("cpu-simd", kernel_simd))));
-        must(r.register("cpu-threaded", false, || {
-            Box::new(PooledOp::new("cpu-threaded", false))
+        must(r.register_tiered("cpu-spec", false, Exact, || {
+            Box::new(CpuOp::new("cpu-spec", kernel_spec))
         }));
-        must(r.register("cpu-layered-fused", false, || {
+        must(r.register_tiered("cpu-simd", false, FmaBand, || {
+            Box::new(CpuOp::new("cpu-simd", kernel_simd))
+        }));
+        must(r.register_tiered("cpu-threaded", false, FmaBand, || {
+            Box::new(PooledOp::new("cpu-threaded", false, Precision::F64))
+        }));
+        must(r.register_tiered("cpu-layered-fused", false, Exact, || {
             Box::new(FusedCpuOp::new("cpu-layered-fused", crate::operators::ax_layered_fused))
         }));
-        must(r.register("cpu-spec-fused", false, || {
+        must(r.register_tiered("cpu-spec-fused", false, Exact, || {
             Box::new(FusedCpuOp::new("cpu-spec-fused", crate::operators::ax_spec_fused))
         }));
-        must(r.register("cpu-simd-fused", false, || {
+        must(r.register_tiered("cpu-simd-fused", false, FmaBand, || {
             Box::new(FusedCpuOp::new("cpu-simd-fused", crate::operators::ax_simd_fused))
         }));
-        must(r.register("cpu-threaded-fused", false, || {
-            Box::new(PooledOp::new("cpu-threaded-fused", true))
+        must(r.register_tiered("cpu-threaded-fused", false, FmaBand, || {
+            Box::new(PooledOp::new("cpu-threaded-fused", true, Precision::F64))
+        }));
+        // The reduced-storage (f32 geometric factors, f64 accumulation)
+        // twins of the whole CPU ladder. Same schedules, 6 of the 8
+        // per-point streams at half width — the HipBone-style
+        // bandwidth/accuracy trade, declared via the ReducedStorage tier.
+        must(r.register_tiered("cpu-layered-f32", false, ReducedStorage, || {
+            Box::new(CpuOp::new("cpu-layered-f32", kernel_layered_f32))
+        }));
+        must(r.register_tiered("cpu-spec-f32", false, ReducedStorage, || {
+            Box::new(CpuOp::new("cpu-spec-f32", kernel_spec_f32))
+        }));
+        must(r.register_tiered("cpu-simd-f32", false, ReducedStorage, || {
+            Box::new(CpuOp::new("cpu-simd-f32", kernel_simd_f32))
+        }));
+        must(r.register_tiered("cpu-threaded-f32", false, ReducedStorage, || {
+            Box::new(PooledOp::new("cpu-threaded-f32", false, Precision::F32))
+        }));
+        must(r.register_tiered("cpu-layered-fused-f32", false, ReducedStorage, || {
+            Box::new(FusedCpuOp::new(
+                "cpu-layered-fused-f32",
+                crate::operators::ax_layered_fused_store::<f32>,
+            ))
+        }));
+        must(r.register_tiered("cpu-spec-fused-f32", false, ReducedStorage, || {
+            Box::new(FusedCpuOp::new(
+                "cpu-spec-fused-f32",
+                crate::operators::ax_spec_fused_store::<f32>,
+            ))
+        }));
+        must(r.register_tiered("cpu-simd-fused-f32", false, ReducedStorage, || {
+            Box::new(FusedCpuOp::new(
+                "cpu-simd-fused-f32",
+                crate::operators::ax_simd_fused_f32,
+            ))
+        }));
+        must(r.register_tiered("cpu-threaded-fused-f32", false, ReducedStorage, || {
+            Box::new(PooledOp::new("cpu-threaded-fused-f32", true, Precision::F32))
         }));
         for variant in ["jnp", "original", "shared", "layered", "layered_unroll2"] {
-            must(r.register(&xla_name(variant), true, move || {
+            must(r.register_tiered(&xla_name(variant), true, FmaBand, move || {
                 Box::new(XlaAxOp::new(variant))
             }));
         }
-        must(r.register("xla-fused-layered", true, || Box::new(XlaFusedOp::new("layered"))));
+        must(r.register_tiered("xla-fused-layered", true, FmaBand, || {
+            Box::new(XlaFusedOp::new("layered"))
+        }));
         must(r.alias("xla-openacc", "xla-jnp"));
         must(r.alias("xla-fused", "xla-fused-layered"));
         r
     }
 
-    /// Register a constructor under a canonical name. Errors if the name
-    /// (or an alias of it) is already taken.
+    /// Register a constructor under a canonical name, at the default
+    /// [`PrecisionTier::FmaBand`] accuracy contract (right for anything
+    /// that does full f64 arithmetic without promising the reference's
+    /// exact operation order). Errors if the name (or an alias of it) is
+    /// already taken.
     pub fn register(
         &mut self,
         name: &str,
         needs_artifacts: bool,
+        ctor: impl Fn() -> Box<dyn AxOperator> + Send + Sync + 'static,
+    ) -> Result<()> {
+        self.register_tiered(name, needs_artifacts, PrecisionTier::FmaBand, ctor)
+    }
+
+    /// [`OperatorRegistry::register`] with an explicit precision tier. The
+    /// conformance suite holds every registered operator to its declared
+    /// tier, and rejects [`PrecisionTier::ReducedStorage`] claims from
+    /// operators whose name does not end in `-f32`.
+    pub fn register_tiered(
+        &mut self,
+        name: &str,
+        needs_artifacts: bool,
+        tier: PrecisionTier,
         ctor: impl Fn() -> Box<dyn AxOperator> + Send + Sync + 'static,
     ) -> Result<()> {
         if self.specs.contains_key(name) || self.aliases.contains_key(name) {
@@ -145,7 +252,7 @@ impl OperatorRegistry {
         }
         self.specs.insert(
             name.to_string(),
-            OperatorSpec { name: name.to_string(), needs_artifacts, ctor: Box::new(ctor) },
+            OperatorSpec { name: name.to_string(), needs_artifacts, tier, ctor: Box::new(ctor) },
         );
         Ok(())
     }
@@ -244,18 +351,20 @@ fn xla_name(variant: &str) -> String {
 // CPU operators
 // ---------------------------------------------------------------------------
 
-/// Shape + cloned mesh data shared by the single-thread CPU operators.
-struct CpuState {
+/// Shape + cloned mesh data shared by the single-thread CPU operators,
+/// with the geometric factors held at storage width `S` (converted once
+/// from the caller's f64 slice at capture — the mixed-precision seam).
+struct CpuState<S> {
     n: usize,
     nelt: usize,
     d: Vec<f64>,
-    g: Vec<f64>,
+    g: Vec<S>,
 }
 
-impl CpuState {
+impl<S: GeomScalar> CpuState<S> {
     fn capture(ctx: &OperatorCtx) -> Result<Self> {
         crate::operators::check_setup_shapes(ctx, false)?;
-        Ok(CpuState { n: ctx.n, nelt: ctx.nelt, d: ctx.d.to_vec(), g: ctx.g.to_vec() })
+        Ok(CpuState { n: ctx.n, nelt: ctx.nelt, d: ctx.d.to_vec(), g: S::convert(ctx.g) })
     }
 }
 
@@ -263,8 +372,9 @@ fn not_setup(label: &str) -> Error {
     Error::Config(format!("operator {label:?} used before setup"))
 }
 
-/// Unified single-thread CPU-kernel signature.
-type CpuKernel = fn(usize, usize, &[f64], &[f64], &[f64], &mut [f64]);
+/// Unified single-thread CPU-kernel signature over stored factor width
+/// `S` (f64 for the classic family, f32 for the reduced-storage twins).
+type CpuKernel<S> = fn(usize, usize, &[f64], &[f64], &[S], &mut [f64]);
 
 fn kernel_naive(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [f64]) {
     ax_naive(n, nelt, u, d, g, w);
@@ -282,28 +392,41 @@ fn kernel_simd(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f64], w: &mut [
     ax_simd(n, nelt, u, d, g, w);
 }
 
+fn kernel_layered_f32(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f32], w: &mut [f64]) {
+    ax_layered_store::<f32>(n, nelt, u, d, g, w);
+}
+
+fn kernel_spec_f32(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f32], w: &mut [f64]) {
+    ax_spec_store::<f32>(n, nelt, u, d, g, w);
+}
+
+fn kernel_simd_f32(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f32], w: &mut [f64]) {
+    ax_simd_f32(n, nelt, u, d, g, w);
+}
+
 /// A single-thread CPU schedule behind the operator trait: `cpu-naive`
 /// (Listing-1 structure, full-size intermediates), `cpu-layered` (the
 /// paper's schedule), `cpu-spec` (degree-specialized unrolled kernels,
 /// layered fallback out of range), `cpu-simd` (explicit AVX2+FMA kernels,
-/// runtime-dispatched with a scalar fallback). The threaded variants
-/// (`cpu-threaded`, `cpu-threaded-fused`) live in
-/// [`crate::operators::pool`] on a persistent worker pool; the fused
-/// single-thread variants (`cpu-layered-fused`, `cpu-spec-fused`,
-/// `cpu-simd-fused`) in [`crate::operators::fused`].
-struct CpuOp {
+/// runtime-dispatched with a scalar fallback) — and their `-f32` twins,
+/// which hold the geometric factors at 4 bytes (converted once at setup)
+/// and report the correspondingly smaller stream traffic. The threaded
+/// variants (`cpu-threaded*`) live in [`crate::operators::pool`] on a
+/// persistent worker pool; the fused single-thread variants
+/// (`cpu-*-fused*`) in [`crate::operators::fused`].
+struct CpuOp<S: GeomScalar> {
     label: &'static str,
-    kernel: CpuKernel,
-    st: Option<CpuState>,
+    kernel: CpuKernel<S>,
+    st: Option<CpuState<S>>,
 }
 
-impl CpuOp {
-    fn new(label: &'static str, kernel: CpuKernel) -> Self {
+impl<S: GeomScalar> CpuOp<S> {
+    fn new(label: &'static str, kernel: CpuKernel<S>) -> Self {
         CpuOp { label, kernel, st: None }
     }
 }
 
-impl AxOperator for CpuOp {
+impl<S: GeomScalar> AxOperator for CpuOp<S> {
     fn label(&self) -> String {
         self.label.into()
     }
@@ -325,7 +448,9 @@ impl AxOperator for CpuOp {
     }
 
     fn bytes_moved(&self) -> u64 {
-        self.st.as_ref().map_or(0, |s| ax_bytes_moved(s.n, s.nelt, false))
+        self.st
+            .as_ref()
+            .map_or(0, |s| ax_bytes_moved_stored(s.n, s.nelt, false, S::STORED_BYTES))
     }
 }
 
@@ -569,6 +694,14 @@ mod tests {
             "cpu-spec-fused",
             "cpu-simd-fused",
             "cpu-threaded-fused",
+            "cpu-layered-f32",
+            "cpu-spec-f32",
+            "cpu-simd-f32",
+            "cpu-threaded-f32",
+            "cpu-layered-fused-f32",
+            "cpu-spec-fused-f32",
+            "cpu-simd-fused-f32",
+            "cpu-threaded-fused-f32",
             "xla-jnp",
             "xla-original",
             "xla-shared",
@@ -582,6 +715,39 @@ mod tests {
         // Aliases resolve to their canonical entries.
         assert_eq!(r.resolve("xla-openacc").unwrap().name, "xla-jnp");
         assert_eq!(r.resolve("xla-fused").unwrap().name, "xla-fused-layered");
+    }
+
+    #[test]
+    fn tiers_match_storage_and_schedule() {
+        let r = OperatorRegistry::with_builtins();
+        // The ReducedStorage tier and the `-f32` name suffix imply each
+        // other — the contract the conformance coverage check enforces for
+        // third-party registrations too.
+        for name in r.names() {
+            let spec = r.resolve(&name).unwrap();
+            assert_eq!(
+                spec.tier == PrecisionTier::ReducedStorage,
+                name.ends_with("-f32"),
+                "{name}: tier {} breaks the -f32 naming contract",
+                spec.tier
+            );
+        }
+        // The scalar ladder promises bitwise agreement with the layered
+        // reference; everything simd/threaded/XLA sits in the FMA band.
+        for name in ["cpu-layered", "cpu-spec", "cpu-layered-fused", "cpu-spec-fused"] {
+            assert_eq!(r.resolve(name).unwrap().tier, PrecisionTier::Exact, "{name}");
+        }
+        for name in ["cpu-naive", "cpu-simd", "cpu-threaded", "xla-layered", "xla-fused-layered"]
+        {
+            assert_eq!(r.resolve(name).unwrap().tier, PrecisionTier::FmaBand, "{name}");
+        }
+        // Plain `register` defaults new operators to the FMA band.
+        let mut r = OperatorRegistry::with_builtins();
+        r.register("test-default-tier", false, || {
+            Box::new(CpuOp::new("test-default-tier", kernel_layered))
+        })
+        .unwrap();
+        assert_eq!(r.resolve("test-default-tier").unwrap().tier, PrecisionTier::FmaBand);
     }
 
     #[test]
@@ -697,13 +863,24 @@ mod tests {
             assert_eq!(op.last_pap(), None, "{name}: no pap before first apply");
             let mut w = vec![0.0; nelt * np];
             op.apply(&u, &mut w).unwrap();
-            assert_allclose(&w, &want, 1e-11, 1e-11);
-            let pap = op.last_pap().expect("fused apply must produce pap");
-            // Term-scaled tolerance (see `assert_pap_close`): the
-            // simd-dispatched operators differ from the layered want by
-            // FMA rounding, and a cancelling signed sum must not blow up
-            // a plain relative check.
-            crate::proputil::assert_pap_close(pap, want_pap, &w, &c, &u, 1e-12, name);
+            if name.ends_with("-f32") {
+                // Reduced-storage band vs the f64 reference output …
+                let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+                for (a, b) in w.iter().zip(&want) {
+                    assert!((a - b).abs() <= 1e-5 * (b.abs() + scale), "{name}: {a} vs {b}");
+                }
+                // … but the fused contract — pap is glsc3 of the
+                // operator's *own* output — holds at full f64 strictness.
+                let own_pap = crate::solver::glsc3(&w, &c, &u);
+                crate::proputil::assert_pap_close(pap, own_pap, &w, &c, &u, 1e-12, name);
+            } else {
+                assert_allclose(&w, &want, 1e-11, 1e-11);
+                // Term-scaled tolerance (see `assert_pap_close`): the
+                // simd-dispatched operators differ from the layered want by
+                // FMA rounding, and a cancelling signed sum must not blow
+                // up a plain relative check.
+                crate::proputil::assert_pap_close(pap, want_pap, &w, &c, &u, 1e-12, name);
+            }
         }
     }
 
@@ -736,7 +913,14 @@ mod tests {
             let mut op = r.build(name, &tiny_ctx(n, nelt, &d, &g)).unwrap();
             let mut w = vec![0.0; nelt * n * n * n];
             op.apply(&u, &mut w).unwrap();
-            assert_allclose(&w, &want, 1e-11, 1e-11);
+            if name.ends_with("-f32") {
+                let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+                for (a, b) in w.iter().zip(&want) {
+                    assert!((a - b).abs() <= 1e-5 * (b.abs() + scale), "{name}: {a} vs {b}");
+                }
+            } else {
+                assert_allclose(&w, &want, 1e-11, 1e-11);
+            }
         }
     }
 }

@@ -47,7 +47,7 @@
 //! contraction; the tests compare the AVX2 arm at a tight relative band
 //! (1e-13) and require the scalar arm to stay **bit-identical**.
 
-use crate::operators::specialized::{ax_spec, ax_spec_fused};
+use crate::operators::specialized::{ax_spec, ax_spec_fused, ax_spec_fused_store, ax_spec_store};
 
 /// Which kernel arm the explicit-SIMD entry points dispatch to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -157,6 +157,84 @@ pub fn ax_simd_fused_with_arm(
             ax_spec_fused(n, nelt, u, d, g, c, w)
         }
         SimdArm::Scalar => ax_spec_fused(n, nelt, u, d, g, c, w),
+    }
+}
+
+/// Explicit-SIMD local Poisson operator over f32-stored geometric factors
+/// (the `cpu-simd-f32` kernel, and what the worker pool dispatches for
+/// `cpu-threaded-f32`): each element's factors widen into an L1-resident
+/// f64 tile, then the unchanged f64 arm runs — AVX2+FMA intrinsics or the
+/// scalar spec family, per [`simd_arm`]. All arithmetic and accumulation
+/// stay f64; only the `g` stream shrinks to 4 bytes.
+pub fn ax_simd_f32(n: usize, nelt: usize, u: &[f64], d: &[f64], g: &[f32], w: &mut [f64]) {
+    ax_simd_f32_with_arm(simd_arm(), n, nelt, u, d, g, w);
+}
+
+/// Fused Ax+pap twin of [`ax_simd_f32`] (the `cpu-simd-fused-f32`
+/// kernel): same `w`, plus the element-order pap reduction of
+/// [`ax_simd_fused`].
+pub fn ax_simd_fused_f32(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f32],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    ax_simd_fused_f32_with_arm(simd_arm(), n, nelt, u, d, g, c, w)
+}
+
+/// [`ax_simd_f32`] with the arm chosen by the caller; same degrade
+/// semantics as [`ax_simd_with_arm`].
+pub fn ax_simd_f32_with_arm(
+    arm: SimdArm,
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f32],
+    w: &mut [f64],
+) {
+    match arm {
+        SimdArm::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if simd_arm() == SimdArm::Avx2 {
+                // SAFETY: AVX2 and FMA support was verified at runtime on
+                // the line above.
+                unsafe { avx2::ax_mesh_f32(n, nelt, u, d, g, w) };
+                return;
+            }
+            ax_spec_store::<f32>(n, nelt, u, d, g, w);
+        }
+        SimdArm::Scalar => ax_spec_store::<f32>(n, nelt, u, d, g, w),
+    }
+}
+
+/// [`ax_simd_fused_f32`] with the arm chosen by the caller; same degrade
+/// semantics as [`ax_simd_with_arm`].
+#[allow(clippy::too_many_arguments)]
+pub fn ax_simd_fused_f32_with_arm(
+    arm: SimdArm,
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[f32],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    match arm {
+        SimdArm::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if simd_arm() == SimdArm::Avx2 {
+                // SAFETY: AVX2 and FMA support was verified at runtime on
+                // the line above.
+                return unsafe { avx2::ax_fused_mesh_f32(n, nelt, u, d, g, c, w) };
+            }
+            ax_spec_fused_store::<f32>(n, nelt, u, d, g, c, w)
+        }
+        SimdArm::Scalar => ax_spec_fused_store::<f32>(n, nelt, u, d, g, c, w),
     }
 }
 
@@ -457,6 +535,78 @@ mod avx2 {
         }
         pap
     }
+
+    /// Whole-mesh AVX2 driver over f32-stored factors: widen one element's
+    /// factors into an L1-resident f64 tile, then run the unchanged
+    /// [`ax_element`]. The mesh-level `g` traffic is the 4-byte stream;
+    /// the widened tile stays cache-resident across the element's k-sweep.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2+FMA support at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn ax_mesh_f32(
+        n: usize,
+        nelt: usize,
+        u: &[f64],
+        d: &[f64],
+        g: &[f32],
+        w: &mut [f64],
+    ) {
+        let np = n * n * n;
+        assert_eq!(u.len(), nelt * np);
+        assert_eq!(d.len(), n * n);
+        assert_eq!(g.len(), nelt * 6 * np);
+        assert_eq!(w.len(), nelt * np);
+        let mut s = Scratch::new(n, d);
+        let mut ge64 = vec![0.0f64; 6 * np];
+        for e in 0..nelt {
+            let ue = &u[e * np..(e + 1) * np];
+            crate::geometry::widen_into(&g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+            let we = &mut w[e * np..(e + 1) * np];
+            ax_element(n, d, &mut s, ue, &ge64, we);
+        }
+    }
+
+    /// Whole-mesh fused AVX2 driver over f32-stored factors; pap contract
+    /// as [`ax_fused_mesh`].
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2+FMA support at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn ax_fused_mesh_f32(
+        n: usize,
+        nelt: usize,
+        u: &[f64],
+        d: &[f64],
+        g: &[f32],
+        c: &[f64],
+        w: &mut [f64],
+    ) -> f64 {
+        let np = n * n * n;
+        assert_eq!(u.len(), nelt * np);
+        assert_eq!(d.len(), n * n);
+        assert_eq!(g.len(), nelt * 6 * np);
+        assert_eq!(c.len(), nelt * np);
+        assert_eq!(w.len(), nelt * np);
+        let mut s = Scratch::new(n, d);
+        let mut ge64 = vec![0.0f64; 6 * np];
+        let mut pap = 0.0;
+        for e in 0..nelt {
+            let ue = &u[e * np..(e + 1) * np];
+            crate::geometry::widen_into(&g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+            let ce = &c[e * np..(e + 1) * np];
+            let we = &mut w[e * np..(e + 1) * np];
+            ax_element(n, d, &mut s, ue, &ge64, we);
+            let mut pap_e = 0.0;
+            for ((wi, ci), ui) in we.iter().zip(ce).zip(ue) {
+                pap_e += wi * ci * ui;
+            }
+            pap += pap_e;
+        }
+        pap
+    }
 }
 
 #[cfg(test)]
@@ -580,6 +730,51 @@ mod tests {
         let pap_s = ax_simd_fused_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g, &c, &mut w_s);
         assert_eq!(w_s, w_l);
         assert_eq!(pap_s.to_bits(), pap_l.to_bits());
+    }
+
+    #[test]
+    fn f32_path_bit_identical_to_f64_path_on_prerounded_factors() {
+        // Widening is exact and the arithmetic is the same f64 kernel, so
+        // feeding the f64 entry points factors that are *already*
+        // f32-rounded must reproduce the mixed-precision path bitwise —
+        // on both dispatch arms, fused and unfused.
+        for n in [3usize, 5, 9, 13] {
+            let nelt = 2;
+            let (u, d, g, c) = inputs(0xA7 + n as u64, n, nelt);
+            let np = n * n * n;
+            let g32: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+            let g_rounded: Vec<f64> = g32.iter().map(|&x| x as f64).collect();
+            let mut want = vec![0.0; nelt * np];
+            ax_simd(n, nelt, &u, &d, &g_rounded, &mut want);
+            let mut got = vec![123.0; nelt * np];
+            ax_simd_f32(n, nelt, &u, &d, &g32, &mut got);
+            assert_eq!(got, want, "n={n}: f32 path vs pre-rounded f64 path");
+
+            let mut w_f = vec![0.0; nelt * np];
+            let pap_f = ax_simd_fused(n, nelt, &u, &d, &g_rounded, &c, &mut w_f);
+            let mut w_s = vec![0.0; nelt * np];
+            let pap_s = ax_simd_fused_f32(n, nelt, &u, &d, &g32, &c, &mut w_s);
+            assert_eq!(w_s, w_f, "n={n}: fused w");
+            assert_eq!(pap_s.to_bits(), pap_f.to_bits(), "n={n}: fused pap");
+
+            // Forced-scalar arm stays bit-identical to the spec family.
+            let mut w_sc = vec![0.0; nelt * np];
+            ax_simd_f32_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g32, &mut w_sc);
+            let mut w_spec = vec![0.0; nelt * np];
+            crate::operators::specialized::ax_spec_store::<f32>(
+                n, nelt, &u, &d, &g32, &mut w_spec,
+            );
+            assert_eq!(w_sc, w_spec, "n={n}: forced scalar f32 arm");
+            let mut w_fs = vec![0.0; nelt * np];
+            let pap_fs =
+                ax_simd_fused_f32_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g32, &c, &mut w_fs);
+            let mut w_fspec = vec![0.0; nelt * np];
+            let pap_fspec = crate::operators::specialized::ax_spec_fused_store::<f32>(
+                n, nelt, &u, &d, &g32, &c, &mut w_fspec,
+            );
+            assert_eq!(w_fs, w_fspec, "n={n}");
+            assert_eq!(pap_fs.to_bits(), pap_fspec.to_bits(), "n={n}");
+        }
     }
 
     #[test]

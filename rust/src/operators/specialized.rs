@@ -27,8 +27,9 @@
 //! relied on by the worker pool, which dispatches through this table for
 //! `cpu-threaded` / `cpu-threaded-fused` too).
 
-use crate::operators::fused::ax_layered_fused;
-use crate::operators::layered::ax_layered;
+use crate::geometry::{widen_into, GeomScalar};
+use crate::operators::fused::{ax_layered_fused, ax_layered_fused_store};
+use crate::operators::layered::{ax_layered, ax_layered_store};
 
 /// Smallest `n` with a monomorphized kernel.
 pub const SPEC_MIN_N: usize = 2;
@@ -124,6 +125,26 @@ fn ax_element_spec<const N: usize>(d: &[f64], ue: &[f64], ge: &[f64], we: &mut [
                 }
             }
         }
+    }
+}
+
+/// One element at a dynamic (but specialized) degree: the per-element
+/// dispatch the mixed-precision drivers use after widening their factor
+/// tile. Callers must have checked [`is_specialized`].
+fn ax_element_spec_dyn(n: usize, d: &[f64], ue: &[f64], ge: &[f64], we: &mut [f64]) {
+    match n {
+        2 => ax_element_spec::<2>(d, ue, ge, we),
+        3 => ax_element_spec::<3>(d, ue, ge, we),
+        4 => ax_element_spec::<4>(d, ue, ge, we),
+        5 => ax_element_spec::<5>(d, ue, ge, we),
+        6 => ax_element_spec::<6>(d, ue, ge, we),
+        7 => ax_element_spec::<7>(d, ue, ge, we),
+        8 => ax_element_spec::<8>(d, ue, ge, we),
+        9 => ax_element_spec::<9>(d, ue, ge, we),
+        10 => ax_element_spec::<10>(d, ue, ge, we),
+        11 => ax_element_spec::<11>(d, ue, ge, we),
+        12 => ax_element_spec::<12>(d, ue, ge, we),
+        _ => unreachable!("ax_element_spec_dyn: caller must check is_specialized({n})"),
     }
 }
 
@@ -228,6 +249,74 @@ pub fn ax_spec_fused(
     }
 }
 
+/// Degree-dispatched driver over geometric factors stored at width `S`:
+/// each element's factors widen into one L1-resident f64 tile, then the
+/// unchanged monomorphized kernel runs — the same per-point operation
+/// order as [`ax_spec`] by construction (`::<f64>` is bit-identical to
+/// it). Out-of-range degrees fall back to [`ax_layered_store`].
+pub fn ax_spec_store<S: GeomScalar>(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[S],
+    w: &mut [f64],
+) {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(w.len(), nelt * np);
+    if !is_specialized(n) {
+        return ax_layered_store::<S>(n, nelt, u, d, g, w);
+    }
+    let mut ge64 = vec![0.0f64; 6 * np];
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        widen_into(&g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_element_spec_dyn(n, d, ue, &ge64, we);
+    }
+}
+
+/// Degree-dispatched fused Ax+pap over stored width `S`: `w` exactly as
+/// [`ax_spec_store`], pap reduced per element in linear dof order like
+/// [`ax_spec_fused`] (the f64 instantiation is bit-identical to it).
+pub fn ax_spec_fused_store<S: GeomScalar>(
+    n: usize,
+    nelt: usize,
+    u: &[f64],
+    d: &[f64],
+    g: &[S],
+    c: &[f64],
+    w: &mut [f64],
+) -> f64 {
+    let np = n * n * n;
+    assert_eq!(u.len(), nelt * np);
+    assert_eq!(d.len(), n * n);
+    assert_eq!(g.len(), nelt * 6 * np);
+    assert_eq!(c.len(), nelt * np);
+    assert_eq!(w.len(), nelt * np);
+    if !is_specialized(n) {
+        return ax_layered_fused_store::<S>(n, nelt, u, d, g, c, w);
+    }
+    let mut ge64 = vec![0.0f64; 6 * np];
+    let mut pap = 0.0;
+    for e in 0..nelt {
+        let ue = &u[e * np..(e + 1) * np];
+        widen_into(&g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+        let ce = &c[e * np..(e + 1) * np];
+        let we = &mut w[e * np..(e + 1) * np];
+        ax_element_spec_dyn(n, d, ue, &ge64, we);
+        let mut pap_e = 0.0;
+        for ((wi, ci), ui) in we.iter().zip(ce).zip(ue) {
+            pap_e += wi * ci * ui;
+        }
+        pap += pap_e;
+    }
+    pap
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +377,51 @@ mod tests {
         let pap = ax_spec_fused(n, nelt, &u, &d, &g, &c, &mut w);
         let want_pap = ax_layered_fused(n, nelt, &u, &d, &g, &c, &mut got);
         assert_eq!(pap.to_bits(), want_pap.to_bits());
+    }
+
+    #[test]
+    fn store_f64_instantiation_is_bit_identical_including_fallback() {
+        for n in [SPEC_MIN_N, 7, SPEC_MAX_N, SPEC_MAX_N + 1] {
+            let nelt = 2;
+            let (u, d, g, c) = inputs(0x54 + n as u64, n, nelt);
+            let np = n * n * n;
+            let mut want = vec![0.0; nelt * np];
+            ax_spec(n, nelt, &u, &d, &g, &mut want);
+            let mut got = vec![123.0; nelt * np];
+            ax_spec_store::<f64>(n, nelt, &u, &d, &g, &mut got);
+            assert_eq!(got, want, "n={n}");
+            let mut w_f = vec![0.0; nelt * np];
+            let pap_f = ax_spec_fused(n, nelt, &u, &d, &g, &c, &mut w_f);
+            let mut w_s = vec![123.0; nelt * np];
+            let pap_s = ax_spec_fused_store::<f64>(n, nelt, &u, &d, &g, &c, &mut w_s);
+            assert_eq!(w_s, w_f, "n={n}: fused w");
+            assert_eq!(pap_s.to_bits(), pap_f.to_bits(), "n={n}: fused pap");
+        }
+    }
+
+    #[test]
+    fn store_f32_equals_spec_on_prerounded_factors() {
+        // Feed the f64 kernel factors that are *already* f32-rounded: the
+        // mixed path must then agree bitwise (widening is exact, and the
+        // arithmetic is the same f64 operation order).
+        for n in [3usize, 9, SPEC_MAX_N + 2] {
+            let nelt = 2;
+            let (u, d, g, c) = inputs(0x55 + n as u64, n, nelt);
+            let np = n * n * n;
+            let g32: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+            let g_rounded: Vec<f64> = g32.iter().map(|&x| x as f64).collect();
+            let mut want = vec![0.0; nelt * np];
+            ax_spec(n, nelt, &u, &d, &g_rounded, &mut want);
+            let mut got = vec![123.0; nelt * np];
+            ax_spec_store::<f32>(n, nelt, &u, &d, &g32, &mut got);
+            assert_eq!(got, want, "n={n}: widened path must match pre-rounded f64 path");
+            let mut w_f = vec![0.0; nelt * np];
+            let pap_f = ax_spec_fused(n, nelt, &u, &d, &g_rounded, &c, &mut w_f);
+            let mut w_s = vec![0.0; nelt * np];
+            let pap_s = ax_spec_fused_store::<f32>(n, nelt, &u, &d, &g32, &c, &mut w_s);
+            assert_eq!(w_s, w_f, "n={n}");
+            assert_eq!(pap_s.to_bits(), pap_f.to_bits(), "n={n}");
+        }
     }
 
     #[test]

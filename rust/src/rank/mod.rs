@@ -354,6 +354,16 @@ pub fn run_ranked_in(
     registry: &OperatorRegistry,
 ) -> Result<RunReport> {
     cfg.validate()?;
+    if cfg.precond != "none" {
+        // The preconditioners are assembled against the serial pipeline's
+        // whole-mesh gather-scatter; the ranked path would need per-slab
+        // assembly + halo-consistent diagonals. Refuse rather than
+        // silently solving unpreconditioned.
+        return Err(Error::Config(format!(
+            "--precond {} is not supported on the ranked path (use ranks = 1)",
+            cfg.precond
+        )));
+    }
     // Fail fast on unknown operators (and get the canonical label) before
     // spawning any rank thread.
     let label = registry.resolve(operator)?.name.clone();

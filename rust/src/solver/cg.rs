@@ -192,6 +192,9 @@ pub struct CgWorkspace {
     /// exchange keeps reporting the same shared-dof support — repeated
     /// (session) solves allocate nothing.
     pap: Option<PapCorrection>,
+    /// Chebyshev recurrence scratch, allocated on the first
+    /// Chebyshev-preconditioned solve and reused afterwards.
+    cheb: Option<crate::solver::ChebScratch>,
 }
 
 impl CgWorkspace {
@@ -202,6 +205,7 @@ impl CgWorkspace {
             p: vec![0.0; ndof],
             w: vec![0.0; ndof],
             pap: None,
+            cheb: None,
         }
     }
 
@@ -240,7 +244,9 @@ pub fn cg_solve(
 
 /// [`cg_solve`] with an optional Jacobi preconditioner (the paper's
 /// future-work extension, section VII): `z = M^{-1} r` replaces the
-/// identity in the preconditioner slot.
+/// identity in the preconditioner slot. Kept source-compatible with its
+/// pre-[`Precond`] signature; for Chebyshev (or to avoid the clone), pass
+/// a [`Precond`] to [`cg_solve_precond`] / [`cg_solve_with`] directly.
 #[allow(clippy::too_many_arguments)]
 pub fn cg_solve_pc(
     ax: &mut dyn AxApply,
@@ -253,6 +259,37 @@ pub fn cg_solve_pc(
     opts: &CgOptions,
     ws: &mut CgWorkspace,
     precond: Option<&crate::solver::Jacobi>,
+) -> Result<CgReport> {
+    let owned = precond.map(|j| crate::solver::Precond::Jacobi(j.clone()));
+    cg_solve_with(
+        ax,
+        exchange,
+        comm,
+        &mut NativeVectors,
+        mask,
+        c,
+        f,
+        x,
+        opts,
+        ws,
+        owned.as_ref(),
+    )
+}
+
+/// [`cg_solve`] with any [`Precond`] (Jacobi or Chebyshev-accelerated
+/// Jacobi) and native vector algebra.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_solve_precond(
+    ax: &mut dyn AxApply,
+    exchange: &mut dyn DomainExchange,
+    comm: &mut dyn Communicator,
+    mask: Option<&[f64]>,
+    c: &[f64],
+    f: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    ws: &mut CgWorkspace,
+    precond: Option<&crate::solver::Precond>,
 ) -> Result<CgReport> {
     cg_solve_with(ax, exchange, comm, &mut NativeVectors, mask, c, f, x, opts, ws, precond)
 }
@@ -274,7 +311,7 @@ pub fn cg_solve_with(
     x: &mut [f64],
     opts: &CgOptions,
     ws: &mut CgWorkspace,
-    precond: Option<&crate::solver::Jacobi>,
+    precond: Option<&crate::solver::Precond>,
 ) -> Result<CgReport> {
     let ndof = f.len();
     if x.len() != ndof || c.len() != ndof {
@@ -307,6 +344,7 @@ pub fn cg_solve_with(
         ws.pap = Some(exchange.pap_correction());
     }
     let (r, z, p, w) = (&mut ws.r, &mut ws.z, &mut ws.p, &mut ws.w);
+    let cheb_scratch = &mut ws.cheb;
     let mut correction = if fused { ws.pap.as_mut() } else { None };
 
     rzero(x);
@@ -324,10 +362,17 @@ pub fn cg_solve_with(
 
     for iter in 0..opts.niter {
         // Preconditioner slot (identity by default — the paper runs
-        // unpreconditioned; Jacobi when requested).
+        // unpreconditioned; Jacobi or Chebyshev-accelerated Jacobi when
+        // requested). The Chebyshev recurrence applies the same masked,
+        // exchanged operator as the main loop, `order − 1` times.
         match precond {
             None => copy(z, r),
-            Some(m) => m.apply(r, z),
+            Some(crate::solver::Precond::Jacobi(m)) => m.apply(r, z),
+            Some(crate::solver::Precond::Chebyshev(ch)) => {
+                let scratch = cheb_scratch
+                    .get_or_insert_with(|| crate::solver::ChebScratch::new(ndof));
+                ch.apply_with(ax, exchange, mask, r, z, scratch)?;
+            }
         }
         let rtz2 = rtz1;
         let rtz_local = vectors.glsc3(r, c, z)?;
@@ -703,6 +748,10 @@ mod tests {
         };
 
         let (rep_u, x_u) = solve("cpu-layered");
+        // The f32-storage family solves the once-rounded system, so its
+        // fused members are held to the matching *f32* unfused trajectory
+        // (same tight tolerance — fusion itself must not add error).
+        let (rep_u32, x_u32) = solve("cpu-layered-f32");
         // Every artifact-free fused operator, enumerated from the registry
         // so a new registration is held to the sweep-saving contract too.
         let fused_names: Vec<String> = registry
@@ -713,25 +762,30 @@ mod tests {
                 !spec.needs_artifacts && spec.create().is_fused()
             })
             .collect();
-        assert!(fused_names.len() >= 4, "registry lost fused CPU operators: {fused_names:?}");
+        assert!(fused_names.len() >= 8, "registry lost fused CPU operators: {fused_names:?}");
         for fused_name in &fused_names {
+            let (rep_b, x_b) = if fused_name.ends_with("-f32") {
+                (&rep_u32, &x_u32)
+            } else {
+                (&rep_u, &x_u)
+            };
             let (rep_f, x_f) = solve(fused_name);
-            assert_eq!(rep_f.iterations, rep_u.iterations, "{fused_name}");
+            assert_eq!(rep_f.iterations, rep_b.iterations, "{fused_name}");
             assert_eq!(
-                rep_u.glsc3_sweeps - rep_f.glsc3_sweeps,
+                rep_b.glsc3_sweeps - rep_f.glsc3_sweeps,
                 opts.niter,
                 "{fused_name}: fused path must save exactly one sweep per iteration \
                  (unfused {} vs fused {})",
-                rep_u.glsc3_sweeps,
+                rep_b.glsc3_sweeps,
                 rep_f.glsc3_sweeps
             );
-            crate::proputil::assert_allclose(&x_f, &x_u, 1e-9, 1e-11);
-            let denom = rep_u.final_rnorm.abs().max(1e-30);
+            crate::proputil::assert_allclose(&x_f, x_b, 1e-9, 1e-11);
+            let denom = rep_b.final_rnorm.abs().max(1e-30);
             assert!(
-                (rep_f.final_rnorm - rep_u.final_rnorm).abs() / denom < 1e-9,
+                (rep_f.final_rnorm - rep_b.final_rnorm).abs() / denom < 1e-9,
                 "{fused_name}: {} vs {}",
                 rep_f.final_rnorm,
-                rep_u.final_rnorm
+                rep_b.final_rnorm
             );
         }
     }

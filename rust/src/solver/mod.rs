@@ -38,12 +38,12 @@ mod precond;
 mod vector;
 
 pub use cg::{
-    cg_solve, cg_solve_op, cg_solve_pc, cg_solve_with, AxApply, CgOptions, CgReport,
-    CgWorkspace, TimedAx,
+    cg_solve, cg_solve_op, cg_solve_pc, cg_solve_precond, cg_solve_with, AxApply, CgOptions,
+    CgReport, CgWorkspace, TimedAx,
 };
 pub use comm::{Communicator, NullComm};
 pub use exchange::{DomainExchange, NoExchange, PapCorrection};
-pub use precond::Jacobi;
+pub use precond::{ChebScratch, Chebyshev, Jacobi, Precond};
 pub use vector::{
     add2s1, add2s2, copy, glsc3, mask_apply, rzero, NativeVectors, VectorOps,
 };

@@ -1,23 +1,35 @@
-//! Diagonal (Jacobi) preconditioner — the paper's stated future work
-//! (section VII: "In the future, we will investigate ... the
-//! preconditioned CG method").
+//! Preconditioners — the paper's stated future work (section VII: "In the
+//! future, we will investigate ... the preconditioned CG method").
 //!
-//! For the affine box mesh the geometric-factor tensor is diagonal
-//! (G12 = G13 = G23 = 0), so the diagonal of the local operator has the
-//! closed form
+//! Two levels:
 //!
-//! ```text
-//! diag(i,j,k) = Σ_l d[l,i]² G11(l,j,k)
-//!             + Σ_l d[l,j]² G22(i,l,k)
-//!             + Σ_l d[l,k]² G33(i,j,l)
-//! ```
+//! * [`Jacobi`] — the assembled operator diagonal. For the affine box mesh
+//!   the geometric-factor tensor is diagonal (G12 = G13 = G23 = 0), so the
+//!   diagonal of the local operator has the closed form
 //!
-//! (each stage-2 row `D^T · G · D` picks the same column of `D` twice on
-//! the diagonal). The assembled diagonal is its dssum; the preconditioner
-//! application is `z = r / diag` on unmasked dofs.
+//!   ```text
+//!   diag(i,j,k) = Σ_l d[l,i]² G11(l,j,k)
+//!               + Σ_l d[l,j]² G22(i,l,k)
+//!               + Σ_l d[l,k]² G33(i,j,l)
+//!   ```
+//!
+//!   (each stage-2 row `D^T · G · D` picks the same column of `D` twice on
+//!   the diagonal). The assembled diagonal is its dssum; the application
+//!   is `z = r / diag` on unmasked dofs.
+//!
+//! * [`Chebyshev`] — a fixed-order Chebyshev polynomial in the
+//!   Jacobi-preconditioned operator `M⁻¹A` (the classic smoother
+//!   recurrence, cf. Nek5000's Chebyshev-accelerated Schwarz/Jacobi
+//!   smoothing). Each application costs `order − 1` extra operator sweeps
+//!   but contracts the whole band `[λmin, λmax]` at once, cutting CG
+//!   iterations well below plain Jacobi. The coefficients are frozen at
+//!   assembly (eigenvalue bounds from a short power iteration), so the
+//!   preconditioner is a fixed SPD polynomial — a legal PCG
+//!   preconditioner, not a nonlinear inner solve.
 
 use crate::error::{Error, Result};
 use crate::gs::GatherScatter;
+use crate::solver::{mask_apply, AxApply, DomainExchange};
 
 /// Assembled Jacobi preconditioner.
 #[derive(Clone, Debug)]
@@ -42,16 +54,8 @@ impl Jacobi {
         if d.len() != n * n || g.len() != nelt * 6 * np {
             return Err(Error::Config("Jacobi::assemble: size mismatch".into()));
         }
-        // Column sums of squares of D: colsq[a][i] = sum_l d[l,i]^2 is the
-        // same for every a; precompute sum_l d[l,c]^2 once.
-        let mut colsq = vec![0.0f64; n];
-        for (c, out) in colsq.iter_mut().enumerate() {
-            for l in 0..n {
-                *out += d[l * n + c] * d[l * n + c];
-            }
-        }
-        // But the G factor varies along the contracted axis, so the full
-        // form needs the per-l products; do it directly.
+        // The G factor varies along the contracted axis, so the diagonal
+        // needs the per-l products d[l,·]² · G(·) summed directly.
         let mut diag = vec![0.0f64; nelt * np];
         for e in 0..nelt {
             let ge = &g[e * 6 * np..(e + 1) * 6 * np];
@@ -75,7 +79,6 @@ impl Jacobi {
                 }
             }
         }
-        let _ = colsq;
         gs.dssum(&mut diag);
         let inv_diag = diag
             .iter()
@@ -102,6 +105,193 @@ impl Jacobi {
     /// The inverse diagonal (for tests).
     pub fn inv_diag(&self) -> &[f64] {
         &self.inv_diag
+    }
+}
+
+/// Either preconditioner behind one runtime face — what
+/// [`cg_solve_with`](crate::solver::cg_solve_with) takes in its
+/// preconditioner slot.
+#[derive(Clone, Debug)]
+pub enum Precond {
+    /// Plain diagonal scaling, `z = M⁻¹ r`.
+    Jacobi(Jacobi),
+    /// Chebyshev polynomial acceleration of the Jacobi-preconditioned
+    /// operator (costs `order − 1` operator applications per CG
+    /// iteration).
+    Chebyshev(Chebyshev),
+}
+
+/// Scratch vectors for one [`Chebyshev::apply_with`] call, owned by the
+/// caller's [`CgWorkspace`](crate::solver::CgWorkspace) so repeated solves
+/// allocate nothing.
+#[derive(Debug)]
+pub struct ChebScratch {
+    /// Current Chebyshev direction `d_k`.
+    d: Vec<f64>,
+    /// Running inner residual `r_k = r − A z_k`.
+    rk: Vec<f64>,
+    /// Operator output `A d_k`.
+    t: Vec<f64>,
+    /// Smoothed residual `M⁻¹ r_k`.
+    mr: Vec<f64>,
+}
+
+impl ChebScratch {
+    pub fn new(ndof: usize) -> Self {
+        ChebScratch {
+            d: vec![0.0; ndof],
+            rk: vec![0.0; ndof],
+            t: vec![0.0; ndof],
+            mr: vec![0.0; ndof],
+        }
+    }
+
+    /// The dof count this scratch was sized for.
+    pub fn ndof(&self) -> usize {
+        self.d.len()
+    }
+}
+
+/// Chebyshev-accelerated Jacobi: the fixed-order smoother recurrence
+/// applied as a PCG preconditioner. `z = p_m(M⁻¹A) M⁻¹ r` with Chebyshev
+/// coefficients for the interval `[λmin, λmax]` of `M⁻¹A`, bounds
+/// estimated once at assembly by power iteration.
+#[derive(Clone, Debug)]
+pub struct Chebyshev {
+    jacobi: Jacobi,
+    order: usize,
+    lmin: f64,
+    lmax: f64,
+}
+
+/// Power-iteration sweeps for the λmax estimate. The estimate only seeds
+/// the safety-factored interval below, so a short fixed count suffices.
+const POWER_ITERS: usize = 15;
+
+impl Chebyshev {
+    /// Assemble for the masked, assembled operator `A = mask ∘ dssum ∘
+    /// A_local` defined by `(d, g, gs, mask)`: builds the inner [`Jacobi`]
+    /// from the same data, then runs [`POWER_ITERS`] power-iteration
+    /// sweeps of `M⁻¹A` to bound its spectrum. The interval is padded the
+    /// standard smoother way (`λmax` up by 10% for the power-iteration
+    /// shortfall, `λmin = λmax / 30` — the low end only shapes how much of
+    /// the band the polynomial targets; CG handles the few modes below
+    /// it). `order` ≥ 1 is the polynomial degree: each CG iteration costs
+    /// `order − 1` extra operator applications, and order 1 degenerates to
+    /// scaled Jacobi.
+    pub fn assemble(
+        n: usize,
+        nelt: usize,
+        d: &[f64],
+        g: &[f64],
+        gs: &mut GatherScatter,
+        mask: Option<&[f64]>,
+        order: usize,
+    ) -> Result<Self> {
+        if order == 0 {
+            return Err(Error::Config("Chebyshev order must be >= 1".into()));
+        }
+        let jacobi = Jacobi::assemble(n, nelt, d, g, gs, mask)?;
+        let np = n * n * n;
+        let ndof = nelt * np;
+        // Deterministic start vector with energy in every mode.
+        let mut v = crate::rng::Rng::new(0x5EB0).normal_vec(ndof);
+        if let Some(m) = mask {
+            mask_apply(&mut v, m);
+        }
+        let mut av = vec![0.0; ndof];
+        let mut lmax_hat = 0.0f64;
+        for _ in 0..POWER_ITERS {
+            crate::operators::ax_layered(n, nelt, &v, d, g, &mut av);
+            gs.dssum(&mut av);
+            if let Some(m) = mask {
+                mask_apply(&mut av, m);
+            }
+            // v <- M⁻¹ A v, normalized; the growth factor estimates λmax.
+            jacobi.apply(&av, &mut v);
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if !norm.is_finite() || norm == 0.0 {
+                return Err(Error::Numerical(format!(
+                    "Chebyshev power iteration degenerated (norm = {norm})"
+                )));
+            }
+            lmax_hat = norm;
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+        }
+        let lmax = 1.1 * lmax_hat;
+        let lmin = lmax / 30.0;
+        Ok(Chebyshev { jacobi, order, lmin, lmax })
+    }
+
+    /// The estimated spectrum bounds `(λmin, λmax)` (for tests).
+    pub fn bounds(&self) -> (f64, f64) {
+        (self.lmin, self.lmax)
+    }
+
+    /// Polynomial order.
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// `z ≈ A⁻¹ r` by the order-`m` Chebyshev smoother recurrence over
+    /// `M⁻¹A`, zero initial guess:
+    ///
+    /// ```text
+    /// θ = (λmax+λmin)/2,  δ = (λmax−λmin)/2,  σ = θ/δ,  ρ₀ = 1/σ
+    /// d₀ = (1/θ) M⁻¹ r;          z₁ = d₀;  r₀ = r
+    /// for k = 1 .. m−1:
+    ///     r_k = r_{k−1} − A d_{k−1}
+    ///     ρ_k = 1 / (2σ − ρ_{k−1})
+    ///     d_k = ρ_k ρ_{k−1} d_{k−1} + (2ρ_k/δ) M⁻¹ r_k
+    ///     z  += d_k
+    /// ```
+    ///
+    /// `A` is the same masked, exchanged composite the CG loop applies —
+    /// passed in as hooks so the preconditioner exercises the session's
+    /// actual operator (fused, threaded, f32, XLA alike).
+    pub fn apply_with(
+        &self,
+        ax: &mut dyn AxApply,
+        exchange: &mut dyn DomainExchange,
+        mask: Option<&[f64]>,
+        r: &[f64],
+        z: &mut [f64],
+        s: &mut ChebScratch,
+    ) -> Result<()> {
+        debug_assert_eq!(r.len(), z.len());
+        debug_assert_eq!(r.len(), s.ndof());
+        let theta = 0.5 * (self.lmax + self.lmin);
+        let delta = 0.5 * (self.lmax - self.lmin);
+        let sigma = theta / delta;
+        let mut rho_prev = 1.0 / sigma;
+
+        self.jacobi.apply(r, &mut s.mr);
+        for ((di, zi), mi) in s.d.iter_mut().zip(z.iter_mut()).zip(&s.mr) {
+            *di = mi / theta;
+            *zi = *di;
+        }
+        s.rk.copy_from_slice(r);
+        for _ in 1..self.order {
+            ax.apply(&s.d, &mut s.t)?;
+            exchange.exchange(&mut s.t)?;
+            if let Some(m) = mask {
+                mask_apply(&mut s.t, m);
+            }
+            for (rki, ti) in s.rk.iter_mut().zip(&s.t) {
+                *rki -= ti;
+            }
+            let rho = 1.0 / (2.0 * sigma - rho_prev);
+            self.jacobi.apply(&s.rk, &mut s.mr);
+            let scale = 2.0 * rho / delta;
+            for ((di, mi), zi) in s.d.iter_mut().zip(&s.mr).zip(z.iter_mut()) {
+                *di = rho * rho_prev * *di + scale * mi;
+                *zi += *di;
+            }
+            rho_prev = rho;
+        }
+        Ok(())
     }
 }
 
@@ -155,5 +345,109 @@ mod tests {
         let mut z = vec![0.0; 2];
         jac.apply(&[2.0, 8.0], &mut z);
         assert_eq!(z, vec![1.0, 2.0]);
+    }
+
+    /// Shared setup for the Chebyshev tests: a small masked SEM system and
+    /// a layered-operator AxApply closure over it.
+    fn cheb_fixture(
+        order: usize,
+    ) -> (Mesh, Basis, GeomFactors, Vec<f64>, Chebyshev, GatherScatter) {
+        let n = 4;
+        let mesh = Mesh::new(2, 2, 1, n).unwrap();
+        let basis = Basis::new(n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let mut gs = GatherScatter::new(&mesh);
+        let cheb = Chebyshev::assemble(
+            n,
+            mesh.nelt(),
+            &basis.d,
+            &geom.g,
+            &mut gs,
+            Some(&mask),
+            order,
+        )
+        .unwrap();
+        (mesh, basis, geom, mask, cheb, gs)
+    }
+
+    #[test]
+    fn chebyshev_bounds_are_sane() {
+        let (_, _, _, _, cheb, _) = cheb_fixture(4);
+        let (lmin, lmax) = cheb.bounds();
+        assert!(lmax.is_finite() && lmax > 0.0, "lmax = {lmax}");
+        assert!(lmin > 0.0 && lmin < lmax, "lmin = {lmin}, lmax = {lmax}");
+        // Jacobi-preconditioned SEM operator: λmax is O(1)-to-O(10), not
+        // the raw operator's mesh-dependent scale.
+        assert!(lmax < 100.0, "power iteration diverged? lmax = {lmax}");
+        assert_eq!(cheb.order(), 4);
+    }
+
+    #[test]
+    fn chebyshev_zero_order_rejected() {
+        let n = 3;
+        let mesh = Mesh::new(1, 1, 1, n).unwrap();
+        let basis = Basis::new(n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let mut gs = GatherScatter::new(&mesh);
+        assert!(Chebyshev::assemble(n, 1, &basis.d, &geom.g, &mut gs, None, 0).is_err());
+    }
+
+    #[test]
+    fn chebyshev_application_is_linear() {
+        // PCG is only valid for a *fixed linear* preconditioner: check
+        // z(a·r1 + b·r2) = a·z(r1) + b·z(r2) through the full recurrence.
+        let (mesh, basis, geom, mask, cheb, mut gs) = cheb_fixture(4);
+        let n = mesh.n;
+        let nelt = mesh.nelt();
+        let ndof = mesh.ndof_local();
+        let mut ax = |p: &[f64], w: &mut [f64]| -> crate::error::Result<()> {
+            crate::operators::ax_layered(n, nelt, p, &basis.d, &geom.g, w);
+            Ok(())
+        };
+        let mut rng = crate::rng::Rng::new(77);
+        let mut r1 = rng.normal_vec(ndof);
+        let mut r2 = rng.normal_vec(ndof);
+        mask_apply(&mut r1, &mask);
+        mask_apply(&mut r2, &mask);
+        let (a, b) = (2.5, -0.75);
+        let rc: Vec<f64> = r1.iter().zip(&r2).map(|(x, y)| a * x + b * y).collect();
+        let mut s = ChebScratch::new(ndof);
+        let mut z1 = vec![0.0; ndof];
+        let mut z2 = vec![0.0; ndof];
+        let mut zc = vec![0.0; ndof];
+        cheb.apply_with(&mut ax, &mut gs, Some(&mask), &r1, &mut z1, &mut s).unwrap();
+        cheb.apply_with(&mut ax, &mut gs, Some(&mask), &r2, &mut z2, &mut s).unwrap();
+        cheb.apply_with(&mut ax, &mut gs, Some(&mask), &rc, &mut zc, &mut s).unwrap();
+        let want: Vec<f64> = z1.iter().zip(&z2).map(|(x, y)| a * x + b * y).collect();
+        crate::proputil::assert_allclose(&zc, &want, 1e-11, 1e-11);
+    }
+
+    #[test]
+    fn chebyshev_order_one_is_scaled_jacobi() {
+        let (mesh, basis, geom, mask, cheb, mut gs) = cheb_fixture(1);
+        let n = mesh.n;
+        let nelt = mesh.nelt();
+        let ndof = mesh.ndof_local();
+        let jac =
+            Jacobi::assemble(n, nelt, &basis.d, &geom.g, &mut gs, Some(&mask)).unwrap();
+        let mut ax = |p: &[f64], w: &mut [f64]| -> crate::error::Result<()> {
+            crate::operators::ax_layered(n, nelt, p, &basis.d, &geom.g, w);
+            Ok(())
+        };
+        let mut r = crate::rng::Rng::new(78).normal_vec(ndof);
+        mask_apply(&mut r, &mask);
+        let mut z = vec![0.0; ndof];
+        let mut s = ChebScratch::new(ndof);
+        cheb.apply_with(&mut ax, &mut gs, Some(&mask), &r, &mut z, &mut s).unwrap();
+        // Order 1 stops after d0 = (1/θ) M⁻¹ r, i.e. Jacobi scaled by 1/θ.
+        let (lmin, lmax) = cheb.bounds();
+        let theta = 0.5 * (lmax + lmin);
+        let mut mj = vec![0.0; ndof];
+        jac.apply(&r, &mut mj);
+        for (zi, mi) in z.iter().zip(&mj) {
+            let want = mi / theta;
+            assert!((zi - want).abs() <= 1e-13 * (1.0 + want.abs()), "{zi} vs {want}");
+        }
     }
 }

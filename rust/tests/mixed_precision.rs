@@ -1,0 +1,209 @@
+//! Deterministic randomized sweep of the reduced-storage (`-f32`) family
+//! against the f64 ladder, across every monomorphized degree, element
+//! count, and thread count.
+//!
+//! Accuracy contract under test (the mixed-precision design): the six
+//! geometric factors round to **f32 once at setup**, every kernel widens
+//! them back per element and **accumulates in f64**. Two consequences are
+//! checked exhaustively here:
+//!
+//! 1. *Band agreement*: each f32 operator matches the f64 layered
+//!    reference within `1e-5 · (|want| + max|want|)` per point — the
+//!    storage-rounding band with ~10× headroom, tight enough that an
+//!    accidental f32 accumulation fails by orders of magnitude.
+//! 2. *Pre-rounding equivalence*: feeding the f64 kernels factors that
+//!    took a round trip through f32 (`f64(f32(g))`) reproduces the f32
+//!    path **bitwise** — the only difference reduced storage makes is the
+//!    one rounding, never the schedule.
+//!
+//! Everything is seeded through `rng::Rng`, so a failure reproduces
+//! exactly.
+
+use nekbone::operators::{
+    ax_layered, ax_layered_store, ax_simd_f32, ax_simd_fused_f32, ax_simd_fused_f32_with_arm,
+    ax_simd_f32_with_arm, OperatorCtx, OperatorRegistry, SimdArm,
+};
+use nekbone::proputil::assert_pap_close;
+use nekbone::rng::Rng;
+use nekbone::solver::glsc3;
+
+fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let np = n * n * n;
+    let u = rng.normal_vec(nelt * np);
+    let d = nekbone::basis::derivative_matrix(n);
+    let g = rng.normal_vec(nelt * 6 * np);
+    let c: Vec<f64> = (0..nelt * np).map(|_| rng.range(0.1, 1.0)).collect();
+    (u, d, g, c)
+}
+
+fn ctx<'a>(
+    n: usize,
+    nelt: usize,
+    threads: usize,
+    d: &'a [f64],
+    g: &'a [f64],
+    c: &'a [f64],
+) -> OperatorCtx<'a> {
+    OperatorCtx { n, nelt, chunk: nelt, threads, artifacts_dir: "artifacts", d, g, c }
+}
+
+/// The reduced-storage band: per point `1e-5 * (|want| + max|want|)`.
+fn assert_within_band(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-5 * (w.abs() + scale);
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}: mismatch at {idx}: got {g}, want {w} (band {tol:e})"
+        );
+    }
+}
+
+#[test]
+fn f32_family_sweep_against_layered() {
+    // N = 2..=12 (every monomorphized degree) × element counts × thread
+    // counts: every registered f32 operator against the f64 layered
+    // reference (band) and against its own single-thread f32 kernel
+    // (bitwise — threading partitions elements, it never reassociates a
+    // point).
+    let registry = OperatorRegistry::with_builtins();
+    for n in 2..=12usize {
+        for &nelt in &[1usize, 3, 5] {
+            for &threads in &[1usize, 2, 3] {
+                let seed = 0xF32_0000 + (n as u64) * 64 + (nelt as u64) * 8 + threads as u64;
+                let (u, d, g, c) = inputs(seed, n, nelt);
+                let np = n * n * n;
+                let what = format!("n={n} nelt={nelt} threads={threads}");
+
+                let mut w_ref = vec![0.0; nelt * np];
+                ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
+                let g32: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+                // Single-thread f32 references for the bitwise checks.
+                let mut w_store = vec![0.0; nelt * np];
+                ax_layered_store(n, nelt, &u, &d, &g32, &mut w_store);
+                assert_within_band(&w_store, &w_ref, &what);
+                let mut w_simd32 = vec![0.0; nelt * np];
+                ax_simd_f32(n, nelt, &u, &d, &g32, &mut w_simd32);
+                assert_within_band(&w_simd32, &w_ref, &what);
+
+                let cx = ctx(n, nelt, threads, &d, &g, &c);
+                for name in ["cpu-layered-f32", "cpu-spec-f32"] {
+                    let mut op = registry.build(name, &cx).unwrap();
+                    let mut w = vec![123.0; nelt * np]; // poisoned
+                    op.apply(&u, &mut w).unwrap();
+                    assert_eq!(w, w_store, "{name} {what}: must match the layered store");
+                }
+                for name in ["cpu-simd-f32", "cpu-threaded-f32"] {
+                    let mut op = registry.build(name, &cx).unwrap();
+                    let mut w = vec![123.0; nelt * np];
+                    op.apply(&u, &mut w).unwrap();
+                    assert_eq!(w, w_simd32, "{name} {what}: must match single-thread simd");
+                }
+                for name in ["cpu-layered-fused-f32", "cpu-spec-fused-f32"] {
+                    let mut op = registry.build(name, &cx).unwrap();
+                    let mut w = vec![123.0; nelt * np];
+                    op.apply(&u, &mut w).unwrap();
+                    assert_eq!(w, w_store, "{name} {what}: fused w must match unfused");
+                    let pap = op.last_pap().expect("fused apply must produce pap");
+                    let want = glsc3(&w, &c, &u);
+                    assert_pap_close(pap, want, &w, &c, &u, 1e-12, &format!("{name} {what}"));
+                }
+                for name in ["cpu-simd-fused-f32", "cpu-threaded-fused-f32"] {
+                    let mut op = registry.build(name, &cx).unwrap();
+                    let mut w = vec![123.0; nelt * np];
+                    op.apply(&u, &mut w).unwrap();
+                    assert_eq!(w, w_simd32, "{name} {what}: fused w must match unfused simd");
+                    let pap = op.last_pap().expect("fused apply must produce pap");
+                    let want = glsc3(&w, &c, &u);
+                    assert_pap_close(pap, want, &w, &c, &u, 1e-12, &format!("{name} {what}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_path_equals_f64_path_on_prerounded_factors_bitwise() {
+    // The design's sharpest invariant: reduced storage differs from f64
+    // storage by exactly one rounding of the factors. Feed the f64
+    // kernels `f64(f32(g))` and the f32 kernels `f32(g)` — identical
+    // output bits, on the forced-scalar arm and on whatever arm this
+    // host dispatches, fused and unfused alike.
+    for n in (2..=13usize).chain([16]) {
+        let nelt = 3;
+        let (u, d, g, c) = inputs(0xF32_BB + n as u64, n, nelt);
+        let np = n * n * n;
+        let g32: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+        let g_rounded: Vec<f64> = g32.iter().map(|&x| x as f64).collect();
+
+        let mut want = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g_rounded, &mut want);
+        let mut got = vec![123.0; nelt * np];
+        ax_layered_store(n, nelt, &u, &d, &g32, &mut got);
+        assert_eq!(got, want, "n={n}: layered store vs pre-rounded layered");
+
+        let mut w_s = vec![123.0; nelt * np];
+        ax_simd_f32_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g32, &mut w_s);
+        assert_eq!(w_s, want, "n={n}: forced-scalar simd-f32 vs pre-rounded layered");
+
+        // Dispatched arm: f32 vs f64-on-pre-rounded through the *same*
+        // arm — FMA reassociation cancels out, the rounding is all.
+        let mut w_a = vec![123.0; nelt * np];
+        ax_simd_f32(n, nelt, &u, &d, &g32, &mut w_a);
+        let mut w_b = vec![123.0; nelt * np];
+        nekbone::operators::ax_simd(n, nelt, &u, &d, &g_rounded, &mut w_b);
+        assert_eq!(w_a, w_b, "n={n}: dispatched simd-f32 vs pre-rounded simd");
+
+        let mut wf_a = vec![123.0; nelt * np];
+        let pap_a = ax_simd_fused_f32(n, nelt, &u, &d, &g32, &c, &mut wf_a);
+        let mut wf_b = vec![123.0; nelt * np];
+        let pap_b =
+            nekbone::operators::ax_simd_fused(n, nelt, &u, &d, &g_rounded, &c, &mut wf_b);
+        assert_eq!(wf_a, wf_b, "n={n}: dispatched fused simd-f32 vs pre-rounded");
+        assert_eq!(pap_a.to_bits(), pap_b.to_bits(), "n={n}: fused pap bits");
+
+        let mut wf_s = vec![123.0; nelt * np];
+        let pap_s =
+            ax_simd_fused_f32_with_arm(SimdArm::Scalar, n, nelt, &u, &d, &g32, &c, &mut wf_s);
+        assert_eq!(wf_s, want, "n={n}: forced-scalar fused-f32 w");
+        let mut wf_l = vec![123.0; nelt * np];
+        let pap_l = nekbone::operators::ax_layered_fused(
+            n, nelt, &u, &d, &g_rounded, &c, &mut wf_l,
+        );
+        assert_eq!(pap_s.to_bits(), pap_l.to_bits(), "n={n}: forced-scalar fused pap bits");
+    }
+}
+
+#[test]
+fn f32_operators_move_fewer_bytes_for_the_same_flops() {
+    // The point of the exercise, visible in the registry metadata: every
+    // f32 operator reports the same Eq. (1) flop count as its f64
+    // sibling but strictly less stream traffic — i.e. strictly higher
+    // arithmetic intensity on the roofline.
+    let registry = OperatorRegistry::with_builtins();
+    let (n, nelt) = (5, 3);
+    let (_u, d, g, c) = inputs(0xF32_CC, n, nelt);
+    let cx = ctx(n, nelt, 0, &d, &g, &c);
+    for (f32_name, f64_name) in [
+        ("cpu-layered-f32", "cpu-layered"),
+        ("cpu-spec-f32", "cpu-spec"),
+        ("cpu-simd-f32", "cpu-simd"),
+        ("cpu-threaded-f32", "cpu-threaded"),
+        ("cpu-layered-fused-f32", "cpu-layered-fused"),
+        ("cpu-spec-fused-f32", "cpu-spec-fused"),
+        ("cpu-simd-fused-f32", "cpu-simd-fused"),
+        ("cpu-threaded-fused-f32", "cpu-threaded-fused"),
+    ] {
+        let a = registry.build(f32_name, &cx).unwrap();
+        let b = registry.build(f64_name, &cx).unwrap();
+        assert_eq!(a.flops(), b.flops(), "{f32_name}: flops must not change");
+        assert!(
+            a.bytes_moved() < b.bytes_moved(),
+            "{f32_name}: must move fewer bytes than {f64_name} ({} vs {})",
+            a.bytes_moved(),
+            b.bytes_moved()
+        );
+    }
+}

@@ -195,7 +195,7 @@ fn fused_pap_matches_unfused_glsc3_across_shapes() {
             !spec.needs_artifacts && spec.create().is_fused()
         })
         .collect();
-    assert!(fused_names.len() >= 4, "registry lost fused CPU operators: {fused_names:?}");
+    assert!(fused_names.len() >= 8, "registry lost fused CPU operators: {fused_names:?}");
     forall(0xFA7, 12, |cases| {
         let n = cases.size(2, 7);
         let nelt = cases.size(1, 6);
@@ -215,21 +215,33 @@ fn fused_pap_matches_unfused_glsc3_across_shapes() {
             g: &g,
             c: &c,
         };
-        // Unfused reference: the layered kernel + a separate glsc3 sweep.
+        // Unfused references: the layered kernel + a separate glsc3 sweep.
+        // The `-f32` family solves the once-rounded system, so its
+        // reference is the same kernel over pre-rounded factors — the
+        // tolerance stays the tight f64 band either way.
         let mut w_ref = vec![0.0; nelt * np];
         ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
         let want_pap = glsc3(&w_ref, &c, &u);
+        let g_rounded: Vec<f64> = g.iter().map(|&x| (x as f32) as f64).collect();
+        let mut w_ref32 = vec![0.0; nelt * np];
+        ax_layered(n, nelt, &u, &d, &g_rounded, &mut w_ref32);
+        let want_pap32 = glsc3(&w_ref32, &c, &u);
         for name in &fused_names {
+            let (w_b, pap_b) = if name.ends_with("-f32") {
+                (&w_ref32, want_pap32)
+            } else {
+                (&w_ref, want_pap)
+            };
             let mut op = registry.build(name, &ctx).unwrap();
             let mut w = vec![0.0; nelt * np];
             op.apply(&u, &mut w).unwrap();
-            assert_allclose(&w, &w_ref, 1e-11, 1e-11);
+            assert_allclose(&w, w_b, 1e-11, 1e-11);
             let pap = op.last_pap().expect("fused operator must report pap");
             // Term-scaled tolerance: robust when the signed sum cancels,
             // still tight enough to catch a real defect (the
             // simd-dispatched operators legitimately differ from the
             // layered reference by FMA rounding).
-            assert_pap_close(pap, want_pap, &w, &c, &u, 1e-11, name);
+            assert_pap_close(pap, pap_b, &w, &c, &u, 1e-11, name);
         }
     });
 }
@@ -355,6 +367,74 @@ fn jacobi_pcg_converges_no_slower() {
         "Jacobi PCG took {iters_pcg} vs plain {iters_plain}"
     );
     assert_allclose(&x_pcg, &x_plain, 1e-6, 1e-8);
+}
+
+#[test]
+fn chebyshev_pcg_cuts_iterations_below_jacobi() {
+    // Chebyshev-accelerated Jacobi contracts the whole Jacobi-
+    // preconditioned band at once: to the same tolerance it must need
+    // strictly fewer CG iterations than plain Jacobi (each bought with
+    // `order - 1` extra Ax sweeps), while converging to the same field.
+    use nekbone::solver::{
+        cg_solve_precond, CgOptions, CgWorkspace, Chebyshev, Jacobi, NullComm, Precond,
+    };
+    let n = 5;
+    let mesh = Mesh::new(2, 2, 2, n).unwrap();
+    let basis = Basis::new(n);
+    let geom = GeomFactors::affine(&mesh, &basis);
+    let mask = mesh.boundary_mask();
+    let cw = mesh.inv_multiplicity();
+    let ndof = mesh.ndof_local();
+    let mut f = nekbone::rng::Rng::new(0x9C7).normal_vec(ndof);
+    {
+        let mut gs = GatherScatter::new(&mesh);
+        gs.dssum(&mut f);
+    }
+    for (fi, mi) in f.iter_mut().zip(&mask) {
+        *fi *= mi;
+    }
+
+    let run = |pc: &dyn Fn(&mut GatherScatter) -> Precond| {
+        let mut gs = GatherScatter::new(&mesh);
+        let precond = pc(&mut gs);
+        let mut ax = |p: &[f64], w: &mut [f64]| -> nekbone::Result<()> {
+            ax_layered(n, mesh.nelt(), p, &basis.d, &geom.g, w);
+            Ok(())
+        };
+        let mut x = vec![0.0; ndof];
+        let mut ws = CgWorkspace::new(ndof);
+        let opts = CgOptions { niter: 500, rtol: Some(1e-10), record_residuals: true };
+        let rep = cg_solve_precond(
+            &mut ax,
+            &mut gs,
+            &mut NullComm,
+            Some(&mask),
+            &cw,
+            &f,
+            &mut x,
+            &opts,
+            &mut ws,
+            Some(&precond),
+        )
+        .unwrap();
+        (rep.iterations, x)
+    };
+    let (iters_jac, x_jac) = run(&|gs| {
+        Precond::Jacobi(
+            Jacobi::assemble(n, mesh.nelt(), &basis.d, &geom.g, gs, Some(&mask)).unwrap(),
+        )
+    });
+    let (iters_cheb, x_cheb) = run(&|gs| {
+        Precond::Chebyshev(
+            Chebyshev::assemble(n, mesh.nelt(), &basis.d, &geom.g, gs, Some(&mask), 4)
+                .unwrap(),
+        )
+    });
+    assert!(
+        iters_cheb < iters_jac,
+        "Chebyshev(4) took {iters_cheb} iterations vs Jacobi's {iters_jac}"
+    );
+    assert_allclose(&x_cheb, &x_jac, 1e-6, 1e-8);
 }
 
 #[test]
