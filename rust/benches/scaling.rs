@@ -1,0 +1,68 @@
+//! Scaling-scenario bench: strong/weak campaigns over slab, pencil, and
+//! box decompositions through the ranked runtime, and the
+//! `BENCH_scaling.json` trajectory artifact (schema `nekbone-scaling/1`,
+//! documented in `ROADMAP.md`).
+//!
+//! Run:   `cargo bench --bench scaling`
+//! Smoke: `cargo bench --bench scaling -- --quick`   (alias: --test)
+//! Out:   `cargo bench --bench scaling -- --out path.json`
+//!        (default: `<repo root>/BENCH_scaling.json`)
+//!
+//! The same campaign runs from the binary:
+//! `nekbone scenarios [--quick] [--json <path>]`.
+
+use nekbone::scenario::{render_table, run, validate_json, write_json, ScenarioConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Cargo passes `--bench` to harness-less bench binaries; ignore it.
+    let quick = args.iter().any(|a| a == "--quick" || a == "--test");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| format!("{}/../BENCH_scaling.json", env!("CARGO_MANIFEST_DIR")));
+
+    let cfg = if quick {
+        ScenarioConfig::quick()
+    } else {
+        ScenarioConfig {
+            ranks: vec![1, 2, 4, 8],
+            elements: vec![32, 64],
+            degrees: vec![5, 9],
+            niter: 30,
+            ..ScenarioConfig::quick()
+        }
+    };
+    println!(
+        "# scaling campaign: {} at n in {:?}, ranks {:?}, elements {:?}{}",
+        cfg.operator,
+        cfg.degrees,
+        cfg.ranks,
+        cfg.elements,
+        if quick { " (quick smoke scale)" } else { "" }
+    );
+    let report = run(&cfg).expect("scaling campaign");
+    print!("{}", render_table(&report));
+    if report.skipped > 0 {
+        println!("# skipped {} infeasible combination(s)", report.skipped);
+    }
+
+    // The headline comparison: at the largest strong-scaling rank count,
+    // how do the shapes stack up?
+    let best_ranks = report.points.iter().map(|p| p.ranks).max().unwrap_or(1);
+    for p in &report.points {
+        if p.scenario == "strong" && p.ranks == best_ranks {
+            println!(
+                "# strong n={} r={} {}: {:.3} Mdof/s",
+                p.degree, p.ranks, p.decomp, p.throughput_mdofs
+            );
+        }
+    }
+
+    write_json(&report, &out).expect("write BENCH_scaling.json");
+    let text = std::fs::read_to_string(&out).expect("re-read emitted json");
+    validate_json(&text).expect("emitted json must be schema-valid");
+    println!("# wrote {out} ({} points, schema-valid)", report.points.len());
+}

@@ -180,10 +180,22 @@ pub struct RooflinePoint {
     pub seconds: f64,
 }
 
-/// A full harness run: the machine ceilings plus every measured point.
+/// A full harness run: the machine ceilings, host diagnostics (which
+/// dispatch arm the kernels and ceilings actually ran — without these a
+/// committed trajectory point cannot be compared across hosts), and
+/// every measured point.
 #[derive(Clone, Debug)]
 pub struct RooflineReport {
     pub roofs: MachineRoofs,
+    /// Worker threads the threaded operators ran with (resolved: 0 in
+    /// the config means all cores, this is the actual count).
+    pub threads: usize,
+    /// Compile-time target arm: `"avx2"` when the crate was built with
+    /// AVX2 in the baseline target features, else `"generic"`.
+    pub target_cpu: String,
+    /// Runtime SIMD dispatch arm ([`crate::operators::simd_arm`]) — the
+    /// arm the `cpu-simd*` kernels and the FMA peak ceiling used.
+    pub simd_arm: String,
     pub points: Vec<RooflinePoint>,
 }
 
@@ -349,7 +361,19 @@ pub fn run_with(cfg: &RooflineConfig, registry: &OperatorRegistry) -> Result<Roo
             });
         }
     }
-    Ok(RooflineReport { roofs, points })
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    let target_cpu = if cfg!(target_feature = "avx2") { "avx2" } else { "generic" };
+    Ok(RooflineReport {
+        roofs,
+        threads,
+        target_cpu: target_cpu.into(),
+        simd_arm: crate::operators::simd_arm().to_string(),
+        points,
+    })
 }
 
 /// Render the report as the aligned table the benches print.
@@ -409,6 +433,9 @@ pub fn to_json(report: &RooflineReport) -> String {
     out.push_str(&format!("  \"schema\": {},\n", jstr(SCHEMA)));
     out.push_str(&format!("  \"bandwidth_gbs\": {},\n", jnum(report.roofs.bandwidth_gbs)));
     out.push_str(&format!("  \"peak_gflops\": {},\n", jnum(report.roofs.peak_gflops)));
+    out.push_str(&format!("  \"threads\": {},\n", report.threads));
+    out.push_str(&format!("  \"target_cpu\": {},\n", jstr(&report.target_cpu)));
+    out.push_str(&format!("  \"simd_arm\": {},\n", jstr(&report.simd_arm)));
     out.push_str("  \"points\": [\n");
     for (i, p) in report.points.iter().enumerate() {
         out.push_str(&format!(
@@ -441,6 +468,13 @@ pub fn validate_json(text: &str) -> Result<()> {
     }
     for key in ["bandwidth_gbs", "peak_gflops"] {
         doc.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad(&format!("missing {key}")))?;
+    }
+    // Host diagnostics: required since they make trajectory points
+    // comparable across hosts (a generic-arm point is not an avx2
+    // regression).
+    doc.get("threads").and_then(|v| v.as_usize()).ok_or_else(|| bad("missing threads"))?;
+    for key in ["target_cpu", "simd_arm"] {
+        doc.get(key).and_then(|v| v.as_str()).ok_or_else(|| bad(&format!("missing {key}")))?;
     }
     let points =
         doc.get("points").and_then(|v| v.as_array()).ok_or_else(|| bad("missing points"))?;
@@ -570,6 +604,12 @@ mod tests {
         let text = to_json(&report);
         validate_json(&text).unwrap();
         let doc = crate::json::parse(&text).unwrap();
+        // Host diagnostics survive the round trip.
+        assert!(doc.get("threads").unwrap().as_usize().unwrap() >= 1);
+        let arm = doc.get("simd_arm").unwrap().as_str().unwrap().to_string();
+        assert_eq!(arm, crate::operators::simd_arm().to_string());
+        let target = doc.get("target_cpu").unwrap().as_str().unwrap();
+        assert!(target == "avx2" || target == "generic", "{target}");
         let points = doc.get("points").unwrap().as_array().unwrap();
         assert_eq!(points.len(), report.points.len());
         assert_eq!(
@@ -586,14 +626,20 @@ mod tests {
     fn validation_rejects_missing_keys() {
         assert!(validate_json("{}").is_err());
         assert!(validate_json("not json").is_err());
-        let no_points = format!(
+        const HOST: &str = "\"threads\": 2, \"target_cpu\": \"avx2\", \"simd_arm\": \"avx2\"";
+        let no_host = format!(
             "{{\"schema\": \"{SCHEMA}\", \"bandwidth_gbs\": 1.0, \
              \"peak_gflops\": 1.0, \"points\": []}}"
+        );
+        assert!(validate_json(&no_host).is_err());
+        let no_points = format!(
+            "{{\"schema\": \"{SCHEMA}\", \"bandwidth_gbs\": 1.0, \
+             \"peak_gflops\": 1.0, {HOST}, \"points\": []}}"
         );
         assert!(validate_json(&no_points).is_err());
         let bad_point = format!(
             "{{\"schema\": \"{SCHEMA}\", \"bandwidth_gbs\": 1.0, \
-             \"peak_gflops\": 1.0, \"points\": [{{\"operator\": \"x\"}}]}}"
+             \"peak_gflops\": 1.0, {HOST}, \"points\": [{{\"operator\": \"x\"}}]}}"
         );
         assert!(validate_json(&bad_point).is_err());
     }

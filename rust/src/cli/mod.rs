@@ -99,6 +99,7 @@ impl Args {
             record_residuals: self.flag("record-residuals"),
             precond: self.get("precond").unwrap_or(&dflt.precond).to_string(),
             cheb_order: self.get_usize("cheb-order", dflt.cheb_order)?,
+            decomp: self.get("decomp").unwrap_or(&dflt.decomp).to_string(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -118,6 +119,7 @@ SUBCOMMANDS:
   roofline   measured-roofline comparison (paper Fig. 4)
   serve      serve solves over TCP (newline-delimited JSON protocol)
   loadgen    drive a running server; report in nekbone-serve/1 JSON
+  scenarios  strong/weak-scaling campaign; nekbone-scaling/1 JSON
   info       list registered operators + manifest + platform information
   help       this text
 
@@ -144,6 +146,9 @@ const USAGE_TAIL: &str = "\
   --vector-backend B rust | xla                    [rust]
   --ranks R          simulated MPI ranks [1]; with an explicit --backend
                      each rank runs that operator, else cpu-layered
+  --decomp D         rank decomposition: slab | pencil | box [slab]
+                     (z layers, z*y pencils, or z*y*x bricks; every shape
+                     reproduces the serial answer bitwise)
   --artifacts DIR    artifact directory            [artifacts]
   --seed S           RHS seed                      [0x5EED]
   --rtol T           early-exit residual tolerance (default: none; run
@@ -234,10 +239,12 @@ fn opt_lines(opts: &[crate::serve::OptSpec]) -> String {
 /// what actually resolves or parses.
 pub fn usage() -> String {
     format!(
-        "{USAGE_HEAD}{}{USAGE_TAIL}\nSERVE OPTIONS (serve):\n{}\nLOADGEN OPTIONS (loadgen):\n{}",
+        "{USAGE_HEAD}{}{USAGE_TAIL}\nSERVE OPTIONS (serve):\n{}\nLOADGEN OPTIONS (loadgen):\n{}\
+         \nSCENARIO OPTIONS (scenarios):\n{}",
         backend_help_lines(),
         opt_lines(crate::serve::SERVE_OPTS),
         opt_lines(crate::serve::LOADGEN_OPTS),
+        opt_lines(crate::scenario::SCENARIO_OPTS),
     )
 }
 
@@ -309,6 +316,16 @@ mod tests {
     }
 
     #[test]
+    fn decomp_option_from_args() {
+        for shape in ["slab", "pencil", "box"] {
+            let a = args(&["run", "--ranks", "2", "--decomp", shape]);
+            assert_eq!(a.run_config().unwrap().decomp, shape);
+        }
+        assert_eq!(args(&["run"]).run_config().unwrap().decomp, "slab");
+        assert!(args(&["run", "--decomp", "diag"]).run_config().is_err());
+    }
+
+    #[test]
     fn bad_integer_rejected() {
         let a = args(&["run", "--nelt", "many"]);
         assert!(a.run_config().is_err());
@@ -345,9 +362,11 @@ mod tests {
     #[test]
     fn usage_lists_every_serve_option_from_its_spec_table() {
         let text = usage();
-        for (sub, opts) in
-            [("serve", crate::serve::SERVE_OPTS), ("loadgen", crate::serve::LOADGEN_OPTS)]
-        {
+        for (sub, opts) in [
+            ("serve", crate::serve::SERVE_OPTS),
+            ("loadgen", crate::serve::LOADGEN_OPTS),
+            ("scenarios", crate::scenario::SCENARIO_OPTS),
+        ] {
             assert!(text.contains(&format!("\n  {sub} ")), "SUBCOMMANDS must list {sub}");
             for o in opts {
                 assert!(text.contains(&format!("--{}", o.key)), "usage lost --{}", o.key);

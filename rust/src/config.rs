@@ -41,6 +41,9 @@ pub struct RunConfig {
     /// Chebyshev polynomial order (only read when `precond == "cheb"`;
     /// each CG iteration then costs `cheb_order - 1` extra Ax sweeps).
     pub cheb_order: usize,
+    /// Rank decomposition shape: `"slab"` (z layers), `"pencil"` (z×y
+    /// columns), or `"box"` (z×y×x bricks). Only read on the ranked path.
+    pub decomp: String,
 }
 
 impl Default for RunConfig {
@@ -60,6 +63,7 @@ impl Default for RunConfig {
             record_residuals: false,
             precond: "none".into(),
             cheb_order: 4,
+            decomp: "slab".into(),
         }
     }
 }
@@ -109,6 +113,14 @@ impl RunConfig {
         if self.precond == "cheb" && self.cheb_order == 0 {
             return Err(Error::Config("cheb-order must be >= 1".into()));
         }
+        match self.decomp.as_str() {
+            "slab" | "pencil" | "box" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "decomp must be slab|pencil|box, got {other:?}"
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -142,6 +154,7 @@ mod tests {
             RunConfig { rtol: Some(f64::NAN), ..Default::default() },
             RunConfig { precond: "ilu".into(), ..Default::default() },
             RunConfig { precond: "cheb".into(), cheb_order: 0, ..Default::default() },
+            RunConfig { decomp: "diag".into(), ..Default::default() },
         ] {
             assert!(cfg.validate().is_err(), "{cfg:?}");
         }

@@ -255,12 +255,17 @@ impl NekboneBuilder {
         // application itself never needs the geometric factors again.
 
         let ndof = mesh.ndof_local();
+        // Element-blocked reductions, folded in global element order: the
+        // same plan the ranked path installs per brick, so serial and
+        // ranked dot products evaluate one fold expression bit for bit.
+        let mut ws = CgWorkspace::new(ndof);
+        ws.set_reduce_plan(cfg.n * cfg.n * cfg.n, (0..mesh.nelt() as u64).collect())?;
         Ok(Nekbone {
             cfg,
             vector_backend: self.vector_backend,
             mesh,
             basis,
-            state: SolveState { op, gs, mask, c, f, precond, ws: CgWorkspace::new(ndof) },
+            state: SolveState { op, gs, mask, c, f, precond, ws },
         })
     }
 }

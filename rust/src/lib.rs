@@ -117,5 +117,6 @@ pub mod proputil;
 pub mod config;
 pub mod cli;
 pub mod serve;
+pub mod scenario;
 
 pub use error::{Error, Result};

@@ -38,6 +38,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "roofline" => cmd_roofline(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "scenarios" => cmd_scenarios(&args),
         "info" => cmd_info(&args),
         other => {
             eprint!("unknown subcommand {other:?}\n\n{}", usage());
@@ -222,6 +223,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "loadgen: {} request(s) failed",
             report.errors
         )));
+    }
+    Ok(())
+}
+
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    let cfg = nekbone::scenario::ScenarioConfig::from_args(args)?;
+    let report = nekbone::scenario::run(&cfg)?;
+    print!("{}", nekbone::scenario::render_table(&report));
+    if report.skipped > 0 {
+        println!(
+            "# skipped {} infeasible (shape, ranks, elements) combination(s)",
+            report.skipped
+        );
+    }
+    if let Some(path) = &cfg.json {
+        nekbone::scenario::write_json(&report, path)?;
+        println!("# wrote {path} (schema {})", nekbone::scenario::SCHEMA);
     }
     Ok(())
 }

@@ -167,6 +167,55 @@ impl Comm {
         self.send(peer, tag, mine)?;
         self.recv(peer, tag)
     }
+
+    /// Keyed ordered sum (the channel realization of
+    /// [`Communicator::allreduce_ordered_sum`]): rank 0 gathers every
+    /// rank's `(gid, partial)` pairs, sorts them by gid, folds from `0.0`
+    /// in ascending-gid order, and broadcasts its accumulator verbatim.
+    /// Because each gid is owned by exactly one rank the keys are unique,
+    /// so the sort fully determines the fold order — the very expression a
+    /// size-1 communicator evaluates over the same gids. That makes the
+    /// result bitwise independent of how the gids are distributed across
+    /// ranks, which is what pins ranked CG reductions to the serial bits
+    /// for every decomposition shape.
+    ///
+    /// Pairs travel as flat `[gid, partial, gid, partial, ...]` f64 data;
+    /// gids are far below 2^53 (the exchange tag space alone caps them at
+    /// 2^30), so the f64 round trip is exact.
+    pub fn allreduce_ordered_sum(
+        &mut self,
+        gids: &[u64],
+        partials: &[f64],
+        tag: u64,
+    ) -> Result<f64> {
+        debug_assert_eq!(gids.len(), partials.len());
+        if self.size == 1 {
+            return Ok(partials.iter().fold(0.0, |acc, &p| acc + p));
+        }
+        if self.rank != 0 {
+            let mut flat = Vec::with_capacity(gids.len() * 2);
+            for (&g, &p) in gids.iter().zip(partials) {
+                flat.push(g as f64);
+                flat.push(p);
+            }
+            self.send(0, tag, flat)?;
+            return Ok(self.recv(0, tag | TAG_BCAST)?[0]);
+        }
+        let mut pairs: Vec<(u64, f64)> =
+            gids.iter().copied().zip(partials.iter().copied()).collect();
+        for from in 1..self.size {
+            let flat = self.recv(from, tag)?;
+            for ch in flat.chunks_exact(2) {
+                pairs.push((ch[0] as u64, ch[1]));
+            }
+        }
+        pairs.sort_unstable_by_key(|&(g, _)| g);
+        let acc = pairs.iter().fold(0.0, |acc, &(_, p)| acc + p);
+        for to in 1..self.size {
+            self.send(to, tag | TAG_BCAST, vec![acc])?;
+        }
+        Ok(acc)
+    }
 }
 
 /// The [`Communicator`] adapter over a rank's channel [`Comm`]: collective
@@ -216,6 +265,11 @@ impl Communicator for ThreadComm {
     fn allreduce_min(&mut self, value: f64) -> Result<f64> {
         let tag = self.next_tag()?;
         self.comm.borrow_mut().allreduce_min(value, tag)
+    }
+
+    fn allreduce_ordered_sum(&mut self, gids: &[u64], partials: &[f64]) -> Result<f64> {
+        let tag = self.next_tag()?;
+        self.comm.borrow_mut().allreduce_ordered_sum(gids, partials, tag)
     }
 
     fn barrier(&mut self) -> Result<()> {
@@ -276,6 +330,46 @@ mod tests {
             let (s, m) = h.join().unwrap();
             assert_eq!(s.to_bits(), want_sum.to_bits());
             assert_eq!(m.to_bits(), want_min.to_bits());
+        }
+    }
+
+    #[test]
+    fn ordered_sum_is_distribution_independent() {
+        // Order-sensitive values keyed by gid, dealt out to ranks three
+        // different ways (contiguous blocks, round-robin, reversed): every
+        // layout must reproduce the serial ascending-gid fold bitwise.
+        const VALS: [f64; 8] = [1.0e16, 3.7, -1.0e16, 0.1, 2.5e15, -0.3, 7.0, -2.5e15];
+        fn deal(layout: usize, rank: usize) -> (Vec<u64>, Vec<f64>) {
+            let mine: Vec<u64> = (0..VALS.len() as u64)
+                .filter(|&g| match layout {
+                    0 => g / 2 == rank as u64,     // contiguous blocks
+                    1 => g % 4 == rank as u64,     // round-robin
+                    _ => 3 - g / 2 == rank as u64, // reversed blocks
+                })
+                .collect();
+            let parts = mine.iter().map(|&g| VALS[g as usize]).collect();
+            (mine, parts)
+        }
+        let want = VALS.iter().fold(0.0f64, |a, &b| a + b);
+        assert_ne!(
+            want.to_bits(),
+            VALS.iter().rev().fold(0.0f64, |a, &b| a + b).to_bits(),
+            "test values must be order-sensitive"
+        );
+        for layout in 0..3 {
+            let comms = Comm::mesh(4);
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    std::thread::spawn(move || {
+                        let (gids, parts) = deal(layout, c.rank);
+                        c.allreduce_ordered_sum(&gids, &parts, 21).unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap().to_bits(), want.to_bits(), "layout {layout}");
+            }
         }
     }
 

@@ -1,0 +1,427 @@
+//! Partitioning the element grid across ranks: slab (z), pencil (z×y),
+//! and box (z×y×x) decompositions.
+//!
+//! A decomposition assigns every rank one contiguous **brick** of
+//! elements — per-axis element ranges, the natural generalization of the
+//! original z-slab layout (a slab is a brick spanning the full x/y
+//! extents). Neighbor topology follows from geometry alone: two bricks
+//! are neighbors exactly when their global *point* ranges intersect in
+//! all three axes, which covers face, edge, and corner adjacency (up to
+//! 26 neighbors for an interior box brick). Each neighbor link carries
+//! the ascending list of global point ids in the intersection box; both
+//! sides of a link enumerate the identical list, so exchange messages
+//! align and tags derive from the link's first gid without negotiation.
+//!
+//! Shape selection is by feasible factorization: the rank count is
+//! factored over the axes the shape may split (slab: z; pencil: z then
+//! y; box: all three), subject to each axis factor not exceeding that
+//! axis's element count, minimizing the total cut-plane area (the
+//! elements-per-face communication proxy). An infeasible request — any
+//! axis split finer than its element count — is a structured
+//! [`Error::Config`] naming the axes and their limits, never a
+//! degenerate empty brick.
+
+use crate::error::{Error, Result};
+use crate::mesh::Mesh;
+
+/// Which axes a decomposition may split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecompShape {
+    /// z only (the original layout): ranks own whole element layers.
+    Slab,
+    /// z × y: ranks own full-x columns.
+    Pencil,
+    /// z × y × x: general 3-D bricks.
+    Box,
+}
+
+impl DecompShape {
+    /// Parse a `--decomp` value.
+    pub fn parse(s: &str) -> Result<DecompShape> {
+        match s {
+            "slab" => Ok(DecompShape::Slab),
+            "pencil" => Ok(DecompShape::Pencil),
+            "box" => Ok(DecompShape::Box),
+            other => Err(Error::Config(format!(
+                "unknown decomposition shape '{other}' (expected slab, pencil, or box)"
+            ))),
+        }
+    }
+
+    /// The CLI/report spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DecompShape::Slab => "slab",
+            DecompShape::Pencil => "pencil",
+            DecompShape::Box => "box",
+        }
+    }
+}
+
+/// One rank's contiguous element brick: half-open per-axis element
+/// ranges into the mesh's `ex × ey × ez` grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Brick {
+    pub x0: usize,
+    pub x1: usize,
+    pub y0: usize,
+    pub y1: usize,
+    pub z0: usize,
+    pub z1: usize,
+}
+
+impl Brick {
+    /// Elements in this brick.
+    pub fn nelt(&self) -> usize {
+        (self.x1 - self.x0) * (self.y1 - self.y0) * (self.z1 - self.z0)
+    }
+
+    /// Global element ids of this brick in ascending order (k-major —
+    /// the mesh numbers elements x-fastest, so lexicographic (k, j, i)
+    /// over the ranges *is* ascending global id). The rank runtime
+    /// relies on this order: with local elements ascending by global id,
+    /// the rank-local gather–scatter folds every purely-local shared
+    /// group in exactly the serial fold order.
+    pub fn elems(&self, mesh: &Mesh) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.nelt());
+        for ek in self.z0..self.z1 {
+            for ej in self.y0..self.y1 {
+                for ei in self.x0..self.x1 {
+                    out.push(mesh.elem_id(ei, ej, ek));
+                }
+            }
+        }
+        out
+    }
+
+    /// Inclusive global *point* range along one axis: elements
+    /// `[a0, a1)` of degree-`n` elements cover points
+    /// `[a0·(n−1), a1·(n−1)]` (shared faces overlap by one point).
+    fn point_range(a0: usize, a1: usize, n: usize) -> (usize, usize) {
+        (a0 * (n - 1), a1 * (n - 1))
+    }
+}
+
+/// Split `len` items over `parts`: contiguous, remainder to low parts.
+/// The caller guarantees `parts <= len` (the factorization search only
+/// proposes feasible splits), so no range is empty.
+fn axis_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for p in 0..parts {
+        let h = base + usize::from(p < rem);
+        out.push((at, at + h));
+        at += h;
+    }
+    out
+}
+
+/// A full partition of the mesh: the shape, the chosen per-axis factors
+/// (`px · py · pz == ranks`), one [`Brick`] per rank, and the neighbor
+/// links (peer rank + ascending shared global point ids) of every rank.
+///
+/// Rank ordering is x-fastest: `rank = (iz · py + iy) · px + ix`. A slab
+/// decomposition (`px = py = 1`) therefore reproduces the original
+/// layout exactly — rank r owns z layers `iz = r`.
+pub struct Decomposition {
+    pub shape: DecompShape,
+    pub px: usize,
+    pub py: usize,
+    pub pz: usize,
+    bricks: Vec<Brick>,
+    /// Per rank: `(peer, ascending shared point gids)` per neighbor,
+    /// peers ascending.
+    neighbors: Vec<Vec<(usize, Vec<usize>)>>,
+}
+
+impl Decomposition {
+    /// Factor `ranks` over the shape's axes and build the bricks and
+    /// neighbor links. Infeasible requests (any axis split finer than
+    /// its element count) are structured Config errors naming the axes
+    /// and limits.
+    pub fn new(shape: DecompShape, ranks: usize, mesh: &Mesh) -> Result<Decomposition> {
+        if ranks == 0 {
+            return Err(Error::Config("decomposition needs at least one rank".into()));
+        }
+        let (ex, ey, ez) = (mesh.ex, mesh.ey, mesh.ez);
+        // Enumerate feasible factorizations, keep the one with the least
+        // cut-plane area (elements per internal face, the communication
+        // proxy); ties break toward more z splits, then more y splits,
+        // so the search is deterministic and slab-like layouts win ties.
+        let mut best: Option<(usize, usize, usize, usize)> = None; // (cost, px, py, pz)
+        let mut consider = |px: usize, py: usize, pz: usize| {
+            let cost = (pz - 1) * ex * ey + (py - 1) * ex * ez + (px - 1) * ey * ez;
+            let better = match best {
+                None => true,
+                Some((c, _, bpy, bpz)) => {
+                    (cost, std::cmp::Reverse(pz), std::cmp::Reverse(py))
+                        < (c, std::cmp::Reverse(bpz), std::cmp::Reverse(bpy))
+                }
+            };
+            if better {
+                best = Some((cost, px, py, pz));
+            }
+        };
+        for pz in 1..=ranks.min(ez) {
+            if ranks % pz != 0 {
+                continue;
+            }
+            let rest = ranks / pz;
+            match shape {
+                DecompShape::Slab => {
+                    if rest == 1 {
+                        consider(1, 1, pz);
+                    }
+                }
+                DecompShape::Pencil => {
+                    if rest <= ey {
+                        consider(1, rest, pz);
+                    }
+                }
+                DecompShape::Box => {
+                    for py in 1..=rest.min(ey) {
+                        if rest % py != 0 {
+                            continue;
+                        }
+                        let px = rest / py;
+                        if px <= ex {
+                            consider(px, py, pz);
+                        }
+                    }
+                }
+            }
+        }
+        let Some((_, px, py, pz)) = best else {
+            let axes = match shape {
+                DecompShape::Slab => format!("pz = ranks with pz <= ez ({ez})"),
+                DecompShape::Pencil => {
+                    format!("py*pz = ranks with py <= ey ({ey}), pz <= ez ({ez})")
+                }
+                DecompShape::Box => format!(
+                    "px*py*pz = ranks with px <= ex ({ex}), py <= ey ({ey}), pz <= ez ({ez})"
+                ),
+            };
+            return Err(Error::Config(format!(
+                "{} decomposition of {ranks} ranks is infeasible on the \
+                 {ex}x{ey}x{ez} element grid: no factorization {axes}; \
+                 use fewer ranks, a roomier shape, or a larger nelt",
+                shape.as_str()
+            )));
+        };
+
+        let zr = axis_ranges(ez, pz);
+        let yr = axis_ranges(ey, py);
+        let xr = axis_ranges(ex, px);
+        let mut bricks = Vec::with_capacity(ranks);
+        for &(z0, z1) in &zr {
+            for &(y0, y1) in &yr {
+                for &(x0, x1) in &xr {
+                    bricks.push(Brick { x0, x1, y0, y1, z0, z1 });
+                }
+            }
+        }
+
+        let neighbors = (0..ranks)
+            .map(|r| {
+                let mut links = Vec::new();
+                for (s, other) in bricks.iter().enumerate() {
+                    if s == r {
+                        continue;
+                    }
+                    if let Some(gids) = shared_points(&bricks[r], other, mesh) {
+                        links.push((s, gids));
+                    }
+                }
+                links
+            })
+            .collect();
+
+        Ok(Decomposition { shape, px, py, pz, bricks, neighbors })
+    }
+
+    /// One brick per rank, indexed by rank.
+    pub fn bricks(&self) -> &[Brick] {
+        &self.bricks
+    }
+
+    /// `rank`'s neighbor links: `(peer, ascending shared point gids)`,
+    /// peers ascending. Both endpoints of a link hold the identical gid
+    /// list (the intersection box is symmetric).
+    pub fn neighbors(&self, rank: usize) -> &[(usize, Vec<usize>)] {
+        &self.neighbors[rank]
+    }
+
+    /// Ranks in this decomposition.
+    pub fn ranks(&self) -> usize {
+        self.bricks.len()
+    }
+}
+
+/// The global point ids two bricks share, ascending — `None` when the
+/// bricks are not adjacent. Bricks share points exactly when their
+/// inclusive point ranges intersect in all three axes; the shared set is
+/// then the (degenerate or not) intersection box, enumerated z-major /
+/// x-fastest, which is ascending in `gid = (z·gy + y)·gx + x`.
+fn shared_points(a: &Brick, b: &Brick, mesh: &Mesh) -> Option<Vec<usize>> {
+    let n = mesh.n;
+    let axis = |a0, a1, b0, b1| {
+        let (alo, ahi) = Brick::point_range(a0, a1, n);
+        let (blo, bhi) = Brick::point_range(b0, b1, n);
+        let lo = alo.max(blo);
+        let hi = ahi.min(bhi);
+        (lo <= hi).then_some((lo, hi))
+    };
+    let (xlo, xhi) = axis(a.x0, a.x1, b.x0, b.x1)?;
+    let (ylo, yhi) = axis(a.y0, a.y1, b.y0, b.y1)?;
+    let (zlo, zhi) = axis(a.z0, a.z1, b.z0, b.z1)?;
+    let mut gids =
+        Vec::with_capacity((zhi - zlo + 1) * (yhi - ylo + 1) * (xhi - xlo + 1));
+    for z in zlo..=zhi {
+        for y in ylo..=yhi {
+            for x in xlo..=xhi {
+                gids.push((z * mesh.gy + y) * mesh.gx + x);
+            }
+        }
+    }
+    Some(gids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh(ex: usize, ey: usize, ez: usize, n: usize) -> Mesh {
+        Mesh::new(ex, ey, ez, n).unwrap()
+    }
+
+    #[test]
+    fn slab_reproduces_the_original_layout() {
+        let m = mesh(2, 2, 4, 3);
+        let d = Decomposition::new(DecompShape::Slab, 4, &m).unwrap();
+        assert_eq!((d.px, d.py, d.pz), (1, 1, 4));
+        for (r, b) in d.bricks().iter().enumerate() {
+            assert_eq!((b.x0, b.x1, b.y0, b.y1), (0, 2, 0, 2));
+            assert_eq!((b.z0, b.z1), (r, r + 1));
+        }
+        // Adjacent slabs share one full xy plane of points; slab 0 and
+        // slab 2 are not adjacent (their point ranges never touch).
+        let links = d.neighbors(0);
+        assert_eq!(links.len(), 1);
+        assert_eq!(links[0].0, 1);
+        assert_eq!(links[0].1.len(), m.gx * m.gy);
+        assert!(d.neighbors(1).iter().any(|(p, _)| *p == 2));
+        assert!(!d.neighbors(0).iter().any(|(p, _)| *p == 2));
+    }
+
+    #[test]
+    fn bricks_partition_every_element_exactly_once() {
+        for (shape, ranks) in [
+            (DecompShape::Slab, 4),
+            (DecompShape::Pencil, 4),
+            (DecompShape::Pencil, 6),
+            (DecompShape::Box, 8),
+            (DecompShape::Box, 12),
+        ] {
+            let m = mesh(3, 4, 4, 3);
+            let d = Decomposition::new(shape, ranks, &m).unwrap();
+            assert_eq!(d.ranks(), ranks);
+            let mut seen = vec![false; m.nelt()];
+            for b in d.bricks() {
+                assert!(b.nelt() > 0, "{shape:?}/{ranks}: empty brick");
+                for e in b.elems(&m) {
+                    assert!(!seen[e], "{shape:?}/{ranks}: element {e} owned twice");
+                    seen[e] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{shape:?}/{ranks}: elements unowned");
+        }
+    }
+
+    #[test]
+    fn elems_ascend_within_every_brick() {
+        let m = mesh(3, 4, 4, 3);
+        let d = Decomposition::new(DecompShape::Box, 12, &m).unwrap();
+        for b in d.bricks() {
+            let es = b.elems(&m);
+            assert!(es.windows(2).all(|w| w[0] < w[1]), "brick {b:?}: {es:?}");
+        }
+    }
+
+    #[test]
+    fn factorization_prefers_fewest_cut_faces() {
+        // 4 ranks on a 2x4x4 grid: splitting z into 4 layers cuts
+        // 3 planes of 8 elements (24 faces); 2x2 over (y, z) cuts
+        // 1 plane of 8 + 1 plane of 8 (16). Pencil must pick 2x2.
+        let m = mesh(2, 4, 4, 3);
+        let d = Decomposition::new(DecompShape::Pencil, 4, &m).unwrap();
+        assert_eq!((d.px, d.py, d.pz), (1, 2, 2));
+        // Box on 8 ranks over 2x4x4 prefers 1x2x4 (z-heavy tie-break
+        // never splits x while y/z can absorb the factor more cheaply).
+        let d8 = Decomposition::new(DecompShape::Box, 8, &m).unwrap();
+        assert_eq!(d8.px * d8.py * d8.pz, 8);
+        let split = (d8.px, d8.py, d8.pz);
+        assert!(d8.px == 1, "x split is the most expensive axis here: {split:?}");
+    }
+
+    #[test]
+    fn pencil_and_box_links_are_symmetric() {
+        let m = mesh(3, 4, 4, 4);
+        for (shape, ranks) in [(DecompShape::Pencil, 4), (DecompShape::Box, 12)] {
+            let d = Decomposition::new(shape, ranks, &m).unwrap();
+            for r in 0..ranks {
+                for (peer, gids) in d.neighbors(r) {
+                    let back = d
+                        .neighbors(*peer)
+                        .iter()
+                        .find(|(p, _)| *p == r)
+                        .unwrap_or_else(|| panic!("{shape:?}: link {r}->{peer} not mirrored"));
+                    assert_eq!(&back.1, gids, "{shape:?}: {r}<->{peer} gid lists differ");
+                    assert!(gids.windows(2).all(|w| w[0] < w[1]), "gids must ascend");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn box_interior_rank_sees_corner_and_edge_neighbors() {
+        // 27 ranks on a 3x3x3 grid: the center brick touches all 26
+        // others — 6 faces, 12 edges, 8 corners.
+        let m = mesh(3, 3, 3, 3);
+        let d = Decomposition::new(DecompShape::Box, 27, &m).unwrap();
+        assert_eq!((d.px, d.py, d.pz), (3, 3, 3));
+        let center = (3 + 1) * 3 + 1; // (iz=1, iy=1, ix=1) under x-fastest ordering
+        let links = d.neighbors(center);
+        assert_eq!(links.len(), 26);
+        let sizes: Vec<usize> = links.iter().map(|(_, g)| g.len()).collect();
+        let corners = sizes.iter().filter(|&&s| s == 1).count();
+        assert_eq!(corners, 8, "corner links share exactly one point: {sizes:?}");
+    }
+
+    #[test]
+    fn infeasible_splits_name_the_axis_limits() {
+        let m = mesh(2, 4, 4, 3); // ez = 4
+        let err = Decomposition::new(DecompShape::Slab, 5, &m).unwrap_err().to_string();
+        assert!(err.contains("slab") && err.contains("ez (4)"), "{err}");
+        // Pencil: 7 is prime and exceeds both splittable axes' limits...
+        let err = Decomposition::new(DecompShape::Pencil, 7, &m).unwrap_err().to_string();
+        assert!(err.contains("pencil") && err.contains("ey (4)"), "{err}");
+        assert!(err.contains("ez (4)"), "{err}");
+        // ...and box names all three axes (32 > 2*4*4 has no fit).
+        let err = Decomposition::new(DecompShape::Box, 64, &m).unwrap_err().to_string();
+        assert!(err.contains("box") && err.contains("ex (2)"), "{err}");
+        // Feasible cousins of the failures above succeed.
+        assert!(Decomposition::new(DecompShape::Pencil, 8, &m).is_ok());
+        assert!(Decomposition::new(DecompShape::Box, 32, &m).is_ok());
+    }
+
+    #[test]
+    fn shape_parse_round_trips() {
+        for s in ["slab", "pencil", "box"] {
+            assert_eq!(DecompShape::parse(s).unwrap().as_str(), s);
+        }
+        let err = DecompShape::parse("diag").unwrap_err().to_string();
+        assert!(err.contains("diag") && err.contains("slab"), "{err}");
+    }
+}

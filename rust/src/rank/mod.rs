@@ -1,22 +1,46 @@
 //! Simulated multi-rank runtime: the MPI layer of Nekbone as threads +
 //! channels (experiment E8, strong scaling).
 //!
-//! The element grid is partitioned into contiguous **z slabs** (ranks own
-//! `ez/R` element layers each, remainder to the low ranks). Adjacent slabs
-//! share one plane of global points, so the distributed `dssum` is a local
-//! gather–scatter followed by one pairwise halo exchange per neighbor —
-//! exactly the communication structure of the real code, with
+//! The element grid is partitioned by a [`Decomposition`] — **slab** (z
+//! layers, the original layout), **pencil** (z×y columns), or **box**
+//! (z×y×x bricks), selected with `--decomp`. Neighboring bricks share
+//! faces, edges, or single corner points of global ids, so the
+//! distributed `dssum` is a rank-local gather–scatter followed by one
+//! pairwise exchange per neighbor link (up to 26 for an interior box
+//! brick) — the communication structure of the real code, with
 //! `std::sync::mpsc` standing in for MPI.
 //!
 //! There is **no CG code here**. Each rank wraps its channels in a
 //! [`ThreadComm`] (the [`Communicator`](crate::solver::Communicator)
-//! adapter) and its slab assembly in a `HaloExchange` (the distributed
+//! adapter) and its brick assembly in a `BrickExchange` (the distributed
 //! [`DomainExchange`](crate::solver::DomainExchange)), then calls the same
 //! [`cg_solve`] the serial pipeline uses — residual updates, the
 //! convergence floor, fused-pap accounting, and sweep counters all live in
-//! exactly one place (`solver/cg.rs`). Because every CG scalar is an
-//! order-deterministic allreduce, the per-rank [`CgReport`]s are bitwise
-//! identical; [`run_ranked_in`] asserts that exactly.
+//! exactly one place (`solver/cg.rs`).
+//!
+//! ## Bitwise agreement with the serial solve
+//!
+//! Ranked reports are not merely rank-identical — they are **bitwise
+//! identical to the serial solve**, for every decomposition shape. Three
+//! mechanisms pin this down:
+//!
+//! 1. **Reductions** go through the workspace's element-blocked reduce
+//!    plan: one partial per element, folded in ascending *global element
+//!    id* order by `allreduce_ordered_sum` — the same fold expression the
+//!    serial pipeline evaluates, independent of which rank owns which
+//!    element.
+//! 2. **Local assembly**: each brick enumerates its elements in ascending
+//!    global id, so the rank-local gather–scatter folds purely-local
+//!    shared groups in exactly the serial group order.
+//! 3. **Cross-rank assembly**: `BrickExchange` snapshots every boundary
+//!    point's per-element raw contributions *before* local assembly,
+//!    exchanges them per neighbor link, and refolds each boundary point
+//!    from all contributions sorted by owning element id — again the
+//!    serial fold, reproduced rather than approximated.
+//!
+//! [`run_ranked_in`] asserts the cross-rank half of this exactly (bitwise
+//! report equality across ranks); `tests/rank.rs` holds the
+//! ranked-vs-serial half across the shape × ranks × degree grid.
 //!
 //! The per-rank compute dispatches through a `Box<dyn AxOperator>` built by
 //! name from the [`OperatorRegistry`], so any registered operator (default:
@@ -24,8 +48,10 @@
 //! rank loop without this module knowing about it.
 
 mod comm;
+mod decomp;
 
 pub use comm::{Comm, Packet, ThreadComm};
+pub use decomp::{Brick, DecompShape, Decomposition};
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -48,9 +74,9 @@ use crate::solver::{
 /// The operator each rank runs when the caller does not pick one.
 pub const DEFAULT_RANK_OPERATOR: &str = "cpu-layered";
 
-/// Reject runs whose halo-exchange tags cannot be represented (see the
+/// Reject runs whose boundary-exchange tags cannot be represented (see the
 /// tag-space layout in [`comm`]): one exchange round per CG iteration, and
-/// plane ids drawn from the global dof numbering.
+/// link ids drawn from the global point numbering.
 fn check_tag_capacity(niter: usize, ndof_global: usize) -> Result<()> {
     if niter as u64 >= 1u64 << comm::TAG_ROUND_BITS {
         return Err(Error::Config(format!(
@@ -69,17 +95,18 @@ fn check_tag_capacity(niter: usize, ndof_global: usize) -> Result<()> {
     Ok(())
 }
 
-/// How one rank sees the mesh.
-struct RankSlab {
-    /// Global element range [e0, e1).
-    e0: usize,
-    e1: usize,
-    /// Rank-local gather–scatter over the slab's own elements.
+/// How one rank sees the mesh: its brick's elements, the rank-local
+/// assembly, the neighbor links, and the local field slices.
+struct RankDomain {
+    /// Global ids of this rank's elements, ascending (the brick
+    /// enumerates them k-major, which is ascending by construction).
+    elems: Vec<usize>,
+    /// Rank-local gather–scatter over the brick's own elements.
     gs: GatherScatter,
-    /// Sorted global ids of the plane shared with the previous / next rank,
-    /// and for each, the rank-local dof indices holding copies.
-    lo_plane: Vec<(usize, Vec<usize>)>,
-    hi_plane: Vec<(usize, Vec<usize>)>,
+    /// Global point id of every local dof (element-major).
+    point_gids: Vec<usize>,
+    /// Neighbor links: `(peer rank, ascending shared global point ids)`.
+    links: Vec<(usize, Vec<usize>)>,
     /// Rank-local fields.
     mask: Vec<f64>,
     c: Vec<f64>,
@@ -87,29 +114,14 @@ struct RankSlab {
     g: Vec<f64>,
 }
 
-/// Partition `ez` layers over `ranks`: contiguous, remainder to low ranks.
-fn slab_ranges(ez: usize, ranks: usize) -> Vec<(usize, usize)> {
-    let base = ez / ranks;
-    let rem = ez % ranks;
-    let mut out = Vec::with_capacity(ranks);
-    let mut z = 0;
-    for r in 0..ranks {
-        let h = base + usize::from(r < rem);
-        out.push((z, z + h));
-        z += h;
-    }
-    out
-}
-
-/// Build the per-rank slabs (global ids, shared planes, local fields).
-fn build_slabs(mesh: &Mesh, basis: &Basis, cfg: &RunConfig) -> Result<Vec<RankSlab>> {
-    let ranks = cfg.ranks;
-    if mesh.ez < ranks {
-        return Err(Error::Config(format!(
-            "ranks ({ranks}) exceed element layers ez ({}); pick nelt with more z layers",
-            mesh.ez
-        )));
-    }
+/// Build the per-rank domains (global ids, neighbor links, local fields)
+/// for a decomposition.
+fn build_domains(
+    mesh: &Mesh,
+    basis: &Basis,
+    cfg: &RunConfig,
+    decomp: &Decomposition,
+) -> Result<Vec<RankDomain>> {
     let n = mesh.n;
     let np = n * n * n;
     let geom = GeomFactors::affine(mesh, basis);
@@ -122,134 +134,223 @@ fn build_slabs(mesh: &Mesh, basis: &Basis, cfg: &RunConfig) -> Result<Vec<RankSl
     gs_full.dssum(&mut f_full);
     mask_apply(&mut f_full, &mask_full);
 
-    let ezs = slab_ranges(mesh.ez, ranks);
-    let epl = mesh.ex * mesh.ey; // elements per z layer
-    let mut slabs = Vec::with_capacity(ranks);
-    for (rank, &(z0, z1)) in ezs.iter().enumerate() {
-        let e0 = z0 * epl;
-        let e1 = z1 * epl;
-        let nelt_local = e1 - e0;
-        // Localize global ids: dense renumbering over this slab.
-        let mut gids = Vec::with_capacity(nelt_local * np);
-        for e in e0..e1 {
+    let mut domains = Vec::with_capacity(decomp.ranks());
+    for (rank, brick) in decomp.bricks().iter().enumerate() {
+        let elems = brick.elems(mesh);
+        // Localize global point ids: dense renumbering over this brick.
+        let mut point_gids = Vec::with_capacity(elems.len() * np);
+        for &e in &elems {
             for k in 0..n {
                 for j in 0..n {
                     for i in 0..n {
-                        gids.push(mesh.global_id(e, k, j, i));
+                        point_gids.push(mesh.global_id(e, k, j, i));
                     }
                 }
             }
         }
-        let mut sorted: Vec<usize> = gids.clone();
+        let mut sorted: Vec<usize> = point_gids.clone();
         sorted.sort_unstable();
         sorted.dedup();
-        let local_of = |gid: usize| sorted.binary_search(&gid).unwrap();
-        let local_ids: Vec<usize> = gids.iter().map(|&g| local_of(g)).collect();
+        let local_ids: Vec<usize> =
+            point_gids.iter().map(|&g| sorted.binary_search(&g).unwrap()).collect();
         let gs = GatherScatter::from_ids(local_ids, sorted.len());
 
-        // Shared planes: global grid z = z0*(n-1) (with previous rank) and
-        // z = z1*(n-1) (with next rank).
-        let plane = |pz: usize| -> Vec<(usize, Vec<usize>)> {
-            let mut out: Vec<(usize, Vec<usize>)> = Vec::new();
-            for (l, &gid) in gids.iter().enumerate() {
-                let z = gid / (mesh.gx * mesh.gy);
-                if z == pz {
-                    match out.binary_search_by_key(&gid, |(g, _)| *g) {
-                        Ok(pos) => out[pos].1.push(l),
-                        Err(pos) => out.insert(pos, (gid, vec![l])),
-                    }
-                }
+        // Gather the full-mesh fields element by element (bricks are not
+        // contiguous in the full arrays except for slabs).
+        let gather = |src: &[f64], width: usize| -> Vec<f64> {
+            let mut out = Vec::with_capacity(elems.len() * width);
+            for &e in &elems {
+                out.extend_from_slice(&src[e * width..(e + 1) * width]);
             }
             out
         };
-        let lo_plane = if rank > 0 { plane(z0 * (n - 1)) } else { Vec::new() };
-        let hi_plane = if rank + 1 < ranks { plane(z1 * (n - 1)) } else { Vec::new() };
-
-        slabs.push(RankSlab {
-            e0,
-            e1,
+        domains.push(RankDomain {
             gs,
-            lo_plane,
-            hi_plane,
-            mask: mask_full[e0 * np..e1 * np].to_vec(),
-            c: c_full[e0 * np..e1 * np].to_vec(),
-            f: f_full[e0 * np..e1 * np].to_vec(),
-            g: geom.g[e0 * 6 * np..e1 * 6 * np].to_vec(),
+            point_gids,
+            links: decomp.neighbors(rank).to_vec(),
+            mask: gather(&mask_full, np),
+            c: gather(&c_full, np),
+            f: gather(&f_full, np),
+            g: gather(&geom.g, 6 * np),
+            elems,
         });
     }
-    Ok(slabs)
+    Ok(domains)
 }
 
 /// The distributed [`DomainExchange`]: rank-local gather–scatter + one
-/// pairwise halo exchange per slab neighbor. Both sides enumerate each
-/// shared plane in ascending-gid order, so the exchanged vectors align;
-/// the pair tag is derived from the exchange round and the plane's first
-/// global id, identical on both sides without negotiation.
-pub(crate) struct HaloExchange {
+/// pairwise message per neighbor link, for any decomposition shape.
+///
+/// Cross-rank boundary points are not patched with partial sums — they
+/// are **refolded from per-element raw contributions** so the assembled
+/// value is bitwise the serial gather–scatter's: each copy's pre-assembly
+/// value is snapshotted, exchanged (tagged with the link's first shared
+/// gid — identical on both sides without negotiation; two links *from
+/// one rank to different peers* may share a tag, which is harmless
+/// because receives are keyed on `(from, tag)`), and every boundary
+/// point is then summed from all its copies in ascending owning-element
+/// order — the exact order the serial dssum folds them in, since the
+/// serial mesh stores dofs element-major. Any two ranks co-sharing a
+/// point are themselves neighbors (both bricks contain it), so every
+/// rank holds every copy when it refolds.
+pub(crate) struct BrickExchange {
     gs: GatherScatter,
-    lo_plane: Vec<(usize, Vec<usize>)>,
-    hi_plane: Vec<(usize, Vec<usize>)>,
     comm: Rc<RefCell<Comm>>,
     /// Exchange rounds completed (tags are keyed on this; the solver calls
     /// one exchange per iteration on every rank, so the counters agree).
     round: u64,
-    /// Union of the rank-local shared dofs and the halo-plane dofs —
+    /// Cross-rank boundary points, ascending by global point id.
+    points: Vec<CrossPoint>,
+    links: Vec<Link>,
+    /// Union of the rank-local shared dofs and the boundary-point dofs —
     /// everything `exchange` may change, i.e. the support of the fused-pap
     /// correction.
     shared: Vec<u32>,
+    /// Merge scratch, one `(element gid, raw)` list per boundary point —
+    /// reused every round so the solve loop does not allocate.
+    merge: Vec<Vec<(u64, f64)>>,
 }
 
-impl HaloExchange {
+/// One cross-rank boundary point as this rank sees it.
+struct CrossPoint {
+    /// Global point id.
+    gid: usize,
+    /// Local copies as `(owning global element id, local dof)`, ascending
+    /// by element id (local dofs are scanned in ascending order and local
+    /// elements ascend by global id).
+    copies: Vec<(usize, u32)>,
+    /// Pre-assembly copy values, snapshotted at the top of each exchange.
+    raw: Vec<f64>,
+}
+
+/// One neighbor link.
+struct Link {
+    peer: usize,
+    /// First shared gid — the tag key both endpoints derive.
+    first_gid: usize,
+    /// Indices into `BrickExchange::points` shared with this peer.
+    points: Vec<u32>,
+}
+
+impl BrickExchange {
     fn new(
         gs: GatherScatter,
-        lo_plane: Vec<(usize, Vec<usize>)>,
-        hi_plane: Vec<(usize, Vec<usize>)>,
+        point_gids: &[usize],
+        elems: &[usize],
+        neighbor_links: Vec<(usize, Vec<usize>)>,
+        np: usize,
         comm: Rc<RefCell<Comm>>,
     ) -> Self {
+        // The cross-rank point set: union of every link's shared gids.
+        let mut cross: Vec<usize> =
+            neighbor_links.iter().flat_map(|(_, gids)| gids.iter().copied()).collect();
+        cross.sort_unstable();
+        cross.dedup();
+        let mut points: Vec<CrossPoint> = cross
+            .iter()
+            .map(|&gid| CrossPoint { gid, copies: Vec::new(), raw: Vec::new() })
+            .collect();
+        for (l, &gid) in point_gids.iter().enumerate() {
+            if let Ok(ci) = cross.binary_search(&gid) {
+                points[ci].copies.push((elems[l / np], l as u32));
+            }
+        }
+        for cp in &mut points {
+            cp.raw = vec![0.0; cp.copies.len()];
+        }
+        let links: Vec<Link> = neighbor_links
+            .into_iter()
+            .map(|(peer, gids)| Link {
+                peer,
+                first_gid: gids[0],
+                points: gids
+                    .iter()
+                    .map(|g| cross.binary_search(g).unwrap() as u32)
+                    .collect(),
+            })
+            .collect();
         let mut shared: Vec<u32> = gs.shared_dofs().to_vec();
-        for (_, ls) in lo_plane.iter().chain(hi_plane.iter()) {
-            for &l in ls {
-                shared.push(l as u32);
+        for cp in &points {
+            for &(_, l) in &cp.copies {
+                shared.push(l);
             }
         }
         shared.sort_unstable();
         shared.dedup();
-        HaloExchange { gs, lo_plane, hi_plane, comm, round: 0, shared }
-    }
-
-    /// Exchange partial sums on one shared plane with `peer`.
-    fn exchange_plane(
-        comm: &mut Comm,
-        plane: &[(usize, Vec<usize>)],
-        peer: usize,
-        round: u64,
-        v: &mut [f64],
-    ) -> Result<()> {
-        if plane.is_empty() {
-            return Ok(());
-        }
-        let tag = comm::exchange_tag(round, plane[0].0)?;
-        let mine: Vec<f64> = plane.iter().map(|(_, ls)| v[ls[0]]).collect();
-        let theirs = comm.sendrecv(peer, tag, mine)?;
-        for ((_, ls), t) in plane.iter().zip(&theirs) {
-            let total = v[ls[0]] + t;
-            for &l in ls {
-                v[l] = total;
-            }
-        }
-        Ok(())
+        let merge = points.iter().map(|_| Vec::new()).collect();
+        BrickExchange { gs, comm, round: 0, points, links, shared, merge }
     }
 }
 
-impl DomainExchange for HaloExchange {
+impl DomainExchange for BrickExchange {
     fn exchange(&mut self, v: &mut [f64]) -> Result<()> {
         let round = self.round;
         self.round += 1;
+        // Snapshot each boundary point's raw per-element contributions
+        // *before* local assembly: the global refold must combine raw
+        // element copies, not partially assembled local sums, to land in
+        // the serial fold order.
+        for cp in &mut self.points {
+            for (slot, &(_, l)) in cp.raw.iter_mut().zip(&cp.copies) {
+                *slot = v[l as usize];
+            }
+        }
         self.gs.dssum(v);
+        if self.links.is_empty() {
+            return Ok(());
+        }
         let mut comm = self.comm.borrow_mut();
-        let rank = comm.rank;
-        Self::exchange_plane(&mut comm, &self.lo_plane, rank.wrapping_sub(1), round, v)?;
-        Self::exchange_plane(&mut comm, &self.hi_plane, rank + 1, round, v)?;
+        // Send every link's message before receiving any (the channels
+        // are unbounded, so sends never block): flat (point gid, element
+        // gid, raw) triples for every local copy of every shared point.
+        for link in &self.links {
+            let tag = comm::exchange_tag(round, link.first_gid)?;
+            let mut msg = Vec::new();
+            for &ci in &link.points {
+                let cp = &self.points[ci as usize];
+                for (&(eg, _), &raw) in cp.copies.iter().zip(&cp.raw) {
+                    msg.push(cp.gid as f64);
+                    msg.push(eg as f64);
+                    msg.push(raw);
+                }
+            }
+            comm.send(link.peer, tag, msg)?;
+        }
+        // Merge: seed every point with its own copies, add each
+        // neighbor's, then refold in ascending owning-element order. The
+        // element ids are globally unique per point (an element holds at
+        // most one copy of a point, and ranks own disjoint elements), so
+        // the sort fully determines the fold — the serial expression.
+        for (cp, buf) in self.points.iter().zip(self.merge.iter_mut()) {
+            buf.clear();
+            for (&(eg, _), &raw) in cp.copies.iter().zip(&cp.raw) {
+                buf.push((eg as u64, raw));
+            }
+        }
+        for link in &self.links {
+            let tag = comm::exchange_tag(round, link.first_gid)?;
+            let data = comm.recv(link.peer, tag)?;
+            for ch in data.chunks_exact(3) {
+                let gid = ch[0] as usize;
+                let ci = self
+                    .points
+                    .binary_search_by_key(&gid, |cp| cp.gid)
+                    .map_err(|_| {
+                        Error::Rank(format!(
+                            "rank {}: received unknown shared point {gid} from rank {}",
+                            comm.rank, link.peer
+                        ))
+                    })?;
+                self.merge[ci].push((ch[1] as u64, ch[2]));
+            }
+        }
+        for (cp, buf) in self.points.iter().zip(self.merge.iter_mut()) {
+            buf.sort_unstable_by_key(|&(eg, _)| eg);
+            let total = buf.iter().fold(0.0, |acc, &(_, raw)| acc + raw);
+            for &(_, l) in &cp.copies {
+                v[l as usize] = total;
+            }
+        }
         Ok(())
     }
 
@@ -267,10 +368,10 @@ struct RankOutcome {
 }
 
 /// One rank's solve: build the operator from the registry, wrap the
-/// channels in a [`ThreadComm`] and the slab assembly in a
-/// [`HaloExchange`], and hand everything to the shared [`cg_solve`].
+/// channels in a [`ThreadComm`] and the brick assembly in a
+/// [`BrickExchange`], and hand everything to the shared [`cg_solve`].
 fn rank_main(
-    slab: RankSlab,
+    domain: RankDomain,
     comm: Comm,
     cfg: &RunConfig,
     operator: &str,
@@ -278,11 +379,11 @@ fn rank_main(
 ) -> Result<RankOutcome> {
     let n = cfg.n;
     let np = n * n * n;
-    let nelt_local = slab.e1 - slab.e0;
+    let nelt_local = domain.elems.len();
     let ndof = nelt_local * np;
     let d = crate::basis::derivative_matrix(n);
 
-    // Each rank owns its operator instance, set up on the slab's data.
+    // Each rank owns its operator instance, set up on the brick's data.
     let ctx = OperatorCtx {
         n,
         nelt: nelt_local,
@@ -290,24 +391,24 @@ fn rank_main(
         threads: cfg.cpu_threads,
         artifacts_dir: &cfg.artifacts_dir,
         d: &d,
-        g: &slab.g,
-        c: &slab.c,
+        g: &domain.g,
+        c: &domain.c,
     };
     let mut op = registry.build(operator, &ctx)?;
-    // The operator cloned (or uploaded) what it needs from the slab's
-    // geometric factors; destructuring drops the slab copy so the two
+    // The operator cloned (or uploaded) what it needs from the brick's
+    // geometric factors; destructuring drops the domain copy so the two
     // don't coexist for the whole solve (mirrors the serial pipeline
     // dropping `geom`).
-    let RankSlab { gs, lo_plane, hi_plane, mask, c, f, .. } = slab;
+    let RankDomain { gs, point_gids, links, elems, mask, c, f, .. } = domain;
 
-    // The communicator and the halo exchange share the rank's channels;
-    // their tag namespaces are disjoint (see `comm`).
+    // The communicator and the boundary exchange share the rank's
+    // channels; their tag namespaces are disjoint (see `comm`).
     let comm = Rc::new(RefCell::new(comm));
     let mut thread_comm = ThreadComm::new(Rc::clone(&comm));
-    let mut halo = HaloExchange::new(gs, lo_plane, hi_plane, comm);
+    let mut brick = BrickExchange::new(gs, &point_gids, &elems, links, np, comm);
     let mut no_exchange = NoExchange;
     let exchange: &mut dyn DomainExchange =
-        if cfg.no_comm { &mut no_exchange } else { &mut halo };
+        if cfg.no_comm { &mut no_exchange } else { &mut brick };
 
     let opts = CgOptions {
         niter: cfg.niter,
@@ -318,6 +419,9 @@ fn rank_main(
     let mut ax = TimedAx::new(op.as_mut());
     let mut x = vec![0.0; ndof];
     let mut ws = CgWorkspace::new(ndof);
+    // Element-blocked reductions, folded in global element order: the
+    // ranked dot products evaluate the serial fold expression exactly.
+    ws.set_reduce_plan(np, elems.iter().map(|&e| e as u64).collect())?;
     let report = cg_solve(
         &mut ax,
         exchange,
@@ -367,19 +471,21 @@ pub fn run_ranked_in(
     // Fail fast on unknown operators (and get the canonical label) before
     // spawning any rank thread.
     let label = registry.resolve(operator)?.name.clone();
+    let shape = DecompShape::parse(&cfg.decomp)?;
     let mesh = Mesh::for_nelt(cfg.nelt, cfg.n)?;
     check_tag_capacity(cfg.niter, mesh.ndof_global())?;
+    let decomp = Decomposition::new(shape, cfg.ranks, &mesh)?;
     let basis = Basis::new(cfg.n);
-    let slabs = build_slabs(&mesh, &basis, cfg)?;
+    let domains = build_domains(&mesh, &basis, cfg, &decomp)?;
     let comms = Comm::mesh(cfg.ranks);
 
     let sw = Instant::now();
     let mut results = Vec::with_capacity(cfg.ranks);
     std::thread::scope(|scope| {
-        let handles: Vec<_> = slabs
+        let handles: Vec<_> = domains
             .into_iter()
             .zip(comms)
-            .map(|(slab, comm)| scope.spawn(|| rank_main(slab, comm, cfg, &label, registry)))
+            .map(|(dom, comm)| scope.spawn(|| rank_main(dom, comm, cfg, &label, registry)))
             .collect();
         for h in handles {
             results.push(h.join().map_err(|_| Error::Rank("rank thread panicked".into())));
@@ -421,7 +527,7 @@ pub fn run_ranked_in(
     // (un-setup) instance answers it without building a rank's state.
     let fused = registry.create(&label).map(|op| op.is_fused()).unwrap_or(false);
     Ok(RunReport {
-        backend: format!("ranked-{}-r{}", label, cfg.ranks),
+        backend: format!("ranked-{}-r{}-{}", label, cfg.ranks, shape.as_str()),
         nelt: cfg.nelt,
         n: cfg.n,
         iterations: first.iterations,
@@ -438,20 +544,6 @@ pub fn run_ranked_in(
 mod tests {
     use super::*;
     use crate::coordinator::Nekbone;
-
-    #[test]
-    fn slab_ranges_cover() {
-        for (ez, ranks) in [(8, 3), (4, 4), (7, 2), (16, 5)] {
-            let rs = slab_ranges(ez, ranks);
-            assert_eq!(rs.len(), ranks);
-            assert_eq!(rs[0].0, 0);
-            assert_eq!(rs.last().unwrap().1, ez);
-            for w in rs.windows(2) {
-                assert_eq!(w[0].1, w[1].0);
-                assert!(w[0].1 > w[0].0);
-            }
-        }
-    }
 
     #[test]
     fn tag_capacity_limits_are_config_errors() {
@@ -473,48 +565,72 @@ mod tests {
     }
 
     #[test]
-    fn halo_exchange_clean_across_rounds() {
-        // Drive the distributed exchange directly for many rounds
-        // (including round indices far past any realistic niter): partial
-        // sums must keep routing to the right round, and the exchange's
-        // shared-dof support must be exactly what it changes.
-        let cfg = RunConfig { nelt: 8, n: 3, ranks: 2, ..Default::default() };
-        let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
-        let basis = Basis::new(cfg.n);
-        let slabs = build_slabs(&mesh, &basis, &cfg).unwrap();
-        let comms = Comm::mesh(cfg.ranks);
-        // Serial reference: dssum of all-ones is the global multiplicity.
-        let mut gs_full = GatherScatter::new(&mesh);
-        let mut want_full = vec![1.0; mesh.ndof_local()];
-        gs_full.dssum(&mut want_full);
-        let np = cfg.n * cfg.n * cfg.n;
-        std::thread::scope(|scope| {
-            for (slab, comm) in slabs.into_iter().zip(comms) {
-                let want = want_full[slab.e0 * np..slab.e1 * np].to_vec();
-                scope.spawn(move || {
-                    let RankSlab { gs, lo_plane, hi_plane, .. } = slab;
-                    let mut halo = HaloExchange::new(
-                        gs,
-                        lo_plane,
-                        hi_plane,
-                        Rc::new(RefCell::new(comm)),
-                    );
-                    let shared: std::collections::BTreeSet<usize> =
-                        halo.shared_dofs().iter().map(|&l| l as usize).collect();
-                    for round in 0..4 {
-                        let mut v = vec![1.0; want.len()];
-                        halo.exchange(&mut v).unwrap();
-                        assert_eq!(v, want, "round {round}");
-                        // The exchange changed nothing outside shared_dofs.
-                        for (l, &val) in v.iter().enumerate() {
-                            if !shared.contains(&l) {
-                                assert_eq!(val, 1.0, "dof {l} changed outside support");
+    fn brick_exchange_clean_across_rounds() {
+        // Drive the distributed exchange directly for several rounds, for
+        // every decomposition shape: partial sums must keep routing to the
+        // right (round, link) tag, the assembled values must equal the
+        // serial dssum, and the exchange's shared-dof support must be
+        // exactly what it changes.
+        for (shape, ranks) in
+            [(DecompShape::Slab, 2), (DecompShape::Pencil, 4), (DecompShape::Box, 8)]
+        {
+            let cfg = RunConfig {
+                nelt: 8,
+                n: 3,
+                ranks,
+                decomp: shape.as_str().into(),
+                ..Default::default()
+            };
+            let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
+            let basis = Basis::new(cfg.n);
+            let decomp = Decomposition::new(shape, ranks, &mesh).unwrap();
+            let domains = build_domains(&mesh, &basis, &cfg, &decomp).unwrap();
+            let comms = Comm::mesh(ranks);
+            // Serial reference: dssum of all-ones is the global multiplicity.
+            let mut gs_full = GatherScatter::new(&mesh);
+            let mut want_full = vec![1.0; mesh.ndof_local()];
+            gs_full.dssum(&mut want_full);
+            let np = cfg.n * cfg.n * cfg.n;
+            std::thread::scope(|scope| {
+                for (domain, comm) in domains.into_iter().zip(comms) {
+                    let want: Vec<f64> = domain
+                        .elems
+                        .iter()
+                        .flat_map(|&e| want_full[e * np..(e + 1) * np].iter().copied())
+                        .collect();
+                    scope.spawn(move || {
+                        let RankDomain { gs, point_gids, links, elems, .. } = domain;
+                        let mut ex = BrickExchange::new(
+                            gs,
+                            &point_gids,
+                            &elems,
+                            links,
+                            np,
+                            Rc::new(RefCell::new(comm)),
+                        );
+                        let shared: std::collections::BTreeSet<usize> =
+                            ex.shared_dofs().iter().map(|&l| l as usize).collect();
+                        for round in 0..4 {
+                            let mut v = vec![1.0; want.len()];
+                            ex.exchange(&mut v).unwrap();
+                            for (l, (&got, &w)) in v.iter().zip(&want).enumerate() {
+                                assert_eq!(
+                                    got.to_bits(),
+                                    w.to_bits(),
+                                    "{shape:?} round {round} dof {l}: {got} vs {w}"
+                                );
+                            }
+                            // The exchange changed nothing outside shared_dofs.
+                            for (l, &val) in v.iter().enumerate() {
+                                if !shared.contains(&l) {
+                                    assert_eq!(val, 1.0, "dof {l} changed outside support");
+                                }
                             }
                         }
-                    }
-                });
-            }
-        });
+                    });
+                }
+            });
+        }
     }
 
     #[test]
@@ -552,18 +668,19 @@ mod tests {
         let cfg = RunConfig { nelt: 8, n: 3, niter: 50, ranks: 2, ..Default::default() };
         let mesh = Mesh::for_nelt(cfg.nelt, cfg.n).unwrap();
         let basis = Basis::new(cfg.n);
-        let mut slabs = build_slabs(&mesh, &basis, &cfg).unwrap();
-        for slab in &mut slabs {
-            slab.f.iter_mut().for_each(|v| *v = 0.0);
+        let decomp = Decomposition::new(DecompShape::Slab, cfg.ranks, &mesh).unwrap();
+        let mut domains = build_domains(&mesh, &basis, &cfg, &decomp).unwrap();
+        for domain in &mut domains {
+            domain.f.iter_mut().for_each(|v| *v = 0.0);
         }
         let comms = Comm::mesh(cfg.ranks);
         let registry = OperatorRegistry::with_builtins();
         std::thread::scope(|scope| {
-            let handles: Vec<_> = slabs
+            let handles: Vec<_> = domains
                 .into_iter()
                 .zip(comms)
-                .map(|(slab, comm)| {
-                    scope.spawn(|| rank_main(slab, comm, &cfg, "cpu-layered", &registry))
+                .map(|(dom, comm)| {
+                    scope.spawn(|| rank_main(dom, comm, &cfg, "cpu-layered", &registry))
                 })
                 .collect();
             for h in handles {
@@ -784,5 +901,29 @@ mod tests {
     fn too_many_ranks_rejected() {
         let cfg = RunConfig { nelt: 8, n: 3, ranks: 5, ..Default::default() };
         assert!(run_ranked(&cfg).is_err());
+    }
+
+    #[test]
+    fn over_split_axes_are_structured_config_errors() {
+        // Splitting an axis finer than its element count must come back as
+        // a structured Error::Config naming the decomposition shape and the
+        // axis limits — for every shape (satellite of the scenario lab).
+        // nelt = 8 → a 2×2×2 element grid.
+        for (ranks, shape, needle) in
+            [(3, "slab", "ez (2)"), (5, "pencil", "ey (2)"), (7, "box", "ex (2)")]
+        {
+            let cfg = RunConfig {
+                nelt: 8,
+                n: 3,
+                ranks,
+                decomp: shape.into(),
+                ..Default::default()
+            };
+            let err = run_ranked(&cfg).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{shape}/{ranks}: {err:?}");
+            let msg = err.to_string();
+            assert!(msg.contains(shape), "{shape}/{ranks}: {msg}");
+            assert!(msg.contains(needle), "{shape}/{ranks}: {msg}");
+        }
     }
 }

@@ -1,0 +1,507 @@
+//! Scaling-scenario lab: strong/weak-scaling campaigns over the ranked
+//! runtime, emitted as `BENCH_scaling.json`.
+//!
+//! A *scenario* fixes how the problem grows with the rank count:
+//!
+//! * **strong** — the global element count is fixed; more ranks split the
+//!   same problem into smaller bricks (the paper's strong-scaling walls).
+//! * **weak** — each rank keeps a fixed local element count; the global
+//!   problem grows with the machine (`nelt = elements × ranks`).
+//!
+//! The campaign sweeps (scenario × degree × element count × decomposition
+//! shape × rank count) through [`run_ranked_with`] — the same entry point
+//! `nekbone run --ranks` uses, so every measured point is a real
+//! distributed solve whose report is bitwise identical to the serial one.
+//! Combinations a shape cannot decompose (say, 8 slab ranks on a 2-layer
+//! element grid) are counted as `skipped` diagnostics, not errors: the
+//! campaign reports the feasible frontier instead of refusing to run.
+//!
+//! The JSON schema (`nekbone-scaling/1`, documented in `ROADMAP.md`) is
+//! append-friendly: each point carries the stable key set (`scenario`,
+//! `decomp`, `operator`, `degree`, `ranks`, `elements`) plus the measured
+//! `throughput_mdofs` (assembled dofs × iterations / second / 1e6), so
+//! successive PRs emit comparable trajectories and CI's trajectory gate
+//! can diff fresh quick-mode points against the committed baseline. Run
+//! it via `cargo bench --bench scaling` or `nekbone scenarios`.
+
+use crate::bench::Table;
+use crate::cli::Args;
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::mesh::Mesh;
+use crate::rank::{run_ranked_with, DecompShape};
+use crate::serve::{spec_default, spec_usize, OptSpec};
+
+/// Schema identifier written into (and asserted on) every emitted file.
+pub const SCHEMA: &str = "nekbone-scaling/1";
+
+/// `nekbone scenarios` options. The help text renders this table and
+/// [`ScenarioConfig::from_args`] reads its defaults from the same rows,
+/// so the two cannot drift.
+pub const SCENARIO_OPTS: &[OptSpec] = &[
+    OptSpec {
+        key: "backend",
+        metavar: "NAME",
+        default: "cpu-layered",
+        help: "per-rank operator-registry name",
+    },
+    OptSpec {
+        key: "decomps",
+        metavar: "LIST",
+        default: "slab,pencil,box",
+        help: "decomposition shapes to sweep",
+    },
+    OptSpec { key: "ranks", metavar: "LIST", default: "1,2,4,8", help: "rank counts to sweep" },
+    OptSpec {
+        key: "elements",
+        metavar: "LIST",
+        default: "32,64",
+        help: "elements: global (strong) / per rank (weak)",
+    },
+    OptSpec {
+        key: "degrees",
+        metavar: "LIST",
+        default: "5,9",
+        help: "GLL points per dim to sweep",
+    },
+    OptSpec { key: "niter", metavar: "N", default: "30", help: "CG iterations per point" },
+    OptSpec {
+        key: "json",
+        metavar: "PATH",
+        default: "",
+        help: "write nekbone-scaling/1 JSON to PATH",
+    },
+    OptSpec { key: "quick", metavar: "", default: "", help: "smoke-test scale (CI)" },
+];
+
+/// Campaign configuration.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// Per-rank operator-registry name.
+    pub operator: String,
+    /// Decomposition shapes to sweep.
+    pub decomps: Vec<DecompShape>,
+    /// Rank counts to sweep.
+    pub ranks: Vec<usize>,
+    /// Element counts: the global problem size for strong scaling, the
+    /// per-rank size for weak scaling.
+    pub elements: Vec<usize>,
+    /// Degrees (`n`, GLL points per dimension) to sweep.
+    pub degrees: Vec<usize>,
+    /// CG iterations per point.
+    pub niter: usize,
+    /// Write the JSON report here (in addition to the printed table).
+    pub json: Option<String>,
+}
+
+/// Parse `1,2,4`-style positive-integer lists.
+fn parse_list(opt: &str, s: &str) -> Result<Vec<usize>> {
+    let vals: Vec<usize> = s
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|_| Error::Config(format!("bad value {t:?} in --{opt}")))
+        })
+        .collect::<Result<_>>()?;
+    if vals.is_empty() || vals.contains(&0) {
+        return Err(Error::Config(format!("--{opt} needs positive values, got {s:?}")));
+    }
+    Ok(vals)
+}
+
+impl ScenarioConfig {
+    /// Build from parsed CLI arguments; `--quick` shrinks the sweep to
+    /// smoke-test scale (explicit options still win over the quick scale).
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let quick = args.flag("quick");
+        let list = |key: &'static str, quick_dflt: &'static str| -> Result<Vec<usize>> {
+            let dflt = if quick { quick_dflt } else { spec_default(SCENARIO_OPTS, key) };
+            parse_list(key, args.get(key).unwrap_or(dflt))
+        };
+        let decomps_raw =
+            args.get("decomps").unwrap_or_else(|| spec_default(SCENARIO_OPTS, "decomps"));
+        let decomps = decomps_raw
+            .split(',')
+            .map(|t| DecompShape::parse(t.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        let niter = if quick && args.get("niter").is_none() {
+            8
+        } else {
+            spec_usize(args, SCENARIO_OPTS, "niter")?
+        };
+        Ok(ScenarioConfig {
+            operator: args
+                .get("backend")
+                .unwrap_or_else(|| spec_default(SCENARIO_OPTS, "backend"))
+                .to_string(),
+            decomps,
+            ranks: list("ranks", "1,2,4")?,
+            elements: list("elements", "8")?,
+            degrees: list("degrees", "3")?,
+            niter,
+            json: args.get("json").map(str::to_string),
+        })
+    }
+
+    /// The smoke-test campaign CI runs (also the trajectory-gate grid).
+    pub fn quick() -> Self {
+        ScenarioConfig {
+            operator: "cpu-layered".into(),
+            decomps: vec![DecompShape::Slab, DecompShape::Pencil, DecompShape::Box],
+            ranks: vec![1, 2, 4],
+            elements: vec![8],
+            degrees: vec![3],
+            niter: 8,
+            json: None,
+        }
+    }
+}
+
+/// One measured scaling point.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    /// `"strong"` or `"weak"`.
+    pub scenario: &'static str,
+    /// Decomposition shape name.
+    pub decomp: &'static str,
+    /// Canonical operator-registry name.
+    pub operator: String,
+    /// GLL points per dimension.
+    pub degree: usize,
+    /// Simulated MPI ranks.
+    pub ranks: usize,
+    /// Global element count actually solved (for weak scaling this is
+    /// the per-rank count × ranks).
+    pub elements: usize,
+    /// CG iterations performed.
+    pub iterations: usize,
+    /// Wall time of the whole ranked solve.
+    pub seconds: f64,
+    /// Assembled (unique) dofs × iterations / seconds / 1e6.
+    pub throughput_mdofs: f64,
+}
+
+/// A full campaign: every feasible point plus the infeasible-combination
+/// count (a diagnostic, not an error — shapes differ in how far they
+/// subdivide a given element grid).
+#[derive(Clone, Debug)]
+pub struct ScalingReport {
+    pub operator: String,
+    pub points: Vec<ScalingPoint>,
+    pub skipped: usize,
+}
+
+/// Run the campaign: every (scenario × degree × elements × shape × ranks)
+/// combination through the ranked runtime. Infeasible decompositions are
+/// counted as skips; any other failure aborts the campaign.
+pub fn run(cfg: &ScenarioConfig) -> Result<ScalingReport> {
+    // Fail fast on unknown operators so a typo is an error, not a
+    // campaign full of silent skips.
+    crate::operators::registry().resolve(&cfg.operator)?;
+    let mut points = Vec::new();
+    let mut skipped = 0usize;
+    for scenario in ["strong", "weak"] {
+        for &degree in &cfg.degrees {
+            for &base in &cfg.elements {
+                for &shape in &cfg.decomps {
+                    for &ranks in &cfg.ranks {
+                        let nelt = if scenario == "strong" { base } else { base * ranks };
+                        let rc = RunConfig {
+                            nelt,
+                            n: degree,
+                            niter: cfg.niter,
+                            ranks,
+                            decomp: shape.as_str().into(),
+                            ..RunConfig::default()
+                        };
+                        let rep = match run_ranked_with(&rc, &cfg.operator) {
+                            Ok(rep) => rep,
+                            // The operator resolved above, so a Config
+                            // error here is an infeasible decomposition
+                            // (axis over-split / ranks > nelt).
+                            Err(Error::Config(_)) => {
+                                skipped += 1;
+                                continue;
+                            }
+                            Err(e) => return Err(e),
+                        };
+                        let ndof_global = Mesh::for_nelt(nelt, degree)?.ndof_global();
+                        points.push(ScalingPoint {
+                            scenario,
+                            decomp: shape.as_str(),
+                            operator: cfg.operator.clone(),
+                            degree,
+                            ranks,
+                            elements: nelt,
+                            iterations: rep.iterations,
+                            seconds: rep.seconds,
+                            throughput_mdofs: ndof_global as f64 * rep.iterations as f64
+                                / rep.seconds
+                                / 1e6,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    if points.is_empty() {
+        return Err(Error::Config(
+            "scaling campaign produced no feasible points; loosen --ranks/--decomps".into(),
+        ));
+    }
+    Ok(ScalingReport { operator: cfg.operator.clone(), points, skipped })
+}
+
+/// Render the report as the aligned table the bench and CLI print.
+pub fn render_table(report: &ScalingReport) -> String {
+    let mut table = Table::new(&[
+        "scenario",
+        "decomp",
+        "n",
+        "ranks",
+        "elems",
+        "iters",
+        "seconds",
+        "Mdof/s",
+    ]);
+    for p in &report.points {
+        table.row(&[
+            p.scenario.to_string(),
+            p.decomp.to_string(),
+            p.degree.to_string(),
+            p.ranks.to_string(),
+            p.elements.to_string(),
+            p.iterations.to_string(),
+            format!("{:.4}", p.seconds),
+            format!("{:.3}", p.throughput_mdofs),
+        ]);
+    }
+    table.render()
+}
+
+/// A JSON number that is always valid JSON (non-finite values, which JSON
+/// cannot represent, become 0).
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9}")
+    } else {
+        "0.0".into()
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Serialize a report in the `nekbone-scaling/1` schema.
+pub fn to_json(report: &ScalingReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": {},\n", jstr(SCHEMA)));
+    out.push_str(&format!("  \"operator\": {},\n", jstr(&report.operator)));
+    out.push_str(&format!("  \"skipped\": {},\n", report.skipped));
+    out.push_str("  \"points\": [\n");
+    for (i, p) in report.points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scenario\": {}, \"decomp\": {}, \"operator\": {}, \
+             \"degree\": {}, \"ranks\": {}, \"elements\": {}, \
+             \"iterations\": {}, \"seconds\": {}, \"throughput_mdofs\": {}}}{}\n",
+            jstr(p.scenario),
+            jstr(p.decomp),
+            jstr(&p.operator),
+            p.degree,
+            p.ranks,
+            p.elements,
+            p.iterations,
+            jnum(p.seconds),
+            jnum(p.throughput_mdofs),
+            if i + 1 < report.points.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Validate a serialized report against the `nekbone-scaling/1` schema
+/// (used by the bench after writing, by CI's smoke job, and by the
+/// trajectory gate before trusting a committed baseline).
+pub fn validate_json(text: &str) -> Result<()> {
+    let doc = crate::json::parse(text)?;
+    let bad = |msg: &str| Error::Config(format!("scaling json: {msg}"));
+    if doc.get("schema").and_then(|v| v.as_str()) != Some(SCHEMA) {
+        return Err(bad(&format!("\"schema\" must be {SCHEMA:?}")));
+    }
+    doc.get("operator").and_then(|v| v.as_str()).ok_or_else(|| bad("missing operator"))?;
+    doc.get("skipped").and_then(|v| v.as_usize()).ok_or_else(|| bad("missing skipped"))?;
+    let points =
+        doc.get("points").and_then(|v| v.as_array()).ok_or_else(|| bad("missing points"))?;
+    if points.is_empty() {
+        return Err(bad("points must be non-empty"));
+    }
+    for p in points {
+        let scenario =
+            p.get("scenario").and_then(|v| v.as_str()).ok_or_else(|| bad("point scenario"))?;
+        if scenario != "strong" && scenario != "weak" {
+            return Err(bad(&format!("scenario must be strong|weak, got {scenario:?}")));
+        }
+        let decomp =
+            p.get("decomp").and_then(|v| v.as_str()).ok_or_else(|| bad("point decomp"))?;
+        DecompShape::parse(decomp).map_err(|_| bad(&format!("bad decomp {decomp:?}")))?;
+        p.get("operator").and_then(|v| v.as_str()).ok_or_else(|| bad("point operator"))?;
+        for key in ["degree", "ranks", "elements", "iterations"] {
+            p.get(key).and_then(|v| v.as_usize()).ok_or_else(|| bad(&format!("point {key}")))?;
+        }
+        for key in ["seconds", "throughput_mdofs"] {
+            p.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad(&format!("point {key}")))?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a report to `path` (schema-validated round trip).
+pub fn write_json(report: &ScalingReport, path: &str) -> Result<()> {
+    let text = to_json(report);
+    validate_json(&text)?;
+    std::fs::write(path, &text).map_err(|source| Error::Io { path: path.to_string(), source })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn config_defaults_from_spec_table() {
+        let c = ScenarioConfig::from_args(&args(&["scenarios"])).unwrap();
+        assert_eq!(c.operator, spec_default(SCENARIO_OPTS, "backend"));
+        assert_eq!(c.ranks, vec![1, 2, 4, 8]);
+        assert_eq!(c.elements, vec![32, 64]);
+        assert_eq!(c.degrees, vec![5, 9]);
+        assert_eq!(c.niter.to_string(), spec_default(SCENARIO_OPTS, "niter"));
+        assert_eq!(
+            c.decomps,
+            vec![DecompShape::Slab, DecompShape::Pencil, DecompShape::Box]
+        );
+        assert_eq!(c.json, None);
+    }
+
+    #[test]
+    fn quick_flag_shrinks_the_sweep() {
+        let q = ScenarioConfig::from_args(&args(&["scenarios", "--quick"])).unwrap();
+        let full = ScenarioConfig::from_args(&args(&["scenarios"])).unwrap();
+        assert!(q.ranks.len() < full.ranks.len());
+        assert!(q.elements[0] < full.elements[0]);
+        assert!(q.degrees[0] < full.degrees[0]);
+        assert!(q.niter < full.niter);
+        // The CLI quick scale is exactly the committed-baseline grid.
+        let canned = ScenarioConfig::quick();
+        assert_eq!(q.ranks, canned.ranks);
+        assert_eq!(q.elements, canned.elements);
+        assert_eq!(q.degrees, canned.degrees);
+        assert_eq!(q.niter, canned.niter);
+        // Explicit options still win over the quick scale.
+        let q = ScenarioConfig::from_args(&args(&["scenarios", "--quick", "--niter", "5"]))
+            .unwrap();
+        assert_eq!(q.niter, 5);
+    }
+
+    #[test]
+    fn config_rejects_bad_lists() {
+        assert!(ScenarioConfig::from_args(&args(&["scenarios", "--ranks", "1,x"])).is_err());
+        assert!(ScenarioConfig::from_args(&args(&["scenarios", "--ranks", "0"])).is_err());
+        assert!(
+            ScenarioConfig::from_args(&args(&["scenarios", "--decomps", "diag"])).is_err()
+        );
+    }
+
+    #[test]
+    fn campaign_covers_the_feasible_grid_and_counts_skips() {
+        let report = run(&ScenarioConfig::quick()).unwrap();
+        // Both scenarios and at least two shapes must survive on the
+        // quick grid; the combinations a shape cannot decompose are
+        // counted, not dropped silently.
+        assert!(report.points.iter().any(|p| p.scenario == "strong"));
+        assert!(report.points.iter().any(|p| p.scenario == "weak"));
+        assert!(report.points.iter().any(|p| p.decomp == "pencil"));
+        for p in &report.points {
+            assert!(p.throughput_mdofs > 0.0 && p.throughput_mdofs.is_finite(), "{p:?}");
+            assert!(p.seconds > 0.0, "{p:?}");
+            assert!(p.iterations > 0, "{p:?}");
+            match p.scenario {
+                "strong" => assert_eq!(p.elements, 8, "{p:?}"),
+                _ => assert_eq!(p.elements, 8 * p.ranks, "{p:?}"),
+            }
+        }
+        // 2 scenarios × 3 shapes × 3 rank counts × 1 elem × 1 degree.
+        assert_eq!(report.points.len() + report.skipped, 18);
+        let table = render_table(&report);
+        assert!(table.contains("pencil"), "{table}");
+    }
+
+    #[test]
+    fn unknown_operator_is_an_error_not_a_skip() {
+        let cfg = ScenarioConfig { operator: "no-such-op".into(), ..ScenarioConfig::quick() };
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("no-such-op"), "{err}");
+    }
+
+    #[test]
+    fn json_round_trips_schema() {
+        let report = run(&ScenarioConfig::quick()).unwrap();
+        let text = to_json(&report);
+        validate_json(&text).unwrap();
+        let doc = crate::json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert_eq!(doc.get("skipped").unwrap().as_usize().unwrap(), report.skipped);
+        let points = doc.get("points").unwrap().as_array().unwrap();
+        assert_eq!(points.len(), report.points.len());
+        assert_eq!(
+            points[0].get("scenario").unwrap().as_str().unwrap(),
+            report.points[0].scenario
+        );
+        assert_eq!(
+            points[0].get("ranks").unwrap().as_usize().unwrap(),
+            report.points[0].ranks
+        );
+    }
+
+    #[test]
+    fn validation_rejects_missing_and_malformed() {
+        assert!(validate_json("{}").is_err());
+        assert!(validate_json("not json").is_err());
+        let no_points = format!(
+            "{{\"schema\": \"{SCHEMA}\", \"operator\": \"x\", \"skipped\": 0, \
+             \"points\": []}}"
+        );
+        assert!(validate_json(&no_points).is_err());
+        let bad_scenario = format!(
+            "{{\"schema\": \"{SCHEMA}\", \"operator\": \"x\", \"skipped\": 0, \
+             \"points\": [{{\"scenario\": \"diagonal\", \"decomp\": \"slab\", \
+             \"operator\": \"x\", \"degree\": 3, \"ranks\": 1, \"elements\": 8, \
+             \"iterations\": 8, \"seconds\": 0.1, \"throughput_mdofs\": 1.0}}]}}"
+        );
+        assert!(validate_json(&bad_scenario).is_err());
+        let bad_decomp = bad_scenario.replace("diagonal", "strong").replace(
+            "\"decomp\": \"slab\"",
+            "\"decomp\": \"diag\"",
+        );
+        assert!(validate_json(&bad_decomp).is_err());
+        let good = bad_scenario.replace("diagonal", "strong");
+        validate_json(&good).unwrap();
+    }
+}

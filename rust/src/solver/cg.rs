@@ -195,6 +195,30 @@ pub struct CgWorkspace {
     /// Chebyshev recurrence scratch, allocated on the first
     /// Chebyshev-preconditioned solve and reused afterwards.
     cheb: Option<crate::solver::ChebScratch>,
+    /// Element-blocked reduction plan (see [`ReducePlan`]); `None` keeps
+    /// the historical single-flat-fold reductions.
+    reduce: Option<ReducePlan>,
+}
+
+/// How the solver's global dot products are folded.
+///
+/// With a plan installed, every `glsc3` reduction is computed as one
+/// partial per `block`-dof slice (one slice per element, in practice) and
+/// folded through [`Communicator::allreduce_ordered_sum`] in ascending
+/// `gids` order. Because that order is a *global* property — the global
+/// element id — the result is bitwise independent of how the elements are
+/// split across ranks: a slab, pencil, or box decomposition reproduces
+/// the serial solve's reductions exactly, which is what makes the rank
+/// runtime's per-rank reports bitwise-identical to serial for every
+/// decomposition shape.
+struct ReducePlan {
+    /// Dofs per partial (the element volume `n³`).
+    block: usize,
+    /// Ascending global ids, one per local block.
+    gids: Vec<u64>,
+    /// Per-block partials, rewritten every reduction (no allocation in
+    /// the solve loop).
+    partials: Vec<f64>,
 }
 
 impl CgWorkspace {
@@ -206,12 +230,64 @@ impl CgWorkspace {
             w: vec![0.0; ndof],
             pap: None,
             cheb: None,
+            reduce: None,
         }
     }
 
     /// The dof count this workspace was sized for.
     pub fn ndof(&self) -> usize {
         self.r.len()
+    }
+
+    /// Install an element-blocked reduction plan: local dofs are `block`
+    /// contiguous dofs per entry of `gids` (ascending, globally unique
+    /// across the communicator). Both the serial pipeline and the rank
+    /// runtime install one, which pins every CG reduction to the same
+    /// global fold order regardless of decomposition.
+    pub fn set_reduce_plan(&mut self, block: usize, gids: Vec<u64>) -> Result<()> {
+        if block == 0 || block.checked_mul(gids.len()) != Some(self.ndof()) {
+            return Err(Error::Config(format!(
+                "set_reduce_plan: {} blocks of {block} dofs != workspace ndof {}",
+                gids.len(),
+                self.ndof()
+            )));
+        }
+        if gids.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::Config(
+                "set_reduce_plan: gids must be strictly ascending".into(),
+            ));
+        }
+        let partials = vec![0.0; gids.len()];
+        self.reduce = Some(ReducePlan { block, gids, partials });
+        Ok(())
+    }
+}
+
+/// One global weighted dot product `Σ a·b·c`, through the workspace's
+/// reduction plan when one is installed (element-blocked partials folded
+/// in global-gid order — bitwise decomposition-independent) and as the
+/// historical flat local fold + `allreduce_sum` otherwise.
+fn reduce_dot(
+    vectors: &mut dyn VectorOps,
+    comm: &mut dyn Communicator,
+    plan: &mut Option<ReducePlan>,
+    a: &[f64],
+    b: &[f64],
+    c: &[f64],
+) -> Result<f64> {
+    match plan {
+        None => {
+            let local = vectors.glsc3(a, b, c)?;
+            comm.allreduce_sum(local)
+        }
+        Some(plan) => {
+            let blk = plan.block;
+            for (i, slot) in plan.partials.iter_mut().enumerate() {
+                let s = i * blk;
+                *slot = vectors.glsc3(&a[s..s + blk], &b[s..s + blk], &c[s..s + blk])?;
+            }
+            comm.allreduce_ordered_sum(&plan.gids, &plan.partials)
+        }
     }
 }
 
@@ -345,6 +421,7 @@ pub fn cg_solve_with(
     }
     let (r, z, p, w) = (&mut ws.r, &mut ws.z, &mut ws.p, &mut ws.w);
     let cheb_scratch = &mut ws.cheb;
+    let reduce = &mut ws.reduce;
     let mut correction = if fused { ws.pap.as_mut() } else { None };
 
     rzero(x);
@@ -375,9 +452,8 @@ pub fn cg_solve_with(
             }
         }
         let rtz2 = rtz1;
-        let rtz_local = vectors.glsc3(r, c, z)?;
         glsc3_sweeps += 1;
-        rtz1 = comm.allreduce_sum(rtz_local)?;
+        rtz1 = reduce_dot(vectors, comm, reduce, r, c, z)?;
         if !rtz1.is_finite() {
             return Err(Error::Numerical(format!(
                 "CG breakdown at iter {iter}{rank_note}: rtz1 = {rtz1}"
@@ -421,14 +497,19 @@ pub fn cg_solve_with(
             mask_apply(w, m);
         }
 
-        let pap_local = match (pap_fused, correction.as_deref()) {
-            (Some(local), Some(corr)) => corr.patch(local, w, c, p),
+        // The fused path's operator-side pap is a single flat fold by
+        // construction, so it stays on the plain allreduce (fused ranked
+        // runs are tolerance-checked, not bitwise); the unfused path goes
+        // through the reduction plan like every other dot product.
+        let pap = match (pap_fused, correction.as_deref()) {
+            (Some(local), Some(corr)) => {
+                comm.allreduce_sum(corr.patch(local, w, c, p))?
+            }
             _ => {
                 glsc3_sweeps += 1;
-                vectors.glsc3(w, c, p)?
+                reduce_dot(vectors, comm, reduce, w, c, p)?
             }
         };
-        let pap = comm.allreduce_sum(pap_local)?;
         if pap <= 0.0 || !pap.is_finite() {
             return Err(Error::Numerical(format!(
                 "CG breakdown at iter {iter}{rank_note}: pap = {pap} (operator not SPD?)"
@@ -440,9 +521,8 @@ pub fn cg_solve_with(
         iterations = iter + 1;
     }
 
-    let rr_local = vectors.glsc3(r, c, r)?;
     glsc3_sweeps += 1;
-    let final_rnorm = comm.allreduce_sum(rr_local)?.max(0.0).sqrt();
+    let final_rnorm = reduce_dot(vectors, comm, reduce, r, c, r)?.max(0.0).sqrt();
     Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps })
 }
 
@@ -922,6 +1002,48 @@ mod tests {
             &mut ws,
         );
         assert!(matches!(err, Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn reduce_plan_validates_and_preserves_the_solve() {
+        // A blocked plan changes only the *fold order* of the global
+        // reductions: the trajectory stays within roundoff of the flat
+        // fold, and malformed plans are structured Config errors.
+        let mut cases = Cases::new(0xC9);
+        let n = 16;
+        let mut dense = random_spd(&mut cases, n);
+        let f = cases.vec_normal(n);
+        let c = vec![1.0; n];
+        let opts = CgOptions { niter: 40, rtol: None, record_residuals: false };
+        let mut solve = |ws: &mut CgWorkspace| {
+            let mut x = vec![0.0; n];
+            let rep = cg_solve(
+                &mut dense,
+                &mut NoExchange,
+                &mut NullComm,
+                None,
+                &c,
+                &f,
+                &mut x,
+                &opts,
+                ws,
+            )
+            .unwrap();
+            (rep, x)
+        };
+        let mut flat_ws = CgWorkspace::new(n);
+        let (rep_flat, x_flat) = solve(&mut flat_ws);
+        let mut ws = CgWorkspace::new(n);
+        ws.set_reduce_plan(4, vec![0, 1, 2, 3]).unwrap();
+        let (rep_blk, x_blk) = solve(&mut ws);
+        assert_eq!(rep_blk.iterations, rep_flat.iterations);
+        assert_eq!(rep_blk.glsc3_sweeps, rep_flat.glsc3_sweeps);
+        crate::proputil::assert_allclose(&x_blk, &x_flat, 1e-9, 1e-12);
+
+        let mut bad = CgWorkspace::new(n);
+        assert!(bad.set_reduce_plan(3, vec![0, 1, 2, 3]).is_err(), "12 dofs != 16");
+        assert!(bad.set_reduce_plan(4, vec![0, 2, 1, 3]).is_err(), "gids must ascend");
+        assert!(bad.set_reduce_plan(0, vec![]).is_err(), "zero block");
     }
 
     #[test]

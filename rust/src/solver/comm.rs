@@ -45,6 +45,24 @@ pub trait Communicator {
     /// [`Communicator::allreduce_sum`].
     fn allreduce_min(&mut self, value: f64) -> Result<f64>;
 
+    /// Global sum of *keyed* partials: every rank contributes a list of
+    /// `(gid, partial)` pairs (gids globally unique across ranks), and the
+    /// result is the fold of **all** partials in ascending-gid order,
+    /// starting from `0.0`, delivered bitwise-identically to every rank.
+    ///
+    /// This is the collective behind the solver's element-blocked
+    /// reductions: because the fold order is a global property (the gid
+    /// order), the result is independent of how the elements are
+    /// distributed — a ranked solve reproduces the serial fold bit for
+    /// bit. The default implementation serves any size-1 communicator:
+    /// with one rank the gids are already ascending (the caller's
+    /// contract), so the fold is a plain left-to-right sum.
+    fn allreduce_ordered_sum(&mut self, gids: &[u64], partials: &[f64]) -> Result<f64> {
+        debug_assert_eq!(gids.len(), partials.len());
+        debug_assert!(gids.windows(2).all(|w| w[0] < w[1]));
+        Ok(partials.iter().fold(0.0, |acc, &p| acc + p))
+    }
+
     /// All ranks reach the barrier before any returns from it.
     fn barrier(&mut self) -> Result<()>;
 }
@@ -89,5 +107,18 @@ mod tests {
         assert_eq!(c.allreduce_sum(2.5).unwrap(), 2.5);
         assert_eq!(c.allreduce_min(-7.0).unwrap(), -7.0);
         c.barrier().unwrap();
+    }
+
+    #[test]
+    fn ordered_sum_folds_left_to_right() {
+        // The serial ordered fold must be the plain left-to-right sum —
+        // this exact expression is what a multi-rank communicator has to
+        // reproduce bitwise after gathering and sorting by gid.
+        let mut c = NullComm;
+        let vals = [1.0e16, 1.0, -1.0e16, 3.5];
+        let gids = [0u64, 1, 2, 3];
+        let want = vals.iter().fold(0.0f64, |acc, &v| acc + v);
+        let got = c.allreduce_ordered_sum(&gids, &vals).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits());
     }
 }

@@ -1,0 +1,155 @@
+//! Cross-decomposition conformance: slab, pencil, and box ranked solves
+//! against the serial pipeline.
+//!
+//! The rank runtime's contract is strict: per-rank reports are **bitwise
+//! identical to the serial solve** for every decomposition shape (see the
+//! three mechanisms in `rank/mod.rs`'s module docs — element-blocked
+//! ordered reductions, ascending-element local assembly, and raw-copy
+//! refolds of cross-rank boundary points). These tests hold the public
+//! entry points to that contract across a shape × ranks × degree grid,
+//! check the decomposition's shared-point sets against the analytic
+//! cut-plane formula, and pin the fused-pap correction on multi-neighbor
+//! (pencil/box) topologies.
+
+use std::collections::BTreeSet;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::{Nekbone, RunReport};
+use nekbone::mesh::Mesh;
+use nekbone::rank::{run_ranked_with, DecompShape, Decomposition};
+
+/// The conformance grid: every shape at two rank counts that divide the
+/// 2×2×2 element grid of `nelt = 8`.
+const GRID: &[(&str, usize)] = &[
+    ("slab", 1),
+    ("slab", 2),
+    ("pencil", 2),
+    ("pencil", 4),
+    ("box", 4),
+    ("box", 8),
+];
+
+fn serial_report(cfg: &RunConfig) -> RunReport {
+    let serial = RunConfig { ranks: 1, decomp: "slab".into(), ..cfg.clone() };
+    let mut app = Nekbone::builder(serial).operator("cpu-layered").build().unwrap();
+    app.run().unwrap()
+}
+
+fn assert_bitwise(got: &RunReport, want: &RunReport, tag: &str) {
+    assert_eq!(got.iterations, want.iterations, "{tag}: iteration counts");
+    assert_eq!(
+        got.final_residual.to_bits(),
+        want.final_residual.to_bits(),
+        "{tag}: final residual {} vs serial {}",
+        got.final_residual,
+        want.final_residual
+    );
+    assert_eq!(got.rnorms.len(), want.rnorms.len(), "{tag}: history length");
+    for (i, (a, b)) in got.rnorms.iter().zip(&want.rnorms).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag} iter {i}: {a} vs serial {b}");
+    }
+}
+
+#[test]
+fn every_shape_reproduces_the_serial_solve_bitwise() {
+    for &n in &[3usize, 4] {
+        let base = RunConfig {
+            nelt: 8,
+            n,
+            niter: 15,
+            record_residuals: true,
+            ..Default::default()
+        };
+        let want = serial_report(&base);
+        assert_eq!(want.rnorms.len(), want.iterations, "serial records every iteration");
+        for &(shape, ranks) in GRID {
+            let cfg = RunConfig { ranks, decomp: shape.into(), ..base.clone() };
+            let got = run_ranked_with(&cfg, "cpu-layered").unwrap();
+            assert!(
+                got.backend.ends_with(&format!("-r{ranks}-{shape}")),
+                "backend label must carry the shape: {}",
+                got.backend
+            );
+            assert_bitwise(&got, &want, &format!("{shape}/r{ranks}/n{n}"));
+        }
+    }
+}
+
+#[test]
+fn larger_mesh_stays_bitwise_across_shapes() {
+    // 64 elements (4×4×4): bricks are genuinely non-contiguous in the
+    // full-mesh arrays for pencil/box, and box ranks see edge + corner
+    // neighbor links — the exchange paths a 2×2×2 grid cannot reach.
+    let base =
+        RunConfig { nelt: 64, n: 3, niter: 12, record_residuals: true, ..Default::default() };
+    let want = serial_report(&base);
+    for (shape, ranks) in [("slab", 4), ("pencil", 4), ("box", 8)] {
+        let cfg = RunConfig { ranks, decomp: shape.into(), ..base.clone() };
+        let got = run_ranked_with(&cfg, "cpu-layered").unwrap();
+        assert_bitwise(&got, &want, &format!("{shape}/r{ranks}/nelt64"));
+    }
+}
+
+#[test]
+fn shared_point_counts_match_the_cut_plane_formula() {
+    // Every point two ranks share lies on an internal cut plane, and the
+    // union over the plane families is inclusion–exclusion over the
+    // |C_axis| = p_axis − 1 cuts. Holding the decomposition's link gid
+    // sets to the analytic count pins both the neighbor enumeration and
+    // the per-link gid lists (no point missed, none double-owned).
+    let mesh = Mesh::for_nelt(64, 4).unwrap();
+    for &(shape_s, ranks) in GRID {
+        let shape = DecompShape::parse(shape_s).unwrap();
+        let d = Decomposition::new(shape, ranks, &mesh).unwrap();
+        let mut union: BTreeSet<usize> = BTreeSet::new();
+        for r in 0..ranks {
+            for (_, gids) in d.neighbors(r) {
+                union.extend(gids.iter().copied());
+            }
+        }
+        let (gx, gy, gz) = (mesh.gx, mesh.gy, mesh.gz);
+        let (cx, cy, cz) = (d.px - 1, d.py - 1, d.pz - 1);
+        let want = cz * gx * gy + cy * gx * gz + cx * gy * gz
+            - (cy * cz * gx + cx * cz * gy + cx * cy * gz)
+            + cx * cy * cz;
+        assert_eq!(
+            union.len(),
+            want,
+            "{shape_s}/r{ranks} (px={} py={} pz={})",
+            d.px,
+            d.py,
+            d.pz
+        );
+    }
+}
+
+#[test]
+fn fused_pap_correction_holds_on_multi_neighbor_topologies() {
+    // The fused operators compute pap inside Ax and patch it over the
+    // exchange's shared dofs. On pencil/box decompositions that support
+    // includes face, edge, and corner links — the correction must track
+    // the unfused trajectory (same iterations, residual to round-off)
+    // there too, not just on the two-neighbor slab chain.
+    for (shape, ranks) in [("pencil", 4), ("box", 8)] {
+        let base = RunConfig {
+            nelt: 8,
+            n: 4,
+            niter: 20,
+            ranks,
+            decomp: shape.into(),
+            ..Default::default()
+        };
+        let want = run_ranked_with(&base, "cpu-layered").unwrap();
+        for name in ["cpu-layered-fused", "cpu-threaded-fused"] {
+            let got = run_ranked_with(&base, name).unwrap();
+            assert_eq!(got.iterations, want.iterations, "{shape}/{name}");
+            let denom = want.final_residual.abs().max(1e-30);
+            assert!(
+                (got.final_residual - want.final_residual).abs() / denom < 1e-9,
+                "{shape}/{name}: {} vs {}",
+                got.final_residual,
+                want.final_residual
+            );
+        }
+    }
+}

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: fresh quick-mode bench points vs committed baselines.
+
+Usage:
+    python3 tools/trajectory_gate.py --baseline BENCH_scaling.json \
+        --fresh /tmp/fresh_scaling.json [--min-ratio 0.75]
+
+The committed BENCH_*.json files at the repo root are the perf trajectory:
+conservative throughput floors authored at quick-mode scale. This gate
+re-measures at the same scale and fails if any shared point fell below
+``min_ratio`` x its committed floor (default 0.75, i.e. a >25% regression).
+
+Keying is schema-aware:
+
+    nekbone-scaling/1    per point (scenario, decomp, operator, degree,
+                         ranks, elements) -> throughput_mdofs
+    nekbone-roofline/1   per point (operator, degree) -> gflops
+    nekbone-serve/1      the whole report -> throughput_rps
+
+Points present only in the fresh run (a new operator, a wider sweep) are
+reported and skipped — the gate never blocks growth, only regression.
+Points present only in the baseline are also skipped: quick mode may
+legitimately cover a subset of a hand-widened baseline.
+"""
+
+import argparse
+import json
+import sys
+
+
+def key_points(doc):
+    """Return {key: throughput} for a parsed BENCH document."""
+    schema = doc.get("schema", "<missing>")
+    if schema == "nekbone-scaling/1":
+        return {
+            (
+                p["scenario"],
+                p["decomp"],
+                doc.get("operator", ""),
+                p["degree"],
+                p["ranks"],
+                p["elements"],
+            ): p["throughput_mdofs"]
+            for p in doc["points"]
+        }
+    if schema == "nekbone-roofline/1":
+        return {(p["operator"], p["degree"]): p["gflops"] for p in doc["points"]}
+    if schema == "nekbone-serve/1":
+        return {("serve", "throughput_rps"): doc["throughput_rps"]}
+    sys.exit(f"trajectory gate: unknown schema {schema!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True, help="freshly measured BENCH_*.json")
+    ap.add_argument(
+        "--min-ratio",
+        type=float,
+        default=0.75,
+        help="fail when fresh < ratio * baseline (default 0.75)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base_doc = json.load(f)
+    with open(args.fresh) as f:
+        fresh_doc = json.load(f)
+    if base_doc.get("schema") != fresh_doc.get("schema"):
+        sys.exit(
+            f"trajectory gate: schema mismatch — baseline "
+            f"{base_doc.get('schema')!r} vs fresh {fresh_doc.get('schema')!r}"
+        )
+
+    base = key_points(base_doc)
+    fresh = key_points(fresh_doc)
+
+    failures = []
+    compared = 0
+    for key, floor in sorted(base.items(), key=str):
+        if key not in fresh:
+            print(f"skip (not in fresh run):    {key}")
+            continue
+        got = fresh[key]
+        compared += 1
+        verdict = "ok" if got >= args.min_ratio * floor else "REGRESSION"
+        print(f"{verdict:<10} {key}: fresh {got:.3f} vs floor {floor:.3f}")
+        if verdict != "ok":
+            failures.append((key, got, floor))
+    for key in sorted(fresh.keys() - base.keys(), key=str):
+        print(f"skip (not in baseline):     {key} = {fresh[key]:.3f}")
+
+    if compared == 0:
+        sys.exit("trajectory gate: no shared points — baseline and fresh run are disjoint")
+    if failures:
+        lines = "\n".join(
+            f"  {k}: fresh {g:.3f} < {args.min_ratio} x committed {f:.3f}"
+            for k, g, f in failures
+        )
+        sys.exit(f"trajectory gate: {len(failures)} regression(s):\n{lines}")
+    print(f"trajectory gate: {compared} point(s) at or above {args.min_ratio}x their floors")
+
+
+if __name__ == "__main__":
+    main()
