@@ -237,6 +237,10 @@ impl Default for RooflineConfig {
                 "cpu-layered-fused-f32".into(),
                 "cpu-spec-fused-f32".into(),
                 "cpu-simd-fused-f32".into(),
+                "cpu-asm".into(),
+                "cpu-asm-fused".into(),
+                "cpu-asm-f32".into(),
+                "cpu-asm-fused-f32".into(),
             ],
             degrees: vec![5, 9, 11],
             elements: 64,
@@ -282,6 +286,12 @@ pub fn run_with(cfg: &RooflineConfig, registry: &OperatorRegistry) -> Result<Roo
         let ndof = mesh.ndof_local();
         let u = crate::rng::Rng::new(0xBE2C).normal_vec(ndof);
         let mut w = vec![0.0; ndof];
+        // Assembly fold plan so the `cpu-asm*` family measures its real
+        // schedule (dssum + mask inside the sweep) — and reports the
+        // assembled byte model — rather than the plain-layered fallback.
+        let mask = mesh.boundary_mask();
+        let gs = crate::gs::GatherScatter::new(&mesh);
+        let plan = gs.assembly_plan(n * n * n, Some(&mask))?;
         let ctx = OperatorCtx {
             n,
             nelt: mesh.nelt(),
@@ -291,6 +301,7 @@ pub fn run_with(cfg: &RooflineConfig, registry: &OperatorRegistry) -> Result<Roo
             d: &basis.d,
             g: &geom.g,
             c: &c,
+            assemble: Some(&plan),
         };
         for name in &cfg.operators {
             let mut op = registry.build(name, &ctx)?;
@@ -559,10 +570,13 @@ mod tests {
 
     #[test]
     fn f32_points_sit_higher_on_the_roofline_than_their_f64_siblings() {
-        // Reduced storage halves six of the eight per-point streams with
-        // an unchanged flop count, so each f32 point's arithmetic
-        // intensity must exceed its f64 sibling's by exactly the stream
-        // ratio: 64/40 unfused, 72/48 fused.
+        // Reduced storage halves the six geometric-factor streams of the
+        // per-point traffic with an unchanged flop count, so each f32
+        // point's arithmetic intensity must exceed its f64 sibling's by
+        // exactly the stream ratio. Stored accounting (sweep + standalone
+        // dssum/mask re-stream): 80/56 unfused, 88/64 fused; assembled
+        // accounting (`cpu-asm*`, no re-stream): 64/40 unfused, 72/48
+        // fused.
         let report = run(&quick_cfg()).unwrap();
         let by = |name: &str, n: usize| {
             report
@@ -574,12 +588,14 @@ mod tests {
         };
         for &n in &[3usize, 5] {
             for (f32_name, f64_name, ratio) in [
-                ("cpu-layered-f32", "cpu-layered", 64.0 / 40.0),
-                ("cpu-spec-f32", "cpu-spec", 64.0 / 40.0),
-                ("cpu-simd-f32", "cpu-simd", 64.0 / 40.0),
-                ("cpu-layered-fused-f32", "cpu-layered-fused", 72.0 / 48.0),
-                ("cpu-spec-fused-f32", "cpu-spec-fused", 72.0 / 48.0),
-                ("cpu-simd-fused-f32", "cpu-simd-fused", 72.0 / 48.0),
+                ("cpu-layered-f32", "cpu-layered", 80.0 / 56.0),
+                ("cpu-spec-f32", "cpu-spec", 80.0 / 56.0),
+                ("cpu-simd-f32", "cpu-simd", 80.0 / 56.0),
+                ("cpu-layered-fused-f32", "cpu-layered-fused", 88.0 / 64.0),
+                ("cpu-spec-fused-f32", "cpu-spec-fused", 88.0 / 64.0),
+                ("cpu-simd-fused-f32", "cpu-simd-fused", 88.0 / 64.0),
+                ("cpu-asm-f32", "cpu-asm", 64.0 / 40.0),
+                ("cpu-asm-fused-f32", "cpu-asm-fused", 72.0 / 48.0),
             ] {
                 let a = by(f32_name, n);
                 let b = by(f64_name, n);
@@ -593,6 +609,46 @@ mod tests {
                 assert!(
                     (got - ratio).abs() < 1e-9,
                     "{f32_name}/{n}: intensity ratio {got} vs stream ratio {ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn assembled_points_sit_strictly_above_their_stored_siblings() {
+        // ISSUE 9 acceptance: folding dssum + mask into the sweep drops
+        // the standalone pass's 16 bytes/point re-stream of `w`, so every
+        // `cpu-asm*` point must report strictly higher intensity than its
+        // `cpu-*` sibling — by exactly the stream ratio (the pinned
+        // per-point byte models live in `operators::ax_bytes_moved_*`).
+        let report = run(&quick_cfg()).unwrap();
+        let by = |name: &str, n: usize| {
+            report
+                .points
+                .iter()
+                .find(|p| p.operator == name && p.degree == n)
+                .unwrap_or_else(|| panic!("missing point {name}/{n}"))
+                .clone()
+        };
+        for &n in &[3usize, 5] {
+            for (asm_name, sib_name, ratio) in [
+                ("cpu-asm", "cpu-layered", 80.0 / 64.0),
+                ("cpu-asm-fused", "cpu-layered-fused", 88.0 / 72.0),
+                ("cpu-asm-f32", "cpu-layered-f32", 56.0 / 40.0),
+                ("cpu-asm-fused-f32", "cpu-layered-fused-f32", 64.0 / 48.0),
+            ] {
+                let a = by(asm_name, n);
+                let s = by(sib_name, n);
+                assert!(
+                    a.intensity > s.intensity,
+                    "{asm_name}/{n}: {} must exceed {sib_name}'s {}",
+                    a.intensity,
+                    s.intensity
+                );
+                let got = a.intensity / s.intensity;
+                assert!(
+                    (got - ratio).abs() < 1e-9,
+                    "{asm_name}/{n}: intensity ratio {got} vs stream ratio {ratio}"
                 );
             }
         }

@@ -240,6 +240,16 @@ impl NekboneBuilder {
             _ => None, // validate() restricts this to "none"
         };
 
+        // Fold plan for assembly-fused operators: only built when the
+        // solve itself would run dssum (+mask), so an assembling operator
+        // reproduces exactly what the standalone passes would have done.
+        // Under --no-comm there is no assembly to fold and the plan stays
+        // absent — `cpu-asm*` then degrade to their plain layered sweep.
+        let plan = if cfg.no_comm {
+            None
+        } else {
+            Some(gs.assembly_plan(cfg.n * cfg.n * cfg.n, pc_mask)?)
+        };
         let ctx = OperatorCtx {
             n: cfg.n,
             nelt: mesh.nelt(),
@@ -249,6 +259,7 @@ impl NekboneBuilder {
             d: &basis.d,
             g: &geom.g,
             c: &c,
+            assemble: plan.as_ref(),
         };
         let op = registry.build(&self.operator, &ctx)?;
         // The operator owns whatever it cloned/uploaded from `geom`; the
@@ -538,7 +549,7 @@ mod tests {
             .into_iter()
             .filter(|name| !registry.resolve(name).unwrap().needs_artifacts)
             .collect();
-        assert!(names.len() >= 17, "registry lost CPU operators ({} left)", names.len());
+        assert!(names.len() >= 21, "registry lost CPU operators ({} left)", names.len());
         let mut groups: [Vec<(String, RunReport, Vec<f64>)>; 2] = [Vec::new(), Vec::new()];
         for name in &names {
             let mut app = app(name, small_cfg());
@@ -548,7 +559,7 @@ mod tests {
             let g = usize::from(name.ends_with("-f32"));
             groups[g].push((name.clone(), rep, x));
         }
-        assert!(groups[1].len() >= 8, "registry lost f32 operators");
+        assert!(groups[1].len() >= 10, "registry lost f32 operators");
         for group in &groups {
             let (_, rep0, x0) = &group[0];
             for (name, rep, x) in &group[1..] {

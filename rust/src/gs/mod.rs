@@ -18,6 +18,7 @@
 //! exchange between rank threads) lives in [`crate::rank`] and is
 //! property-tested against this one.
 
+use crate::error::{Error, Result};
 use crate::mesh::Mesh;
 
 /// Precomputed gather–scatter operator for one mesh.
@@ -149,6 +150,209 @@ impl GatherScatter {
         let ones = vec![1.0; self.ids.len()];
         let counts = self.gather(&ones);
         self.ids.iter().map(|&g| counts[g]).collect()
+    }
+
+    /// Build the ownership/fold plan an assembly-fused operator needs to
+    /// perform dssum + mask *inside* its element sweep (the `cpu-asm`
+    /// family). `np = n^3` is the dofs-per-element block size; `mask` is
+    /// the solve's boundary mask (or `None` under `--no-mask`).
+    ///
+    /// The plan re-buckets this gather–scatter's fold groups by **ready
+    /// element** — the element holding a group's last (highest) local copy
+    /// — so a kernel can fold each shared dof the moment its final
+    /// contribution is written, while the face data is cache-hot. Within a
+    /// group the copies stay in ascending-local order and the fold is the
+    /// same sum-then-broadcast [`GatherScatter::dssum`] performs, and
+    /// distinct groups touch disjoint dofs, so the assembled result is
+    /// **bitwise identical** to running the serial sweep-then-dssum path.
+    pub fn assembly_plan(&self, np: usize, mask: Option<&[f64]>) -> Result<AssemblyPlan> {
+        let ndof = self.ids.len();
+        if np == 0 || ndof % np != 0 {
+            return Err(Error::Config(format!(
+                "assembly plan: local dofs ({ndof}) must be a multiple of n^3 ({np})"
+            )));
+        }
+        let nelt = ndof / np;
+        if let Some(m) = mask {
+            if m.len() != ndof {
+                return Err(Error::Config(format!(
+                    "assembly plan: mask must be ndof = {ndof}, got {}",
+                    m.len()
+                )));
+            }
+        }
+        // Bucket-sort the fold groups by ready element; the stable pass
+        // keeps gid order within each bucket (deterministic, testable).
+        let ngroups = self.shared_offsets.len() - 1;
+        let ready_of = |gi: usize| {
+            let hi = self.shared_offsets[gi + 1] as usize;
+            self.shared_locals[hi - 1] as usize / np
+        };
+        let mut ready_offsets = vec![0u32; nelt + 1];
+        for gi in 0..ngroups {
+            ready_offsets[ready_of(gi) + 1] += 1;
+        }
+        for e in 1..=nelt {
+            ready_offsets[e] += ready_offsets[e - 1];
+        }
+        let mut cursor: Vec<u32> = ready_offsets[..nelt].to_vec();
+        let mut order = vec![0u32; ngroups];
+        for gi in 0..ngroups {
+            let e = ready_of(gi);
+            order[cursor[e] as usize] = gi as u32;
+            cursor[e] += 1;
+        }
+        let mut offsets = Vec::with_capacity(ngroups + 1);
+        let mut locals = Vec::with_capacity(self.shared_locals.len());
+        offsets.push(0u32);
+        for &gi in &order {
+            let (lo, hi) =
+                (self.shared_offsets[gi as usize] as usize, self.shared_offsets[gi as usize + 1] as usize);
+            locals.extend_from_slice(&self.shared_locals[lo..hi]);
+            offsets.push(locals.len() as u32);
+        }
+        // Interior (multiplicity-1) dofs per element: everything dssum
+        // never touches — the fused pap accumulates these per element.
+        let mut is_shared = vec![false; ndof];
+        for &l in &self.shared_locals {
+            is_shared[l as usize] = true;
+        }
+        let mut interior_offsets = Vec::with_capacity(nelt + 1);
+        let mut interior = Vec::with_capacity(ndof - self.shared_locals.len());
+        interior_offsets.push(0u32);
+        for e in 0..nelt {
+            for l in e * np..(e + 1) * np {
+                if !is_shared[l] {
+                    interior.push(l as u32);
+                }
+            }
+            interior_offsets.push(interior.len() as u32);
+        }
+        // Only dofs whose mask entry actually scales (value != 1.0) are
+        // listed: x * 1.0 == x bitwise, so skipping identity entries keeps
+        // the plan's mask pass bit-identical to a full `mask_apply`.
+        let masked = mask
+            .map(|m| {
+                m.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 1.0)
+                    .map(|(l, &v)| (l as u32, v))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(AssemblyPlan { np, ndof, offsets, locals, ready_offsets, interior_offsets, interior, masked })
+    }
+}
+
+/// Precomputed ownership/fold plan for performing direct-stiffness
+/// assembly (and the boundary mask) *inside* an operator's element sweep
+/// — built by [`GatherScatter::assembly_plan`], consumed by the `cpu-asm`
+/// operator family through [`OperatorCtx::assemble`](crate::operators::OperatorCtx).
+///
+/// Invariants (each one load-bearing for the bitwise guarantee):
+///
+/// * every fold group lists the local copies of one shared global dof in
+///   ascending-local order — the exact order [`GatherScatter::dssum`]
+///   sums, so each group's fold reproduces dssum's result bit for bit;
+/// * groups are bucketed by ready element (the element owning the group's
+///   highest copy); distinct groups are disjoint, so fold order across
+///   groups cannot change any dof's value;
+/// * the mask pass multiplies only dofs whose mask value differs from 1.0,
+///   after all folds — the dssum-then-mask order of the standalone path.
+#[derive(Clone, Debug)]
+pub struct AssemblyPlan {
+    /// Dofs per element (n^3).
+    np: usize,
+    /// Total local dofs the plan covers.
+    ndof: usize,
+    /// Group boundaries into `locals` (ngroups + 1 entries).
+    offsets: Vec<u32>,
+    /// Local copies of each shared dof, ascending within a group.
+    locals: Vec<u32>,
+    /// `ready_offsets[e]..ready_offsets[e+1]` = groups ready after
+    /// element `e`'s values are written (nelt + 1 entries).
+    ready_offsets: Vec<u32>,
+    /// Interior-dof boundaries into `interior` (nelt + 1 entries).
+    interior_offsets: Vec<u32>,
+    /// Multiplicity-1 dofs, bucketed per element.
+    interior: Vec<u32>,
+    /// `(dof, mask value)` for every dof whose mask entry != 1.0.
+    masked: Vec<(u32, f64)>,
+}
+
+impl AssemblyPlan {
+    /// Local dofs the plan covers.
+    pub fn ndof(&self) -> usize {
+        self.ndof
+    }
+
+    /// Elements the plan covers.
+    pub fn nelt(&self) -> usize {
+        self.ndof / self.np
+    }
+
+    /// Fold every group that became ready when element `e`'s values were
+    /// written: sum the copies in ascending-local order, broadcast the sum
+    /// — the same arithmetic [`GatherScatter::dssum`] performs on that
+    /// group, just scheduled while the face data is cache-hot.
+    pub fn fold_ready(&self, e: usize, w: &mut [f64]) {
+        let (lo, hi) = (self.ready_offsets[e] as usize, self.ready_offsets[e + 1] as usize);
+        for gi in lo..hi {
+            let group =
+                &self.locals[self.offsets[gi] as usize..self.offsets[gi + 1] as usize];
+            let mut sum = 0.0;
+            for &l in group {
+                sum += w[l as usize];
+            }
+            for &l in group {
+                w[l as usize] = sum;
+            }
+        }
+    }
+
+    /// Fused-pap contribution of everything finalized at element `e`: the
+    /// groups just folded by [`AssemblyPlan::fold_ready`] plus element
+    /// `e`'s interior dofs — `sum(c_l * u_l * w_l)` over exactly those
+    /// copies, with `w` already folded. Summing each dof the moment it is
+    /// final lets the fused asm operator report an **assembled** pap
+    /// without a second full-vector sweep.
+    pub fn pap_ready(&self, e: usize, w: &[f64], u: &[f64], c: &[f64]) -> f64 {
+        let mut pap = 0.0;
+        let (lo, hi) = (self.ready_offsets[e] as usize, self.ready_offsets[e + 1] as usize);
+        for gi in lo..hi {
+            let group =
+                &self.locals[self.offsets[gi] as usize..self.offsets[gi + 1] as usize];
+            for &l in group {
+                let l = l as usize;
+                pap += c[l] * u[l] * w[l];
+            }
+        }
+        let (lo, hi) =
+            (self.interior_offsets[e] as usize, self.interior_offsets[e + 1] as usize);
+        for &l in &self.interior[lo..hi] {
+            let l = l as usize;
+            pap += c[l] * u[l] * w[l];
+        }
+        pap
+    }
+
+    /// The mask pass: scale every dof whose mask value != 1.0. Run after
+    /// all folds — bitwise identical to
+    /// [`mask_apply`](crate::solver::mask_apply) on the full mask.
+    pub fn apply_mask(&self, w: &mut [f64]) {
+        for &(l, m) in &self.masked {
+            w[l as usize] *= m;
+        }
+    }
+
+    /// Whole-vector assembly (every fold, then the mask) — the reference
+    /// the eager per-element schedule is tested against, and the path a
+    /// caller without an element loop can use.
+    pub fn assemble(&self, w: &mut [f64]) {
+        for e in 0..self.nelt() {
+            self.fold_ready(e, w);
+        }
+        self.apply_mask(w);
     }
 }
 
@@ -295,5 +499,98 @@ mod tests {
         let mut gs = GatherScatter::new(&m);
         let mut v = vec![0.0; 3];
         gs.dssum(&mut v);
+    }
+
+    #[test]
+    fn assembly_plan_assemble_is_bitwise_dssum_then_mask() {
+        let m = mesh();
+        let np = m.n * m.n * m.n;
+        let mask = m.boundary_mask();
+        let mut gs = GatherScatter::new(&m);
+        let plan = gs.assembly_plan(np, Some(&mask)).unwrap();
+        let mut cases = Cases::new(0xA5);
+        for _ in 0..10 {
+            let v0 = cases.vec_normal(m.ndof_local());
+            let mut want = v0.clone();
+            gs.dssum(&mut want);
+            crate::solver::mask_apply(&mut want, &mask);
+            let mut got = v0.clone();
+            plan.assemble(&mut got);
+            // Bitwise, not allclose: the fold order inside each group and
+            // the mask multiply are identical operations.
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "assembled vector must be bit-identical to dssum+mask"
+            );
+        }
+    }
+
+    #[test]
+    fn assembly_plan_eager_folds_cover_every_group_once() {
+        // Folding per ready element must equal folding everything at the
+        // end — same groups, different schedule.
+        let m = mesh();
+        let np = m.n * m.n * m.n;
+        let mut gs = GatherScatter::new(&m);
+        let plan = gs.assembly_plan(np, None).unwrap();
+        assert_eq!(plan.nelt(), m.nelt());
+        assert_eq!(plan.ndof(), m.ndof_local());
+        let mut eager: Vec<f64> =
+            (0..m.ndof_local()).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut want = eager.clone();
+        gs.dssum(&mut want);
+        for e in 0..plan.nelt() {
+            plan.fold_ready(e, &mut eager);
+        }
+        assert!(
+            eager.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "eager per-element folds must reproduce dssum bit for bit"
+        );
+        // Every group lands in the bucket of its highest copy's element —
+        // fold_ready(e) must never read dofs beyond element e.
+        for e in 0..plan.nelt() {
+            let (lo, hi) =
+                (plan.ready_offsets[e] as usize, plan.ready_offsets[e + 1] as usize);
+            for gi in lo..hi {
+                let group =
+                    &plan.locals[plan.offsets[gi] as usize..plan.offsets[gi + 1] as usize];
+                assert!(group.windows(2).all(|w| w[0] < w[1]), "copies ascending");
+                assert_eq!(*group.last().unwrap() as usize / np, e, "ready element");
+            }
+        }
+    }
+
+    #[test]
+    fn assembly_plan_pap_ready_sums_assembled_glsc3() {
+        // Accumulating pap per finalized dof must equal the full
+        // glsc3(assembled w, c, u) to roundoff.
+        let m = mesh();
+        let np = m.n * m.n * m.n;
+        let mask = m.boundary_mask();
+        let mut gs = GatherScatter::new(&m);
+        let plan = gs.assembly_plan(np, Some(&mask)).unwrap();
+        let c = m.inv_multiplicity();
+        let mut cases = Cases::new(0xA6);
+        let mut u = cases.vec_normal(m.ndof_local());
+        crate::solver::mask_apply(&mut u, &mask);
+        let mut w = cases.vec_normal(m.ndof_local());
+        let mut pap = 0.0;
+        for e in 0..plan.nelt() {
+            plan.fold_ready(e, &mut w);
+            pap += plan.pap_ready(e, &w, &u, &c);
+        }
+        plan.apply_mask(&mut w);
+        let want: f64 = w.iter().zip(&c).zip(&u).map(|((w, c), u)| w * c * u).sum();
+        assert!((pap - want).abs() <= 1e-12 * want.abs().max(1.0), "{pap} vs {want}");
+    }
+
+    #[test]
+    fn assembly_plan_rejects_bad_shapes() {
+        let m = mesh();
+        let gs = GatherScatter::new(&m);
+        let err = gs.assembly_plan(7, None).err().unwrap();
+        assert!(err.to_string().contains("multiple of n^3"), "{err}");
+        let err = gs.assembly_plan(m.n * m.n * m.n, Some(&[1.0; 3])).err().unwrap();
+        assert!(err.to_string().contains("mask must be ndof"), "{err}");
     }
 }

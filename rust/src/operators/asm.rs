@@ -1,0 +1,344 @@
+//! Assembly-fused Ax: dssum + mask performed *inside* the element sweep
+//! (the `cpu-asm` operator family).
+//!
+//! Every other operator computes the block-diagonal `w = A_local u` and
+//! leaves assembly to the solver, which then re-streams `w` end to end in
+//! a separate dssum pass plus a mask pass. This family folds both into
+//! the sweep itself: interior dofs are written once and are final; shared
+//! dofs are folded through a precomputed ownership plan
+//! ([`AssemblyPlan`], built from the gather–scatter) the moment their
+//! last contribution is written — while the face data is still cache-hot.
+//! The fused variants additionally accumulate the CG `pap` reduction over
+//! each dof as it becomes final, so the reported pap is already the
+//! **assembled** value and the solver needs no shared-dof correction.
+//!
+//! ## Bitwise invariant
+//!
+//! The element kernel is the unchanged [`ax_layered_element`], each fold
+//! group sums its copies in the same ascending-local order
+//! [`GatherScatter::dssum`](crate::gs::GatherScatter::dssum) uses, groups
+//! are disjoint, and the mask multiplies after all folds — so the
+//! assembled output is **bitwise identical** to the serial
+//! sweep-then-dssum-then-mask path, and a `cpu-asm` CG trajectory
+//! reproduces `cpu-layered`'s bit for bit.
+//!
+//! ## Plan-less fallback
+//!
+//! When the [`OperatorCtx`] carries no [`OperatorCtx::assemble`] plan
+//! (conformance harnesses with synthetic `g`, `--no-comm` runs,
+//! multi-rank bricks whose halo exchange needs the raw pre-assembly
+//! copies), the operators degrade to the plain layered sweep and report
+//! `applies_assembly() = false` — the solver then runs its standalone
+//! dssum + mask exactly as for `cpu-layered`.
+
+use crate::error::{Error, Result};
+use crate::geometry::{widen_into, GeomScalar};
+use crate::gs::AssemblyPlan;
+use crate::operators::layered::{ax_layered_element, LayeredScratch};
+use crate::operators::{
+    ax_bytes_moved_assembled, ax_bytes_moved_stored, ax_flops, fused_ax_flops, AxOperator,
+    OperatorCtx,
+};
+
+/// The `cpu-asm` family: layered element sweep with in-sweep assembly
+/// (when a plan is supplied), unfused or fused, over geometric factors
+/// stored at width `S`. Four registrations share this struct:
+/// `cpu-asm`, `cpu-asm-fused`, `cpu-asm-f32`, `cpu-asm-fused-f32`.
+pub(crate) struct AsmOp<S: GeomScalar> {
+    label: &'static str,
+    fused: bool,
+    st: Option<AsmState<S>>,
+    last_pap: Option<f64>,
+}
+
+struct AsmState<S> {
+    n: usize,
+    nelt: usize,
+    d: Vec<f64>,
+    g: Vec<S>,
+    c: Vec<f64>,
+    plan: Option<AssemblyPlan>,
+}
+
+impl<S: GeomScalar> AsmOp<S> {
+    pub(crate) fn new(label: &'static str, fused: bool) -> Self {
+        AsmOp { label, fused, st: None, last_pap: None }
+    }
+}
+
+impl<S: GeomScalar> AxOperator for AsmOp<S> {
+    fn label(&self) -> String {
+        self.label.into()
+    }
+
+    fn setup(&mut self, ctx: &OperatorCtx) -> Result<()> {
+        super::check_setup_shapes(ctx, self.fused)?;
+        let np = ctx.n * ctx.n * ctx.n;
+        let plan = match ctx.assemble {
+            Some(p) => {
+                if p.ndof() != ctx.nelt * np {
+                    return Err(Error::Config(format!(
+                        "operator setup: assembly plan covers {} dofs, problem has {}",
+                        p.ndof(),
+                        ctx.nelt * np
+                    )));
+                }
+                Some(p.clone())
+            }
+            None => None,
+        };
+        self.st = Some(AsmState {
+            n: ctx.n,
+            nelt: ctx.nelt,
+            d: ctx.d.to_vec(),
+            g: S::convert(ctx.g),
+            c: ctx.c.to_vec(),
+            plan,
+        });
+        self.last_pap = None;
+        Ok(())
+    }
+
+    fn apply(&mut self, u: &[f64], w: &mut [f64]) -> Result<()> {
+        let st = self.st.as_ref().ok_or_else(|| {
+            Error::Config(format!("operator {:?} used before setup", self.label))
+        })?;
+        super::check_apply_shapes(st.n, st.nelt, u, w)?;
+        let (n, nelt) = (st.n, st.nelt);
+        let np = n * n * n;
+        let mut scratch = LayeredScratch::new(n);
+        let mut ge64 = vec![0.0f64; 6 * np];
+        let mut pap = 0.0;
+        for e in 0..nelt {
+            {
+                let ue = &u[e * np..(e + 1) * np];
+                widen_into(&st.g[e * 6 * np..(e + 1) * 6 * np], &mut ge64);
+                let we = &mut w[e * np..(e + 1) * np];
+                ax_layered_element(n, &st.d, ue, &ge64, we, &mut scratch);
+            }
+            match &st.plan {
+                Some(plan) => {
+                    // Eager assembly: fold every group whose last copy was
+                    // just written, then (fused) bank the pap contribution
+                    // of everything element e finalized.
+                    plan.fold_ready(e, w);
+                    if self.fused {
+                        pap += plan.pap_ready(e, w, u, &st.c);
+                    }
+                }
+                None if self.fused => {
+                    // Plan-less fallback: the layered fused reduction, in
+                    // the same linear dof order (bit-compatible with
+                    // `ax_layered_fused`).
+                    let we = &w[e * np..(e + 1) * np];
+                    let ce = &st.c[e * np..(e + 1) * np];
+                    let ue = &u[e * np..(e + 1) * np];
+                    let mut pap_e = 0.0;
+                    for ((wi, ci), ui) in we.iter().zip(ce).zip(ue) {
+                        pap_e += wi * ci * ui;
+                    }
+                    pap += pap_e;
+                }
+                None => {}
+            }
+        }
+        if let Some(plan) = &st.plan {
+            plan.apply_mask(w);
+        }
+        if self.fused {
+            // With a plan this is the *assembled* pap: exact for masked
+            // `u` (every CG iterate), since masked dofs contribute
+            // c*u*w = 0 either way.
+            self.last_pap = Some(pap);
+        }
+        Ok(())
+    }
+
+    fn flops(&self) -> u64 {
+        // The fold adds are O(surface) and were never counted for the
+        // standalone dssum either; Eq. (1) accounting stays comparable
+        // across the whole family.
+        self.st.as_ref().map_or(0, |s| {
+            if self.fused {
+                fused_ax_flops(s.n, s.nelt)
+            } else {
+                ax_flops(s.n, s.nelt)
+            }
+        })
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        // Assembled mode drops the separate pass's 2 x ndof re-stream of
+        // `w`; plan-less the operator really is the plain sweep and the
+        // solver's standalone pass still runs.
+        self.st.as_ref().map_or(0, |s| {
+            if s.plan.is_some() {
+                ax_bytes_moved_assembled(s.n, s.nelt, self.fused, S::STORED_BYTES)
+            } else {
+                ax_bytes_moved_stored(s.n, s.nelt, self.fused, S::STORED_BYTES)
+            }
+        })
+    }
+
+    fn is_fused(&self) -> bool {
+        self.fused
+    }
+
+    fn last_pap(&self) -> Option<f64> {
+        self.last_pap
+    }
+
+    fn applies_assembly(&self) -> bool {
+        self.st.as_ref().map_or(false, |s| s.plan.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::Basis;
+    use crate::geometry::GeomFactors;
+    use crate::gs::GatherScatter;
+    use crate::mesh::Mesh;
+    use crate::operators::ax_layered;
+    use crate::solver::{glsc3, mask_apply};
+
+    /// A real mesh problem plus its assembly plan — what the builder hands
+    /// the operator in production.
+    fn fixture(
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        n: usize,
+    ) -> (Mesh, Basis, GeomFactors, Vec<f64>, Vec<f64>, AssemblyPlan, GatherScatter) {
+        let mesh = Mesh::new(nx, ny, nz, n).unwrap();
+        let basis = Basis::new(n);
+        let geom = GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let c = mesh.inv_multiplicity();
+        let gs = GatherScatter::new(&mesh);
+        let plan = gs.assembly_plan(n * n * n, Some(&mask)).unwrap();
+        (mesh, basis, geom, mask, c, plan, gs)
+    }
+
+    fn ctx<'a>(
+        mesh: &Mesh,
+        basis: &'a Basis,
+        geom: &'a GeomFactors,
+        c: &'a [f64],
+        plan: Option<&'a AssemblyPlan>,
+    ) -> OperatorCtx<'a> {
+        OperatorCtx {
+            n: mesh.n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d: &basis.d,
+            g: &geom.g,
+            c,
+            assemble: plan,
+        }
+    }
+
+    #[test]
+    fn assembled_apply_is_bitwise_sweep_then_dssum_then_mask() {
+        let (mesh, basis, geom, mask, c, plan, mut gs) = fixture(2, 2, 1, 4);
+        let ndof = mesh.ndof_local();
+        let mut op = AsmOp::<f64>::new("cpu-asm", false);
+        op.setup(&ctx(&mesh, &basis, &geom, &c, Some(&plan))).unwrap();
+        assert!(op.applies_assembly());
+        let mut cases = crate::proputil::Cases::new(0xA7);
+        for _ in 0..6 {
+            let u = cases.vec_normal(ndof);
+            let mut want = vec![0.0; ndof];
+            ax_layered(mesh.n, mesh.nelt(), &u, &basis.d, &geom.g, &mut want);
+            gs.dssum(&mut want);
+            mask_apply(&mut want, &mask);
+            let mut got = vec![123.0; ndof];
+            op.apply(&u, &mut got).unwrap();
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "cpu-asm output must be bit-identical to layered + dssum + mask"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_assembled_pap_matches_assembled_glsc3_for_masked_input() {
+        let (mesh, basis, geom, mask, c, plan, _) = fixture(2, 1, 2, 4);
+        let ndof = mesh.ndof_local();
+        let mut op = AsmOp::<f64>::new("cpu-asm-fused", true);
+        op.setup(&ctx(&mesh, &basis, &geom, &c, Some(&plan))).unwrap();
+        let mut cases = crate::proputil::Cases::new(0xA8);
+        for _ in 0..6 {
+            let mut u = cases.vec_normal(ndof);
+            mask_apply(&mut u, &mask); // every CG iterate is masked
+            let mut w = vec![0.0; ndof];
+            op.apply(&u, &mut w).unwrap();
+            let pap = op.last_pap().unwrap();
+            let want = glsc3(&w, &c, &u);
+            assert!(
+                (pap - want).abs() <= 1e-12 * want.abs().max(1.0),
+                "{pap} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_less_fallback_is_plain_layered_and_does_not_claim_assembly() {
+        let (mesh, basis, geom, _, c, _, _) = fixture(2, 1, 1, 5);
+        let ndof = mesh.ndof_local();
+        let mut op = AsmOp::<f64>::new("cpu-asm", false);
+        op.setup(&ctx(&mesh, &basis, &geom, &c, None)).unwrap();
+        assert!(!op.applies_assembly());
+        let u: Vec<f64> = (0..ndof).map(|i| (i as f64 * 0.11).sin()).collect();
+        let mut want = vec![0.0; ndof];
+        ax_layered(mesh.n, mesh.nelt(), &u, &basis.d, &geom.g, &mut want);
+        let mut got = vec![0.0; ndof];
+        op.apply(&u, &mut got).unwrap();
+        assert_eq!(got, want, "without a plan cpu-asm is the layered sweep");
+    }
+
+    #[test]
+    fn bytes_moved_depends_on_mode() {
+        let (mesh, basis, geom, _, c, plan, _) = fixture(2, 1, 1, 4);
+        let (n, nelt) = (mesh.n, mesh.nelt());
+        let mut plain = AsmOp::<f64>::new("cpu-asm", false);
+        plain.setup(&ctx(&mesh, &basis, &geom, &c, None)).unwrap();
+        assert_eq!(plain.bytes_moved(), ax_bytes_moved_stored(n, nelt, false, 8));
+        let mut asm = AsmOp::<f64>::new("cpu-asm", false);
+        asm.setup(&ctx(&mesh, &basis, &geom, &c, Some(&plan))).unwrap();
+        assert_eq!(asm.bytes_moved(), ax_bytes_moved_assembled(n, nelt, false, 8));
+        assert!(asm.bytes_moved() < plain.bytes_moved());
+    }
+
+    #[test]
+    fn mismatched_plan_is_a_config_error() {
+        let (mesh, basis, geom, _, c, _, _) = fixture(2, 1, 1, 4);
+        let (_, _, _, _, _, other_plan, _) = fixture(2, 2, 2, 3);
+        let mut op = AsmOp::<f64>::new("cpu-asm", false);
+        let err = op.setup(&ctx(&mesh, &basis, &geom, &c, Some(&other_plan))).err().unwrap();
+        assert!(err.to_string().contains("assembly plan covers"), "{err}");
+    }
+
+    #[test]
+    fn f32_storage_assembles_within_reduced_band() {
+        let (mesh, basis, geom, mask, c, plan, mut gs) = fixture(2, 2, 1, 5);
+        let ndof = mesh.ndof_local();
+        let mut op = AsmOp::<f32>::new("cpu-asm-f32", false);
+        op.setup(&ctx(&mesh, &basis, &geom, &c, Some(&plan))).unwrap();
+        let u: Vec<f64> = (0..ndof).map(|i| (i as f64 * 0.29).cos()).collect();
+        let mut want = vec![0.0; ndof];
+        ax_layered(mesh.n, mesh.nelt(), &u, &basis.d, &geom.g, &mut want);
+        gs.dssum(&mut want);
+        mask_apply(&mut want, &mask);
+        let mut got = vec![0.0; ndof];
+        op.apply(&u, &mut got).unwrap();
+        let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+        for (idx, (a, b)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-5 * (b.abs() + scale);
+            assert!((a - b).abs() <= tol, "point {idx}: {a} vs {b} (tol {tol:e})");
+        }
+    }
+}

@@ -61,6 +61,7 @@
 //!   exact when the two weight vectors agree and the iterate `p` is zero on
 //!   masked dofs (true for every CG iterate).
 
+pub(crate) mod asm;
 pub(crate) mod fused;
 mod layered;
 mod naive;
@@ -108,22 +109,44 @@ pub fn fused_ax_flops(n: usize, nelt: usize) -> u64 {
     ax_flops(n, nelt) + 3 * (nelt as u64) * (n as u64).pow(3)
 }
 
-/// Minimum main-memory traffic of one local-Ax application in bytes,
-/// under stream accounting (each operand array is read or written once;
-/// `d` and the per-layer tiles are cache-resident), parameterized by the
-/// **storage width of the geometric factors**: the kernel streams `u`
-/// (1 read, always f64), the six geometric-factor arrays (6 reads at
+/// Minimum main-memory traffic of one **assembled** Ax application in
+/// bytes, under stream accounting (each operand array is read or written
+/// once; `d` and the per-layer tiles are cache-resident), parameterized
+/// by the **storage width of the geometric factors**: the kernel streams
+/// `u` (1 read, always f64), the six geometric-factor arrays (6 reads at
 /// `stored_bytes` each) and `w` (1 write, always f64), plus the fused `c`
-/// read (f64). At `stored_bytes = 8` this is the classic 8-stream (9
-/// fused) f64 accounting; at `stored_bytes = 4` six of the eight streams
-/// halve and per-point traffic drops 64 → 40 bytes (72 → 48 fused) —
-/// the mixed-precision bandwidth win the `-f32` operators claim. This is
-/// the denominator of the operator's arithmetic intensity in the measured
-/// roofline ([`crate::bench::roofline`]).
-pub fn ax_bytes_moved_stored(n: usize, nelt: usize, fused: bool, stored_bytes: u64) -> u64 {
+/// read (f64). This is what the `cpu-asm` family moves: assembly happens
+/// inside the sweep (the fold groups are O(surface) and cache-hot), so no
+/// separate pass over `w` remains. At `stored_bytes = 8` that is 64 bytes
+/// per point (72 fused); at `stored_bytes = 4` six streams halve, 40 (48
+/// fused).
+pub fn ax_bytes_moved_assembled(
+    n: usize,
+    nelt: usize,
+    fused: bool,
+    stored_bytes: u64,
+) -> u64 {
     // u read + w write (f64) + six g streams at the stored width + fused c.
     let per_point: u64 = 16 + 6 * stored_bytes + if fused { 8 } else { 0 };
     per_point * (nelt as u64) * (n as u64).pow(3)
+}
+
+/// Minimum main-memory traffic of one local-Ax application **plus the
+/// standalone dssum + mask pass the solver must then run** to assemble
+/// it: [`ax_bytes_moved_assembled`] plus one full re-read and re-write of
+/// `w` (16 bytes per point). This is the honest per-iteration cost of
+/// every operator that leaves assembly to the solver — 80 bytes per point
+/// unfused f64 (88 fused), 56 f32-storage (64 fused) — and the
+/// denominator of those operators' arithmetic intensity in the measured
+/// roofline ([`crate::bench::roofline`]). The `cpu-asm` family skips the
+/// extra pass and reports [`ax_bytes_moved_assembled`] instead; the
+/// pinned intensity ratios (80/64, 88/72, 56/40, 64/48) are what the
+/// roofline tests assert.
+pub fn ax_bytes_moved_stored(n: usize, nelt: usize, fused: bool, stored_bytes: u64) -> u64 {
+    // Kernel streams + the separate assembly pass re-streaming w
+    // (1 read + 1 write of every dof).
+    ax_bytes_moved_assembled(n, nelt, fused, stored_bytes)
+        + 16 * (nelt as u64) * (n as u64).pow(3)
 }
 
 /// [`ax_bytes_moved_stored`] at the historical all-f64 storage width
@@ -155,6 +178,13 @@ pub struct OperatorCtx<'a> {
     pub g: &'a [f64],
     /// Inverse multiplicity (inner-product weights), `nelt * n^3`.
     pub c: &'a [f64],
+    /// Ownership/fold plan for operators that perform dssum + mask inside
+    /// the sweep (the `cpu-asm` family). `None` for every other caller —
+    /// and for solves where in-sweep assembly would be wrong (`--no-comm`,
+    /// multi-rank bricks whose halo exchange needs raw pre-assembly
+    /// copies); assembly-capable operators then fall back to the plain
+    /// sweep. Operators that do not assemble ignore the field entirely.
+    pub assemble: Option<&'a crate::gs::AssemblyPlan>,
 }
 
 /// Validate the mesh-data shapes of an [`OperatorCtx`] at `setup`; fused
@@ -252,6 +282,18 @@ pub trait AxOperator: Send {
     /// `None` for unfused operators or before the first application.
     fn last_pap(&self) -> Option<f64> {
         None
+    }
+
+    /// Does `apply` also perform the domain assembly (dssum + mask) inside
+    /// its sweep? When `true`, the output of `apply` is already
+    /// `mask(dssum(A_local u))` and the solver must **skip** its
+    /// standalone exchange + mask (and, for fused operators, consume
+    /// [`AxOperator::last_pap`] as the assembled value with no shared-dof
+    /// correction). Only meaningful after `setup`: the `cpu-asm` family
+    /// answers `true` exactly when [`OperatorCtx::assemble`] supplied a
+    /// plan.
+    fn applies_assembly(&self) -> bool {
+        false
     }
 
     /// The PJRT runtime backing this operator, when there is one (lets the
@@ -352,6 +394,7 @@ mod tests {
             d,
             g,
             c: &c,
+            assemble: None,
         };
         let ops: Vec<Box<dyn AxOperator>> = reg
             .names()
@@ -359,7 +402,7 @@ mod tests {
             .filter(|name| !reg.resolve(name).unwrap().needs_artifacts)
             .map(|name| reg.build(name, &ctx).expect("cpu operator setup"))
             .collect();
-        assert!(ops.len() >= 17, "registry lost CPU operators ({} left)", ops.len());
+        assert!(ops.len() >= 21, "registry lost CPU operators ({} left)", ops.len());
         ops
     }
 
@@ -458,15 +501,42 @@ mod tests {
         assert_eq!(ax_flops(2, 3), (24 + 15) * 3 * 8);
         // Fused adds 3 flops (2 mul + 1 add) per grid point.
         assert_eq!(fused_ax_flops(10, 1), (120 + 15 + 3) * 1000);
-        // Stream accounting: 8 f64 streams per point, 9 fused.
-        assert_eq!(ax_bytes_moved(10, 1, false), 8 * 8 * 1000);
-        assert_eq!(ax_bytes_moved(10, 1, true), 8 * 9 * 1000);
+        // Assembled stream accounting: 8 f64 kernel streams per point,
+        // 9 fused — what the cpu-asm family moves.
+        assert_eq!(ax_bytes_moved_assembled(10, 1, false, 8), 8 * 8 * 1000);
+        assert_eq!(ax_bytes_moved_assembled(10, 1, true, 8), 8 * 9 * 1000);
+        // Every other operator additionally pays the standalone dssum+mask
+        // pass: +2 f64 streams of w, 80 bytes per point (88 fused).
+        assert_eq!(ax_bytes_moved(10, 1, false), 8 * 10 * 1000);
+        assert_eq!(ax_bytes_moved(10, 1, true), 8 * 11 * 1000);
         // The f64 wrapper is exactly the stored-width formula at 8 bytes.
         assert_eq!(ax_bytes_moved_stored(10, 1, false, 8), ax_bytes_moved(10, 1, false));
         assert_eq!(ax_bytes_moved_stored(10, 1, true, 8), ax_bytes_moved(10, 1, true));
-        // f32 factor storage: 6 of the 8 streams halve, 64 -> 40 bytes per
-        // point unfused (72 -> 48 fused).
-        assert_eq!(ax_bytes_moved_stored(10, 1, false, 4), 40 * 1000);
-        assert_eq!(ax_bytes_moved_stored(10, 1, true, 4), 48 * 1000);
+        // f32 factor storage: 6 of the kernel streams halve, 80 -> 56
+        // bytes per point unfused (88 -> 64 fused); assembled 40 (48).
+        assert_eq!(ax_bytes_moved_stored(10, 1, false, 4), 56 * 1000);
+        assert_eq!(ax_bytes_moved_stored(10, 1, true, 4), 64 * 1000);
+        assert_eq!(ax_bytes_moved_assembled(10, 1, false, 4), 40 * 1000);
+        assert_eq!(ax_bytes_moved_assembled(10, 1, true, 4), 48 * 1000);
+    }
+
+    #[test]
+    fn assembled_vs_stored_intensity_ratios_are_pinned() {
+        // The roofline claim of the cpu-asm family, as exact rationals:
+        // same flops, fewer bytes, so intensity rises by stored/assembled.
+        // f64: 80/64 = 1.25 unfused, 88/72 fused; f32 storage: 56/40 = 1.4
+        // unfused, 64/48 = 4/3 fused.
+        let (n, nelt) = (10, 3);
+        for (stored, fused, want) in [
+            (8u64, false, 80.0 / 64.0),
+            (8, true, 88.0 / 72.0),
+            (4, false, 56.0 / 40.0),
+            (4, true, 64.0 / 48.0),
+        ] {
+            let full = ax_bytes_moved_stored(n, nelt, fused, stored) as f64;
+            let asm = ax_bytes_moved_assembled(n, nelt, fused, stored) as f64;
+            assert_eq!(full / asm, want, "stored={stored} fused={fused}");
+            assert!(full / asm > 1.0);
+        }
     }
 }

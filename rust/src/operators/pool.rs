@@ -423,6 +423,7 @@ mod tests {
             d: &d,
             g: &g,
             c: &c,
+            assemble: None,
         })
         .unwrap();
         assert_eq!(op.nworkers(), 2, "workers spawn at setup");

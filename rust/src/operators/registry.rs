@@ -15,6 +15,7 @@ use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::geometry::{GeomScalar, Precision};
+use crate::operators::asm::AsmOp;
 use crate::operators::fused::FusedCpuOp;
 use crate::operators::pool::PooledOp;
 use crate::operators::{
@@ -91,6 +92,12 @@ pub struct OperatorSpec {
     pub needs_artifacts: bool,
     /// Accuracy contract vs the f64 reference (see [`PrecisionTier`]).
     pub tier: PrecisionTier,
+    /// Can the operator perform dssum + mask inside its sweep when given
+    /// an [`OperatorCtx::assemble`] plan (the `cpu-asm` family)? Such
+    /// operators report [`crate::operators::ax_bytes_moved_assembled`]
+    /// traffic in assembled mode; the conformance suite enforces the
+    /// `cpu-asm` naming contract both ways.
+    pub assembles: bool,
     ctor: OperatorCtor,
 }
 
@@ -110,6 +117,7 @@ impl std::fmt::Debug for OperatorSpec {
             .field("name", &self.name)
             .field("needs_artifacts", &self.needs_artifacts)
             .field("tier", &self.tier)
+            .field("assembles", &self.assembles)
             .finish_non_exhaustive()
     }
 }
@@ -206,6 +214,22 @@ impl OperatorRegistry {
         must(r.register_tiered("cpu-threaded-fused-f32", false, ReducedStorage, || {
             Box::new(PooledOp::new("cpu-threaded-fused-f32", true, Precision::F32))
         }));
+        // The assembly-fused family: the layered sweep with dssum + mask
+        // folded in (when the builder supplies an AssemblyPlan; plain
+        // layered otherwise). The f64 pair assembles bitwise identically
+        // to sweep-then-dssum, so it shares the Exact tier.
+        must(r.register_assembled("cpu-asm", false, Exact, || {
+            Box::new(AsmOp::<f64>::new("cpu-asm", false))
+        }));
+        must(r.register_assembled("cpu-asm-fused", false, Exact, || {
+            Box::new(AsmOp::<f64>::new("cpu-asm-fused", true))
+        }));
+        must(r.register_assembled("cpu-asm-f32", false, ReducedStorage, || {
+            Box::new(AsmOp::<f32>::new("cpu-asm-f32", false))
+        }));
+        must(r.register_assembled("cpu-asm-fused-f32", false, ReducedStorage, || {
+            Box::new(AsmOp::<f32>::new("cpu-asm-fused-f32", true))
+        }));
         for variant in ["jnp", "original", "shared", "layered", "layered_unroll2"] {
             must(r.register_tiered(&xla_name(variant), true, FmaBand, move || {
                 Box::new(XlaAxOp::new(variant))
@@ -244,6 +268,32 @@ impl OperatorRegistry {
         tier: PrecisionTier,
         ctor: impl Fn() -> Box<dyn AxOperator> + Send + Sync + 'static,
     ) -> Result<()> {
+        self.register_spec(name, needs_artifacts, tier, false, ctor)
+    }
+
+    /// [`OperatorRegistry::register_tiered`] for operators that perform
+    /// assembly inside their sweep when handed an
+    /// [`OperatorCtx::assemble`] plan. The conformance suite requires such
+    /// names to start with `cpu-asm` (and vice versa), mirroring the
+    /// `-f32`/ReducedStorage contract.
+    pub fn register_assembled(
+        &mut self,
+        name: &str,
+        needs_artifacts: bool,
+        tier: PrecisionTier,
+        ctor: impl Fn() -> Box<dyn AxOperator> + Send + Sync + 'static,
+    ) -> Result<()> {
+        self.register_spec(name, needs_artifacts, tier, true, ctor)
+    }
+
+    fn register_spec(
+        &mut self,
+        name: &str,
+        needs_artifacts: bool,
+        tier: PrecisionTier,
+        assembles: bool,
+        ctor: impl Fn() -> Box<dyn AxOperator> + Send + Sync + 'static,
+    ) -> Result<()> {
         if self.specs.contains_key(name) || self.aliases.contains_key(name) {
             return Err(Error::Config(format!(
                 "operator {name:?} is already registered (registered: {})",
@@ -252,7 +302,13 @@ impl OperatorRegistry {
         }
         self.specs.insert(
             name.to_string(),
-            OperatorSpec { name: name.to_string(), needs_artifacts, tier, ctor: Box::new(ctor) },
+            OperatorSpec {
+                name: name.to_string(),
+                needs_artifacts,
+                tier,
+                assembles,
+                ctor: Box::new(ctor),
+            },
         );
         Ok(())
     }
@@ -618,6 +674,7 @@ mod tests {
             d,
             g,
             c: &[],
+            assemble: None,
         }
     }
 
@@ -702,6 +759,10 @@ mod tests {
             "cpu-spec-fused-f32",
             "cpu-simd-fused-f32",
             "cpu-threaded-fused-f32",
+            "cpu-asm",
+            "cpu-asm-fused",
+            "cpu-asm-f32",
+            "cpu-asm-fused-f32",
             "xla-jnp",
             "xla-original",
             "xla-shared",
@@ -734,7 +795,15 @@ mod tests {
         }
         // The scalar ladder promises bitwise agreement with the layered
         // reference; everything simd/threaded/XLA sits in the FMA band.
-        for name in ["cpu-layered", "cpu-spec", "cpu-layered-fused", "cpu-spec-fused"] {
+        // The asm pair is scalar layered underneath, so it is Exact too.
+        for name in [
+            "cpu-layered",
+            "cpu-spec",
+            "cpu-layered-fused",
+            "cpu-spec-fused",
+            "cpu-asm",
+            "cpu-asm-fused",
+        ] {
             assert_eq!(r.resolve(name).unwrap().tier, PrecisionTier::Exact, "{name}");
         }
         for name in ["cpu-naive", "cpu-simd", "cpu-threaded", "xla-layered", "xla-fused-layered"]
@@ -748,6 +817,25 @@ mod tests {
         })
         .unwrap();
         assert_eq!(r.resolve("test-default-tier").unwrap().tier, PrecisionTier::FmaBand);
+        // … and to not assembling.
+        assert!(!r.resolve("test-default-tier").unwrap().assembles);
+    }
+
+    #[test]
+    fn assembles_flag_matches_naming_contract() {
+        // `assembles` and the `cpu-asm` name prefix imply each other for
+        // every builtin — the same both-ways contract the conformance
+        // coverage check enforces for third-party registrations.
+        let r = OperatorRegistry::with_builtins();
+        for name in r.names() {
+            let spec = r.resolve(&name).unwrap();
+            assert_eq!(
+                spec.assembles,
+                name.starts_with("cpu-asm"),
+                "{name}: assembles={} breaks the cpu-asm naming contract",
+                spec.assembles
+            );
+        }
     }
 
     #[test]
@@ -863,6 +951,9 @@ mod tests {
             assert_eq!(op.last_pap(), None, "{name}: no pap before first apply");
             let mut w = vec![0.0; nelt * np];
             op.apply(&u, &mut w).unwrap();
+            let pap = op
+                .last_pap()
+                .unwrap_or_else(|| panic!("{name}: fused apply must produce a pap"));
             if name.ends_with("-f32") {
                 // Reduced-storage band vs the f64 reference output …
                 let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);

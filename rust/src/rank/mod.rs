@@ -383,6 +383,16 @@ fn rank_main(
     let ndof = nelt_local * np;
     let d = crate::basis::derivative_matrix(n);
 
+    // Assembly fold plan for `cpu-asm*`: only when this rank's brick has
+    // no neighbor links — the exchange is then exactly the local dssum the
+    // plan folds, so in-operator assembly stays bitwise with the
+    // standalone pass. With neighbors the operators degrade to their
+    // plain layered sweep and [`BrickExchange`] keeps doing the assembly.
+    let plan = if cfg.no_comm || !domain.links.is_empty() {
+        None
+    } else {
+        Some(domain.gs.assembly_plan(np, (!cfg.no_mask).then_some(domain.mask.as_slice()))?)
+    };
     // Each rank owns its operator instance, set up on the brick's data.
     let ctx = OperatorCtx {
         n,
@@ -393,6 +403,7 @@ fn rank_main(
         d: &d,
         g: &domain.g,
         c: &domain.c,
+        assemble: plan.as_ref(),
     };
     let mut op = registry.build(operator, &ctx)?;
     // The operator cloned (or uploaded) what it needs from the brick's
@@ -845,6 +856,45 @@ mod tests {
             layered.final_residual,
             naive.final_residual
         );
+    }
+
+    #[test]
+    fn ranked_assembled_operator_is_bitwise_layered() {
+        // ISSUE 9 acceptance, ranked leg: `cpu-asm` must reproduce
+        // `cpu-layered` bitwise through the rank runtime. At ranks=1 the
+        // brick has no links, so the fold plan is built and assembly runs
+        // inside the sweep; at ranks=2 the operators degrade to the plain
+        // layered sweep (plan withheld) and BrickExchange assembles — both
+        // legs exercise the capability gate end to end.
+        let base = RunConfig {
+            nelt: 8,
+            n: 4,
+            niter: 20,
+            record_residuals: true,
+            ..Default::default()
+        };
+        for ranks in [1usize, 2] {
+            let cfg = RunConfig { ranks, ..base.clone() };
+            let layered = run_ranked_with(&cfg, "cpu-layered").unwrap();
+            let asm = run_ranked_with(&cfg, "cpu-asm").unwrap();
+            assert!(asm.backend.contains("cpu-asm"), "{}", asm.backend);
+            assert_eq!(asm.iterations, layered.iterations, "ranks={ranks}");
+            assert_eq!(asm.rnorms.len(), layered.rnorms.len(), "ranks={ranks}");
+            for (i, (a, l)) in asm.rnorms.iter().zip(&layered.rnorms).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    l.to_bits(),
+                    "ranks={ranks} rnorm[{i}]: {a} vs {l}"
+                );
+            }
+            assert_eq!(
+                asm.final_residual.to_bits(),
+                layered.final_residual.to_bits(),
+                "ranks={ranks}: {} vs {}",
+                asm.final_residual,
+                layered.final_residual
+            );
+        }
     }
 
     #[test]

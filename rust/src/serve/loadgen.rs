@@ -185,7 +185,8 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientTally> {
         ClientTally { ok: 0, overloaded: 0, errors: 0, latencies_ms: Vec::with_capacity(cfg.requests) };
     for req in 0..cfg.requests {
         let (n, nelt) = meshes[(client + req) % meshes.len()];
-        let rhs = Rng::new(0xC11E_4700 + (client * 1000 + req) as u64).normal_vec(nelt * n * n * n);
+        let seed = crate::rng::rhs_seed(0xC11E_4700 + client as u64, req as u64);
+        let rhs = Rng::new(seed).normal_vec(nelt * n * n * n);
         let id = (client * cfg.requests + req) as u64 + 1;
         let line = solve_line(id, &cfg.operator, n, nelt, cfg.niter, &rhs);
         let t0 = Instant::now();

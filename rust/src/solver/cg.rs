@@ -55,6 +55,16 @@ pub trait AxApply {
     fn fused_pap(&self) -> Option<f64> {
         None
     }
+
+    /// Does `apply` already return the **assembled** `w = mask(dssum(A_local p))`?
+    ///
+    /// When true the solver must skip its own exchange + mask pass, and a
+    /// fused implementation's `fused_pap` is the assembled local reduction
+    /// (no shared-dof correction is needed — only the cross-rank
+    /// allreduce). See [`crate::operators::AxOperator::applies_assembly`].
+    fn applies_assembly(&self) -> bool {
+        false
+    }
 }
 
 impl<F> AxApply for F
@@ -81,6 +91,10 @@ impl AxApply for OperatorAx<'_> {
 
     fn fused_pap(&self) -> Option<f64> {
         self.0.last_pap()
+    }
+
+    fn applies_assembly(&self) -> bool {
+        self.0.applies_assembly()
     }
 }
 
@@ -114,6 +128,10 @@ impl AxApply for TimedAx<'_> {
 
     fn fused_pap(&self) -> Option<f64> {
         self.op.last_pap()
+    }
+
+    fn applies_assembly(&self) -> bool {
+        self.op.applies_assembly()
     }
 }
 
@@ -414,7 +432,13 @@ pub fn cg_solve_with(
     // while the exchange's support is unchanged, so repeated solves
     // against one workspace allocate nothing.
     let fused = ax.is_fused();
+    // An assembly-fused operator already folds exchange + mask into its own
+    // sweep (see `AxApply::applies_assembly`): its fused pap is the
+    // assembled local reduction, so no shared-dof correction is built and
+    // the per-iteration exchange + mask below are skipped entirely.
+    let assembled = ax.applies_assembly();
     if fused
+        && !assembled
         && !ws.pap.as_ref().is_some_and(|prev| prev.covers(exchange.shared_dofs()))
     {
         ws.pap = Some(exchange.pap_correction());
@@ -422,7 +446,7 @@ pub fn cg_solve_with(
     let (r, z, p, w) = (&mut ws.r, &mut ws.z, &mut ws.p, &mut ws.w);
     let cheb_scratch = &mut ws.cheb;
     let reduce = &mut ws.reduce;
-    let mut correction = if fused { ws.pap.as_mut() } else { None };
+    let mut correction = if fused && !assembled { ws.pap.as_mut() } else { None };
 
     rzero(x);
     copy(r, f);
@@ -483,28 +507,35 @@ pub fn cg_solve_with(
         vectors.add2s1(p, z, beta)?;
 
         ax.apply(p, w)?;
-        let pap_fused = if let Some(corr) = correction.as_deref_mut() {
+        let pap_fused = if fused {
             let local = ax.fused_pap().ok_or_else(|| {
                 Error::Numerical("fused operator did not produce a pap value".into())
             })?;
-            corr.snapshot(w);
+            if let Some(corr) = correction.as_deref_mut() {
+                corr.snapshot(w);
+            }
             Some(local)
         } else {
             None
         };
-        exchange.exchange(w)?;
-        if let Some(m) = mask {
-            mask_apply(w, m);
+        if !assembled {
+            exchange.exchange(w)?;
+            if let Some(m) = mask {
+                mask_apply(w, m);
+            }
         }
 
         // The fused path's operator-side pap is a single flat fold by
         // construction, so it stays on the plain allreduce (fused ranked
         // runs are tolerance-checked, not bitwise); the unfused path goes
-        // through the reduction plan like every other dot product.
+        // through the reduction plan like every other dot product. An
+        // assembly-fused operator's pap is already the assembled local
+        // value — no correction to patch, just the cross-rank allreduce.
         let pap = match (pap_fused, correction.as_deref()) {
             (Some(local), Some(corr)) => {
                 comm.allreduce_sum(corr.patch(local, w, c, p))?
             }
+            (Some(local), None) => comm.allreduce_sum(local)?,
             _ => {
                 glsc3_sweeps += 1;
                 reduce_dot(vectors, comm, reduce, w, c, p)?
@@ -733,6 +764,7 @@ mod tests {
                     d: &basis.d,
                     g: &geom.g,
                     c: &cw,
+                    assemble: None,
                 },
             )
             .unwrap();
@@ -805,6 +837,7 @@ mod tests {
             d: &basis.d,
             g: &geom.g,
             c: &cw,
+            assemble: None,
         };
 
         let mut solve = |name: &str| {
@@ -842,7 +875,7 @@ mod tests {
                 !spec.needs_artifacts && spec.create().is_fused()
             })
             .collect();
-        assert!(fused_names.len() >= 8, "registry lost fused CPU operators: {fused_names:?}");
+        assert!(fused_names.len() >= 10, "registry lost fused CPU operators: {fused_names:?}");
         for fused_name in &fused_names {
             let (rep_b, x_b) = if fused_name.ends_with("-f32") {
                 (&rep_u32, &x_u32)
@@ -867,6 +900,81 @@ mod tests {
                 rep_f.final_rnorm,
                 rep_b.final_rnorm
             );
+        }
+    }
+
+    #[test]
+    fn assembled_operator_trajectory_is_bitwise_layered() {
+        // The assembly-fused contract (ISSUE 9 acceptance): `cpu-asm` with
+        // its fold plan must reproduce `cpu-layered` + dssum + mask
+        // **bitwise** — same iteration count, every recorded rnorm equal
+        // to the bit, same final residual, same solution vector — while
+        // the solver performs zero standalone exchange/mask passes.
+        use crate::operators::{OperatorCtx, OperatorRegistry};
+        let n = 5;
+        let mesh = crate::mesh::Mesh::new(2, 2, 2, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(41).normal_vec(ndof);
+        {
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            gs.dssum(&mut f);
+        }
+        crate::solver::mask_apply(&mut f, &mask);
+        let opts = CgOptions { niter: 30, rtol: None, record_residuals: true };
+        let registry = OperatorRegistry::with_builtins();
+        let gs_plan = crate::gs::GatherScatter::new(&mesh);
+        let plan = gs_plan.assembly_plan(n * n * n, Some(&mask)).unwrap();
+        // One ctx for both builds: non-assembling operators ignore the
+        // plan, `cpu-asm` captures it and claims assembly.
+        let ctx = OperatorCtx {
+            n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d: &basis.d,
+            g: &geom.g,
+            c: &cw,
+            assemble: Some(&plan),
+        };
+        let mut solve = |name: &str| {
+            let mut op = registry.build(name, &ctx).unwrap();
+            if name == "cpu-asm" {
+                assert!(op.applies_assembly(), "cpu-asm with a plan must claim assembly");
+            }
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            let mut x = vec![0.0; ndof];
+            let mut ws = CgWorkspace::new(ndof);
+            let rep = cg_solve_op(
+                op.as_mut(),
+                &mut gs,
+                &mut NullComm,
+                Some(&mask),
+                &cw,
+                &f,
+                &mut x,
+                &opts,
+                &mut ws,
+            )
+            .unwrap();
+            (rep, x)
+        };
+        let (rep_l, x_l) = solve("cpu-layered");
+        let (rep_a, x_a) = solve("cpu-asm");
+        assert_eq!(rep_a.iterations, rep_l.iterations);
+        assert_eq!(rep_a.glsc3_sweeps, rep_l.glsc3_sweeps);
+        assert_eq!(rep_a.rnorms.len(), rep_l.rnorms.len());
+        for (i, (a, l)) in rep_a.rnorms.iter().zip(&rep_l.rnorms).enumerate() {
+            assert_eq!(a.to_bits(), l.to_bits(), "rnorm[{i}]: {a} vs {l}");
+        }
+        assert_eq!(rep_a.final_rnorm.to_bits(), rep_l.final_rnorm.to_bits());
+        assert_eq!(rep_a.rtz1.to_bits(), rep_l.rtz1.to_bits());
+        for (i, (a, l)) in x_a.iter().zip(&x_l).enumerate() {
+            assert_eq!(a.to_bits(), l.to_bits(), "x[{i}]: {a} vs {l}");
         }
     }
 
@@ -896,6 +1004,7 @@ mod tests {
             d: &basis.d,
             g: &geom.g,
             c: &cw,
+            assemble: None,
         };
         let mut solve = |name: &str| {
             let mut op = registry.build(name, &ctx).unwrap();
@@ -951,6 +1060,7 @@ mod tests {
             d: &basis.d,
             g: &geom.g,
             c: &cw,
+            assemble: None,
         };
         let mut op = registry.build("cpu-layered-fused", &ctx).unwrap();
         let mut gs = crate::gs::GatherScatter::new(&mesh);

@@ -273,11 +273,17 @@ impl Chebyshev {
             *zi = *di;
         }
         s.rk.copy_from_slice(r);
+        // An assembly-fused operator (see `AxApply::applies_assembly`)
+        // already returns mask(dssum(·)); the recurrence must not fold or
+        // mask a second time.
+        let assembled = ax.applies_assembly();
         for _ in 1..self.order {
             ax.apply(&s.d, &mut s.t)?;
-            exchange.exchange(&mut s.t)?;
-            if let Some(m) = mask {
-                mask_apply(&mut s.t, m);
+            if !assembled {
+                exchange.exchange(&mut s.t)?;
+                if let Some(m) = mask {
+                    mask_apply(&mut s.t, m);
+                }
             }
             for (rki, ti) in s.rk.iter_mut().zip(&s.t) {
                 *rki -= ti;

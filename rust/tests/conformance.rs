@@ -31,12 +31,15 @@ use std::collections::BTreeSet;
 use nekbone::config::RunConfig;
 use nekbone::coordinator::Nekbone;
 use nekbone::operators::{
-    ax_bytes_moved, ax_bytes_moved_stored, ax_flops, ax_layered, ax_naive, fused_ax_flops,
-    OperatorCtx, OperatorRegistry, PrecisionTier,
+    ax_bytes_moved, ax_bytes_moved_assembled, ax_bytes_moved_stored, ax_flops, ax_layered,
+    ax_layered_store, ax_naive, fused_ax_flops, OperatorCtx, OperatorRegistry, PrecisionTier,
 };
 use nekbone::proputil::{assert_allclose, assert_pap_close};
 use nekbone::rng::Rng;
 use nekbone::solver::glsc3;
+
+mod util;
+use crate::util::{assert_within_band, inputs, REDUCED_BAND};
 
 fn artifacts_dir() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
@@ -77,47 +80,8 @@ fn for_every_operator(mut check: impl FnMut(&OperatorRegistry, &str)) {
     assert!(!tested.is_empty(), "conformance suite exercised no operator at all");
 }
 
-/// Deterministic inputs for one (n, nelt) case; `c` strictly positive as
-/// the inner-product weights are in a real solve.
-fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
-    let mut rng = Rng::new(seed);
-    let np = n * n * n;
-    let u = rng.normal_vec(nelt * np);
-    let d = nekbone::basis::derivative_matrix(n);
-    let g = rng.normal_vec(nelt * 6 * np);
-    let c: Vec<f64> = (0..nelt * np).map(|_| rng.range(0.1, 1.0)).collect();
-    (u, d, g, c)
-}
-
 fn ctx<'a>(n: usize, nelt: usize, d: &'a [f64], g: &'a [f64], c: &'a [f64]) -> OperatorCtx<'a> {
-    OperatorCtx {
-        n,
-        nelt,
-        chunk: nelt,
-        threads: 0,
-        artifacts_dir: artifacts_dir(),
-        d,
-        g,
-        c,
-    }
-}
-
-/// The reduced-storage agreement band: rounding the six geometric factors
-/// to f32 perturbs each of the ~12n products feeding a point by at most
-/// one ulp(f32) relatively, so the result sits within a few `1e-7 · scale`
-/// of the f64 value; `1e-5` leaves ~10× headroom at n = 12 while still
-/// catching any double-rounding or f32 *accumulation* bug by orders of
-/// magnitude.
-fn assert_within_reduced_band(got: &[f64], want: &[f64], name: &str) {
-    assert_eq!(got.len(), want.len(), "{name}: length mismatch");
-    let scale = want.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
-    for (i, (&gi, &wi)) in got.iter().zip(want).enumerate() {
-        let tol = 1e-5 * (wi.abs() + scale);
-        assert!(
-            (gi - wi).abs() <= tol,
-            "{name}[{i}]: {gi} vs {wi} exceeds the reduced-storage band {tol:e}"
-        );
-    }
+    util::ctx(n, nelt, 0, artifacts_dir(), d, g, c)
 }
 
 #[test]
@@ -152,7 +116,7 @@ fn every_operator_agrees_at_its_declared_tier() {
                 }
                 PrecisionTier::FmaBand => assert_allclose(&w, &want, 1e-11, 1e-11),
                 PrecisionTier::ReducedStorage => {
-                    assert_within_reduced_band(&w, &want, name)
+                    assert_within_band(&w, &want, REDUCED_BAND, name)
                 }
             }
         });
@@ -369,4 +333,116 @@ fn coverage_cannot_be_dodged_by_an_artifact_free_operator() {
         seen.iter().any(|n| n.starts_with("cpu-")),
         "artifact-free operators must always be exercised"
     );
+}
+
+#[test]
+fn assembling_operators_fold_dssum_and_mask_bitwise() {
+    // The assembly-fused family's registry contract, policed over the
+    // *whole* registry (metadata) and exercised on every assembling
+    // operator (behavior):
+    //
+    // * `assembles` is claimable exactly by the `cpu-asm*` names — a
+    //   future registration can neither dodge this suite nor trick the
+    //   solver into skipping a dssum it still needs;
+    // * built with a real-mesh fold plan, each one claims
+    //   `applies_assembly()` and reproduces mask(dssum(sweep(u))) —
+    //   **bitwise** against the f64 pipeline at the Exact tier, bitwise
+    //   against the f32-stored pipeline (and within the reduced band of
+    //   the f64 one) at ReducedStorage;
+    // * the fused pair reports the already-assembled pap for masked `u`
+    //   (every CG iterate is masked);
+    // * `bytes_moved()` switches to the assembled stream count — the
+    //   separate pass's 2 × ndof re-stream of `w` is gone.
+    let n = 4usize;
+    let mesh = nekbone::mesh::Mesh::new(2, 2, 1, n).unwrap();
+    let basis = nekbone::basis::Basis::new(n);
+    let geom = nekbone::geometry::GeomFactors::affine(&mesh, &basis);
+    let mask = mesh.boundary_mask();
+    let cw = mesh.inv_multiplicity();
+    let ndof = mesh.ndof_local();
+    let mut gs = nekbone::gs::GatherScatter::new(&mesh);
+    let plan = gs.assembly_plan(n * n * n, Some(&mask)).unwrap();
+    let mut u = Rng::new(0xA5E4B).normal_vec(ndof);
+    nekbone::solver::mask_apply(&mut u, &mask);
+
+    // The two pipeline references: the f64 sweep and the f32-stored sweep
+    // (factors rounded once), each followed by the standalone dssum + mask
+    // the asm family folds away.
+    let mut want = vec![0.0; ndof];
+    ax_layered(n, mesh.nelt(), &u, &basis.d, &geom.g, &mut want);
+    gs.dssum(&mut want);
+    nekbone::solver::mask_apply(&mut want, &mask);
+    let g32: Vec<f32> = geom.g.iter().map(|&x| x as f32).collect();
+    let mut want32 = vec![0.0; ndof];
+    ax_layered_store(n, mesh.nelt(), &u, &basis.d, &g32, &mut want32);
+    gs.dssum(&mut want32);
+    nekbone::solver::mask_apply(&mut want32, &mask);
+
+    let cx = OperatorCtx {
+        n,
+        nelt: mesh.nelt(),
+        chunk: mesh.nelt(),
+        threads: 0,
+        artifacts_dir: artifacts_dir(),
+        d: &basis.d,
+        g: &geom.g,
+        c: &cw,
+        assemble: Some(&plan),
+    };
+    let registry = OperatorRegistry::default();
+    let mut checked = 0;
+    for name in registry.names() {
+        let spec = registry.resolve(&name).unwrap();
+        assert_eq!(
+            spec.assembles,
+            name.starts_with("cpu-asm"),
+            "{name}: `assembles` metadata must follow the cpu-asm naming contract"
+        );
+        if !spec.assembles {
+            continue;
+        }
+        let mut op = registry.build(&name, &cx).unwrap();
+        assert!(op.applies_assembly(), "{name}: built with a plan, must claim assembly");
+        let mut w = vec![123.0; ndof]; // poisoned
+        op.apply(&u, &mut w).unwrap();
+        match spec.tier {
+            PrecisionTier::ReducedStorage => {
+                for (i, (&gi, &wi)) in w.iter().zip(&want32).enumerate() {
+                    assert_eq!(
+                        gi.to_bits(),
+                        wi.to_bits(),
+                        "{name}[{i}]: must be bitwise the f32-stored sweep+dssum+mask"
+                    );
+                }
+                assert_within_band(&w, &want, REDUCED_BAND, &name);
+            }
+            tier => {
+                assert_eq!(tier, PrecisionTier::Exact, "{name}: f64 asm operators are Exact");
+                for (i, (&gi, &wi)) in w.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        gi.to_bits(),
+                        wi.to_bits(),
+                        "{name}[{i}]: must be bitwise layered+dssum+mask ({gi} vs {wi})"
+                    );
+                }
+            }
+        }
+        if op.is_fused() {
+            let pap = op.last_pap().unwrap_or_else(|| {
+                panic!("{name}: fused apply must produce a pap")
+            });
+            let want_pap = glsc3(&w, &cw, &u);
+            assert_pap_close(pap, want_pap, &w, &cw, &u, 1e-12, &name);
+        } else {
+            assert_eq!(op.last_pap(), None, "{name}: unfused asm never reports a pap");
+        }
+        let stored = if spec.tier == PrecisionTier::ReducedStorage { 4 } else { 8 };
+        assert_eq!(
+            op.bytes_moved(),
+            ax_bytes_moved_assembled(n, mesh.nelt(), op.is_fused(), stored),
+            "{name}: assembled mode must drop the separate-pass w re-stream"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 4, "registry lost the cpu-asm family (checked only {checked})");
 }

@@ -267,7 +267,7 @@ fn session_solve_batch_matches_independent_solves() {
     let mut app_session = app("cpu-threaded-fused", run_cfg.clone());
     let ndof = app_session.mesh().ndof_local();
     let rhss: Vec<Vec<f64>> = (0..3)
-        .map(|i| nekbone::rng::Rng::new(100 + i as u64).normal_vec(ndof))
+        .map(|i| nekbone::rng::Rng::new(nekbone::rng::rhs_seed(100, i as u64)).normal_vec(ndof))
         .collect();
 
     let mut session = app_session.session();

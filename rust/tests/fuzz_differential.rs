@@ -1,0 +1,241 @@
+//! Differential-fuzz conformance tier: a seeded xorshift case generator
+//! drives **every artifact-free registry operator pair** through single
+//! applies and full CG solves, asserting agreement at the pair's *joint*
+//! precision-tier band (see `util::joint_band` / `util::joint_cg_tol`).
+//!
+//! The corpus is deterministic: case `i` is drawn entirely from
+//! `rhs_seed(MASTER_SEED, i)` through an xorshift64* stream, so every
+//! failure message prints the case index, seed, and full configuration —
+//! rerunning the suite reproduces it exactly, and
+//! `NEKBONE_FUZZ_CASES=<k>` replays just the first `k` cases (or widens
+//! the sweep beyond the default).
+//!
+//! Two arms, both sized by `NEKBONE_FUZZ_CASES` (default
+//! [`DEFAULT_CASES`], comfortably over the 200-case floor):
+//!
+//! * **single applies** — synthetic inputs (no mesh, so no assembly
+//!   plan: `cpu-asm*` run their layered fallback), degrees 2..=12, every
+//!   pair compared per case;
+//! * **full CG** — real mesh/dssum/mask solves through the coordinator
+//!   builder, cycling deterministically through the pair list so the
+//!   default budget covers every pair at least once. Degrees and element
+//!   counts are kept large enough that CG stays far from convergence
+//!   within the drawn iteration budget — near-converged residuals would
+//!   amplify benign rounding differences past any honest band.
+
+mod util;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Nekbone;
+use nekbone::operators::{OperatorRegistry, PrecisionTier};
+use nekbone::rng::rhs_seed;
+
+/// Master stream for the corpus; case `i` seeds from `rhs_seed(MASTER_SEED, i)`.
+const MASTER_SEED: u64 = 0xF0221;
+
+/// Default corpus size per arm: one full cycle of the 210 operator pairs
+/// plus slack, and over the 200-case acceptance floor.
+const DEFAULT_CASES: usize = 216;
+
+fn case_budget() -> usize {
+    std::env::var("NEKBONE_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_CASES)
+}
+
+/// xorshift64* — deliberately independent of the crate's own RNG so a
+/// library-side reseed or refactor never silently shifts the fuzz corpus.
+struct XorShift(u64);
+
+impl XorShift {
+    fn new(seed: u64) -> Self {
+        XorShift(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// One generated configuration. The apply arm may use the full degree
+/// range; the CG arm draws from well-posed ranges (enough interior dofs
+/// that the drawn iteration budget never approaches convergence).
+#[derive(Debug)]
+struct Case {
+    index: u64,
+    seed: u64,
+    apply_n: usize,
+    apply_nelt: usize,
+    cg_n: usize,
+    cg_nelt: usize,
+    niter: usize,
+    threads: usize,
+    precond: &'static str,
+    cheb_order: usize,
+    decomp: &'static str,
+}
+
+impl Case {
+    fn draw(index: u64) -> Case {
+        let seed = rhs_seed(MASTER_SEED, index);
+        let mut x = XorShift::new(seed);
+        Case {
+            index,
+            seed,
+            apply_n: 2 + x.below(11), // 2..=12: every monomorphized degree
+            apply_nelt: *x.pick(&[1usize, 2, 3, 4, 6]),
+            cg_n: *x.pick(&[4usize, 5, 6]),
+            cg_nelt: *x.pick(&[4usize, 6, 8]),
+            niter: 4 + x.below(4), // 4..=7 << interior dof count
+            threads: x.below(4),
+            precond: *x.pick(&["none", "jacobi", "cheb"]),
+            cheb_order: 2 + x.below(3), // 2..=4
+            decomp: *x.pick(&["slab", "pencil", "box"]),
+        }
+    }
+}
+
+impl std::fmt::Display for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "case {} (seed {:#x}, apply n={} nelt={}, cg n={} nelt={} niter={} \
+             precond={} cheb_order={} decomp={}, threads={})",
+            self.index,
+            self.seed,
+            self.apply_n,
+            self.apply_nelt,
+            self.cg_n,
+            self.cg_nelt,
+            self.niter,
+            self.precond,
+            self.cheb_order,
+            self.decomp,
+            self.threads,
+        )
+    }
+}
+
+/// Every artifact-free operator, sorted — the registry's iteration order
+/// is not deterministic, and the CG arm indexes pairs by case number.
+fn fuzzable_names(registry: &OperatorRegistry) -> Vec<String> {
+    let mut names: Vec<String> = registry
+        .names()
+        .into_iter()
+        .filter(|n| !registry.resolve(n).unwrap().needs_artifacts)
+        .collect();
+    names.sort();
+    assert!(names.len() >= 21, "artifact-free registry shrank: {names:?}");
+    names
+}
+
+fn tier(registry: &OperatorRegistry, name: &str) -> PrecisionTier {
+    registry.resolve(name).unwrap().tier
+}
+
+#[test]
+fn fuzz_single_applies_agree_for_every_pair_at_the_joint_band() {
+    let registry = OperatorRegistry::with_builtins();
+    let names = fuzzable_names(&registry);
+    for i in 0..case_budget() as u64 {
+        let case = Case::draw(i);
+        let (n, nelt) = (case.apply_n, case.apply_nelt);
+        let np = n * n * n;
+        let (u, d, g, c) = util::inputs(case.seed ^ 0xA11, n, nelt);
+        let cx = util::ctx(n, nelt, case.threads, "artifacts", &d, &g, &c);
+        let outs: Vec<(&str, PrecisionTier, Vec<f64>)> = names
+            .iter()
+            .map(|name| {
+                let mut op = registry
+                    .build(name, &cx)
+                    .unwrap_or_else(|e| panic!("{case}: build {name}: {e}"));
+                let mut w = vec![123.0; nelt * np]; // poisoned
+                op.apply(&u, &mut w).unwrap_or_else(|e| panic!("{case}: apply {name}: {e}"));
+                (name.as_str(), tier(&registry, name), w)
+            })
+            .collect();
+        for a in 0..outs.len() {
+            for b in (a + 1)..outs.len() {
+                let band = util::joint_band(outs[a].1, outs[b].1);
+                util::assert_agree_at(
+                    &outs[b].2,
+                    &outs[a].2,
+                    band,
+                    &format!("{case}: {} vs {}", outs[b].0, outs[a].0),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_full_cg_agrees_across_the_pair_cycle() {
+    let registry = OperatorRegistry::with_builtins();
+    let names = fuzzable_names(&registry);
+    let mut pairs = Vec::new();
+    for a in 0..names.len() {
+        for b in (a + 1)..names.len() {
+            pairs.push((names[a].clone(), names[b].clone()));
+        }
+    }
+    for i in 0..case_budget() as u64 {
+        let case = Case::draw(i);
+        let (a, b) = &pairs[i as usize % pairs.len()];
+        let cfg = RunConfig {
+            nelt: case.cg_nelt,
+            n: case.cg_n,
+            niter: case.niter,
+            seed: case.seed,
+            cpu_threads: case.threads,
+            precond: case.precond.to_string(),
+            cheb_order: case.cheb_order,
+            decomp: case.decomp.to_string(),
+            ..RunConfig::default()
+        };
+        let run = |name: &str| {
+            let mut app = Nekbone::builder(cfg.clone())
+                .operator(name)
+                .build()
+                .unwrap_or_else(|e| panic!("{case}: build {name}: {e}"));
+            let mut x = vec![0.0; cfg.ndof()];
+            let rep = app
+                .run_into(Some(&mut x))
+                .unwrap_or_else(|e| panic!("{case}: run {name}: {e}"));
+            (rep, x)
+        };
+        let (rep_a, x_a) = run(a);
+        let (rep_b, x_b) = run(b);
+        let what = format!("{case}: {b} vs {a}");
+        assert!(
+            rep_a.final_residual.is_finite() && rep_b.final_residual.is_finite(),
+            "{what}: non-finite residual ({} vs {})",
+            rep_b.final_residual,
+            rep_a.final_residual
+        );
+        assert_eq!(rep_b.iterations, rep_a.iterations, "{what}: iteration count");
+        let tol = util::joint_cg_tol(tier(&registry, a), tier(&registry, b));
+        let denom = rep_a.final_residual.abs().max(1e-30);
+        assert!(
+            (rep_b.final_residual - rep_a.final_residual).abs() / denom <= tol,
+            "{what}: final residual {} vs {} (tol {tol:e})",
+            rep_b.final_residual,
+            rep_a.final_residual
+        );
+        util::assert_within_band(&x_b, &x_a, tol, &what);
+    }
+}

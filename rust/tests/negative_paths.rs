@@ -1,0 +1,321 @@
+//! Table-driven negative-path coverage of the crate's `Error::Config`
+//! surfaces: every rejection a user can trigger from the public API must
+//! be a *structured* Config error whose message names the offending knob
+//! and its limit — never a panic, never a silent fallback. Each table row
+//! is one documented rejection; the suite fails if the message drifts
+//! away from naming the problem.
+
+mod util;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Nekbone;
+use nekbone::error::Error;
+use nekbone::operators::OperatorRegistry;
+
+/// Assert `res` is an `Error::Config` whose message contains `needle`.
+fn expect_config(res: Result<(), Error>, needle: &str, what: &str) {
+    match res {
+        Ok(()) => panic!("{what}: expected a Config error containing {needle:?}, got Ok"),
+        Err(Error::Config(msg)) => assert!(
+            msg.contains(needle),
+            "{what}: Config message {msg:?} does not contain {needle:?}"
+        ),
+        Err(other) => panic!("{what}: expected Error::Config, got {other:?}"),
+    }
+}
+
+#[test]
+fn run_config_validation_names_each_bad_knob() {
+    let table: &[(&str, fn(&mut RunConfig), &str)] = &[
+        ("zero nelt", |c| c.nelt = 0, "nelt must be positive"),
+        ("degree too low", |c| c.n = 1, "n must be >= 2"),
+        ("zero niter", |c| c.niter = 0, "niter must be positive"),
+        ("zero chunk", |c| c.chunk = 0, "chunk must be positive"),
+        ("zero ranks", |c| c.ranks = 0, "ranks must be positive"),
+        (
+            "ranks above nelt",
+            |c| {
+                c.nelt = 4;
+                c.ranks = 8;
+            },
+            "cannot exceed nelt",
+        ),
+        ("negative rtol", |c| c.rtol = Some(-1.0), "rtol must be positive"),
+        ("nan rtol", |c| c.rtol = Some(f64::NAN), "rtol must be positive"),
+        (
+            "unknown precond",
+            |c| c.precond = "ilu".into(),
+            "precond must be none|jacobi|cheb",
+        ),
+        (
+            "zero cheb order",
+            |c| {
+                c.precond = "cheb".into();
+                c.cheb_order = 0;
+            },
+            "cheb-order must be >= 1",
+        ),
+        (
+            "unknown decomp",
+            |c| c.decomp = "spiral".into(),
+            "decomp must be slab|pencil|box",
+        ),
+    ];
+    for (what, mutate, needle) in table {
+        let mut cfg = RunConfig::default();
+        mutate(&mut cfg);
+        expect_config(cfg.validate(), needle, what);
+        // The builder front door must surface the same rejection — a bad
+        // knob can never reach mesh construction.
+        expect_config(
+            Nekbone::builder(cfg).operator("cpu-layered").build().map(|_| ()),
+            needle,
+            &format!("builder: {what}"),
+        );
+    }
+    assert!(RunConfig::default().validate().is_ok(), "the default config must be valid");
+}
+
+#[test]
+fn operator_setup_and_apply_reject_missized_mesh_data() {
+    let registry = OperatorRegistry::with_builtins();
+    let (n, nelt) = (4usize, 3usize);
+    let ndof = nelt * n * n * n;
+    let (u, d, g, c) = util::inputs(0xBAD0, n, nelt);
+    let table: &[(&str, &[f64], &[f64], &[f64], &str)] = &[
+        ("short d", &d[..n * n - 1], &g, &c, "d must be n*n"),
+        ("short g", &d, &g[..g.len() - 1], &c, "g must be nelt*6*n^3"),
+    ];
+    for (what, dd, gg, cc, needle) in table {
+        let cx = util::ctx(n, nelt, 0, "artifacts", dd, gg, cc);
+        expect_config(registry.build("cpu-layered", &cx).map(|_| ()), needle, what);
+        // The same shape contract holds for the assembly-capable family.
+        expect_config(registry.build("cpu-asm", &cx).map(|_| ()), needle, what);
+    }
+    // Fused operators additionally require the inner-product weights.
+    let cx = util::ctx(n, nelt, 0, "artifacts", &d, &g, &c[..c.len() - 1]);
+    expect_config(
+        registry.build("cpu-layered-fused", &cx).map(|_| ()),
+        "inner-product weights",
+        "fused short c",
+    );
+    // Unfused operators must not demand c…
+    let cx_no_c = util::ctx(n, nelt, 0, "artifacts", &d, &g, &c[..0]);
+    assert!(registry.build("cpu-layered", &cx_no_c).is_ok(), "unfused must not require c");
+    // …and apply checks the field lengths.
+    let cx_ok = util::ctx(n, nelt, 0, "artifacts", &d, &g, &c);
+    let mut op = registry.build("cpu-layered", &cx_ok).unwrap();
+    let mut w = vec![0.0; ndof];
+    expect_config(op.apply(&u[..ndof - 1], &mut w), "must be nelt*n^3", "short u");
+    // A blank operator names itself when used before setup.
+    let mut blank = registry.create("cpu-asm-fused").unwrap();
+    expect_config(blank.apply(&u, &mut w), "used before setup", "apply before setup");
+}
+
+#[test]
+fn mismatched_assembly_plan_is_rejected_at_setup() {
+    // A fold plan sized for a different problem must be a structured
+    // rejection naming both dof counts — not a silent fallback that would
+    // let the solver skip a dssum the operator never performed.
+    let registry = OperatorRegistry::with_builtins();
+    let n = 4usize;
+    let mesh = nekbone::mesh::Mesh::new(2, 2, 1, n).unwrap();
+    let basis = nekbone::basis::Basis::new(n);
+    let geom = nekbone::geometry::GeomFactors::affine(&mesh, &basis);
+    let cw = mesh.inv_multiplicity();
+    let other = nekbone::mesh::Mesh::new(2, 2, 2, 3).unwrap();
+    let other_plan =
+        nekbone::gs::GatherScatter::new(&other).assembly_plan(27, None).unwrap();
+    let cx = nekbone::operators::OperatorCtx {
+        n,
+        nelt: mesh.nelt(),
+        chunk: mesh.nelt(),
+        threads: 0,
+        artifacts_dir: "artifacts",
+        d: &basis.d,
+        g: &geom.g,
+        c: &cw,
+        assemble: Some(&other_plan),
+    };
+    for name in ["cpu-asm", "cpu-asm-fused", "cpu-asm-f32", "cpu-asm-fused-f32"] {
+        expect_config(
+            registry.build(name, &cx).map(|_| ()),
+            "assembly plan covers",
+            name,
+        );
+    }
+}
+
+#[test]
+fn ranked_path_rejects_oversplit_axes_and_tag_overflow() {
+    use nekbone::mesh::Mesh;
+    use nekbone::rank::{run_ranked_with, DecompShape, Decomposition};
+    // Direct decomposition table on a 2×2×2 element grid: each shape's
+    // axis limits, each named in the error.
+    let mesh = Mesh::for_nelt(8, 3).unwrap();
+    let table: &[(&str, DecompShape, usize, &str)] = &[
+        ("slab beyond z layers", DecompShape::Slab, 4, "slab decomposition of 4 ranks"),
+        ("pencil beyond z*y", DecompShape::Pencil, 8, "pencil decomposition of 8 ranks"),
+        ("box beyond all axes", DecompShape::Box, 16, "box decomposition of 16 ranks"),
+    ];
+    for (what, shape, ranks, needle) in table {
+        expect_config(Decomposition::new(*shape, *ranks, &mesh).map(|_| ()), needle, what);
+        expect_config(Decomposition::new(*shape, *ranks, &mesh).map(|_| ()), "infeasible", what);
+    }
+    expect_config(
+        Decomposition::new(DecompShape::Slab, 0, &mesh).map(|_| ()),
+        "at least one rank",
+        "zero ranks",
+    );
+    // The ranked front door surfaces the same over-split rejection…
+    let cfg = RunConfig {
+        nelt: 8,
+        n: 3,
+        niter: 4,
+        ranks: 4,
+        decomp: "slab".into(),
+        ..RunConfig::default()
+    };
+    expect_config(
+        run_ranked_with(&cfg, "cpu-layered").map(|_| ()),
+        "slab decomposition of 4 ranks",
+        "ranked front door: over-split slab",
+    );
+    // …an unrepresentable niter tag (one exchange round per iteration
+    // must fit the tag field)…
+    let cfg = RunConfig {
+        nelt: 8,
+        n: 3,
+        niter: 1usize << 32,
+        ranks: 2,
+        ..RunConfig::default()
+    };
+    expect_config(
+        run_ranked_with(&cfg, "cpu-layered").map(|_| ()),
+        "unrepresentable in the halo-exchange tag space",
+        "ranked front door: niter tag overflow",
+    );
+    // …and the documented no-precondition contract.
+    let cfg = RunConfig {
+        nelt: 8,
+        n: 3,
+        niter: 4,
+        ranks: 2,
+        precond: "jacobi".into(),
+        ..RunConfig::default()
+    };
+    expect_config(
+        run_ranked_with(&cfg, "cpu-layered").map(|_| ()),
+        "not supported on the ranked path",
+        "ranked front door: precond",
+    );
+}
+
+#[test]
+fn serve_requests_reject_each_malformed_kind() {
+    use nekbone::serve::protocol::parse_request;
+    let table: &[(&str, &str, &str)] = &[
+        ("missing op", r#"{"id": 1}"#, "request needs a string \"op\" field"),
+        ("unknown op", r#"{"op": "reboot"}"#, "unknown op"),
+        (
+            "operator not a string",
+            r#"{"op": "solve", "operator": 7, "n": 3, "nelt": 2, "rhs": []}"#,
+            "operator must be a string",
+        ),
+        (
+            "missing n",
+            r#"{"op": "solve", "operator": "cpu-layered", "nelt": 2, "rhs": []}"#,
+            "n must be an integer",
+        ),
+        (
+            "missing nelt",
+            r#"{"op": "solve", "operator": "cpu-layered", "n": 3, "rhs": []}"#,
+            "nelt must be an integer",
+        ),
+        (
+            "niter not an integer",
+            r#"{"op": "solve", "operator": "cpu-layered", "n": 3, "nelt": 2, "niter": "many", "rhs": []}"#,
+            "niter must be an integer",
+        ),
+        (
+            "rhs not an array",
+            r#"{"op": "solve", "operator": "cpu-layered", "n": 3, "nelt": 2, "rhs": 3}"#,
+            "rhs must be an array",
+        ),
+        (
+            "rhs holds a non-number",
+            r#"{"op": "solve", "operator": "cpu-layered", "n": 3, "nelt": 2, "rhs": [1.0, "x"]}"#,
+            "rhs[1] is not a number",
+        ),
+    ];
+    for (what, line, needle) in table {
+        expect_config(parse_request(line, 50).map(|_| ()), needle, what);
+    }
+    // Unparseable bytes are a Json error (the server still answers with a
+    // bad-request response, but the variant carries the byte offset).
+    assert!(
+        matches!(parse_request("not json at all", 50), Err(Error::Json { .. })),
+        "malformed JSON must be an Error::Json"
+    );
+    // And the happy path still parses.
+    assert!(
+        parse_request(
+            r#"{"op": "solve", "operator": "cpu-layered", "n": 3, "nelt": 2, "rhs": [1.0, 2.0]}"#,
+            50,
+        )
+        .is_ok(),
+        "a well-formed solve request must parse"
+    );
+}
+
+#[test]
+fn session_boundaries_name_the_offending_size() {
+    let cfg = RunConfig { nelt: 2, n: 3, niter: 3, ..RunConfig::default() };
+    let mut app = Nekbone::builder(cfg).operator("cpu-layered").build().unwrap();
+    let ndof = app.mesh().ndof_local();
+    let short_rhs = vec![0.0; ndof - 1];
+    expect_config(app.set_rhs(&short_rhs), "set_rhs: length mismatch", "set_rhs");
+    let mut session = app.session();
+    let long_rhs = vec![1.0; ndof + 1];
+    expect_config(
+        session.solve(&long_rhs).map(|_| ()),
+        "session solve: rhs has",
+        "session solve",
+    );
+    let rhs = vec![1.0; ndof];
+    let mut x_bad = vec![0.0; ndof - 1];
+    expect_config(
+        session.solve_into(&rhs, &mut x_bad).map(|_| ()),
+        "solve_into: x_out has",
+        "solve_into",
+    );
+    // Batch rejections carry the entry index.
+    let batch: Vec<Vec<f64>> = vec![rhs.clone(), rhs[..ndof - 1].to_vec()];
+    expect_config(
+        session.solve_batch(&batch).map(|_| ()),
+        "batch entry 1: session solve: rhs has",
+        "solve_batch",
+    );
+}
+
+#[test]
+fn preconditioner_assembly_rejects_bad_inputs() {
+    use nekbone::solver::{Chebyshev, Jacobi};
+    let n = 3usize;
+    let mesh = nekbone::mesh::Mesh::for_nelt(2, n).unwrap();
+    let basis = nekbone::basis::Basis::new(n);
+    let geom = nekbone::geometry::GeomFactors::affine(&mesh, &basis);
+    let mask = mesh.boundary_mask();
+    let mut gs = nekbone::gs::GatherScatter::new(&mesh);
+    expect_config(
+        Chebyshev::assemble(n, mesh.nelt(), &basis.d, &geom.g, &mut gs, Some(&mask), 0)
+            .map(|_| ()),
+        "Chebyshev order must be >= 1",
+        "cheb order 0",
+    );
+    expect_config(
+        Jacobi::assemble(n, mesh.nelt(), &basis.d, &geom.g[..10], &mut gs, None).map(|_| ()),
+        "Jacobi::assemble: size mismatch",
+        "jacobi short g",
+    );
+}

@@ -6,9 +6,11 @@ use nekbone::basis::Basis;
 use nekbone::geometry::GeomFactors;
 use nekbone::gs::GatherScatter;
 use nekbone::mesh::Mesh;
-use nekbone::operators::{ax_layered, OperatorCtx, OperatorRegistry};
+use nekbone::operators::{ax_layered, OperatorRegistry};
 use nekbone::proputil::{assert_allclose, assert_pap_close, forall, Cases};
 use nekbone::solver::{glsc3, mask_apply};
+
+mod util;
 
 /// Apply the *assembled* operator: A = mask . Q Q^T . A_local.
 fn assembled_ax(
@@ -195,7 +197,7 @@ fn fused_pap_matches_unfused_glsc3_across_shapes() {
             !spec.needs_artifacts && spec.create().is_fused()
         })
         .collect();
-    assert!(fused_names.len() >= 8, "registry lost fused CPU operators: {fused_names:?}");
+    assert!(fused_names.len() >= 10, "registry lost fused CPU operators: {fused_names:?}");
     forall(0xFA7, 12, |cases| {
         let n = cases.size(2, 7);
         let nelt = cases.size(1, 6);
@@ -205,16 +207,7 @@ fn fused_pap_matches_unfused_glsc3_across_shapes() {
         let g = cases.vec_normal(nelt * 6 * np);
         let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
         let threads = cases.size(1, 4);
-        let ctx = OperatorCtx {
-            n,
-            nelt,
-            chunk: nelt,
-            threads,
-            artifacts_dir: "artifacts",
-            d: &d,
-            g: &g,
-            c: &c,
-        };
+        let ctx = util::ctx(n, nelt, threads, "artifacts", &d, &g, &c);
         // Unfused references: the layered kernel + a separate glsc3 sweep.
         // The `-f32` family solves the once-rounded system, so its
         // reference is the same kernel over pre-rounded factors — the
@@ -268,16 +261,7 @@ fn fused_cg_reproduces_unfused_trajectory() {
     mask_apply(&mut f, &mask);
     let opts = CgOptions { niter: 30, rtol: None, record_residuals: false };
     let registry = OperatorRegistry::with_builtins();
-    let ctx = OperatorCtx {
-        n,
-        nelt: mesh.nelt(),
-        chunk: mesh.nelt(),
-        threads: 0,
-        artifacts_dir: "artifacts",
-        d: &basis.d,
-        g: &geom.g,
-        c: &cw,
-    };
+    let ctx = util::ctx(n, mesh.nelt(), 0, "artifacts", &basis.d, &geom.g, &cw);
     let mut solve = |name: &str| {
         let mut op = registry.build(name, &ctx).unwrap();
         let mut gs = GatherScatter::new(&mesh);
@@ -453,16 +437,7 @@ fn spec_operators_match_layered_across_all_degrees() {
         let d = nekbone::basis::derivative_matrix(n);
         let g = cases.vec_normal(nelt * 6 * np);
         let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
-        let ctx = OperatorCtx {
-            n,
-            nelt,
-            chunk: nelt,
-            threads: 0,
-            artifacts_dir: "artifacts",
-            d: &d,
-            g: &g,
-            c: &c,
-        };
+        let ctx = util::ctx(n, nelt, 0, "artifacts", &d, &g, &c);
         let mut w_ref = vec![0.0; nelt * np];
         registry.build("cpu-layered", &ctx).unwrap().apply(&u, &mut w_ref).unwrap();
         let mut spec = registry.build("cpu-spec", &ctx).unwrap();
@@ -497,16 +472,7 @@ fn spec_out_of_range_degree_falls_back_instead_of_erroring() {
     let d = nekbone::basis::derivative_matrix(n);
     let g = cases.vec_normal(nelt * 6 * np);
     let c = cases.vec_uniform(nelt * np, 0.1, 1.0);
-    let ctx = OperatorCtx {
-        n,
-        nelt,
-        chunk: nelt,
-        threads: 0,
-        artifacts_dir: "artifacts",
-        d: &d,
-        g: &g,
-        c: &c,
-    };
+    let ctx = util::ctx(n, nelt, 0, "artifacts", &d, &g, &c);
     let mut w_ref = vec![0.0; nelt * np];
     ax_layered(n, nelt, &u, &d, &g, &mut w_ref);
     let mut spec = registry.build("cpu-spec", &ctx).expect("out-of-range n must still build");

@@ -73,8 +73,9 @@ fn repeated_session_solves_do_not_rebuild_state() {
     let (mut app, setups, applies) = counting_app(cfg());
     assert_eq!(setups.load(Ordering::SeqCst), 1, "builder sets up exactly once");
     let ndof = app.mesh().ndof_local();
-    let rhss: Vec<Vec<f64>> =
-        (0..3).map(|i| nekbone::rng::Rng::new(7 + i as u64).normal_vec(ndof)).collect();
+    let rhss: Vec<Vec<f64>> = (0..3)
+        .map(|i| nekbone::rng::Rng::new(nekbone::rng::rhs_seed(7, i as u64)).normal_vec(ndof))
+        .collect();
 
     let mut session = app.session();
     let reports = session.solve_batch(&rhss).unwrap();
@@ -123,7 +124,7 @@ fn batch_matches_independent_solves_unfused() {
     let (mut app, ..) = counting_app(cfg());
     let ndof = app.mesh().ndof_local();
     let rhss: Vec<Vec<f64>> = (0..rhs_count)
-        .map(|i| nekbone::rng::Rng::new(90 + i as u64).normal_vec(ndof))
+        .map(|i| nekbone::rng::Rng::new(nekbone::rng::rhs_seed(90, i as u64)).normal_vec(ndof))
         .collect();
     let mut session = app.session();
     let reports = session.solve_batch(&rhss).unwrap();

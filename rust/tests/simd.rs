@@ -14,18 +14,10 @@ use nekbone::operators::{
     ax_simd_with_arm, simd_arm, OperatorCtx, OperatorRegistry, SimdArm,
 };
 use nekbone::proputil::assert_pap_close;
-use nekbone::rng::Rng;
 use nekbone::solver::glsc3;
 
-fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
-    let mut rng = Rng::new(seed);
-    let np = n * n * n;
-    let u = rng.normal_vec(nelt * np);
-    let d = nekbone::basis::derivative_matrix(n);
-    let g = rng.normal_vec(nelt * 6 * np);
-    let c: Vec<f64> = (0..nelt * np).map(|_| rng.range(0.1, 1.0)).collect();
-    (u, d, g, c)
-}
+mod util;
+use crate::util::{assert_family_close, inputs};
 
 fn ctx<'a>(
     n: usize,
@@ -35,29 +27,7 @@ fn ctx<'a>(
     g: &'a [f64],
     c: &'a [f64],
 ) -> OperatorCtx<'a> {
-    OperatorCtx { n, nelt, chunk: nelt, threads, artifacts_dir: "artifacts", d, g, c }
-}
-
-/// Scalar arm: bitwise. AVX2 arm: within the FMA band — per point
-/// `1e-13 * (|want| + max|want|)`, the magnitude-scaled absolute term
-/// keeping cancellation points honest.
-fn assert_family_close(got: &[f64], want: &[f64], what: &str) {
-    assert_eq!(got.len(), want.len(), "{what}: length");
-    match simd_arm() {
-        SimdArm::Scalar => {
-            assert_eq!(got, want, "{what}: scalar arm must be bit-identical");
-        }
-        SimdArm::Avx2 => {
-            let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
-            for (idx, (g, w)) in got.iter().zip(want).enumerate() {
-                let tol = 1e-13 * (w.abs() + scale);
-                assert!(
-                    (g - w).abs() <= tol,
-                    "{what}: mismatch at {idx}: got {g}, want {w} (tol {tol:e})"
-                );
-            }
-        }
-    }
+    util::ctx(n, nelt, threads, "artifacts", d, g, c)
 }
 
 #[test]

@@ -1,0 +1,136 @@
+//! Shared operator-agreement helpers for the integration-test suites.
+//!
+//! Every file under `tests/` is its own crate, so each comparison suite
+//! (`conformance`, `simd`, `mixed_precision`, `properties`,
+//! `fuzz_differential`) includes this module via `mod util;` — the input
+//! recipe, the `OperatorCtx` construction, and the tolerance ladder live
+//! in exactly one place:
+//!
+//! * **bitwise** — the Exact tier, and any two operators sharing one
+//!   schedule;
+//! * **[`FMA_BAND`]** — reassociation-only differences (AVX2 FMA
+//!   contraction, thread partitioning) between f64 schedules;
+//! * **[`REDUCED_BAND`]** — f32-stored geometric factors against an f64
+//!   reference: the factors round once at setup, the arithmetic still
+//!   accumulates in f64.
+//!
+//! [`joint_band`] maps a *pair* of declared
+//! [`PrecisionTier`]s onto that ladder and [`joint_cg_tol`] does the same
+//! for whole CG trajectories — the comparators the differential fuzz
+//! tier drives for every operator pair.
+#![allow(dead_code)] // each suite uses its own subset
+
+use nekbone::operators::{simd_arm, OperatorCtx, PrecisionTier, SimdArm};
+use nekbone::rng::Rng;
+
+/// Per-point band for reassociation-only differences (FMA contraction,
+/// thread partitioning) between f64 schedules.
+pub const FMA_BAND: f64 = 1e-11;
+
+/// Per-point band for f32-stored geometric factors against an f64
+/// reference: rounding the six factors once perturbs each of the ~12n
+/// products feeding a point by at most one ulp(f32) relatively, so `1e-5`
+/// leaves ~10× headroom at n = 12 while still catching any
+/// double-rounding or f32 *accumulation* bug by orders of magnitude.
+pub const REDUCED_BAND: f64 = 1e-5;
+
+/// Deterministic operator inputs for one `(n, nelt)` case: normal `u` and
+/// `g`, the exact GLL derivative matrix, and strictly positive `c` (the
+/// inner-product weights are positive in a real solve).
+pub fn inputs(seed: u64, n: usize, nelt: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let np = n * n * n;
+    let u = rng.normal_vec(nelt * np);
+    let d = nekbone::basis::derivative_matrix(n);
+    let g = rng.normal_vec(nelt * 6 * np);
+    let c: Vec<f64> = (0..nelt * np).map(|_| rng.range(0.1, 1.0)).collect();
+    (u, d, g, c)
+}
+
+/// The one place the integration suites build an [`OperatorCtx`] over
+/// synthetic inputs. Synthetic `g` has no mesh behind it, so there is no
+/// assembly plan (`assemble: None`) — `cpu-asm*` run their plan-less
+/// layered fallback and compare like any other operator.
+pub fn ctx<'a>(
+    n: usize,
+    nelt: usize,
+    threads: usize,
+    artifacts_dir: &'a str,
+    d: &'a [f64],
+    g: &'a [f64],
+    c: &'a [f64],
+) -> OperatorCtx<'a> {
+    OperatorCtx { n, nelt, chunk: nelt, threads, artifacts_dir, d, g, c, assemble: None }
+}
+
+/// Bitwise equality with a per-point failure message.
+pub fn assert_bitwise(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}[{i}]: got {g}, want {w} (bitwise)"
+        );
+    }
+}
+
+/// Banded comparison: per point `band * (|want| + max|want|)` — the
+/// magnitude-scaled absolute term keeps cancellation points honest.
+pub fn assert_within_band(got: &[f64], want: &[f64], band: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    let scale = want.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-300);
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = band * (w.abs() + scale);
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}[{i}]: got {g}, want {w} exceeds the band {tol:e}"
+        );
+    }
+}
+
+/// The agreement band implied by a *pair* of declared precision tiers
+/// (`None` = bitwise). Two `Exact` operators share one schedule; an f32
+/// operator against an f64 one differs by the factor rounding; two f32
+/// operators share the same once-rounded system, so — like any remaining
+/// pair — only reassociation separates them.
+pub fn joint_band(a: PrecisionTier, b: PrecisionTier) -> Option<f64> {
+    use PrecisionTier::*;
+    match (a, b) {
+        (Exact, Exact) => None,
+        (ReducedStorage, ReducedStorage) => Some(FMA_BAND),
+        (ReducedStorage, _) | (_, ReducedStorage) => Some(REDUCED_BAND),
+        _ => Some(FMA_BAND),
+    }
+}
+
+/// Compare two operator outputs at a joint tier band from [`joint_band`].
+pub fn assert_agree_at(got: &[f64], want: &[f64], band: Option<f64>, what: &str) {
+    match band {
+        None => assert_bitwise(got, want, what),
+        Some(b) => assert_within_band(got, want, b, what),
+    }
+}
+
+/// Relative tolerance for comparing two full CG trajectories (residual
+/// norms, solution fields): within one storage class the trajectories
+/// track to ~1e-9 over tens of iterations, so `1e-8` leaves headroom;
+/// across the f32/f64 seam the two solves target *different nearby
+/// systems* and only storage-band agreement survives the iteration.
+pub fn joint_cg_tol(a: PrecisionTier, b: PrecisionTier) -> f64 {
+    if (a == PrecisionTier::ReducedStorage) == (b == PrecisionTier::ReducedStorage) {
+        1e-8
+    } else {
+        1e-3
+    }
+}
+
+/// Arm-aware family comparison (the SIMD suite's contract): the scalar
+/// dispatch arm must be bit-identical, the AVX2 arm may differ by FMA
+/// contraction — a `1e-13` band, tighter than [`FMA_BAND`] because a
+/// single apply involves contraction but never partitioning.
+pub fn assert_family_close(got: &[f64], want: &[f64], what: &str) {
+    match simd_arm() {
+        SimdArm::Scalar => assert_bitwise(got, want, what),
+        SimdArm::Avx2 => assert_within_band(got, want, 1e-13, what),
+    }
+}
