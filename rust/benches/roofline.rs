@@ -61,6 +61,29 @@ fn main() {
         );
     }
 
+    // ISSUE 10: whole-solve intensity under the cache-blocked vector
+    // pipeline — the cg-iteration family's blocked/unblocked twins share
+    // a bitwise-identical trajectory, so any GF/s gap is pure memory
+    // traffic saved by `--block-dofs`.
+    let intensity_of = |name: &str, n: usize| {
+        report.points.iter().find(|p| p.operator == name && p.degree == n).map(|p| p.intensity)
+    };
+    for (blocked, flat) in
+        [("cg-iteration-blocked", "cg-iteration"), ("cg-iteration-fused-blocked", "cg-iteration-fused")]
+    {
+        if let (Some(bg), Some(fg), Some(bi), Some(fi)) = (
+            gflops_of(blocked, 9),
+            gflops_of(flat, 9),
+            intensity_of(blocked, 9),
+            intensity_of(flat, 9),
+        ) {
+            println!(
+                "# n=9: {blocked} {bg:.3} GF/s vs {flat} {fg:.3} GF/s \
+                 (intensity {bi:.3} vs {fi:.3} flop/byte)"
+            );
+        }
+    }
+
     write_json(&report, &out).expect("write BENCH_roofline.json");
     let text = std::fs::read_to_string(&out).expect("re-read emitted json");
     validate_json(&text).expect("emitted json must be schema-valid");

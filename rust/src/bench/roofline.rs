@@ -34,7 +34,10 @@ use crate::error::{Error, Result};
 use crate::geometry::GeomFactors;
 use crate::mesh::Mesh;
 use crate::metrics::Stopwatch;
-use crate::operators::{ax_flops, fused_ax_flops, AxOperator, OperatorCtx, OperatorRegistry};
+use crate::operators::{
+    ax_flops, cg_bytes_moved, cg_flops, fused_ax_flops, AxOperator, OperatorCtx,
+    OperatorRegistry,
+};
 
 /// Schema identifier written into (and asserted on) every emitted file.
 pub const SCHEMA: &str = "nekbone-roofline/1";
@@ -216,6 +219,13 @@ pub struct RooflineConfig {
     /// Smoke-test scale (CI): minimal apply reps/samples and shrunken
     /// machine-ceiling measurements. Does not change the problem shape.
     pub quick: bool,
+    /// Also measure the `cg-iteration*` point family: whole CG iterations
+    /// (Ax + the solver's vector algebra) timed through full solves, with
+    /// flops from [`cg_flops`] and bytes from [`cg_bytes_moved`], for the
+    /// unfused/fused × unblocked/blocked grid. These points show the
+    /// whole-solve intensity moving under `--block-dofs`, not just
+    /// per-apply GFLOP/s; keys stay schema-identical, purely additive.
+    pub cg_points: bool,
 }
 
 impl Default for RooflineConfig {
@@ -247,6 +257,7 @@ impl Default for RooflineConfig {
             threads: 0,
             artifacts_dir: "artifacts".into(),
             quick: false,
+            cg_points: true,
         }
     }
 }
@@ -370,6 +381,82 @@ pub fn run_with(cfg: &RooflineConfig, registry: &OperatorRegistry) -> Result<Roo
                 roof_gflops: roof,
                 seconds,
             });
+        }
+        if cfg.cg_points {
+            // Whole-iteration points: time full CG solves (serial path,
+            // reduce plan installed like the pipeline) and report
+            // per-iteration GFLOP/s against the cg_flops / cg_bytes_moved
+            // stream model. The blocked twins run the cache-blocked
+            // pipeline — bitwise-identical trajectory, fewer vector
+            // passes, so their intensity sits strictly higher.
+            let mut rhs = crate::rng::Rng::new(0xC610).normal_vec(ndof);
+            {
+                let mut gs = crate::gs::GatherScatter::new(&mesh);
+                gs.dssum(&mut rhs);
+            }
+            crate::solver::mask_apply(&mut rhs, &mask);
+            let niter = if cfg.quick { 4 } else { 25 };
+            let opts = crate::solver::CgOptions { niter, rtol: None, record_residuals: false };
+            for (label, op_name, fused, blocked) in [
+                ("cg-iteration", "cpu-layered", false, false),
+                ("cg-iteration-blocked", "cpu-layered", false, true),
+                ("cg-iteration-fused", "cpu-layered-fused", true, false),
+                ("cg-iteration-fused-blocked", "cpu-layered-fused", true, true),
+            ] {
+                let mut op = registry.build(op_name, &ctx)?;
+                let mut x = vec![0.0; ndof];
+                let mut ws = crate::solver::CgWorkspace::new(ndof);
+                ws.set_reduce_plan(n * n * n, (0..mesh.nelt() as u64).collect())?;
+                if blocked {
+                    ws.set_iteration_plan(crate::config::AUTO_BLOCK_DOFS.min(ndof).max(1))?;
+                }
+                let mut gs = crate::gs::GatherScatter::new(&mesh);
+                let runner = if cfg.quick {
+                    Runner { warmup: 1, samples: 2 }
+                } else {
+                    Runner { warmup: 1, samples: 3 }
+                };
+                let mut iterations = 1usize;
+                let samples: Samples = runner.run(|| {
+                    let rep = crate::solver::cg_solve_op(
+                        op.as_mut(),
+                        &mut gs,
+                        &mut crate::solver::NullComm,
+                        Some(&mask),
+                        &c,
+                        &rhs,
+                        &mut x,
+                        &opts,
+                        &mut ws,
+                    )
+                    .expect("roofline cg solve");
+                    iterations = rep.iterations.max(1);
+                    std::hint::black_box(&mut x);
+                });
+                let seconds = samples.min() / iterations as f64;
+                if seconds <= 0.0 {
+                    return Err(Error::Numerical(format!(
+                        "{label} at n={n}: timed sample was 0s; raise niter"
+                    )));
+                }
+                // `cpu-layered*` leave assembly to the solver, so the
+                // stored (not assembled) Ax byte model applies.
+                let flops = cg_flops(n, mesh.nelt(), fused);
+                let bytes = cg_bytes_moved(n, mesh.nelt(), fused, false, blocked);
+                let gflops = flops as f64 / seconds / 1e9;
+                let intensity = flops as f64 / bytes as f64;
+                let roof = roofs.peak_gflops.min(intensity * roofs.bandwidth_gbs);
+                points.push(RooflinePoint {
+                    operator: label.into(),
+                    degree: n,
+                    elements: mesh.nelt(),
+                    gflops,
+                    percent_of_roofline: 100.0 * gflops / roof,
+                    intensity,
+                    roof_gflops: roof,
+                    seconds,
+                });
+            }
         }
     }
     let threads = if cfg.threads == 0 {
@@ -533,11 +620,17 @@ mod tests {
         assert!(roofs.peak_gflops < 10_000.0, "peak {}", roofs.peak_gflops);
     }
 
+    /// The cg-iteration family: 4 variants per degree when enabled.
+    const CG_VARIANTS: usize = 4;
+
     #[test]
     fn harness_covers_every_operator_degree_pair() {
         let cfg = quick_cfg();
         let report = run(&cfg).unwrap();
-        assert_eq!(report.points.len(), cfg.operators.len() * cfg.degrees.len());
+        assert_eq!(
+            report.points.len(),
+            (cfg.operators.len() + CG_VARIANTS) * cfg.degrees.len()
+        );
         for p in &report.points {
             assert!(
                 p.gflops > 0.0 && p.gflops.is_finite(),
@@ -652,6 +745,63 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cg_iteration_points_show_blocked_intensity_gain() {
+        // ISSUE 10 acceptance: the cg-iteration family shows whole-solve
+        // intensity moving under `--block-dofs`, not just per-apply
+        // GFLOP/s. Blocking folds the solver's separate z / rtz / tail
+        // passes into one cache-resident walk, dropping 24 bytes/dof from
+        // the per-iteration stream while the flop count is untouched, so
+        // each blocked point's intensity must exceed its unblocked twin's
+        // by exactly the pinned byte-model ratio.
+        let cfg = quick_cfg();
+        assert!(cfg.cg_points, "cg points must default on");
+        let report = run(&cfg).unwrap();
+        let by = |name: &str, n: usize| {
+            report
+                .points
+                .iter()
+                .find(|p| p.operator == name && p.degree == n)
+                .unwrap_or_else(|| panic!("missing point {name}/{n}"))
+                .clone()
+        };
+        for &n in &cfg.degrees {
+            for (blocked_name, flat_name, fused) in [
+                ("cg-iteration-blocked", "cg-iteration", false),
+                ("cg-iteration-fused-blocked", "cg-iteration-fused", true),
+            ] {
+                let b = by(blocked_name, n);
+                let f = by(flat_name, n);
+                assert!(
+                    b.intensity > f.intensity,
+                    "{blocked_name}/{n}: {} must exceed {flat_name}'s {}",
+                    b.intensity,
+                    f.intensity
+                );
+                let ratio = cg_bytes_moved(n, cfg.elements, fused, false, false) as f64
+                    / cg_bytes_moved(n, cfg.elements, fused, false, true) as f64;
+                let got = b.intensity / f.intensity;
+                assert!(
+                    (got - ratio).abs() < 1e-9,
+                    "{blocked_name}/{n}: intensity ratio {got} vs stream ratio {ratio}"
+                );
+                for p in [&b, &f] {
+                    assert!(p.gflops > 0.0 && p.gflops.is_finite());
+                    assert!(p.seconds > 0.0 && p.seconds.is_finite());
+                }
+            }
+        }
+        // Opting out removes exactly the cg family and nothing else.
+        let mut off = quick_cfg();
+        off.cg_points = false;
+        let plain = run(&off).unwrap();
+        assert_eq!(
+            plain.points.len(),
+            off.operators.len() * off.degrees.len()
+        );
+        assert!(plain.points.iter().all(|p| !p.operator.starts_with("cg-iteration")));
     }
 
     #[test]

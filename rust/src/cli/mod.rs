@@ -100,6 +100,7 @@ impl Args {
             precond: self.get("precond").unwrap_or(&dflt.precond).to_string(),
             cheb_order: self.get_usize("cheb-order", dflt.cheb_order)?,
             decomp: self.get("decomp").unwrap_or(&dflt.decomp).to_string(),
+            block_dofs: self.get("block-dofs").unwrap_or(&dflt.block_dofs).to_string(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -155,6 +156,9 @@ const USAGE_TAIL: &str = "\
                      the fixed niter like Nekbone). Honored identically
                      by serial and ranked runs (one shared solver)
   --record-residuals record |r| every iteration
+  --block-dofs B     cache-blocked CG pipeline: auto | off | dofs per
+                     segment [auto]. Blocked solves are bitwise identical
+                     to unblocked; only CgReport.vector_sweeps drops
   --precond P        none | jacobi | cheb          [none]
   --cheb-order K     Chebyshev polynomial order for --precond cheb [4]
                      (each CG iteration costs K-1 extra Ax sweeps)
@@ -323,6 +327,19 @@ mod tests {
         }
         assert_eq!(args(&["run"]).run_config().unwrap().decomp, "slab");
         assert!(args(&["run", "--decomp", "diag"]).run_config().is_err());
+    }
+
+    #[test]
+    fn block_dofs_option_from_args() {
+        assert_eq!(args(&["run"]).run_config().unwrap().block_dofs, "auto");
+        for v in ["auto", "off", "512"] {
+            let a = args(&["run", "--block-dofs", v]);
+            assert_eq!(a.run_config().unwrap().block_dofs, v);
+        }
+        assert!(args(&["run", "--block-dofs", "0"]).run_config().is_err());
+        assert!(args(&["run", "--block-dofs", "grid"]).run_config().is_err());
+        // Above the global ndof (default 64_000) is a validate error too.
+        assert!(args(&["run", "--block-dofs", "64001"]).run_config().is_err());
     }
 
     #[test]

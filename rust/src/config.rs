@@ -44,7 +44,17 @@ pub struct RunConfig {
     /// Rank decomposition shape: `"slab"` (z layers), `"pencil"` (z×y
     /// columns), or `"box"` (z×y×x bricks). Only read on the ranked path.
     pub decomp: String,
+    /// Cache-blocked CG iteration pipeline: `"auto"` (a cache-sized
+    /// segment, the default — blocked solves are bitwise identical to
+    /// unblocked ones), `"off"` (historical whole-vector passes), or a
+    /// dof count per segment (rounded down to whole elements).
+    pub block_dofs: String,
 }
+
+/// Segment size `--block-dofs auto` resolves to, before clamping to the
+/// local dof count: 4096 dofs × 6 resident vectors × 8 bytes ≈ 192 KiB,
+/// comfortably inside a per-core L2.
+pub const AUTO_BLOCK_DOFS: usize = 4096;
 
 impl Default for RunConfig {
     fn default() -> Self {
@@ -64,6 +74,7 @@ impl Default for RunConfig {
             precond: "none".into(),
             cheb_order: 4,
             decomp: "slab".into(),
+            block_dofs: "auto".into(),
         }
     }
 }
@@ -121,7 +132,48 @@ impl RunConfig {
                 )));
             }
         }
+        self.resolved_block_dofs()?;
         Ok(())
+    }
+
+    /// Resolve `block_dofs` into a segment size for
+    /// [`CgWorkspace::set_iteration_plan`](crate::solver::CgWorkspace):
+    /// `None` for `"off"`, a clamped [`AUTO_BLOCK_DOFS`] for `"auto"`, and
+    /// a validated dof count otherwise (zero and values above the global
+    /// ndof are structured Config errors; ranked runs clamp further to
+    /// each rank's local share at install time).
+    pub fn resolved_block_dofs(&self) -> Result<Option<usize>> {
+        match self.block_dofs.as_str() {
+            "off" => Ok(None),
+            "auto" => Ok(Some(AUTO_BLOCK_DOFS.min(self.ndof()).max(1))),
+            raw => {
+                let n: usize = raw.parse().map_err(|_| {
+                    Error::Config(format!("block-dofs must be auto|off|N, got {raw:?}"))
+                })?;
+                if n == 0 {
+                    return Err(Error::Config("block-dofs must be positive".into()));
+                }
+                if n > self.ndof() {
+                    return Err(Error::Config(format!(
+                        "block-dofs ({n}) cannot exceed ndof ({})",
+                        self.ndof()
+                    )));
+                }
+                Ok(Some(n))
+            }
+        }
+    }
+}
+
+/// Parse the `NEKBONE_FUZZ_CASES` override (the differential-fuzz tier's
+/// case budget). Garbage or zero is a **loud** [`Error::Config`] naming
+/// the variable — a typo must not silently shrink the corpus.
+pub fn parse_cases_env(raw: &str) -> Result<usize> {
+    match raw.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => Err(Error::Config(format!(
+            "NEKBONE_FUZZ_CASES must be a positive integer, got {raw:?}"
+        ))),
     }
 }
 
@@ -155,8 +207,37 @@ mod tests {
             RunConfig { precond: "ilu".into(), ..Default::default() },
             RunConfig { precond: "cheb".into(), cheb_order: 0, ..Default::default() },
             RunConfig { decomp: "diag".into(), ..Default::default() },
+            RunConfig { block_dofs: "0".into(), ..Default::default() },
+            RunConfig { block_dofs: "grid".into(), ..Default::default() },
+            RunConfig { block_dofs: "64001".into(), ..Default::default() },
         ] {
             assert!(cfg.validate().is_err(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn block_dofs_resolution() {
+        let cfg = RunConfig::default(); // ndof = 64_000
+        assert_eq!(cfg.resolved_block_dofs().unwrap(), Some(AUTO_BLOCK_DOFS));
+        let off = RunConfig { block_dofs: "off".into(), ..Default::default() };
+        assert_eq!(off.resolved_block_dofs().unwrap(), None);
+        let fixed = RunConfig { block_dofs: "512".into(), ..Default::default() };
+        assert_eq!(fixed.resolved_block_dofs().unwrap(), Some(512));
+        // auto clamps to tiny problems instead of rejecting them.
+        let tiny = RunConfig { nelt: 1, n: 2, ..Default::default() }; // ndof = 8
+        assert_eq!(tiny.resolved_block_dofs().unwrap(), Some(8));
+    }
+
+    #[test]
+    fn fuzz_cases_env_parses_loudly() {
+        assert_eq!(parse_cases_env("24").unwrap(), 24);
+        assert_eq!(parse_cases_env(" 7 ").unwrap(), 7);
+        for bad in ["", "0", "-3", "many", "1e3"] {
+            let err = parse_cases_env(bad).unwrap_err();
+            assert!(
+                err.to_string().contains("NEKBONE_FUZZ_CASES"),
+                "error must name the variable: {err}"
+            );
         }
     }
 }

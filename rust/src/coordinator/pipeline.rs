@@ -271,6 +271,12 @@ impl NekboneBuilder {
         // ranked dot products evaluate one fold expression bit for bit.
         let mut ws = CgWorkspace::new(ndof);
         ws.set_reduce_plan(cfg.n * cfg.n * cfg.n, (0..mesh.nelt() as u64).collect())?;
+        // Cache-blocked iteration pipeline (bitwise identical to the
+        // unblocked walk — see CgWorkspace::set_iteration_plan): resolved
+        // from `--block-dofs`, skipped only for "off".
+        if let Some(block_dofs) = cfg.resolved_block_dofs()? {
+            ws.set_iteration_plan(block_dofs)?;
+        }
         Ok(Nekbone {
             cfg,
             vector_backend: self.vector_backend,

@@ -156,6 +156,66 @@ pub fn ax_bytes_moved(n: usize, nelt: usize, fused: bool) -> u64 {
     ax_bytes_moved_stored(n, nelt, fused, 8)
 }
 
+/// Floating-point operations of one whole CG **iteration**: the Ax
+/// application plus the solver's vector algebra — `rtz = glsc3(r,c,z)` (3),
+/// `p = z + beta·p` (2), `x += alpha·p` (2), `r -= alpha·w` (2) flops per
+/// dof, plus `pap = glsc3(w,c,p)` (3) when the operator is not fused (a
+/// fused Ax already counts that reduction in [`fused_ax_flops`]). The total
+/// is identical for fused and unfused — and for blocked and unblocked,
+/// which only reorder the same arithmetic — so a `cg-iteration` roofline
+/// point's intensity moves purely through [`cg_bytes_moved`].
+pub fn cg_flops(n: usize, nelt: usize, fused: bool) -> u64 {
+    let ndof = (nelt as u64) * (n as u64).pow(3);
+    let (ax, vec_per_dof) =
+        if fused { (fused_ax_flops(n, nelt), 9) } else { (ax_flops(n, nelt), 12) };
+    ax + vec_per_dof * ndof
+}
+
+/// Minimum main-memory traffic of one whole CG **iteration** in bytes,
+/// under the same stream accounting as the Ax models (8 bytes per f64
+/// read or write), parameterized by the geometric factors' storage width.
+///
+/// The Ax part is [`ax_bytes_moved_assembled`] when the operator folds
+/// assembly into its sweep and [`ax_bytes_moved_stored`] otherwise. The
+/// vector part streams, per dof:
+///
+/// * head/tail work: z production (read r, write z: 16) + rtz `glsc3`
+///   (read r,c,z: 24) + the two `add2s2` (read p,w + read/write x,r: 48)
+///   — 88 bytes unblocked. The cache-blocked pipeline fuses those four
+///   passes into one walk, so r is read once and z never leaves cache
+///   between production and the rtz partials: 64.
+/// * `add2s1` (read z + read/write p): 24 in either mode.
+/// * plus 24 (read w,c,p) for the standalone pap reduction when `fused`
+///   is false.
+///
+/// So the vector part is 136/112 unfused and 112/88 fused
+/// (unblocked/blocked) — cache-blocking removes 24 bytes per dof per
+/// iteration in either mode, which is what the `cg-iteration` roofline
+/// family visualizes.
+pub fn cg_bytes_moved_stored(
+    n: usize,
+    nelt: usize,
+    fused: bool,
+    assembled: bool,
+    blocked: bool,
+    stored_bytes: u64,
+) -> u64 {
+    let ax = if assembled {
+        ax_bytes_moved_assembled(n, nelt, fused, stored_bytes)
+    } else {
+        ax_bytes_moved_stored(n, nelt, fused, stored_bytes)
+    };
+    let vec_per_dof: u64 =
+        if blocked { 64 } else { 88 } + 24 + if fused { 0 } else { 24 };
+    ax + vec_per_dof * (nelt as u64) * (n as u64).pow(3)
+}
+
+/// [`cg_bytes_moved_stored`] at the all-f64 storage width — the
+/// per-iteration stream model behind the `cg-iteration` roofline points.
+pub fn cg_bytes_moved(n: usize, nelt: usize, fused: bool, assembled: bool, blocked: bool) -> u64 {
+    cg_bytes_moved_stored(n, nelt, fused, assembled, blocked, 8)
+}
+
 /// Everything an operator needs to bind itself to one problem: the shape,
 /// the launch chunking, and the mesh data. Borrowed — implementations clone
 /// (or upload) what `apply` will need, so during `setup` the caller's copy
@@ -518,6 +578,51 @@ mod tests {
         assert_eq!(ax_bytes_moved_stored(10, 1, true, 4), 64 * 1000);
         assert_eq!(ax_bytes_moved_assembled(10, 1, false, 4), 40 * 1000);
         assert_eq!(ax_bytes_moved_assembled(10, 1, true, 4), 48 * 1000);
+    }
+
+    #[test]
+    fn cg_iteration_stream_model_is_pinned() {
+        let (n, nelt) = (10, 1);
+        let ndof = 1000u64;
+        // Flops: the total is invariant across fused/unfused (a fused Ax
+        // counts the pap reduction's 3 flops/dof inside fused_ax_flops and
+        // the solver skips its own) — and across blocked/unblocked, which
+        // only reorder the same arithmetic.
+        assert_eq!(cg_flops(n, nelt, false), ax_flops(n, nelt) + 12 * ndof);
+        assert_eq!(cg_flops(n, nelt, true), fused_ax_flops(n, nelt) + 9 * ndof);
+        assert_eq!(cg_flops(n, nelt, false), cg_flops(n, nelt, true));
+        // Vector-part bytes per dof: 136 unfused / 112 fused unblocked,
+        // 112 / 88 blocked — cache-blocking removes 24 B/dof either way.
+        for (fused, assembled) in [(false, false), (true, false), (false, true), (true, true)] {
+            let ax = if assembled {
+                ax_bytes_moved_assembled(n, nelt, fused, 8)
+            } else {
+                ax_bytes_moved(n, nelt, fused)
+            };
+            let unblocked = cg_bytes_moved(n, nelt, fused, assembled, false);
+            let blocked = cg_bytes_moved(n, nelt, fused, assembled, true);
+            let vec_unblocked = if fused { 112 } else { 136 };
+            assert_eq!(unblocked, ax + vec_unblocked * ndof, "fused={fused}");
+            assert_eq!(unblocked - blocked, 24 * ndof, "fused={fused} assembled={assembled}");
+        }
+        // The f64 wrapper is the stored-width formula at 8 bytes, and f32
+        // factor storage thins only the Ax part.
+        assert_eq!(
+            cg_bytes_moved(n, nelt, false, false, true),
+            cg_bytes_moved_stored(n, nelt, false, false, true, 8)
+        );
+        assert_eq!(
+            cg_bytes_moved_stored(n, nelt, false, false, true, 8)
+                - cg_bytes_moved_stored(n, nelt, false, false, true, 4),
+            ax_bytes_moved(n, nelt, false) - ax_bytes_moved_stored(n, nelt, false, 4)
+        );
+        // Whole-solve intensity strictly rises under blocking (same flops,
+        // fewer bytes) — the cg-iteration roofline family's claim.
+        let i_u = cg_flops(n, nelt, false) as f64
+            / cg_bytes_moved(n, nelt, false, false, false) as f64;
+        let i_b = cg_flops(n, nelt, false) as f64
+            / cg_bytes_moved(n, nelt, false, false, true) as f64;
+        assert!(i_b > i_u);
     }
 
     #[test]

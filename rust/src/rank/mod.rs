@@ -433,6 +433,13 @@ fn rank_main(
     // Element-blocked reductions, folded in global element order: the
     // ranked dot products evaluate the serial fold expression exactly.
     ws.set_reduce_plan(np, elems.iter().map(|&e| e as u64).collect())?;
+    // Cache-blocked iteration pipeline, same knob as the serial path.
+    // `resolved_block_dofs` validated against the *global* ndof; the
+    // workspace clamps the segment to this rank's local share, and the
+    // blocked walk stays bitwise identical to serial either way.
+    if let Some(block_dofs) = cfg.resolved_block_dofs()? {
+        ws.set_iteration_plan(block_dofs)?;
+    }
     let report = cg_solve(
         &mut ax,
         exchange,

@@ -66,6 +66,12 @@ pub const SCENARIO_OPTS: &[OptSpec] = &[
     },
     OptSpec { key: "niter", metavar: "N", default: "30", help: "CG iterations per point" },
     OptSpec {
+        key: "block-dofs",
+        metavar: "B",
+        default: "auto",
+        help: "cache-block the CG vector pipeline (auto|off|N)",
+    },
+    OptSpec {
         key: "json",
         metavar: "PATH",
         default: "",
@@ -90,6 +96,11 @@ pub struct ScenarioConfig {
     pub degrees: Vec<usize>,
     /// CG iterations per point.
     pub niter: usize,
+    /// `--block-dofs` value passed through to every point's [`RunConfig`]
+    /// (`auto|off|N`): the ranked solves run the cache-blocked vector
+    /// pipeline, whose trajectory is bitwise identical to the unblocked
+    /// one, so throughput deltas are pure memory traffic.
+    pub block_dofs: String,
     /// Write the JSON report here (in addition to the printed table).
     pub json: Option<String>,
 }
@@ -140,6 +151,10 @@ impl ScenarioConfig {
             elements: list("elements", "8")?,
             degrees: list("degrees", "3")?,
             niter,
+            block_dofs: args
+                .get("block-dofs")
+                .unwrap_or_else(|| spec_default(SCENARIO_OPTS, "block-dofs"))
+                .to_string(),
             json: args.get("json").map(str::to_string),
         })
     }
@@ -153,6 +168,7 @@ impl ScenarioConfig {
             elements: vec![8],
             degrees: vec![3],
             niter: 8,
+            block_dofs: "auto".into(),
             json: None,
         }
     }
@@ -199,6 +215,18 @@ pub fn run(cfg: &ScenarioConfig) -> Result<ScalingReport> {
     // Fail fast on unknown operators so a typo is an error, not a
     // campaign full of silent skips.
     crate::operators::registry().resolve(&cfg.operator)?;
+    // Fail fast on a degenerate --block-dofs (zero, garbage, or larger
+    // than even the campaign's biggest point) before spending time on the
+    // sweep. Per-point ndof caps below that are feasibility, handled like
+    // any other infeasible combination (a skip, not an abort).
+    let probe = RunConfig {
+        nelt: cfg.elements.iter().copied().max().unwrap_or(1)
+            * cfg.ranks.iter().copied().max().unwrap_or(1),
+        n: cfg.degrees.iter().copied().max().unwrap_or(3),
+        block_dofs: cfg.block_dofs.clone(),
+        ..RunConfig::default()
+    };
+    probe.resolved_block_dofs()?;
     let mut points = Vec::new();
     let mut skipped = 0usize;
     for scenario in ["strong", "weak"] {
@@ -213,6 +241,7 @@ pub fn run(cfg: &ScenarioConfig) -> Result<ScalingReport> {
                             niter: cfg.niter,
                             ranks,
                             decomp: shape.as_str().into(),
+                            block_dofs: cfg.block_dofs.clone(),
                             ..RunConfig::default()
                         };
                         let rep = match run_ranked_with(&rc, &cfg.operator) {
@@ -398,6 +427,49 @@ mod tests {
             vec![DecompShape::Slab, DecompShape::Pencil, DecompShape::Box]
         );
         assert_eq!(c.json, None);
+        assert_eq!(c.block_dofs, spec_default(SCENARIO_OPTS, "block-dofs"));
+    }
+
+    #[test]
+    fn block_dofs_passes_through_and_fails_loud() {
+        let c = ScenarioConfig::from_args(&args(&["scenarios", "--block-dofs", "off"]))
+            .unwrap();
+        assert_eq!(c.block_dofs, "off");
+        // Degenerate values abort the campaign before the sweep.
+        for bad in ["0", "grid", "9999999"] {
+            let cfg = ScenarioConfig {
+                block_dofs: bad.into(),
+                ..ScenarioConfig::quick()
+            };
+            let err = run(&cfg).unwrap_err().to_string();
+            assert!(err.contains("block-dofs"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn blocked_campaign_matches_unblocked_iteration_trajectory() {
+        // The blocked vector pipeline is bitwise identical to the flat
+        // one, so the two campaigns must agree point-for-point on
+        // everything but wall time.
+        let flat = run(&ScenarioConfig {
+            block_dofs: "off".into(),
+            ..ScenarioConfig::quick()
+        })
+        .unwrap();
+        let blocked = run(&ScenarioConfig {
+            block_dofs: "64".into(),
+            ..ScenarioConfig::quick()
+        })
+        .unwrap();
+        assert_eq!(flat.skipped, blocked.skipped);
+        assert_eq!(flat.points.len(), blocked.points.len());
+        for (p, q) in flat.points.iter().zip(&blocked.points) {
+            assert_eq!(p.iterations, q.iterations, "{p:?} vs {q:?}");
+            assert_eq!(
+                (p.scenario, p.decomp, p.degree, p.ranks, p.elements),
+                (q.scenario, q.decomp, q.degree, q.ranks, q.elements)
+            );
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::solver::vector::{copy, mask_apply, rzero, NativeVectors, VectorOps};
+use crate::solver::vector::{copy, mask_apply, rzero, BlockedVectors, NativeVectors, VectorOps};
 use crate::solver::{Communicator, DomainExchange, PapCorrection};
 
 /// The local Ax hook: `w <- A_local(p)` (no exchange, no mask — the solver
@@ -196,6 +196,13 @@ pub struct CgReport {
     /// accounting behind the fused path's "one fewer sweep per iteration"
     /// win.
     pub glsc3_sweeps: usize,
+    /// Full-length vector passes the solver performed (preconditioner
+    /// apply, each reduction's local read, `add2s1`/`add2s2` updates —
+    /// staging copies excluded). One blocked walk over all dofs counts as
+    /// **one** pass however many operations it fuses, so this is the
+    /// accounting behind the cache-blocked pipeline's "3 fewer passes per
+    /// iteration" win (see [`CgWorkspace::set_iteration_plan`]).
+    pub vector_sweeps: usize,
 }
 
 /// Workspace so repeated solves don't allocate (benchmarks and
@@ -216,6 +223,10 @@ pub struct CgWorkspace {
     /// Element-blocked reduction plan (see [`ReducePlan`]); `None` keeps
     /// the historical single-flat-fold reductions.
     reduce: Option<ReducePlan>,
+    /// Cache-blocking plan for the iteration pipeline (see
+    /// [`CgWorkspace::set_iteration_plan`]); `None` keeps the historical
+    /// whole-vector passes.
+    iter_plan: Option<IterationPlan>,
 }
 
 /// How the solver's global dot products are folded.
@@ -239,6 +250,21 @@ struct ReducePlan {
     partials: Vec<f64>,
 }
 
+/// How the solver's per-iteration vector work is cache-blocked.
+///
+/// With an iteration plan installed (on top of a [`ReducePlan`]), the CG
+/// loop walks the reduce plan's element blocks `seg_elems` at a time,
+/// performing each iteration's elementwise updates and per-element
+/// dot-product partials while that segment's `x/r/w/p/z/c` data is
+/// cache-resident (see [`BlockedVectors`]). Partials still fold in
+/// ascending-gid order, so the blocked trajectory is bitwise the
+/// unblocked one.
+#[derive(Clone, Copy, Debug)]
+struct IterationPlan {
+    /// Elements per cache segment.
+    seg_elems: usize,
+}
+
 impl CgWorkspace {
     pub fn new(ndof: usize) -> Self {
         CgWorkspace {
@@ -249,6 +275,7 @@ impl CgWorkspace {
             pap: None,
             cheb: None,
             reduce: None,
+            iter_plan: None,
         }
     }
 
@@ -277,6 +304,39 @@ impl CgWorkspace {
         }
         let partials = vec![0.0; gids.len()];
         self.reduce = Some(ReducePlan { block, gids, partials });
+        // An iteration plan is sized against the reduce plan's blocks —
+        // re-installing the reduce plan invalidates it (install order:
+        // reduce plan first, then iteration plan).
+        self.iter_plan = None;
+        Ok(())
+    }
+
+    /// Install a cache-blocking plan for the iteration pipeline: the CG
+    /// loop's vector updates and dot-product partials run over the reduce
+    /// plan's element blocks roughly `block_dofs` dofs at a time (clamped
+    /// to whole elements, at least one, at most all — ranked runs hand
+    /// each rank a smaller local dof count than the global knob was sized
+    /// against). Requires a reduce plan ([`CgWorkspace::set_reduce_plan`])
+    /// installed first; zero is a structured Config error.
+    ///
+    /// Blocked solves are **bitwise identical** to unblocked ones — same
+    /// rnorms, iteration counts, and solution — only
+    /// [`CgReport::vector_sweeps`] drops.
+    pub fn set_iteration_plan(&mut self, block_dofs: usize) -> Result<()> {
+        let Some(plan) = self.reduce.as_ref() else {
+            return Err(Error::Config(
+                "set_iteration_plan: install a reduce plan first (the blocked \
+                 pipeline walks its element blocks)"
+                    .into(),
+            ));
+        };
+        if block_dofs == 0 {
+            return Err(Error::Config(
+                "set_iteration_plan: block-dofs must be positive".into(),
+            ));
+        }
+        let seg_elems = (block_dofs / plan.block).clamp(1, plan.gids.len().max(1));
+        self.iter_plan = Some(IterationPlan { seg_elems });
         Ok(())
     }
 }
@@ -443,6 +503,17 @@ pub fn cg_solve_with(
     {
         ws.pap = Some(exchange.pap_correction());
     }
+    // Cache-blocked iteration pipeline (ROADMAP item 4): with both a
+    // reduce plan and an iteration plan installed, per-iteration vector
+    // work runs block-by-block over the reduce plan's element blocks
+    // while each segment's `x/r/w/p/z/c` data is cache-resident. The
+    // dot-product partials still fold in ascending-gid order — the
+    // ReducePlan contract — so the blocked trajectory is **bitwise** the
+    // unblocked one; only `vector_sweeps` drops.
+    let block = match (ws.reduce.as_ref(), ws.iter_plan) {
+        (Some(rp), Some(ip)) => Some((rp.block, ip.seg_elems)),
+        _ => None,
+    };
     let (r, z, p, w) = (&mut ws.r, &mut ws.z, &mut ws.p, &mut ws.w);
     let cheb_scratch = &mut ws.cheb;
     let reduce = &mut ws.reduce;
@@ -460,24 +531,56 @@ pub fn cg_solve_with(
     let mut rnorms = Vec::new();
     let mut iterations = 0;
     let mut glsc3_sweeps = 0usize;
+    let mut vector_sweeps = 0usize;
+
+    // Identity and Jacobi preconditioners are elementwise, so the blocked
+    // pipeline fuses each iteration's tail (x/r updates) with the *next*
+    // iteration's head (z production + rtz partials) in one walk — the
+    // head walk below primes iteration 0. Chebyshev applies the full
+    // operator to produce z and must stay a separate pass.
+    let jac_inv: Option<&[f64]> = match precond {
+        Some(crate::solver::Precond::Jacobi(m)) => Some(m.inv_diag()),
+        _ => None,
+    };
+    let head_tail_fused =
+        block.is_some() && !matches!(precond, Some(crate::solver::Precond::Chebyshev(_)));
+    if head_tail_fused {
+        let (elem, seg) = block.unwrap();
+        let plan = reduce.as_mut().expect("blocked mode requires a reduce plan");
+        BlockedVectors::new(&mut *vectors, elem, seg)
+            .head_walk(r, z, c, jac_inv, &mut plan.partials)?;
+        vector_sweeps += 1;
+    }
 
     for iter in 0..opts.niter {
         // Preconditioner slot (identity by default — the paper runs
         // unpreconditioned; Jacobi or Chebyshev-accelerated Jacobi when
         // requested). The Chebyshev recurrence applies the same masked,
-        // exchanged operator as the main loop, `order − 1` times.
-        match precond {
-            None => copy(z, r),
-            Some(crate::solver::Precond::Jacobi(m)) => m.apply(r, z),
-            Some(crate::solver::Precond::Chebyshev(ch)) => {
-                let scratch = cheb_scratch
-                    .get_or_insert_with(|| crate::solver::ChebScratch::new(ndof));
-                ch.apply_with(ax, exchange, mask, r, z, scratch)?;
+        // exchanged operator as the main loop, `order − 1` times. In
+        // head-tail-fused blocked mode, z and the (r, c, z) partials were
+        // already produced by the head walk (iteration 0) or the previous
+        // iteration's tail walk — only the global fold is left.
+        if !head_tail_fused {
+            match precond {
+                None => copy(z, r),
+                Some(crate::solver::Precond::Jacobi(m)) => m.apply(r, z),
+                Some(crate::solver::Precond::Chebyshev(ch)) => {
+                    let scratch = cheb_scratch
+                        .get_or_insert_with(|| crate::solver::ChebScratch::new(ndof));
+                    ch.apply_with(ax, exchange, mask, r, z, scratch)?;
+                }
             }
+            vector_sweeps += 1;
         }
         let rtz2 = rtz1;
         glsc3_sweeps += 1;
-        rtz1 = reduce_dot(vectors, comm, reduce, r, c, z)?;
+        rtz1 = if head_tail_fused {
+            let plan = reduce.as_ref().expect("blocked mode requires a reduce plan");
+            comm.allreduce_ordered_sum(&plan.gids, &plan.partials)?
+        } else {
+            vector_sweeps += 1;
+            reduce_dot(vectors, comm, reduce, r, c, z)?
+        };
         if !rtz1.is_finite() {
             return Err(Error::Numerical(format!(
                 "CG breakdown at iter {iter}{rank_note}: rtz1 = {rtz1}"
@@ -491,7 +594,14 @@ pub fn cg_solve_with(
             // so all ranks exit together.
             iterations = iter;
             let final_rnorm = rtz1.max(0.0).sqrt();
-            return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps });
+            return Ok(CgReport {
+                iterations,
+                final_rnorm,
+                rnorms,
+                rtz1,
+                glsc3_sweeps,
+                vector_sweeps,
+            });
         }
         if opts.record_residuals || opts.rtol.is_some() {
             rnorms.push(rtz1.max(0.0).sqrt());
@@ -500,11 +610,23 @@ pub fn cg_solve_with(
             if rtz1.max(0.0).sqrt() <= tol {
                 iterations = iter;
                 let final_rnorm = rtz1.max(0.0).sqrt();
-                return Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps });
+                return Ok(CgReport {
+                    iterations,
+                    final_rnorm,
+                    rnorms,
+                    rtz1,
+                    glsc3_sweeps,
+                    vector_sweeps,
+                });
             }
         }
         let beta = if iter == 0 { 0.0 } else { rtz1 / rtz2 };
-        vectors.add2s1(p, z, beta)?;
+        if let Some((elem, seg)) = block {
+            BlockedVectors::new(&mut *vectors, elem, seg).add2s1(p, z, beta)?;
+        } else {
+            vectors.add2s1(p, z, beta)?;
+        }
+        vector_sweeps += 1;
 
         ax.apply(p, w)?;
         let pap_fused = if fused {
@@ -538,6 +660,7 @@ pub fn cg_solve_with(
             (Some(local), None) => comm.allreduce_sum(local)?,
             _ => {
                 glsc3_sweeps += 1;
+                vector_sweeps += 1;
                 reduce_dot(vectors, comm, reduce, w, c, p)?
             }
         };
@@ -547,14 +670,39 @@ pub fn cg_solve_with(
             )));
         }
         let alpha = rtz1 / pap;
-        vectors.add2s2(x, p, alpha)?;
-        vectors.add2s2(r, w, -alpha)?;
+        match block {
+            Some((elem, seg)) if head_tail_fused => {
+                let plan = reduce.as_mut().expect("blocked mode requires a reduce plan");
+                BlockedVectors::new(&mut *vectors, elem, seg)
+                    .tail_walk(x, p, alpha, r, w, -alpha, z, c, jac_inv, &mut plan.partials)?;
+                vector_sweeps += 1;
+            }
+            Some((elem, seg)) => {
+                BlockedVectors::new(&mut *vectors, elem, seg)
+                    .tail_update(x, p, alpha, r, w, -alpha)?;
+                vector_sweeps += 1;
+            }
+            None => {
+                vectors.add2s2(x, p, alpha)?;
+                vectors.add2s2(r, w, -alpha)?;
+                vector_sweeps += 2;
+            }
+        }
         iterations = iter + 1;
     }
 
     glsc3_sweeps += 1;
-    let final_rnorm = reduce_dot(vectors, comm, reduce, r, c, r)?.max(0.0).sqrt();
-    Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps })
+    let final_rnorm = if head_tail_fused && precond.is_none() {
+        // The last tail walk's partials are per-element (r·c)·z with z a
+        // bitwise copy of r (identity preconditioner), so they *are* the
+        // (r·c)·r exit partials to the bit — fold them, no extra pass.
+        let plan = reduce.as_ref().expect("blocked mode requires a reduce plan");
+        comm.allreduce_ordered_sum(&plan.gids, &plan.partials)?.max(0.0).sqrt()
+    } else {
+        vector_sweeps += 1;
+        reduce_dot(vectors, comm, reduce, r, c, r)?.max(0.0).sqrt()
+    };
+    Ok(CgReport { iterations, final_rnorm, rnorms, rtz1, glsc3_sweeps, vector_sweeps })
 }
 
 #[cfg(test)]
@@ -1154,6 +1302,217 @@ mod tests {
         assert!(bad.set_reduce_plan(3, vec![0, 1, 2, 3]).is_err(), "12 dofs != 16");
         assert!(bad.set_reduce_plan(4, vec![0, 2, 1, 3]).is_err(), "gids must ascend");
         assert!(bad.set_reduce_plan(0, vec![]).is_err(), "zero block");
+    }
+
+    #[test]
+    fn blocked_pipeline_is_bitwise_identical_and_saves_three_sweeps_per_iter() {
+        // The ISSUE 10 tentpole contract: with an iteration plan installed
+        // the whole solve — every recorded rnorm, the iteration count, the
+        // solution vector — is **bitwise** the unblocked trajectory, while
+        // `vector_sweeps` drops by exactly 3·niter (head/tail fusion folds
+        // z production + rtz read + the two add2s2 passes into one walk
+        // and reuses the last tail's partials for the exit residual).
+        use crate::operators::{OperatorCtx, OperatorRegistry};
+        let n = 4;
+        let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(53).normal_vec(ndof);
+        {
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            gs.dssum(&mut f);
+        }
+        crate::solver::mask_apply(&mut f, &mask);
+        let opts = CgOptions { niter: 12, rtol: None, record_residuals: true };
+        let registry = OperatorRegistry::with_builtins();
+        let ctx = OperatorCtx {
+            n,
+            nelt: mesh.nelt(),
+            chunk: mesh.nelt(),
+            threads: 0,
+            artifacts_dir: "artifacts",
+            d: &basis.d,
+            g: &geom.g,
+            c: &cw,
+            assemble: None,
+        };
+        let mut solve = |name: &str, block_dofs: Option<usize>| {
+            let mut op = registry.build(name, &ctx).unwrap();
+            let mut gs = crate::gs::GatherScatter::new(&mesh);
+            let mut x = vec![0.0; ndof];
+            let mut ws = CgWorkspace::new(ndof);
+            ws.set_reduce_plan(n * n * n, (0..mesh.nelt() as u64).collect()).unwrap();
+            if let Some(bd) = block_dofs {
+                ws.set_iteration_plan(bd).unwrap();
+            }
+            let rep = cg_solve_op(
+                op.as_mut(),
+                &mut gs,
+                &mut NullComm,
+                Some(&mask),
+                &cw,
+                &f,
+                &mut x,
+                &opts,
+                &mut ws,
+            )
+            .unwrap();
+            (rep, x)
+        };
+        // Unfused and fused operators; one-element, two-element, and
+        // larger-than-local segment sizes.
+        for name in ["cpu-layered", "cpu-layered-fused"] {
+            let (rep_u, x_u) = solve(name, None);
+            for bd in [n * n * n, 2 * n * n * n, 1 << 20] {
+                let (rep_b, x_b) = solve(name, Some(bd));
+                assert_eq!(rep_b.iterations, rep_u.iterations, "{name} @ {bd}");
+                assert_eq!(rep_b.glsc3_sweeps, rep_u.glsc3_sweeps, "{name} @ {bd}");
+                assert_eq!(rep_b.rtz1.to_bits(), rep_u.rtz1.to_bits(), "{name} @ {bd}");
+                assert_eq!(
+                    rep_b.final_rnorm.to_bits(),
+                    rep_u.final_rnorm.to_bits(),
+                    "{name} @ {bd}"
+                );
+                assert_eq!(rep_b.rnorms.len(), rep_u.rnorms.len());
+                for (i, (b, u)) in rep_b.rnorms.iter().zip(&rep_u.rnorms).enumerate() {
+                    assert_eq!(b.to_bits(), u.to_bits(), "{name} @ {bd}: rnorm[{i}]");
+                }
+                for (i, (b, u)) in x_b.iter().zip(&x_u).enumerate() {
+                    assert_eq!(b.to_bits(), u.to_bits(), "{name} @ {bd}: x[{i}]");
+                }
+                assert_eq!(
+                    rep_u.vector_sweeps - rep_b.vector_sweeps,
+                    3 * opts.niter,
+                    "{name} @ {bd}: blocked path must save exactly three passes per \
+                     iteration (unblocked {} vs blocked {})",
+                    rep_u.vector_sweeps,
+                    rep_b.vector_sweeps
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_pipeline_matches_preconditioned_paths_bitwise() {
+        // Jacobi rides the head/tail-fused walk (its multiply is
+        // elementwise) but must recompute the exit residual pass (z ≠ r);
+        // Chebyshev applies the full operator for z, so only the x/r
+        // updates block. Both stay bitwise identical to unblocked.
+        let n = 4;
+        let mesh = crate::mesh::Mesh::new(2, 2, 1, n).unwrap();
+        let basis = crate::basis::Basis::new(n);
+        let geom = crate::geometry::GeomFactors::affine(&mesh, &basis);
+        let mask = mesh.boundary_mask();
+        let cw = mesh.inv_multiplicity();
+        let ndof = mesh.ndof_local();
+        let mut f = crate::rng::Rng::new(59).normal_vec(ndof);
+        let mut gs0 = crate::gs::GatherScatter::new(&mesh);
+        gs0.dssum(&mut f);
+        crate::solver::mask_apply(&mut f, &mask);
+        let opts = CgOptions { niter: 10, rtol: None, record_residuals: true };
+        let jac = crate::solver::Jacobi::assemble(
+            n,
+            mesh.nelt(),
+            &basis.d,
+            &geom.g,
+            &mut gs0,
+            Some(&mask),
+        )
+        .unwrap();
+        let cheb = crate::solver::Chebyshev::assemble(
+            n,
+            mesh.nelt(),
+            &basis.d,
+            &geom.g,
+            &mut gs0,
+            Some(&mask),
+            2,
+        )
+        .unwrap();
+        let preconds = [
+            crate::solver::Precond::Jacobi(jac),
+            crate::solver::Precond::Chebyshev(cheb),
+        ];
+        for pc in &preconds {
+            let mut solve = |block_dofs: Option<usize>| {
+                let mut ax = |p: &[f64], w: &mut [f64]| -> Result<()> {
+                    crate::operators::ax_layered(n, mesh.nelt(), p, &basis.d, &geom.g, w);
+                    Ok(())
+                };
+                let mut gs = crate::gs::GatherScatter::new(&mesh);
+                let mut x = vec![0.0; ndof];
+                let mut ws = CgWorkspace::new(ndof);
+                ws.set_reduce_plan(n * n * n, (0..mesh.nelt() as u64).collect()).unwrap();
+                if let Some(bd) = block_dofs {
+                    ws.set_iteration_plan(bd).unwrap();
+                }
+                let rep = cg_solve_precond(
+                    &mut ax,
+                    &mut gs,
+                    &mut NullComm,
+                    Some(&mask),
+                    &cw,
+                    &f,
+                    &mut x,
+                    &opts,
+                    &mut ws,
+                    Some(pc),
+                )
+                .unwrap();
+                (rep, x)
+            };
+            let (rep_u, x_u) = solve(None);
+            let (rep_b, x_b) = solve(Some(2 * n * n * n));
+            assert_eq!(rep_b.iterations, rep_u.iterations);
+            assert_eq!(rep_b.glsc3_sweeps, rep_u.glsc3_sweeps);
+            assert_eq!(rep_b.rtz1.to_bits(), rep_u.rtz1.to_bits());
+            assert_eq!(rep_b.final_rnorm.to_bits(), rep_u.final_rnorm.to_bits());
+            for (b, u) in rep_b.rnorms.iter().zip(&rep_u.rnorms) {
+                assert_eq!(b.to_bits(), u.to_bits());
+            }
+            for (b, u) in x_b.iter().zip(&x_u) {
+                assert_eq!(b.to_bits(), u.to_bits());
+            }
+            let saved = rep_u.vector_sweeps - rep_b.vector_sweeps;
+            match pc {
+                crate::solver::Precond::Jacobi(_) => {
+                    assert_eq!(saved, 3 * opts.niter - 1, "jacobi pays the exit pass back")
+                }
+                crate::solver::Precond::Chebyshev(_) => {
+                    assert_eq!(saved, opts.niter, "cheb blocks only the tail updates")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_plan_validates_and_resets_with_the_reduce_plan() {
+        let mut ws = CgWorkspace::new(16);
+        assert!(
+            matches!(ws.set_iteration_plan(8), Err(Error::Config(_))),
+            "iteration plan requires a reduce plan"
+        );
+        ws.set_reduce_plan(4, vec![0, 1, 2, 3]).unwrap();
+        assert!(
+            matches!(ws.set_iteration_plan(0), Err(Error::Config(_))),
+            "zero block-dofs rejected"
+        );
+        ws.set_iteration_plan(usize::MAX).unwrap();
+        assert_eq!(
+            ws.iter_plan.unwrap().seg_elems,
+            4,
+            "over-large block-dofs clamps to the whole local domain"
+        );
+        ws.set_iteration_plan(1).unwrap();
+        assert_eq!(ws.iter_plan.unwrap().seg_elems, 1, "tiny block-dofs clamps to one element");
+        ws.set_reduce_plan(4, vec![0, 1, 2, 3]).unwrap();
+        assert!(
+            ws.iter_plan.is_none(),
+            "reinstalling the reduce plan must reset the iteration plan"
+        );
     }
 
     #[test]

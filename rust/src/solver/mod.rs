@@ -25,7 +25,11 @@
 //!   exchange), and [`NoExchange`] (the paper's `--no-comm` roofline mode).
 //! * **[`VectorOps`]** — where the full-vector algebra runs
 //!   ([`NativeVectors`] by default; the application pipeline provides a
-//!   chunked-XLA implementation for experiment E6).
+//!   chunked-XLA implementation for experiment E6). [`BlockedVectors`]
+//!   wraps any backend into the cache-blocked iteration pipeline
+//!   (`--block-dofs`): element-blocked walks that keep each segment
+//!   cache-resident while staying bitwise identical to the unblocked
+//!   passes.
 //!
 //! Any combination of the three drops into the same loop, which is the
 //! only place in the crate that updates residuals, applies the
@@ -45,5 +49,5 @@ pub use comm::{Communicator, NullComm};
 pub use exchange::{DomainExchange, NoExchange, PapCorrection};
 pub use precond::{ChebScratch, Chebyshev, Jacobi, Precond};
 pub use vector::{
-    add2s1, add2s2, copy, glsc3, mask_apply, rzero, NativeVectors, VectorOps,
+    add2s1, add2s2, copy, glsc3, mask_apply, rzero, BlockedVectors, NativeVectors, VectorOps,
 };

@@ -75,6 +75,172 @@ pub trait VectorOps {
     fn add2s2(&mut self, a: &mut [f64], b: &[f64], c2: f64) -> crate::error::Result<()>;
 }
 
+/// Element-blocked walker over another [`VectorOps`] backend — the
+/// cache-blocked CG iteration pipeline (ROADMAP item 4: keep a block's
+/// `x/r/w/p/z/c` data cache-resident across the iteration's vector ops
+/// instead of streaming each full-length vector separately).
+///
+/// A walk visits the local dofs in **segments of whole elements**
+/// (`seg_elems` elements of `elem` dofs each) and performs every
+/// per-point update for a segment before moving to the next. Because all
+/// of the fused operations are elementwise (`add2s1`, `add2s2`, the
+/// preconditioner multiply) and the dot-product partials are produced
+/// **per element through the inner backend's `glsc3`** — the exact
+/// granularity and fold the solver's `ReducePlan` prescribes — every
+/// value a blocked walk produces is **bitwise identical** to the
+/// unblocked sequence of whole-vector passes. Only the traversal order
+/// changes, never the arithmetic.
+///
+/// The `VectorOps` impl chunks `add2s1`/`add2s2` by segment (elementwise,
+/// so bitwise-equal to one flat pass) and forwards `glsc3` whole — a
+/// flat reduction's fold order is part of its contract and must not be
+/// re-blocked here (the solver blocks reductions through its
+/// `ReducePlan`, which owns the fold order).
+pub struct BlockedVectors<'a> {
+    inner: &'a mut dyn VectorOps,
+    /// Dofs per reduction partial (the element volume `n³`).
+    elem: usize,
+    /// Dofs per cache segment (`elem · seg_elems`).
+    seg: usize,
+}
+
+impl<'a> BlockedVectors<'a> {
+    /// Walk `seg_elems` elements of `elem` dofs at a time (both clamped
+    /// to at least one).
+    pub fn new(inner: &'a mut dyn VectorOps, elem: usize, seg_elems: usize) -> Self {
+        let elem = elem.max(1);
+        BlockedVectors { inner, elem, seg: elem * seg_elems.max(1) }
+    }
+
+    /// Segment bounds `[start, end)` covering `len` dofs.
+    fn segments(&self, len: usize) -> impl Iterator<Item = (usize, usize)> {
+        let seg = self.seg;
+        (0..len).step_by(seg).map(move |s| (s, (s + seg).min(len)))
+    }
+
+    /// `z[s..e] = precond(r[s..e])`: the Jacobi diagonal multiply when
+    /// `inv` is present (bitwise [`crate::solver::Jacobi::apply`] on the
+    /// segment), a bitwise copy of `r` otherwise (identity precondition).
+    fn produce_z(r: &[f64], z: &mut [f64], inv: Option<&[f64]>) {
+        match inv {
+            None => z.copy_from_slice(r),
+            Some(d) => {
+                for ((zi, ri), di) in z.iter_mut().zip(r).zip(d) {
+                    *zi = ri * di;
+                }
+            }
+        }
+    }
+
+    /// Per-element `(a, b, c)` partials for the elements inside
+    /// `[s, e)`, through the inner backend's `glsc3` — the `ReducePlan`
+    /// granularity, so the solver's ordered fold of these partials is
+    /// bitwise the unblocked reduction.
+    fn partials_in(
+        &mut self,
+        s: usize,
+        e: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &[f64],
+        partials: &mut [f64],
+    ) -> crate::error::Result<()> {
+        for el in (s / self.elem)..(e / self.elem) {
+            let lo = el * self.elem;
+            let hi = lo + self.elem;
+            partials[el] = self.inner.glsc3(&a[lo..hi], &b[lo..hi], &c[lo..hi])?;
+        }
+        Ok(())
+    }
+
+    /// The iteration-head walk: `z = precond(r)` and the per-element
+    /// `(r, c, z)` partials for the coming `rtz` fold, one cache segment
+    /// at a time — `r` is read once per segment instead of once per pass.
+    pub fn head_walk(
+        &mut self,
+        r: &[f64],
+        z: &mut [f64],
+        c: &[f64],
+        inv: Option<&[f64]>,
+        partials: &mut [f64],
+    ) -> crate::error::Result<()> {
+        for (s, e) in self.segments(r.len()) {
+            Self::produce_z(&r[s..e], &mut z[s..e], inv.map(|d| &d[s..e]));
+            self.partials_in(s, e, r, c, z, partials)?;
+        }
+        Ok(())
+    }
+
+    /// The iteration-tail walk, fused with the **next** iteration's head:
+    /// per segment, `x += alpha·p`, `r += malpha·w` (the solver passes
+    /// `-alpha`), `z = precond(r)`, and the per-element `(r, c, z)`
+    /// partials — four whole-vector passes folded into one walk while the
+    /// segment is cache-resident.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tail_walk(
+        &mut self,
+        x: &mut [f64],
+        p: &[f64],
+        alpha: f64,
+        r: &mut [f64],
+        w: &[f64],
+        malpha: f64,
+        z: &mut [f64],
+        c: &[f64],
+        inv: Option<&[f64]>,
+        partials: &mut [f64],
+    ) -> crate::error::Result<()> {
+        for (s, e) in self.segments(x.len()) {
+            self.inner.add2s2(&mut x[s..e], &p[s..e], alpha)?;
+            self.inner.add2s2(&mut r[s..e], &w[s..e], malpha)?;
+            Self::produce_z(&r[s..e], &mut z[s..e], inv.map(|d| &d[s..e]));
+            self.partials_in(s, e, r, c, z, partials)?;
+        }
+        Ok(())
+    }
+
+    /// The tail walk without the head fusion (`x` and `r` updates only) —
+    /// used when the preconditioner applies the full operator to produce
+    /// `z` (Chebyshev) and therefore cannot ride a blocked walk.
+    pub fn tail_update(
+        &mut self,
+        x: &mut [f64],
+        p: &[f64],
+        alpha: f64,
+        r: &mut [f64],
+        w: &[f64],
+        malpha: f64,
+    ) -> crate::error::Result<()> {
+        for (s, e) in self.segments(x.len()) {
+            self.inner.add2s2(&mut x[s..e], &p[s..e], alpha)?;
+            self.inner.add2s2(&mut r[s..e], &w[s..e], malpha)?;
+        }
+        Ok(())
+    }
+}
+
+impl VectorOps for BlockedVectors<'_> {
+    fn glsc3(&mut self, a: &[f64], b: &[f64], c: &[f64]) -> crate::error::Result<f64> {
+        // Forwarded whole: a flat reduction's fold order is part of its
+        // contract (re-blocking it here would change the sum).
+        self.inner.glsc3(a, b, c)
+    }
+
+    fn add2s1(&mut self, a: &mut [f64], b: &[f64], c1: f64) -> crate::error::Result<()> {
+        for (s, e) in self.segments(a.len()) {
+            self.inner.add2s1(&mut a[s..e], &b[s..e], c1)?;
+        }
+        Ok(())
+    }
+
+    fn add2s2(&mut self, a: &mut [f64], b: &[f64], c2: f64) -> crate::error::Result<()> {
+        for (s, e) in self.segments(a.len()) {
+            self.inner.add2s2(&mut a[s..e], &b[s..e], c2)?;
+        }
+        Ok(())
+    }
+}
+
 /// The native-Rust vector backend (the default): straight calls into the
 /// free functions above, infallible.
 #[derive(Clone, Copy, Debug, Default)]
@@ -149,5 +315,116 @@ mod tests {
         assert_eq!(a, vec![0.0; 4]);
         copy(&mut a, &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(a, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn blocked_axpys_are_bitwise_the_flat_pass() {
+        forall(0x93, 20, |c: &mut Cases| {
+            let elem = c.size(1, 8);
+            let nelems = c.size(1, 12);
+            let seg_elems = c.size(1, 5);
+            let len = elem * nelems;
+            let base = c.vec_normal(len);
+            let b = c.vec_normal(len);
+
+            let mut flat = base.clone();
+            add2s1(&mut flat, &b, 0.75);
+            add2s2(&mut flat, &b, -1.25);
+
+            let mut inner = NativeVectors;
+            let mut blocked = BlockedVectors::new(&mut inner, elem, seg_elems);
+            let mut got = base.clone();
+            blocked.add2s1(&mut got, &b, 0.75).unwrap();
+            blocked.add2s2(&mut got, &b, -1.25).unwrap();
+            assert_eq!(bits(&got), bits(&flat));
+        });
+    }
+
+    #[test]
+    fn head_walk_matches_unblocked_sequence_bitwise() {
+        forall(0x94, 20, |c: &mut Cases| {
+            let elem = c.size(2, 27);
+            let nelems = c.size(1, 9);
+            let seg_elems = c.size(1, 4);
+            let len = elem * nelems;
+            let r = c.vec_normal(len);
+            let cw = c.vec_normal(len);
+            let inv = c.vec_normal(len);
+
+            // Unblocked reference: whole-vector z pass, then per-element
+            // partials (the ReducePlan granularity).
+            let z_want: Vec<f64> = r.iter().zip(&inv).map(|(ri, di)| ri * di).collect();
+            let p_want: Vec<f64> = (0..nelems)
+                .map(|el| {
+                    let (lo, hi) = (el * elem, (el + 1) * elem);
+                    glsc3(&r[lo..hi], &cw[lo..hi], &z_want[lo..hi])
+                })
+                .collect();
+
+            let mut inner = NativeVectors;
+            let mut blocked = BlockedVectors::new(&mut inner, elem, seg_elems);
+            let mut z = vec![0.0; len];
+            let mut partials = vec![0.0; nelems];
+            blocked.head_walk(&r, &mut z, &cw, Some(&inv), &mut partials).unwrap();
+            assert_eq!(bits(&z), bits(&z_want));
+            assert_eq!(bits(&partials), bits(&p_want));
+
+            // Identity preconditioner: z is a bitwise copy of r.
+            blocked.head_walk(&r, &mut z, &cw, None, &mut partials).unwrap();
+            assert_eq!(bits(&z), bits(&r));
+        });
+    }
+
+    #[test]
+    fn tail_walk_matches_unblocked_sequence_bitwise() {
+        forall(0x95, 20, |c: &mut Cases| {
+            let elem = c.size(2, 16);
+            let nelems = c.size(1, 10);
+            let seg_elems = c.size(1, 7);
+            let len = elem * nelems;
+            let x0 = c.vec_normal(len);
+            let r0 = c.vec_normal(len);
+            let p = c.vec_normal(len);
+            let w = c.vec_normal(len);
+            let cw = c.vec_normal(len);
+            let alpha = 0.375;
+
+            // Unblocked reference: x += alpha p; r -= alpha w; z = r;
+            // per-element (r, c, z) partials.
+            let mut x_want = x0.clone();
+            let mut r_want = r0.clone();
+            add2s2(&mut x_want, &p, alpha);
+            add2s2(&mut r_want, &w, -alpha);
+            let z_want = r_want.clone();
+            let p_want: Vec<f64> = (0..nelems)
+                .map(|el| {
+                    let (lo, hi) = (el * elem, (el + 1) * elem);
+                    glsc3(&r_want[lo..hi], &cw[lo..hi], &z_want[lo..hi])
+                })
+                .collect();
+
+            let mut inner = NativeVectors;
+            let mut blocked = BlockedVectors::new(&mut inner, elem, seg_elems);
+            let (mut x, mut r) = (x0.clone(), r0.clone());
+            let mut z = vec![0.0; len];
+            let mut partials = vec![0.0; nelems];
+            blocked
+                .tail_walk(&mut x, &p, alpha, &mut r, &w, -alpha, &mut z, &cw, None, &mut partials)
+                .unwrap();
+            assert_eq!(bits(&x), bits(&x_want));
+            assert_eq!(bits(&r), bits(&r_want));
+            assert_eq!(bits(&z), bits(&z_want));
+            assert_eq!(bits(&partials), bits(&p_want));
+
+            // tail_update: the x/r updates alone, bitwise the same.
+            let (mut x2, mut r2) = (x0.clone(), r0.clone());
+            blocked.tail_update(&mut x2, &p, alpha, &mut r2, &w, -alpha).unwrap();
+            assert_eq!(bits(&x2), bits(&x_want));
+            assert_eq!(bits(&r2), bits(&r_want));
+        });
     }
 }

@@ -1,0 +1,247 @@
+//! Solver-invariant property tier: metamorphic CG laws every registered
+//! operator must satisfy, enumerated over [`OperatorRegistry::default`]
+//! like the conformance suite — never a hand-written name list.
+//!
+//! The laws are *exact* (bitwise), not tolerance-banded:
+//!
+//! * **Power-of-two scaling equivariance** — every CG operation is built
+//!   from multiplies, adds, and one square root, all of which commute
+//!   bitwise with scaling by a power of two (exponent shifts, no mantissa
+//!   rounding). So `solve(2^k · f)` must be bitwise `2^k · solve(f)`:
+//!   same iteration count, solution and residual scaled exactly.
+//! * **Zero-RHS floor** — a zero right-hand side is exactly converged
+//!   before the first iteration: the solver must exit at iteration 0
+//!   with a bitwise-zero solution, not divide by zero.
+//! * **Reproducibility** — repeated solves against one session (one
+//!   workspace, one operator instance) are bitwise identical.
+//! * **Blocked-pipeline identity** — `--block-dofs auto` must reproduce
+//!   the unblocked trajectory bitwise (solution, residual, rtz1,
+//!   `glsc3_sweeps`) while performing exactly `3 × iterations` fewer
+//!   full-vector passes, serial and ranked.
+//!
+//! Coverage is enforced the same way conformance.rs enforces it: the only
+//! legitimate skip is an artifact-backed operator on a host without AOT
+//! artifacts, and tested + gated must equal the whole registry.
+
+use std::collections::BTreeSet;
+
+use nekbone::config::RunConfig;
+use nekbone::coordinator::Nekbone;
+use nekbone::operators::OperatorRegistry;
+use nekbone::rank::run_ranked_with;
+use nekbone::rng::Rng;
+
+fn artifacts_dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(artifacts_dir()).join("manifest.json").exists()
+}
+
+/// Run `check(name)` on every canonical operator in the default registry,
+/// then assert nothing was skipped (see `conformance.rs` — same policy:
+/// only `needs_artifacts` operators may be gated, and only when the
+/// artifacts are absent).
+fn for_every_operator(mut check: impl FnMut(&str)) {
+    let registry = OperatorRegistry::default();
+    let all: BTreeSet<String> = registry.names().into_iter().collect();
+    assert!(!all.is_empty(), "default registry is empty");
+    let mut tested = BTreeSet::new();
+    let mut gated = BTreeSet::new();
+    for name in &all {
+        let spec = registry.resolve(name).expect("canonical names resolve");
+        if spec.needs_artifacts && !artifacts_present() {
+            gated.insert(name.clone());
+            continue;
+        }
+        check(name);
+        tested.insert(name.clone());
+    }
+    let covered: BTreeSet<String> = tested.union(&gated).cloned().collect();
+    assert_eq!(covered, all, "invariant suite skipped a registered operator");
+    for name in &gated {
+        assert!(
+            registry.resolve(name).unwrap().needs_artifacts,
+            "{name} was gated without declaring an artifact requirement"
+        );
+    }
+    assert!(!tested.is_empty(), "invariant suite exercised no operator at all");
+}
+
+fn cfg(block_dofs: &str) -> RunConfig {
+    RunConfig {
+        nelt: 4,
+        n: 4,
+        niter: 10,
+        artifacts_dir: artifacts_dir().to_string(),
+        block_dofs: block_dofs.into(),
+        ..RunConfig::default()
+    }
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str, name: &str) {
+    assert_eq!(got.len(), want.len(), "{name}: {what} length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{name}: {what}[{i}] diverges ({g} vs {w})"
+        );
+    }
+}
+
+#[test]
+fn power_of_two_rhs_scaling_is_bitwise_equivariant() {
+    // solve(8 f) vs 8 · solve(f): staging (dssum is adds, the mask is
+    // 0/1 multiplies), the operator (multiplies by fixed d/g factors —
+    // f64 or f32-stored — and adds), every dot product, and the exit
+    // sqrt all scale exactly under a power of two, so the trajectories
+    // must match to the bit, not within a band.
+    const SCALE: f64 = 8.0;
+    for_every_operator(|name| {
+        let mut app = Nekbone::builder(cfg("auto")).operator(name).build().unwrap();
+        let mut session = app.session();
+        let ndof = session.solution().len();
+        let f = Rng::new(0x10A0).normal_vec(ndof);
+        let rep1 = session.solve(&f).unwrap();
+        let x1 = session.solution().to_vec();
+        let scaled: Vec<f64> = f.iter().map(|&v| SCALE * v).collect();
+        let rep2 = session.solve(&scaled).unwrap();
+        assert_eq!(rep1.iterations, rep2.iterations, "{name}: iteration count");
+        assert_eq!(
+            rep2.final_rnorm.to_bits(),
+            (SCALE * rep1.final_rnorm).to_bits(),
+            "{name}: residual must scale exactly by {SCALE}"
+        );
+        assert_eq!(
+            rep2.rtz1.to_bits(),
+            (SCALE * SCALE * rep1.rtz1).to_bits(),
+            "{name}: rtz1 must scale exactly by {}",
+            SCALE * SCALE
+        );
+        let want: Vec<f64> = x1.iter().map(|&v| SCALE * v).collect();
+        assert_bits_eq(session.solution(), &want, "solution", name);
+    });
+}
+
+#[test]
+fn zero_rhs_converges_exactly_at_iteration_zero() {
+    for_every_operator(|name| {
+        let mut app = Nekbone::builder(cfg("auto")).operator(name).build().unwrap();
+        let mut session = app.session();
+        let ndof = session.solution().len();
+        let rep = session.solve(&vec![0.0; ndof]).unwrap();
+        assert_eq!(rep.iterations, 0, "{name}: zero rhs must converge before iter 1");
+        assert_eq!(rep.final_rnorm.to_bits(), 0.0f64.to_bits(), "{name}: exit residual");
+        assert!(
+            session.solution().iter().all(|&v| v.to_bits() == 0.0f64.to_bits()),
+            "{name}: solution of the zero system must be bitwise zero"
+        );
+    });
+}
+
+#[test]
+fn repeated_solves_on_one_workspace_are_bitwise_reproducible() {
+    for_every_operator(|name| {
+        let mut app = Nekbone::builder(cfg("auto")).operator(name).build().unwrap();
+        let mut session = app.session();
+        let ndof = session.solution().len();
+        let f = Rng::new(0x10A2).normal_vec(ndof);
+        let rep1 = session.solve(&f).unwrap();
+        let x1 = session.solution().to_vec();
+        let rep2 = session.solve(&f).unwrap();
+        assert_eq!(rep1.iterations, rep2.iterations, "{name}: iteration count");
+        assert_eq!(rep1.final_rnorm.to_bits(), rep2.final_rnorm.to_bits(), "{name}: rnorm");
+        assert_eq!(rep1.rtz1.to_bits(), rep2.rtz1.to_bits(), "{name}: rtz1");
+        assert_eq!(rep1.glsc3_sweeps, rep2.glsc3_sweeps, "{name}: glsc3 sweeps");
+        assert_eq!(rep1.vector_sweeps, rep2.vector_sweeps, "{name}: vector sweeps");
+        assert_bits_eq(session.solution(), &x1, "solution", name);
+    });
+}
+
+#[test]
+fn blocked_pipeline_is_bitwise_identical_and_strictly_cheaper() {
+    // The tentpole contract, policed registry-wide: cache-blocking the
+    // vector pipeline changes *nothing* about the trajectory — solution,
+    // residual, rtz1, iteration count, and glsc3 accounting are bitwise
+    // the unblocked run's — while `vector_sweeps` drops by exactly 3 per
+    // iteration (z production, the rtz read, and one of the two tail
+    // updates each fold into a shared cache-resident walk).
+    for_every_operator(|name| {
+        let run = |block: &str| {
+            let mut app = Nekbone::builder(cfg(block)).operator(name).build().unwrap();
+            let mut session = app.session();
+            let ndof = session.solution().len();
+            let f = Rng::new(0x10A3).normal_vec(ndof);
+            let rep = session.solve(&f).unwrap();
+            (rep, session.solution().to_vec())
+        };
+        let (flat, x_flat) = run("off");
+        let (blocked, x_blocked) = run("auto");
+        assert_eq!(flat.iterations, blocked.iterations, "{name}: iteration count");
+        assert_eq!(flat.final_rnorm.to_bits(), blocked.final_rnorm.to_bits(), "{name}: rnorm");
+        assert_eq!(flat.rtz1.to_bits(), blocked.rtz1.to_bits(), "{name}: rtz1");
+        assert_eq!(flat.glsc3_sweeps, blocked.glsc3_sweeps, "{name}: glsc3 sweeps");
+        assert_bits_eq(&x_blocked, &x_flat, "solution", name);
+        assert!(
+            blocked.vector_sweeps < flat.vector_sweeps,
+            "{name}: blocking must strictly reduce vector passes ({} vs {})",
+            blocked.vector_sweeps,
+            flat.vector_sweeps
+        );
+        assert_eq!(
+            flat.vector_sweeps - blocked.vector_sweeps,
+            3 * blocked.iterations,
+            "{name}: the blocked walk must save exactly 3 passes per iteration"
+        );
+        assert!(
+            flat.vector_sweeps - blocked.vector_sweeps >= 3 * cfg("auto").niter,
+            "{name}: acceptance floor — at least 3·niter passes saved"
+        );
+    });
+}
+
+#[test]
+fn ranked_blocked_solves_match_unblocked_bitwise() {
+    // Same identity through the rank runtime: per-rank workspaces get
+    // smaller local dof counts (the global --block-dofs knob clamps per
+    // rank), and the ordered-gid fold keeps every reduction — and hence
+    // the whole trajectory — bitwise the serial, unblocked one.
+    for_every_operator(|name| {
+        let run = |block: &str, ranks: usize, decomp: &str| {
+            let rc = RunConfig {
+                nelt: 8,
+                n: 3,
+                niter: 6,
+                ranks,
+                decomp: decomp.into(),
+                artifacts_dir: artifacts_dir().to_string(),
+                block_dofs: block.into(),
+                ..RunConfig::default()
+            };
+            run_ranked_with(&rc, name).unwrap()
+        };
+        // Compare blocked vs unblocked at the *same* decomposition: a
+        // fused operator's ranked pap folds per-rank (tolerance-checked
+        // against serial, not bitwise), so the bitwise law here is that
+        // blocking never changes whatever trajectory a decomposition
+        // produces.
+        for (ranks, decomp) in [(1, "slab"), (2, "slab"), (4, "pencil")] {
+            let flat = run("off", ranks, decomp);
+            let blocked = run("auto", ranks, decomp);
+            assert_eq!(
+                flat.iterations, blocked.iterations,
+                "{name} ({decomp}×{ranks}): iteration count"
+            );
+            assert_eq!(
+                flat.final_residual.to_bits(),
+                blocked.final_residual.to_bits(),
+                "{name} ({decomp}×{ranks}): blocked ranked residual must be bitwise \
+                 the unblocked one ({} vs {})",
+                blocked.final_residual,
+                flat.final_residual
+            );
+        }
+    });
+}

@@ -18,10 +18,14 @@
 //!   pair compared per case;
 //! * **full CG** — real mesh/dssum/mask solves through the coordinator
 //!   builder, cycling deterministically through the pair list so the
-//!   default budget covers every pair at least once. Degrees and element
-//!   counts are kept large enough that CG stays far from convergence
-//!   within the drawn iteration budget — near-converged residuals would
-//!   amplify benign rounding differences past any honest band.
+//!   default budget covers every pair at least once. Each side draws its
+//!   own `--block-dofs` (`auto|off|64`) and the case draws a
+//!   preconditioner (`none|jacobi|cheb`), so the corpus also crosses the
+//!   cache-blocked and flat vector pipelines under every preconditioner.
+//!   Degrees and element counts are kept large enough that CG stays far
+//!   from convergence within the drawn iteration budget — near-converged
+//!   residuals would amplify benign rounding differences past any honest
+//!   band.
 
 mod util;
 
@@ -37,12 +41,18 @@ const MASTER_SEED: u64 = 0xF0221;
 /// plus slack, and over the 200-case acceptance floor.
 const DEFAULT_CASES: usize = 216;
 
+/// Corpus size: `NEKBONE_FUZZ_CASES` when set, [`DEFAULT_CASES`]
+/// otherwise. A malformed value is a loud failure (via
+/// [`nekbone::config::parse_cases_env`]), never a silent fallback — a CI
+/// typo must not quietly shrink the corpus to the default.
 fn case_budget() -> usize {
-    std::env::var("NEKBONE_FUZZ_CASES")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&c| c > 0)
-        .unwrap_or(DEFAULT_CASES)
+    match std::env::var("NEKBONE_FUZZ_CASES") {
+        Err(std::env::VarError::NotPresent) => DEFAULT_CASES,
+        Err(e) => panic!("NEKBONE_FUZZ_CASES: {e}"),
+        Ok(raw) => {
+            nekbone::config::parse_cases_env(&raw).unwrap_or_else(|e| panic!("{e}"))
+        }
+    }
 }
 
 /// xorshift64* — deliberately independent of the crate's own RNG so a
@@ -88,6 +98,13 @@ struct Case {
     precond: &'static str,
     cheb_order: usize,
     decomp: &'static str,
+    /// `--block-dofs` for each side of the CG pair — drawn independently,
+    /// so the corpus crosses blocked-vs-unblocked vector pipelines (the
+    /// blocked walk is bitwise the flat one, so the joint band still
+    /// binds). `"64"` forces multi-segment walks at every drawn cg size
+    /// (the smallest drawn problem has 4³·4 = 256 dofs).
+    block_a: &'static str,
+    block_b: &'static str,
 }
 
 impl Case {
@@ -106,6 +123,8 @@ impl Case {
             precond: *x.pick(&["none", "jacobi", "cheb"]),
             cheb_order: 2 + x.below(3), // 2..=4
             decomp: *x.pick(&["slab", "pencil", "box"]),
+            block_a: *x.pick(&["auto", "off", "64"]),
+            block_b: *x.pick(&["auto", "off", "64"]),
         }
     }
 }
@@ -115,7 +134,7 @@ impl std::fmt::Display for Case {
         write!(
             f,
             "case {} (seed {:#x}, apply n={} nelt={}, cg n={} nelt={} niter={} \
-             precond={} cheb_order={} decomp={}, threads={})",
+             precond={} cheb_order={} decomp={}, block a={} b={}, threads={})",
             self.index,
             self.seed,
             self.apply_n,
@@ -126,6 +145,8 @@ impl std::fmt::Display for Case {
             self.precond,
             self.cheb_order,
             self.decomp,
+            self.block_a,
+            self.block_b,
             self.threads,
         )
     }
@@ -196,7 +217,11 @@ fn fuzz_full_cg_agrees_across_the_pair_cycle() {
     for i in 0..case_budget() as u64 {
         let case = Case::draw(i);
         let (a, b) = &pairs[i as usize % pairs.len()];
-        let cfg = RunConfig {
+        // Each side draws its own --block-dofs, so the corpus also
+        // crosses the blocked and flat vector pipelines (identical
+        // trajectories by the blocked-walk contract; any divergence here
+        // is a solver bug, not a band issue).
+        let mk_cfg = |block: &'static str| RunConfig {
             nelt: case.cg_nelt,
             n: case.cg_n,
             niter: case.niter,
@@ -205,9 +230,11 @@ fn fuzz_full_cg_agrees_across_the_pair_cycle() {
             precond: case.precond.to_string(),
             cheb_order: case.cheb_order,
             decomp: case.decomp.to_string(),
+            block_dofs: block.to_string(),
             ..RunConfig::default()
         };
-        let run = |name: &str| {
+        let run = |name: &str, block: &'static str| {
+            let cfg = mk_cfg(block);
             let mut app = Nekbone::builder(cfg.clone())
                 .operator(name)
                 .build()
@@ -218,8 +245,8 @@ fn fuzz_full_cg_agrees_across_the_pair_cycle() {
                 .unwrap_or_else(|e| panic!("{case}: run {name}: {e}"));
             (rep, x)
         };
-        let (rep_a, x_a) = run(a);
-        let (rep_b, x_b) = run(b);
+        let (rep_a, x_a) = run(a, case.block_a);
+        let (rep_b, x_b) = run(b, case.block_b);
         let what = format!("{case}: {b} vs {a}");
         assert!(
             rep_a.final_residual.is_finite() && rep_b.final_residual.is_finite(),

@@ -60,6 +60,21 @@ fn run_config_validation_names_each_bad_knob() {
             |c| c.decomp = "spiral".into(),
             "decomp must be slab|pencil|box",
         ),
+        ("zero block-dofs", |c| c.block_dofs = "0".into(), "block-dofs must be positive"),
+        (
+            "non-numeric block-dofs",
+            |c| c.block_dofs = "grid".into(),
+            "block-dofs must be auto|off|N",
+        ),
+        (
+            "block-dofs above ndof",
+            |c| {
+                c.nelt = 2;
+                c.n = 3;
+                c.block_dofs = "55".into();
+            },
+            "cannot exceed ndof",
+        ),
     ];
     for (what, mutate, needle) in table {
         let mut cfg = RunConfig::default();
@@ -74,6 +89,37 @@ fn run_config_validation_names_each_bad_knob() {
         );
     }
     assert!(RunConfig::default().validate().is_ok(), "the default config must be valid");
+}
+
+#[test]
+fn fuzz_case_budget_parsing_is_loud_not_a_silent_fallback() {
+    // The fuzz tier sizes its corpus from NEKBONE_FUZZ_CASES through this
+    // parser; a CI typo ("24 ", "1e3", "") must be a structured Config
+    // error naming the variable — never a silent fall-back to the default
+    // budget, which would quietly shrink coverage.
+    use nekbone::config::parse_cases_env;
+    for bad in ["", "0", "-3", "many", "1e3", "24x"] {
+        expect_config(
+            parse_cases_env(bad).map(|_| ()),
+            "NEKBONE_FUZZ_CASES",
+            &format!("fuzz cases {bad:?}"),
+        );
+    }
+    assert_eq!(parse_cases_env("24").unwrap(), 24);
+    assert_eq!(parse_cases_env(" 7 ").unwrap(), 7, "surrounding whitespace is tolerated");
+}
+
+#[test]
+fn iteration_plan_requires_a_reduce_plan_and_positive_blocks() {
+    // The workspace-level contract behind --block-dofs: installing the
+    // cache-blocking plan without a reduce plan (whose element blocks it
+    // walks), or with a zero block size, is a structured rejection.
+    use nekbone::solver::CgWorkspace;
+    let mut ws = CgWorkspace::new(8);
+    expect_config(ws.set_iteration_plan(4), "install a reduce plan first", "no reduce plan");
+    ws.set_reduce_plan(2, vec![0, 1, 2, 3]).unwrap();
+    expect_config(ws.set_iteration_plan(0), "block-dofs must be positive", "zero block");
+    assert!(ws.set_iteration_plan(4).is_ok(), "a sized plan must install");
 }
 
 #[test]

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Line-coverage gate: fresh `cargo llvm-cov` totals vs the committed floor.
+
+Usage:
+    python3 tools/coverage_gate.py --summary /tmp/coverage.json \
+        --floor tools/coverage_floor.txt
+
+The floor file holds one number: the line-coverage percentage the suite is
+committed to (authored conservatively, ratcheted up by hand when coverage
+grows). The gate reads the ``--summary-only --json`` export of
+``cargo llvm-cov`` and fails when the measured line percentage falls below
+the floor — a regression in test coverage blocks, growth never does.
+"""
+
+import argparse
+import json
+import sys
+
+
+def line_percent(doc):
+    """Total line-coverage percentage from an llvm-cov JSON summary."""
+    try:
+        return float(doc["data"][0]["totals"]["lines"]["percent"])
+    except (KeyError, IndexError, TypeError, ValueError) as e:
+        sys.exit(f"coverage gate: malformed llvm-cov summary ({e!r})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--summary", required=True, help="cargo llvm-cov --json output")
+    ap.add_argument("--floor", required=True, help="file holding the committed floor %")
+    args = ap.parse_args()
+
+    with open(args.summary) as f:
+        got = line_percent(json.load(f))
+    with open(args.floor) as f:
+        raw = f.read().strip()
+    try:
+        floor = float(raw)
+    except ValueError:
+        sys.exit(f"coverage gate: floor file holds {raw!r}, expected a number")
+    if not 0.0 <= floor <= 100.0:
+        sys.exit(f"coverage gate: floor {floor} out of range [0, 100]")
+
+    if got < floor:
+        sys.exit(
+            f"coverage gate: line coverage {got:.2f}% fell below the committed "
+            f"floor {floor:.2f}% — add tests or (deliberately) lower the floor"
+        )
+    print(f"coverage gate: line coverage {got:.2f}% >= floor {floor:.2f}%")
+    headroom = got - floor
+    if headroom > 10.0:
+        print(
+            f"coverage gate: note — {headroom:.1f} points of headroom; "
+            f"consider ratcheting the floor up"
+        )
+
+
+if __name__ == "__main__":
+    main()
